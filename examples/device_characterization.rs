@@ -1,0 +1,91 @@
+//! Device characterization: sweep the VC-MTJ model the way the paper's
+//! measurement section does (Figs. 1b, 2, 5) and verify the majority-
+//! neuron error budget and endurance accounting.
+//!
+//! ```sh
+//! cargo run --release --example device_characterization
+//! ```
+
+use pixelmtj::config::MtjConfig;
+use pixelmtj::device::{
+    neuron_error_rates, Mtj, MtjModel, MtjState, MultiMtjNeuron,
+};
+
+fn main() {
+    let cfg = MtjConfig::default();
+    let model = MtjModel::new(&cfg);
+
+    println!("── R(V) + TMR (Fig. 1b) ──");
+    for v in [-1.0, -0.5, -0.001, 0.001, 0.5, 1.0] {
+        println!(
+            "  V={v:>7.3} V: R_P={:>7.2} kΩ  R_AP={:>7.2} kΩ  TMR={:>6.1} %",
+            model.resistance(MtjState::Parallel, v) / 1e3,
+            model.resistance(MtjState::AntiParallel, v) / 1e3,
+            model.tmr(v) * 100.0
+        );
+    }
+
+    println!("\n── P_sw(V) @700 ps, AP→P (Fig. 2b calibration) ──");
+    for v in [0.60, 0.65, 0.70, 0.75, 0.80, 0.85, 0.90, 0.95] {
+        let p = model.switching_probability(MtjState::AntiParallel, v, 0.7);
+        let marker = match v {
+            x if (x - 0.7).abs() < 1e-9 => "  ← paper: 0.062",
+            x if (x - 0.8).abs() < 1e-9 => "  ← paper: 0.924",
+            x if (x - 0.9).abs() < 1e-9 => "  ← paper: 0.9717",
+            _ => "",
+        };
+        println!("  {v:.2} V → {p:.4}{marker}");
+    }
+
+    println!("\n── precession lobes: P_sw(0.8 V, t) ──");
+    for t in [0.2, 0.5, 0.7, 1.0, 1.4, 2.1, 2.8] {
+        let p = model.switching_probability(MtjState::AntiParallel, 0.8, t);
+        let bar = "█".repeat((p * 40.0) as usize);
+        println!("  {t:>4.1} ns {p:.3} {bar}");
+    }
+
+    println!("\n── multi-MTJ majority error (Fig. 5) ──");
+    for n in [1usize, 2, 4, 8] {
+        let k = if n == 8 { 4 } else { n / 2 + 1 };
+        let (e10, e01) = neuron_error_rates(0.924, 0.062, n, k);
+        println!(
+            "  n={n} (k={k}): 1→0 error {:>9.5} %   0→1 error {:>9.5} %",
+            e10 * 100.0,
+            e01 * 100.0
+        );
+    }
+
+    println!("\n── Monte-Carlo cross-check (20 000 neurons @0.8 V) ──");
+    let trials = 20_000u32;
+    let mut fail = 0u32;
+    for i in 0..trials {
+        let mut neuron = MultiMtjNeuron::new(8);
+        neuron.write_analog(&model, 0.8, 0xC0FFEE, i);
+        if neuron.count_parallel() < 4 {
+            fail += 1;
+        }
+    }
+    let (analytic, _) = neuron_error_rates(0.924, 0.0, 8, 4);
+    println!(
+        "  MC 1→0 error {:.4} % vs analytic {:.4} %",
+        fail as f64 / trials as f64 * 100.0,
+        analytic * 100.0
+    );
+
+    println!("\n── endurance + disturb-free reads ──");
+    let mut dev = Mtj::new();
+    let mut disturbed = 0;
+    for i in 0..10_000u32 {
+        dev.apply_pulse(&model, 0.8, 0.7, 3, i, 0);
+        if dev.read(&model, 16_000.0).disturbed {
+            disturbed += 1;
+        }
+        dev.reset(&model, 3, i, 16);
+    }
+    println!(
+        "  10 000 write/read/reset cycles: {} write pulses issued, {} read disturbs",
+        dev.write_cycles(),
+        disturbed
+    );
+    println!("  (paper §2.1: MTJ endurance practically unlimited [28]; VCMA reads disturb-free)");
+}

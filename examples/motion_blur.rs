@@ -1,0 +1,77 @@
+//! Motion-blur experiment: why the paper needs a *global* shutter.
+//!
+//! A bright bar sweeps across the sensor.  The VC-MTJ global-shutter
+//! design samples every output row at the same instant; a rolling-shutter
+//! in-pixel design (no non-volatile storage ⇒ sequential row × channel
+//! exposure) samples each row later than the last, skewing the bar and
+//! corrupting the binary feature map.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example motion_blur
+//! ```
+
+use pixelmtj::config::HwConfig;
+use pixelmtj::sensor::{
+    motion_skew_rms_px,
+    scene::{row_centroid_skew, SceneGen},
+    CaptureMode, FirstLayerWeights, GlobalShutter, PixelArraySim,
+    RollingShutter,
+};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let hw = HwConfig::load_or_default(artifacts);
+    let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))
+        .unwrap_or_else(|_| FirstLayerWeights::synthetic(32, 3, 3, 1));
+    let sim = PixelArraySim::new(hw.clone(), weights);
+    let (h, w) = (32usize, 32usize);
+
+    let gs = GlobalShutter::new(hw.clone());
+    let rs = RollingShutter::new(hw.clone());
+    let row_time_us = rs.row_skew_us(h, w) / sim.out_hw(h, w).0 as f64;
+
+    println!("rolling-shutter row skew: {:.1} µs/row ({} output rows ⇒ {:.1} ms/frame)",
+        row_time_us, sim.out_hw(h, w).0, rs.row_skew_us(h, w) / 1e3);
+    println!("global-shutter row skew: {} µs (all rows sampled at once)\n",
+        gs.row_skew_us(h, w));
+
+    println!(
+        "{:>12} {:>14} {:>14} {:>16}",
+        "speed (px/s)", "image skew px", "model skew px", "featmap flips %"
+    );
+    let gen = SceneGen::new(3, h, w);
+    for speed in [0.0, 1_000.0, 10_000.0, 50_000.0, 200_000.0] {
+        // Global shutter: one snapshot.
+        let global = gen.moving_bar(8.0, 5.0, 0);
+        // Rolling: each row sampled row_time later.
+        let rolling = gen.moving_bar_rolling(8.0, 5.0, speed, row_time_us, 0);
+        let img_skew = row_centroid_skew(&global, &rolling);
+        let model_skew = motion_skew_rms_px(
+            rs.row_skew_us(h, w),
+            sim.out_hw(h, w).0,
+            speed,
+        );
+        // Effect on the binary feature map the backend actually consumes.
+        let (a, _) = sim.capture(&global, CaptureMode::Ideal);
+        let (b, _) = sim.capture(&rolling, CaptureMode::Ideal);
+        let flips = a
+            .bits
+            .iter()
+            .zip(b.bits.iter())
+            .filter(|(x, y)| x != y)
+            .count() as f64
+            / a.bits.len() as f64;
+        println!(
+            "{speed:>12.0} {img_skew:>14.2} {model_skew:>14.2} {:>15.2}%",
+            flips * 100.0
+        );
+    }
+
+    println!(
+        "\n→ the global-shutter path keeps the feature map identical at any speed; \
+         rolling shutter corrupts it in proportion to velocity × row time \
+         (paper §1: motion blur 'impacting image quality more severely than \
+         in conventional systems')."
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: capture one synthetic scene with the in-pixel sensor
+//! simulator and classify it through the AOT backend — the minimal
+//! end-to-end path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use pixelmtj::config::HwConfig;
+use pixelmtj::runtime::Runtime;
+use pixelmtj::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
+};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+
+    // 1. Load the hardware config + trained first-layer weights that the
+    //    AOT artifacts were built with.
+    let hw = HwConfig::load_or_default(artifacts);
+    let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
+    let sim = PixelArraySim::new(hw.clone(), weights);
+
+    // 2. Generate a synthetic scene and run the in-pixel first layer with
+    //    stochastic 8-MTJ majority neurons.
+    let scene = SceneGen::new(3, 32, 32).textured(7);
+    let (activations, stats) = sim.capture(&scene, CaptureMode::CalibratedMtj);
+    println!(
+        "in-pixel layer: {}×{}×{} binary activations, {:.1} % sparse",
+        activations.channels,
+        activations.height,
+        activations.width,
+        activations.sparsity() * 100.0
+    );
+    println!(
+        "device events: {} MTJ writes, {} reads, {} resets",
+        stats.mtj_writes, stats.mtj_reads, stats.mtj_resets
+    );
+
+    // 3. Classify through the AOT-compiled backend (PJRT, no Python).
+    let runtime = Arc::new(Runtime::cpu(artifacts)?);
+    let meta = runtime.meta.as_ref().expect("run `make artifacts` first");
+    let exe = runtime.load("backend_b1")?;
+    let input = activations.to_f32();
+    let shape: Vec<i64> = meta.act_shape.iter().map(|&d| d as i64).collect();
+    let logits = &exe.run_f32(&[(&input, &shape)])?[0];
+    let label = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!(
+        "backend ({}): predicted class {label}, logits {logits:.2?}",
+        meta.arch
+    );
+    Ok(())
+}

@@ -1,0 +1,224 @@
+# Emit HLO text (NOT serialized protos) for the rust PJRT loader.
+#
+# jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids which the
+# xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO
+# *text* parser reassigns ids, so text round-trips cleanly (see
+# /opt/xla-example/README.md).
+#
+# Artifacts produced (all consumed by rust/src/runtime):
+#   hwcfg.json            — device/circuit constants (single source of truth)
+#   params.pkl            — trained model params (reused across rebuilds)
+#   frontend_b{N}.hlo.txt — in-pixel golden model: img -> binary activations
+#                           (pallas kernels lowered inline, ideal comparator)
+#   frontend_mtj_b{N}.hlo.txt — same, with stochastic multi-MTJ majority
+#                           neuron; (img, seed) -> binary activations
+#   backend_b{N}.hlo.txt  — binary activations -> logits
+#   full_b{N}.hlo.txt     — img -> logits (frontend+backend fused)
+#   golden.json           — test vectors (inputs + expected outputs from the
+#                           pure-jnp oracle) for rust integration tests
+#   meta.json             — shape/arch manifest
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import hwcfg
+from . import model as M
+from . import train as T
+from .hwcfg import DEFAULT as HW
+from .kernels import ref
+
+BATCHES = (1, 8)
+IMG_HW = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default print elides
+    # weight tensors as `constant({...})`, which the XLA text parser then
+    # silently reads back as zeros.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text contains elided constants")
+    return text
+
+
+def write_hlo(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def frontend_shapes(batch: int):
+    cfg = HW.network
+    hp = (IMG_HW - cfg.kernel_size) // cfg.stride + 1
+    return (batch, cfg.in_channels, IMG_HW, IMG_HW), (
+        batch, cfg.first_channels, hp, hp,
+    )
+
+
+def build(out_dir: str, arch: str, steps: int, seed: int, force_train: bool,
+          use_pallas: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    hwcfg.dump(os.path.join(out_dir, "hwcfg.json"))
+
+    params_path = os.path.join(out_dir, "params.pkl")
+    if force_train or not os.path.exists(params_path):
+        result = T.train(arch=arch, steps=steps, seed=seed)
+        T.save_params(result["params"], params_path)
+        with open(os.path.join(out_dir, "train_curve.json"), "w") as f:
+            json.dump({"curve": result["curve"],
+                       "test_acc": result["test_acc"],
+                       "sparsity": result["sparsity"]}, f)
+    params = T.load_params(params_path)
+    arch = params["arch"]
+    front, back = params["frontend"], params["backend"]
+
+    # p_sw at the operating point (0.8 V write): measured 92.4 % AP->P;
+    # sub-threshold erroneous switching measured 6.2 % (0.7 V point).
+    p_hi = HW.mtj.sw_calib_prob_ap_to_p[1]
+    p_lo = HW.mtj.sw_calib_prob_ap_to_p[0]
+
+    def frontend_fn(img):
+        o, _ = M.frontend_apply(front, img, use_pallas=use_pallas)
+        return (o,)
+
+    def frontend_mtj_fn(img, seed_arr):
+        o, _ = M.frontend_apply(
+            front, img, use_pallas=use_pallas,
+            mtj_error=(p_hi, p_lo), seed=seed_arr,
+        )
+        return (o,)
+
+    def backend_fn(o):
+        logits, _ = M.backend_apply(back, o, arch=arch, train=False)
+        return (logits,)
+
+    def full_fn(img):
+        o, _ = M.frontend_apply(front, img, use_pallas=use_pallas)
+        logits, _ = M.backend_apply(back, o, arch=arch, train=False)
+        return (logits,)
+
+    for b in BATCHES:
+        in_shape, out_shape = frontend_shapes(b)
+        img_spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+        act_spec = jax.ShapeDtypeStruct(out_shape, jnp.float32)
+        seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+        write_hlo(frontend_fn, (img_spec,),
+                  os.path.join(out_dir, f"frontend_b{b}.hlo.txt"))
+        write_hlo(frontend_mtj_fn, (img_spec, seed_spec),
+                  os.path.join(out_dir, f"frontend_mtj_b{b}.hlo.txt"))
+        write_hlo(backend_fn, (act_spec,),
+                  os.path.join(out_dir, f"backend_b{b}.hlo.txt"))
+        write_hlo(full_fn, (img_spec,),
+                  os.path.join(out_dir, f"full_b{b}.hlo.txt"))
+
+    golden(out_dir, params, p_hi, p_lo)
+    evalset(out_dir, n=192)
+
+    in_shape, out_shape = frontend_shapes(1)
+    meta = {
+        "arch": arch,
+        "img_shape": list(in_shape),
+        "act_shape": list(out_shape),
+        "num_classes": int(back["fc"]["b"].shape[0]),
+        "batches": list(BATCHES),
+        "p_sw_high": float(p_hi),
+        "p_sw_low": float(p_lo),
+        "n_mtj": HW.mtj.n_mtj_per_neuron,
+        "majority_k": HW.mtj.majority_k,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  wrote {out_dir}/meta.json")
+
+
+def golden(out_dir: str, params, p_hi: float, p_lo: float):
+    """Test vectors for the rust integration tests (pure-jnp oracle)."""
+    front, back, arch = params["frontend"], params["backend"], params["arch"]
+    key = jax.random.PRNGKey(7)
+    img = jax.random.uniform(key, frontend_shapes(1)[0], jnp.float32)
+    o, _ = M.frontend_apply(front, img)
+    o_mtj, _ = M.frontend_apply(front, img, mtj_error=(p_hi, p_lo), seed=99)
+    logits, _ = M.backend_apply(back, o, arch=arch, train=False)
+
+    w_fused, shift = M.fuse_frontend_bn(front)
+    payload = {
+        "img": np.asarray(img).ravel().tolist(),
+        "frontend_out": np.asarray(o).ravel().tolist(),
+        "frontend_mtj_out": np.asarray(o_mtj).ravel().tolist(),
+        "mtj_seed": 99,
+        "logits": np.asarray(logits).ravel().tolist(),
+        "w_fused": np.asarray(w_fused).ravel().tolist(),
+        "w_shape": list(w_fused.shape),
+        "bn_shift": np.asarray(shift).ravel().tolist(),
+        "v_th": float(front["v_th"]),
+        "hoyer_ext": float(
+            ref.hoyer_extremum(ref.clip_unit(_frontend_z(front, img)))
+        ),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(payload, f)
+    print(f"  wrote {out_dir}/golden.json")
+
+
+def evalset(out_dir: str, n: int = 192):
+    """Labeled synthetic eval frames for the rust-side accuracy
+    experiments (Fig. 8 error sweep, Table 1 harness)."""
+    from . import data as data_mod
+
+    imgs, labels = data_mod.generate(n, seed=31337)
+    payload = {
+        "n": int(n),
+        "shape": [3, data_mod.IMG_HW, data_mod.IMG_HW],
+        "labels": labels.tolist(),
+        # Quantize to 12-bit (the sensor's own input precision) to keep
+        # the file compact; rust divides by 4095.
+        "pixels_u12": np.round(imgs * 4095).astype(np.int32).ravel().tolist(),
+    }
+    with open(os.path.join(out_dir, "evalset.json"), "w") as f:
+        json.dump(payload, f)
+    print(f"  wrote {out_dir}/evalset.json ({n} frames)")
+
+
+def _frontend_z(front, img):
+    """Recompute the pre-threshold z tensor (for the hoyer_ext golden)."""
+    cfg = HW.network
+    w_fused, shift = M.fuse_frontend_bn(front)
+    w_flat = ref.flatten_weights(w_fused)
+    patches, (n, hp, wp) = ref.extract_patches(img, cfg.kernel_size,
+                                               cfg.stride)
+    u = ref.inpixel_conv_ref(
+        patches, jnp.maximum(w_flat, 0.0), jnp.maximum(-w_flat, 0.0)
+    )
+    u = u + shift[None, :]
+    return (u / front["v_th"]).reshape(n, hp, wp, -1).transpose(0, 3, 1, 2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--arch", default="vgg7")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force-train", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the oracle path instead of pallas kernels")
+    args = ap.parse_args()
+    build(args.out, args.arch, args.steps, args.seed, args.force_train,
+          use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

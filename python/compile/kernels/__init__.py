@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (interpret-mode on CPU) + pure-jnp oracles."""
+from . import binary_act, inpixel_conv, mtj, ref  # noqa: F401

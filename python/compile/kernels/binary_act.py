@@ -1,0 +1,105 @@
+"""Pallas kernel for the Hoyer-thresholded binary activation (paper Eq. 1-2).
+
+Two kernels:
+
+* :func:`hoyer_stats` — a grid reduction producing ``(sum z_clip^2,
+  sum |z_clip|)`` so the Hoyer extremum ``E = s2 / s1`` can be formed with
+  one scalar divide outside the kernel.  Accumulation happens in a VMEM
+  scratch-free output block that every grid step adds into (sequential TPU
+  grid semantics make this race-free; interpret mode preserves them).
+* :func:`binary_threshold` — elementwise ``o = (z >= thr)`` with the
+  threshold broadcast from an SMEM-resident (1, 1) block.
+
+Kept separate from the conv kernel so the coordinator can re-threshold a
+stored analog frame (the V_OFS tunable-mapping experiment) without
+recomputing the MACs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024  # flat elements per grid step (8 x 128 VPU registers)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _stats_kernel(z_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = jnp.clip(z_ref[...], 0.0, 1.0)
+    s2 = jnp.sum(z * z)
+    s1 = jnp.sum(jnp.abs(z))
+    acc_ref[0, 0] += s2
+    acc_ref[0, 1] += s1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hoyer_stats(z, *, interpret=True):
+    """Returns (sum(clip(z)^2), sum(|clip(z)|)) over the whole tensor."""
+    flat = z.reshape(-1)
+    n = flat.shape[0]
+    n_pad = _round_up(max(n, 1), TILE)
+    # Zero padding is exact here: clip(0)^2 = |clip(0)| = 0.
+    zp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(flat).reshape(-1, TILE)
+    grid = (n_pad // TILE,)
+    acc = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(zp)
+    return acc[0, 0], acc[0, 1]
+
+
+def hoyer_extremum(z, *, eps=1e-9, interpret=True):
+    """E(clip(z)) = sum(z_clip^2) / sum(|z_clip|) via the stats kernel."""
+    s2, s1 = hoyer_stats(z, interpret=interpret)
+    return s2 / (s1 + eps)
+
+
+def _threshold_kernel(z_ref, t_ref, o_ref):
+    o_ref[...] = (z_ref[...] >= t_ref[0, 0]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def binary_threshold(z, threshold, *, interpret=True):
+    """Elementwise o = (z >= threshold), threshold a scalar."""
+    shape = z.shape
+    flat = z.reshape(-1)
+    n = flat.shape[0]
+    n_pad = _round_up(max(n, 1), TILE)
+    zp = jnp.full((n_pad,), -jnp.inf, jnp.float32).at[:n].set(flat)
+    zp = zp.reshape(-1, TILE)
+    t = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    grid = (n_pad // TILE,)
+    out = pl.pallas_call(
+        _threshold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad // TILE, TILE), jnp.float32),
+        interpret=interpret,
+    )(zp, t)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def hoyer_binary(z, *, interpret=True):
+    """Full Eq. 2: threshold z at the Hoyer extremum of clip(z, 0, 1)."""
+    return binary_threshold(z, hoyer_extremum(z, interpret=interpret),
+                            interpret=interpret)

@@ -1,0 +1,87 @@
+"""Pallas kernel for the hardware-aware in-pixel convolution (L1 hot spot).
+
+The paper's analog pixel array computes, per output kernel position, the
+two-phase MAC ``f(P @ W+) - f(P @ W-)`` where ``f`` is the GF22FDX
+curve-fitted transfer function (Fig. 4a).  During training (and in the
+golden AOT frontend) this is the compute hot spot: for every output pixel a
+(C_in*k*k) x C_out matmul followed by a VPU post-op.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the patch matrix is tiled along rows (output pixels) into VMEM blocks of
+    ``TILE_M`` rows; K = C_in*k*k is zero-padded to a lane-friendly multiple
+    of 8 so the MXU sees aligned operands;
+  * both weight operands (W+, W-) are tiny (<= 27 x 32 fp32 ≈ 3.5 KB) and
+    stay resident in VMEM across the whole grid (block index map pins them
+    to block (0, 0));
+  * the non-linearity and the subtraction fuse into the same kernel body —
+    one HBM round-trip per activation tile instead of three.
+
+Kernels run ``interpret=True`` on this CPU image (real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..hwcfg import DEFAULT as HW
+
+TILE_M = 128  # output pixels per VMEM tile (8 sublanes x 16 — MXU friendly)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _nl(x, alpha, sat):
+    # Same curve as ref.fitted_nonlinearity, inlined so it fuses in-kernel.
+    return (1.0 - alpha) * x + alpha * sat * jnp.tanh(x / sat)
+
+
+def _conv_kernel(p_ref, wp_ref, wn_ref, o_ref, *, alpha, sat):
+    """One (TILE_M, K) patch tile -> (TILE_M, C_out) conv output tile."""
+    p = p_ref[...]
+    mac_p = jnp.dot(p, wp_ref[...], preferred_element_type=jnp.float32)
+    mac_n = jnp.dot(p, wn_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _nl(mac_p, alpha, sat) - _nl(mac_n, alpha, sat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def inpixel_conv(patches, w_pos, w_neg, *, interpret=True):
+    """Hardware-aware two-phase MAC: f(P @ W+) - f(P @ W-).
+
+    patches: (M, K) float32 — im2col rows (output-pixel major)
+    w_pos/w_neg: (K, C_out) float32, non-negative magnitude matrices
+    Returns (M, C_out) float32 analog conv output in normalized units.
+    """
+    m, k = patches.shape
+    k2, c_out = w_pos.shape
+    assert k == k2 and w_neg.shape == (k, c_out)
+    alpha = float(HW.circuit.nl_alpha)
+    sat = float(HW.circuit.nl_sat)
+
+    m_pad = _round_up(max(m, 1), TILE_M)
+    k_pad = _round_up(k, 8)
+    c_pad = _round_up(c_out, 8)
+    p = jnp.zeros((m_pad, k_pad), jnp.float32).at[:m, :k].set(patches)
+    wp = jnp.zeros((k_pad, c_pad), jnp.float32).at[:k, :c_out].set(w_pos)
+    wn = jnp.zeros((k_pad, c_pad), jnp.float32).at[:k, :c_out].set(w_neg)
+
+    grid = (m_pad // TILE_M,)
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, alpha=alpha, sat=sat),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k_pad), lambda i: (i, 0)),
+            pl.BlockSpec((k_pad, c_pad), lambda i: (0, 0)),
+            pl.BlockSpec((k_pad, c_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, c_pad), jnp.float32),
+        interpret=interpret,
+    )(p, wp, wn)
+    return out[:m, :c_out]

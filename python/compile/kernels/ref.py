@@ -1,0 +1,196 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only (no pallas, no custom calls).
+``python/tests/test_kernels.py`` asserts allclose between the two; the rust
+integration tests additionally validate the AOT artifacts against values
+generated from these oracles.
+
+The stochastic MTJ oracle uses a counter-based hash (murmur3 finalizer) so
+that the kernel and the oracle draw *identical* uniforms for an element
+index — equality is exact, not statistical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..hwcfg import DEFAULT as HW
+
+# ---------------------------------------------------------------------------
+# Circuit transfer curve (paper Fig. 4a)
+# ---------------------------------------------------------------------------
+
+
+def fitted_nonlinearity(x, alpha=None, sat=None):
+    """Weight-augmented pixel MAC transfer curve.
+
+    ``f(x) = (1 - alpha) * x + alpha * sat * tanh(x / sat)`` — unit slope at
+    the origin with compressive saturation toward the rails, matching the
+    paper's Fig. 4(a) scatter (simulated GF22FDX output vs ideal W*I).
+    """
+    alpha = HW.circuit.nl_alpha if alpha is None else alpha
+    sat = HW.circuit.nl_sat if sat is None else sat
+    return (1.0 - alpha) * x + alpha * sat * jnp.tanh(x / sat)
+
+
+# ---------------------------------------------------------------------------
+# In-pixel convolution (two-phase MAC through the subtractor)
+# ---------------------------------------------------------------------------
+
+
+def extract_patches(img, kernel_size, stride):
+    """im2col: (N, C, H, W) -> (N * H' * W', C * k * k).
+
+    Column ordering matches ``jax.lax.conv_general_dilated_patches``:
+    channel-major, then kernel row, then kernel column — the same ordering
+    used to flatten the weight tensor in :func:`flatten_weights`.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        img,
+        filter_shape=(kernel_size, kernel_size),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (N, C*k*k, H', W')
+    n, ckk, hp, wp = patches.shape
+    patches = jnp.transpose(patches, (0, 2, 3, 1)).reshape(n * hp * wp, ckk)
+    return patches, (n, hp, wp)
+
+
+def flatten_weights(w):
+    """(C_out, C_in, k, k) -> (C_in * k * k, C_out), matching extract_patches."""
+    c_out = w.shape[0]
+    return w.reshape(c_out, -1).T
+
+
+def inpixel_conv_ref(patches, w_pos, w_neg):
+    """Two-phase analog MAC: f(P @ W+) - f(P @ W-).
+
+    The pixel array accumulates the positive-weight MAC and negative-weight
+    MAC in separate integration phases (paper §2.2.2); each phase passes
+    through the pixel transfer curve; the passive subtractor differences
+    them.  Inputs are in normalized units (the hardware maps [-3, 3] to the
+    rails).
+    """
+    mac_p = patches @ w_pos
+    mac_n = patches @ w_neg
+    return fitted_nonlinearity(mac_p) - fitted_nonlinearity(mac_n)
+
+
+# ---------------------------------------------------------------------------
+# Hoyer-regularized binary activation (paper Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+
+def hoyer_extremum(z_clip, eps=1e-9):
+    """E(z) = sum(z^2) / sum(|z|) — the Hoyer extremum of the clipped tensor."""
+    return jnp.sum(z_clip * z_clip) / (jnp.sum(jnp.abs(z_clip)) + eps)
+
+
+def clip_unit(z):
+    return jnp.clip(z, 0.0, 1.0)
+
+
+def binary_act_ref(z, threshold):
+    """o = 1 if z >= threshold else 0 (paper Eq. 2)."""
+    return (z >= threshold).astype(z.dtype)
+
+
+def hoyer_binary_ref(z):
+    """Full Eq. 2: threshold at the Hoyer extremum of clip(z, 0, 1)."""
+    return binary_act_ref(z, hoyer_extremum(clip_unit(z)))
+
+
+# ---------------------------------------------------------------------------
+# Stochastic VC-MTJ switching + majority vote (paper §2.2.3, Fig. 5)
+# ---------------------------------------------------------------------------
+
+_M1 = jnp.uint32(0x7FEB352D)
+_M2 = jnp.uint32(0x846CA68B)
+_GOLD = jnp.uint32(0x9E3779B9)
+_MIX = jnp.uint32(0x85EBCA6B)
+
+
+def _hash_u32(x):
+    """murmur3 finalizer — a high-quality 32-bit mixer (counter-based RNG)."""
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform_from_counter(seed, index, stream):
+    """Deterministic U[0,1) from (seed, element index, stream id).
+
+    Identical arithmetic to the Pallas kernel — exact reproducibility.
+    """
+    seed = jnp.uint32(seed)
+    index = index.astype(jnp.uint32)
+    stream = jnp.uint32(stream)
+    ctr = seed ^ (index * _GOLD + stream * _MIX)
+    h = _hash_u32(ctr)
+    return h.astype(jnp.float32) * jnp.float32(2.0**-32)
+
+
+def mtj_majority_ref(bits, p_sw_high, p_sw_low, seed, n_mtj=None, k=None):
+    """Multi-MTJ neuron: each of ``n_mtj`` devices is driven by the same
+    analog level; a device switches with probability ``p_sw_high`` when the
+    level is above threshold (``bits == 1``) and erroneously switches with
+    probability ``p_sw_low`` when below (``bits == 0``).  The neuron output
+    is the majority (>= k of n) of the devices (paper §2.2.3, Fig. 5).
+
+    ``bits`` is a flat or shaped {0,1} float tensor; returns same shape.
+    """
+    n_mtj = HW.mtj.n_mtj_per_neuron if n_mtj is None else n_mtj
+    k = HW.mtj.majority_k if k is None else k
+    shape = bits.shape
+    flat = bits.reshape(-1)
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    p = jnp.where(flat > 0.5, p_sw_high, p_sw_low).astype(jnp.float32)
+    count = jnp.zeros_like(flat, dtype=jnp.float32)
+    for m in range(n_mtj):
+        u = uniform_from_counter(seed, idx, m)
+        count = count + (u < p).astype(jnp.float32)
+    out = (count >= k).astype(bits.dtype)
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Full in-pixel frontend oracle (conv -> threshold -> MTJ majority)
+# ---------------------------------------------------------------------------
+
+
+def frontend_ref(
+    img,
+    weights,
+    v_th,
+    kernel_size=None,
+    stride=None,
+    p_sw_high=1.0,
+    p_sw_low=0.0,
+    seed=0,
+    apply_mtj=False,
+):
+    """Golden model of the whole in-pixel pipeline for one frame batch.
+
+    img:     (N, C, H, W) normalized [0, 1]
+    weights: (C_out, C_in, k, k) — signed, 4-bit-quantized upstream
+    v_th:    trainable threshold scalar (paper Eq. 1)
+    Returns (N, C_out, H', W') binary activations.
+    """
+    kernel_size = HW.network.kernel_size if kernel_size is None else kernel_size
+    stride = HW.network.stride if stride is None else stride
+    patches, (n, hp, wp) = extract_patches(img, kernel_size, stride)
+    w_flat = flatten_weights(weights)
+    w_pos = jnp.maximum(w_flat, 0.0)
+    w_neg = jnp.maximum(-w_flat, 0.0)
+    u = inpixel_conv_ref(patches, w_pos, w_neg)
+    z = u / v_th
+    o = hoyer_binary_ref(z)
+    if apply_mtj:
+        o = mtj_majority_ref(o, p_sw_high, p_sw_low, seed)
+    c_out = weights.shape[0]
+    return o.reshape(n, hp, wp, c_out).transpose(0, 3, 1, 2)

@@ -1,0 +1,455 @@
+# L2: the paper's model — Hoyer-regularized binary-activation NN whose first
+# layer is the in-pixel hardware-aware convolution (calls kernels.*).
+#
+# Layout conventions: NCHW activations, OIHW weights, float32 everywhere.
+# Weights of every conv/fc are quantized to 4 bits (paper: iso-weight-
+# precision comparison uses 4-bit weights) with a straight-through
+# estimator; binary activations use the Hoyer-extremum threshold (Eq. 2)
+# with an STE through the clip window.
+#
+# Two execution paths for the frontend:
+#   * use_pallas=True  — L1 pallas kernels (interpret mode); used by aot.py
+#     so the exported HLO contains the kernel lowering.
+#   * use_pallas=False — the pure-jnp oracle (identical math, faster to
+#     trace); used by the training loop.
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hwcfg import DEFAULT as HW
+from .kernels import binary_act, inpixel_conv, mtj, ref
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Quantization + binary activation with straight-through estimators
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def quantize_weights(w, bits=4):
+    """Symmetric per-tensor quantization to `bits` signed levels (STE)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    return jnp.round(w / scale).clip(-qmax, qmax) * scale
+
+
+def _quant_fwd(w, bits=4):
+    return quantize_weights(w, bits), None
+
+
+def _quant_bwd(_, g):
+    return (g, None)
+
+
+quantize_weights.defvjp(_quant_fwd, _quant_bwd)
+
+
+@jax.custom_vjp
+def binary_ste(z, threshold):
+    """o = (z >= threshold); gradient passes through the [0, 1] clip window.
+
+    This is the STE used by the Hoyer-regularized BNN [46]: the backward
+    pass sees d o / d z = 1 inside 0 <= z <= 1 and 0 outside, and the
+    threshold receives the negated sum of the in-window gradient (moving
+    the threshold up turns marginal ones into zeros).
+    """
+    return (z >= threshold).astype(z.dtype)
+
+
+def _bin_fwd(z, threshold):
+    return binary_ste(z, threshold), (z, threshold)
+
+
+def _bin_bwd(resids, g):
+    z, thr = resids
+    window = ((z >= 0.0) & (z <= 1.0)).astype(g.dtype)
+    gz = g * window
+    gthr = -jnp.sum(gz)
+    return gz, jnp.reshape(gthr, jnp.shape(thr))
+
+
+binary_ste.defvjp(_bin_fwd, _bin_bwd)
+
+
+def hoyer_sq(z_clip, eps=1e-9):
+    """Hoyer regularizer H(z) = (sum|z|)^2 / sum(z^2) (loss term, [46])."""
+    s1 = jnp.sum(jnp.abs(z_clip))
+    s2 = jnp.sum(z_clip * z_clip)
+    return (s1 * s1) / (s2 + eps)
+
+
+def hoyer_act(z, aux: List[jnp.ndarray]):
+    """Eq. 2 activation: threshold at the Hoyer extremum of clip(z, 0, 1).
+
+    Appends this layer's Hoyer loss to `aux` (training objective adds the
+    regularizer sum; see train.py).  The extremum is treated as a constant
+    w.r.t. the gradient (stop_gradient), matching [46].
+    """
+    z_clip = jnp.clip(z, 0.0, 1.0)
+    aux.append(hoyer_sq(z_clip))
+    ext = jax.lax.stop_gradient(ref.hoyer_extremum(z_clip))
+    return binary_ste(z, ext)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (conv / bn / fc as param dicts)
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, c_in, c_out, k=3):
+    fan_in = c_in * k * k
+    w = jax.random.normal(key, (c_out, c_in, k, k)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w.astype(jnp.float32)}
+
+
+def bn_init(c):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def fc_init(key, d_in, d_out):
+    w = jax.random.normal(key, (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def batch_norm(x, p, train: bool, momentum=0.9, eps=1e-5):
+    """Returns (y, updated_bn_params)."""
+    if train:
+        mean = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        new_p = {
+            **p,
+            "mean": momentum * p["mean"] + (1 - momentum) * mean,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var, new_p = p["mean"], p["var"], p
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean[None, :, None, None]) * inv[None, :, None, None]
+    y = y * p["gamma"][None, :, None, None] + p["beta"][None, :, None, None]
+    return y, new_p
+
+
+def max_pool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, s, s), "VALID"
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# In-pixel frontend (first layer, executed by the sensor)
+# ---------------------------------------------------------------------------
+
+
+def frontend_init(key, cfg=HW.network):
+    k1, _ = jax.random.split(key)
+    return {
+        "conv": conv_init(k1, cfg.in_channels, cfg.first_channels,
+                          cfg.kernel_size),
+        "bn": bn_init(cfg.first_channels),
+        "v_th": jnp.asarray(2.0, jnp.float32),  # trainable threshold (Eq. 1)
+    }
+
+
+def fuse_frontend_bn(front: Params, eps=1e-5) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold BN scale into the pixel weights and shift into the comparator.
+
+    Paper §2.4.1: "fuse the batch normalization layer by integrating the
+    scale term into the preceding convolutional layer weights ... and adjust
+    the switching point of the MTJ-based comparator to include the shift
+    term B".  Returns (w_fused (OIHW), per-channel shift B).
+    """
+    w = quantize_weights(front["conv"]["w"], HW.network.weight_bits)
+    bn = front["bn"]
+    inv = jax.lax.rsqrt(bn["var"] + eps)
+    scale = bn["gamma"] * inv
+    shift = bn["beta"] - bn["mean"] * scale
+    w_fused = w * scale[:, None, None, None]
+    return w_fused, shift
+
+
+def frontend_apply(
+    front: Params,
+    img: jnp.ndarray,
+    *,
+    train: bool = False,
+    aux: List[jnp.ndarray] | None = None,
+    use_pallas: bool = False,
+    mtj_error: Tuple[float, float] | None = None,
+    seed: int = 0,
+    analog_noise: float = 0.0,
+) -> Tuple[jnp.ndarray, Params]:
+    """In-pixel first layer: hardware conv -> scale -> Hoyer binary.
+
+    img: (N, C, H, W) in [0, 1].  Returns ((N, C_out, H', W') binary, new
+    frontend params with updated BN stats).
+
+    When `train`, BN runs on batch stats over the *analog* conv output and
+    the binary STE path is used.  At inference BN is fused into the weights
+    (per §2.4.1) and, when `mtj_error` = (p_sw_high, p_sw_low) is given, the
+    stochastic multi-MTJ majority neuron replaces the ideal comparator.
+    """
+    cfg = HW.network
+    aux = aux if aux is not None else []
+
+    if train:
+        w_q = quantize_weights(front["conv"]["w"], cfg.weight_bits)
+        patches, (n, hp, wp) = ref.extract_patches(img, cfg.kernel_size,
+                                                   cfg.stride)
+        w_flat = ref.flatten_weights(w_q)
+        u = ref.inpixel_conv_ref(
+            patches, jnp.maximum(w_flat, 0.0), jnp.maximum(-w_flat, 0.0)
+        )
+        u = u.reshape(n, hp, wp, cfg.first_channels).transpose(0, 3, 1, 2)
+        u, new_bn = batch_norm(u, front["bn"], train=True)
+        z = u / front["v_th"]
+        o = hoyer_act(z, aux)
+        return o, {**front, "bn": new_bn}
+
+    # Inference: BN fused into weights; shift folded into the threshold.
+    w_fused, shift = fuse_frontend_bn(front)
+    w_flat = ref.flatten_weights(w_fused)
+    w_pos, w_neg = jnp.maximum(w_flat, 0.0), jnp.maximum(-w_flat, 0.0)
+    patches, (n, hp, wp) = ref.extract_patches(img, cfg.kernel_size, cfg.stride)
+    if use_pallas:
+        u = inpixel_conv.inpixel_conv(patches, w_pos, w_neg)
+    else:
+        u = ref.inpixel_conv_ref(patches, w_pos, w_neg)
+    if analog_noise > 0.0:
+        # kTC-equivalent noise on the analog conv node, counter-based so the
+        # rust circuit sim can reproduce it exactly.
+        idx = jnp.arange(u.size, dtype=jnp.uint32)
+        g = ref.uniform_from_counter(seed ^ 0x5EED, idx, 101)
+        g2 = ref.uniform_from_counter(seed ^ 0x5EED, idx, 102)
+        # Box-Muller from the two uniforms.
+        normal = jnp.sqrt(-2.0 * jnp.log(g + 1e-12)) * jnp.cos(
+            2.0 * jnp.pi * g2
+        )
+        u = u + analog_noise * normal.reshape(u.shape)
+    u = u + shift[None, :]  # comparator shift term B (per channel)
+    z = (u / front["v_th"]).reshape(n, hp, wp, -1).transpose(0, 3, 1, 2)
+    if use_pallas:
+        ext = binary_act.hoyer_extremum(z)
+        o = binary_act.binary_threshold(z, ext)
+    else:
+        o = ref.hoyer_binary_ref(z)
+    if mtj_error is not None:
+        p_hi, p_lo = mtj_error
+        if use_pallas:
+            o = mtj.mtj_majority(o, p_hi, p_lo, seed)
+        else:
+            o = ref.mtj_majority_ref(o, p_hi, p_lo, seed)
+    return o, front
+
+
+# ---------------------------------------------------------------------------
+# Backends: VGG and ResNet variants (paper Table 1)
+# ---------------------------------------------------------------------------
+
+# Layer lists after the in-pixel 32-channel stride-2 first layer.
+# 'M' = 2x2 max pool.  These follow the paper's architectures with the
+# standard CIFAR adaptations; `*` variants drop the first max pool.
+VGG_CFGS: Dict[str, Sequence[Any]] = {
+    # paper's VGG16: conv1 is the in-pixel layer; the rest is standard.
+    "vgg16": [64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512],
+    # small variant used for the in-budget end-to-end runs on this image.
+    "vgg7": [64, "M", 128, 128, "M", 256, 256],
+    "vgg4": [64, "M", 128],
+}
+
+RESNET_CFGS: Dict[str, Tuple[Sequence[int], Sequence[int], bool]] = {
+    # name: (blocks per stage, channels per stage, keep first max pool)
+    "resnet18": ([2, 2, 2, 2], [64, 128, 256, 512], True),
+    "resnet18*": ([2, 2, 2, 2], [64, 128, 256, 512], False),
+    "resnet20": ([3, 3, 3], [16, 32, 64], True),
+    "resnet34*": ([3, 4, 6, 3], [64, 128, 256, 512], False),
+    "resnet10": ([1, 1, 1, 1], [32, 64, 128, 256], True),
+}
+
+
+def is_resnet(arch: str) -> bool:
+    return arch.startswith("resnet")
+
+
+def backend_init(key, arch: str, num_classes: int = 10,
+                 in_channels: int | None = None) -> Params:
+    in_c = HW.network.first_channels if in_channels is None else in_channels
+    if is_resnet(arch):
+        return _resnet_init(key, arch, num_classes, in_c)
+    return _vgg_init(key, arch, num_classes, in_c)
+
+
+def backend_apply(params: Params, x, *, arch: str, train: bool = False,
+                  aux: List[jnp.ndarray] | None = None):
+    aux = aux if aux is not None else []
+    if is_resnet(arch):
+        return _resnet_apply(params, x, arch=arch, train=train, aux=aux)
+    return _vgg_apply(params, x, train=train, aux=aux)
+
+
+def _vgg_init(key, arch, num_classes, in_c):
+    cfg = VGG_CFGS[arch]
+    keys = jax.random.split(key, len(cfg) + 1)
+    layers = []
+    c = in_c
+    for i, item in enumerate(cfg):
+        if item == "M":
+            layers.append({})  # pool marker: empty dict keeps pytree clean
+        else:
+            layers.append({
+                "conv": conv_init(keys[i], c, int(item)),
+                "bn": bn_init(int(item)),
+            })
+            c = int(item)
+    n_act = len([l for l in layers if "conv" in l])
+    return {
+        "layers": layers,
+        "fc": fc_init(keys[-1], c, num_classes),
+        "v_th": jnp.full((n_act,), 2.0, jnp.float32),
+    }
+
+
+def _vgg_apply(params, x, *, train, aux):
+    new_layers = []
+    ci = 0
+    for layer in params["layers"]:
+        if "conv" not in layer:  # pool marker
+            if x.shape[2] >= 2 and x.shape[3] >= 2:
+                x = max_pool(x)
+            new_layers.append(layer)
+            continue
+        w = quantize_weights(layer["conv"]["w"], HW.network.weight_bits)
+        x = conv2d(x, w)
+        x, new_bn = batch_norm(x, layer["bn"], train)
+        x = hoyer_act(x / params["v_th"][ci], aux)
+        new_layers.append({**layer, "bn": new_bn})
+        ci += 1
+    x = global_avg_pool(x)
+    w = quantize_weights(params["fc"]["w"], HW.network.weight_bits)
+    logits = x @ w + params["fc"]["b"]
+    return logits, {**params, "layers": new_layers}
+
+
+def _resnet_init(key, arch, num_classes, in_c):
+    blocks, channels, first_pool = RESNET_CFGS[arch]
+    n_conv = sum(blocks) * 2 + len(channels)  # 2 convs/block + projections
+    keys = iter(jax.random.split(key, n_conv + 4))
+    stages = []
+    c = in_c
+    for si, (n_blk, c_out) in enumerate(zip(blocks, channels)):
+        stage = []
+        for bi in range(n_blk):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = {
+                "conv1": conv_init(next(keys), c, c_out),
+                "bn1": bn_init(c_out),
+                "conv2": conv_init(next(keys), c_out, c_out),
+                "bn2": bn_init(c_out),
+            }
+            if stride != 1 or c != c_out:
+                blk["proj"] = conv_init(next(keys), c, c_out, k=1)
+                blk["proj_bn"] = bn_init(c_out)
+            stage.append(blk)
+            c = c_out
+        stages.append(stage)
+    n_act = sum(blocks) * 2
+    return {
+        "stages": stages,
+        "fc": fc_init(next(keys), c, num_classes),
+        "v_th": jnp.full((n_act,), 2.0, jnp.float32),
+    }
+
+
+def _resnet_apply(params, x, *, arch, train, aux):
+    _, _, first_pool = RESNET_CFGS[arch]
+    if first_pool and x.shape[2] >= 2 and x.shape[3] >= 2:
+        x = max_pool(x)
+    ci = 0
+    new_stages = []
+    for si, stage in enumerate(params["stages"]):
+        new_stage = []
+        for bi, blk in enumerate(stage):
+            # stride is structural: first block of each non-initial stage
+            # downsamples (matches _resnet_init).
+            stride = 2 if (bi == 0 and si > 0) else 1
+            idn = x
+            w1 = quantize_weights(blk["conv1"]["w"], HW.network.weight_bits)
+            h, nb1 = batch_norm(conv2d(x, w1, stride), blk["bn1"], train)
+            h = hoyer_act(h / params["v_th"][ci], aux)
+            ci += 1
+            w2 = quantize_weights(blk["conv2"]["w"], HW.network.weight_bits)
+            h, nb2 = batch_norm(conv2d(h, w2), blk["bn2"], train)
+            nblk = {**blk, "bn1": nb1, "bn2": nb2}
+            if "proj" in blk:
+                wp = quantize_weights(blk["proj"]["w"],
+                                      HW.network.weight_bits)
+                idn, nbp = batch_norm(conv2d(x, wp, stride), blk["proj_bn"],
+                                      train)
+                nblk["proj_bn"] = nbp
+            h = h + idn
+            h = hoyer_act(h / params["v_th"][ci], aux)
+            ci += 1
+            new_stage.append(nblk)
+            x = h
+        new_stages.append(new_stage)
+    x = global_avg_pool(x)
+    w = quantize_weights(params["fc"]["w"], HW.network.weight_bits)
+    logits = x @ w + params["fc"]["b"]
+    return logits, {**params, "stages": new_stages}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def model_init(key, arch: str = "vgg7", num_classes: int = 10) -> Params:
+    kf, kb = jax.random.split(key)
+    return {
+        "frontend": frontend_init(kf),
+        "backend": backend_init(kb, arch, num_classes),
+        "arch": arch,
+    }
+
+
+def model_apply(params: Params, img, *, train: bool = False,
+                use_pallas: bool = False,
+                mtj_error: Tuple[float, float] | None = None,
+                seed: int = 0):
+    """Full network: in-pixel frontend + backend.  Returns
+    (logits, aux_hoyer_losses, updated_params, frontend_activations)."""
+    aux: List[jnp.ndarray] = []
+    o, new_front = frontend_apply(
+        params["frontend"], img, train=train, aux=aux,
+        use_pallas=use_pallas, mtj_error=mtj_error, seed=seed,
+    )
+    logits, new_back = backend_apply(
+        params["backend"], o, arch=params["arch"], train=train, aux=aux
+    )
+    new_params = {**params, "frontend": new_front, "backend": new_back}
+    return logits, aux, new_params, o
+
+
+def activation_sparsity(o) -> jnp.ndarray:
+    """Fraction of zeros in the in-pixel output (paper §3.2: >= 75 %)."""
+    return 1.0 - jnp.mean(o)

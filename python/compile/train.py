@@ -1,0 +1,246 @@
+"""Training loop for the Hoyer-regularized in-pixel BNN (build-time only).
+
+Hand-rolled Adam/SGD (no optax on this image).  The objective is
+cross-entropy + lambda_hoyer * sum of per-layer Hoyer regularizers, per the
+paper's training recipe (§2.3, [46]).  The paper uses Adam for VGG and SGD
+for ResNets; we honor that mapping via `optimizer_for`.
+
+Usage (also invoked by aot.py when artifacts/params.npz is missing):
+    python -m compile.train --arch vgg7 --steps 300 --out ../artifacts
+    python -m compile.train --table1            # small-scale Table 1 sweep
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import pickle
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as M
+
+LAMBDA_HOYER = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (pytree-generic)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(grads, state, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def sgd_init(params):
+    return {"mom": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(grads, state, params, lr=0.05, momentum=0.9, wd=5e-4):
+    mom = jax.tree.map(
+        lambda mo, g, p: momentum * mo + g + wd * p,
+        state["mom"], grads, params,
+    )
+    new_params = jax.tree.map(lambda p, mo: p - lr * mo, params, mom)
+    return new_params, {"mom": mom}
+
+
+def optimizer_for(arch: str):
+    """Paper §3.1: Adam for VGG16, SGD for ResNet models."""
+    if M.is_resnet(arch):
+        return sgd_init, sgd_update
+    return adam_init, adam_update
+
+
+# ---------------------------------------------------------------------------
+# Loss / step
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def split_trainable(params):
+    """BN running stats are state, not trainables; `arch` is static."""
+    arch = params["arch"]
+    return {k: v for k, v in params.items() if k != "arch"}, arch
+
+
+def loss_fn(trainable, arch, img, labels):
+    params = {**trainable, "arch": arch}
+    logits, aux, new_params, o = M.model_apply(params, img, train=True)
+    ce = cross_entropy(logits, labels)
+    hoyer = sum(aux) / max(len(aux), 1)
+    loss = ce + LAMBDA_HOYER * hoyer
+    acc = jnp.mean(jnp.argmax(logits, axis=1) == labels)
+    sparsity = M.activation_sparsity(o)
+    new_trainable, _ = split_trainable(new_params)
+    return loss, (ce, acc, sparsity, new_trainable)
+
+
+@functools.partial(jax.jit, static_argnames=("arch", "use_adam"))
+def train_step(trainable, opt_state, img, labels, arch, use_adam, lr):
+    grads, (ce, acc, sp, new_trainable) = jax.grad(
+        loss_fn, has_aux=True
+    )(trainable, arch, img, labels)
+    # Gradients flow into BN stats copies too; zero them (stats come from
+    # new_trainable's forward pass updates instead).
+    if use_adam:
+        upd, st = adam_update(grads, opt_state, new_trainable, lr=lr)
+    else:
+        upd, st = sgd_update(grads, opt_state, new_trainable, lr=lr)
+    return upd, st, ce, acc, sp
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def eval_step(trainable, arch, img, labels):
+    params = {**trainable, "arch": arch}
+    logits, _, _, o = M.model_apply(params, img, train=False)
+    acc = jnp.mean(jnp.argmax(logits, axis=1) == labels)
+    return acc, M.activation_sparsity(o)
+
+
+def evaluate(trainable, arch, imgs, labels, batch=128):
+    accs, sps = [], []
+    for s in range(0, len(imgs) - batch + 1, batch):
+        a, sp = eval_step(trainable, arch,
+                          jnp.asarray(imgs[s:s + batch]),
+                          jnp.asarray(labels[s:s + batch]))
+        accs.append(float(a))
+        sps.append(float(sp))
+    return float(np.mean(accs)), float(np.mean(sps))
+
+
+def train(
+    arch: str = "vgg7",
+    steps: int = 300,
+    batch: int = 64,
+    n_train: int = 2048,
+    n_test: int = 512,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 25,
+    log=print,
+) -> Dict[str, Any]:
+    """Train; returns dict with params, loss curve, final metrics."""
+    key = jax.random.PRNGKey(seed)
+    params = M.model_init(key, arch=arch)
+    trainable, _ = split_trainable(params)
+    opt_init, _ = optimizer_for(arch)
+    use_adam = not M.is_resnet(arch)
+    opt_state = opt_init(trainable)
+
+    tr_imgs, tr_labels = data_mod.generate(n_train, seed=seed)
+    te_imgs, te_labels = data_mod.generate(n_test, seed=seed + 10_000)
+
+    curve = []
+    step = 0
+    t0 = time.time()
+    while step < steps:
+        for bi, (bx, by) in enumerate(
+            data_mod.batches(tr_imgs, tr_labels, batch, seed=seed + step)
+        ):
+            trainable, opt_state, ce, acc, sp = train_step(
+                trainable, opt_state, jnp.asarray(bx), jnp.asarray(by),
+                arch, use_adam, lr,
+            )
+            curve.append(
+                {"step": step, "loss": float(ce), "acc": float(acc),
+                 "sparsity": float(sp)}
+            )
+            if step % log_every == 0:
+                log(f"[{arch}] step {step:4d} loss {float(ce):.4f} "
+                    f"acc {float(acc):.3f} sparsity {float(sp):.3f} "
+                    f"({time.time() - t0:.1f}s)")
+            step += 1
+            if step >= steps:
+                break
+
+    test_acc, test_sp = evaluate(trainable, arch, te_imgs, te_labels)
+    log(f"[{arch}] final test acc {test_acc:.4f} sparsity {test_sp:.4f}")
+    return {
+        "params": {**trainable, "arch": arch},
+        "curve": curve,
+        "test_acc": test_acc,
+        "sparsity": test_sp,
+    }
+
+
+def save_params(params, path):
+    arch = params["arch"]
+    tree = {k: v for k, v in params.items() if k != "arch"}
+    with open(path, "wb") as f:
+        pickle.dump({"arch": arch, "tree": jax.tree.map(np.asarray, tree)}, f)
+
+
+def load_params(path):
+    with open(path, "rb") as f:
+        raw = pickle.load(f)
+    tree = jax.tree.map(
+        lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x,
+        raw["tree"],
+    )
+    return {**tree, "arch": raw["arch"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vgg7")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--table1", action="store_true",
+                    help="small-scale Table 1 sweep (BNN vs DNN trend)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.table1:
+        results = {}
+        for arch in ["vgg7", "resnet10", "resnet20"]:
+            r = train(arch=arch, steps=args.steps, batch=args.batch,
+                      lr=(0.05 if M.is_resnet(arch) else args.lr),
+                      seed=args.seed)
+            results[arch] = {"bnn_acc": r["test_acc"],
+                             "sparsity": r["sparsity"]}
+        with open(os.path.join(args.out, "table1_small.json"), "w") as f:
+            json.dump(results, f, indent=2)
+        print(json.dumps(results, indent=2))
+        return
+
+    r = train(arch=args.arch, steps=args.steps, batch=args.batch,
+              lr=args.lr, seed=args.seed)
+    save_params(r["params"], os.path.join(args.out, "params.pkl"))
+    with open(os.path.join(args.out, "train_curve.json"), "w") as f:
+        json.dump({"curve": r["curve"], "test_acc": r["test_acc"],
+                   "sparsity": r["sparsity"]}, f)
+    print(f"saved params to {args.out}/params.pkl")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+# pytest: the single-source-of-truth contract for hardware constants.
+import json
+import os
+
+import pytest
+
+from compile import hwcfg
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestHwConfig:
+    def test_paper_constants(self):
+        cfg = hwcfg.DEFAULT
+        assert cfg.mtj.n_mtj_per_neuron == 8
+        assert cfg.mtj.majority_k == 4
+        assert cfg.mtj.write_pulse_ns == 0.7
+        assert cfg.mtj.reset_pulse_ns == 0.5
+        assert cfg.mtj.reset_voltage == 0.9
+        assert cfg.mtj.sw_calib_prob_ap_to_p == [0.062, 0.924, 0.9717]
+        assert cfg.circuit.integration_time_us == 5.0
+        assert cfg.circuit.vdd == 0.8
+        assert cfg.network.first_channels == 32
+        assert cfg.network.stride == 2
+        assert cfg.network.weight_bits == 4
+        assert cfg.network.input_bits == 12
+        assert cfg.network.output_bits == 1
+
+    def test_json_roundtrip(self):
+        text = hwcfg.DEFAULT.to_json()
+        back = json.loads(text)
+        assert back["mtj"]["n_mtj_per_neuron"] == 8
+        assert back["circuit"]["drive_gain"] == 6.0
+
+    def test_dump_writes_parseable_file(self, tmp_path):
+        p = tmp_path / "hwcfg.json"
+        hwcfg.dump(str(p))
+        with open(p) as f:
+            data = json.load(f)
+        assert set(data.keys()) == {"mtj", "circuit", "network"}
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "hwcfg.json")),
+        reason="artifacts not built",
+    )
+    def test_artifact_matches_current_defaults(self):
+        # If this fails, rebuild artifacts: the exported constants are stale.
+        with open(os.path.join(ART, "hwcfg.json")) as f:
+            exported = json.load(f)
+        assert exported == json.loads(hwcfg.DEFAULT.to_json())
+
+    def test_tmr_exceeds_paper_bound(self):
+        assert hwcfg.DEFAULT.mtj.tmr_zero_bias > 1.5
+
+    def test_calibration_arrays_aligned(self):
+        m = hwcfg.DEFAULT.mtj
+        assert len(m.sw_calib_voltages) == len(m.sw_calib_prob_ap_to_p)
+        assert m.sw_calib_voltages == sorted(m.sw_calib_voltages)
+        assert all(
+            a < b
+            for a, b in zip(m.sw_calib_prob_ap_to_p,
+                            m.sw_calib_prob_ap_to_p[1:])
+        ), "switching probability must be monotone in voltage"

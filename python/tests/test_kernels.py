@@ -1,0 +1,250 @@
+# pytest: pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_act, inpixel_conv, mtj, ref
+from compile.hwcfg import DEFAULT as HW
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# inpixel_conv
+# ---------------------------------------------------------------------------
+
+
+class TestInpixelConv:
+    def _run(self, m, k, c_out, seed=0):
+        r = rng(seed)
+        p = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+        wp = jnp.asarray(r.uniform(0, 0.4, size=(k, c_out)).astype(np.float32))
+        wn = jnp.asarray(r.uniform(0, 0.4, size=(k, c_out)).astype(np.float32))
+        got = inpixel_conv.inpixel_conv(p, wp, wn)
+        want = ref.inpixel_conv_ref(p, wp, wn)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+        return got
+
+    def test_matches_ref_basic(self):
+        self._run(128, 27, 32)
+
+    def test_matches_ref_unaligned_rows(self):
+        # m not a multiple of TILE_M exercises the pad/slice path.
+        self._run(100, 27, 32)
+
+    def test_matches_ref_tiny(self):
+        self._run(1, 27, 32)
+
+    def test_matches_ref_multi_tile(self):
+        self._run(1000, 27, 32)
+
+    def test_matches_ref_odd_k_and_cout(self):
+        # K and C_out not multiples of 8 exercise both pad dimensions.
+        self._run(64, 27, 10)
+        self._run(64, 13, 7)
+
+    def test_zero_patches_give_zero(self):
+        p = jnp.zeros((16, 27), jnp.float32)
+        w = jnp.ones((27, 4), jnp.float32) * 0.1
+        out = inpixel_conv.inpixel_conv(p, w, w)
+        np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+    def test_antisymmetric_in_weight_swap(self):
+        # f(P@Wp) - f(P@Wn) = -(f(P@Wn) - f(P@Wp))
+        r = rng(3)
+        p = jnp.asarray(r.normal(size=(32, 27)).astype(np.float32))
+        wp = jnp.asarray(r.uniform(0, 0.4, size=(27, 8)).astype(np.float32))
+        wn = jnp.asarray(r.uniform(0, 0.4, size=(27, 8)).astype(np.float32))
+        a = inpixel_conv.inpixel_conv(p, wp, wn)
+        b = inpixel_conv.inpixel_conv(p, wn, wp)
+        np.testing.assert_allclose(a, -b, atol=2e-5)
+
+    def test_nonlinearity_compresses_large_macs(self):
+        # The fitted curve must compress: |f(x)| < |x| for large |x|.
+        x = jnp.asarray([4.0, -4.0, 8.0])
+        fx = ref.fitted_nonlinearity(x)
+        assert bool(jnp.all(jnp.abs(fx) < jnp.abs(x)))
+
+    def test_nonlinearity_unit_slope_origin(self):
+        eps = 1e-3
+        d = (ref.fitted_nonlinearity(jnp.asarray(eps))
+             - ref.fitted_nonlinearity(jnp.asarray(-eps))) / (2 * eps)
+        assert abs(float(d) - 1.0) < 1e-3
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 300),
+        k=st.integers(1, 40),
+        c=st.integers(1, 40),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, c, seed):
+        self._run(m, k, c, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# binary_act
+# ---------------------------------------------------------------------------
+
+
+class TestBinaryAct:
+    def test_hoyer_extremum_matches_ref(self):
+        z = jnp.asarray(rng(1).normal(size=(37, 53)).astype(np.float32))
+        got = binary_act.hoyer_extremum(z)
+        want = ref.hoyer_extremum(ref.clip_unit(z))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_threshold_matches_ref(self):
+        z = jnp.asarray(rng(2).normal(size=(4096,)).astype(np.float32))
+        got = binary_act.binary_threshold(z, 0.3)
+        want = ref.binary_act_ref(z, 0.3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_full_hoyer_binary_matches_ref(self):
+        z = jnp.asarray(rng(3).normal(size=(10, 32, 15, 15)).astype(np.float32))
+        got = binary_act.hoyer_binary(z)
+        want = ref.hoyer_binary_ref(z)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_output_is_binary(self):
+        z = jnp.asarray(rng(4).normal(size=(999,)).astype(np.float32))
+        o = np.asarray(binary_act.hoyer_binary(z))
+        assert set(np.unique(o)).issubset({0.0, 1.0})
+
+    def test_extremum_between_zero_and_one(self):
+        # E(clip(z)) in [0, 1] whenever clip(z) has any mass.
+        z = jnp.asarray(rng(5).normal(size=(500,)).astype(np.float32))
+        e = float(binary_act.hoyer_extremum(z))
+        assert 0.0 <= e <= 1.0
+
+    def test_all_negative_gives_all_zero(self):
+        z = -jnp.abs(jnp.asarray(rng(6).normal(size=(100,)).astype(np.float32))) - 0.1
+        o = np.asarray(binary_act.hoyer_binary(z))
+        assert o.sum() == 0.0
+
+    def test_unaligned_length(self):
+        z = jnp.asarray(rng(7).normal(size=(1025,)).astype(np.float32))
+        got = binary_act.hoyer_binary(z)
+        want = ref.hoyer_binary_ref(z)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**16))
+    def test_hypothesis_lengths(self, n, seed):
+        z = jnp.asarray(rng(seed).normal(size=(n,)).astype(np.float32))
+        got = binary_act.hoyer_binary(z)
+        want = ref.hoyer_binary_ref(z)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# mtj stochastic majority
+# ---------------------------------------------------------------------------
+
+
+class TestMtjMajority:
+    def test_exact_match_with_ref(self):
+        bits = jnp.asarray((rng(0).uniform(size=4096) < 0.5).astype(np.float32))
+        got = mtj.mtj_majority(bits, 0.924, 0.062, 42)
+        want = ref.mtj_majority_ref(bits, 0.924, 0.062, 42)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_exact_match_unaligned(self):
+        bits = jnp.asarray((rng(1).uniform(size=777) < 0.3).astype(np.float32))
+        got = mtj.mtj_majority(bits, 0.924, 0.062, 7)
+        want = ref.mtj_majority_ref(bits, 0.924, 0.062, 7)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_deterministic_given_seed(self):
+        bits = jnp.ones((512,), jnp.float32)
+        a = mtj.mtj_majority(bits, 0.9, 0.05, 5)
+        b = mtj.mtj_majority(bits, 0.9, 0.05, 5)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_changes_draws(self):
+        bits = jnp.ones((4096,), jnp.float32)
+        a = np.asarray(mtj.mtj_majority(bits, 0.6, 0.0, 1))
+        b = np.asarray(mtj.mtj_majority(bits, 0.6, 0.0, 2))
+        assert (a != b).any()
+
+    def test_perfect_devices_are_identity(self):
+        bits = jnp.asarray((rng(2).uniform(size=2048) < 0.5).astype(np.float32))
+        out = mtj.mtj_majority(bits, 1.0, 0.0, 3)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+    def test_majority_error_below_paper_bound(self):
+        # Paper Fig. 5: with 8 MTJs at p_sw = 92.4 % the 1->0 neuron error
+        # drops below 0.1 %, and at p_err = 6.2 % the 0->1 error ~ 0.1 %.
+        n = 400_000
+        ones = jnp.ones((n,), jnp.float32)
+        zeros = jnp.zeros((n,), jnp.float32)
+        e10 = float(jnp.mean(ref.mtj_majority_ref(ones, 0.924, 0.062, 11) == 0))
+        e01 = float(jnp.mean(ref.mtj_majority_ref(zeros, 0.924, 0.062, 11) == 1))
+        assert e10 < 1e-3
+        assert e01 < 1.5e-3
+
+    def test_shaped_input_preserved(self):
+        bits = jnp.asarray(
+            (rng(3).uniform(size=(2, 32, 15, 15)) < 0.5).astype(np.float32)
+        )
+        out = mtj.mtj_majority(bits, 0.924, 0.062, 9)
+        assert out.shape == bits.shape
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 3000),
+        seed=st.integers(0, 2**20),
+        p_hi=st.floats(0.5, 1.0),
+        p_lo=st.floats(0.0, 0.3),
+    )
+    def test_hypothesis_match(self, n, seed, p_hi, p_lo):
+        bits = jnp.asarray((rng(seed).uniform(size=n) < 0.5).astype(np.float32))
+        got = mtj.mtj_majority(bits, p_hi, p_lo, seed)
+        want = ref.mtj_majority_ref(bits, p_hi, p_lo, seed)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# counter RNG — uniformity & rust agreement vectors
+# ---------------------------------------------------------------------------
+
+
+class TestCounterRng:
+    def test_uniform_mean_and_var(self):
+        idx = jnp.arange(1_000_00, dtype=jnp.uint32)
+        u = np.asarray(ref.uniform_from_counter(123, idx, 0))
+        assert abs(u.mean() - 0.5) < 5e-3
+        assert abs(u.var() - 1 / 12) < 5e-3
+
+    def test_known_vectors_for_rust(self):
+        # These exact values are asserted by rust/src/device/rng.rs tests —
+        # if this test changes, change the rust test too.
+        idx = jnp.asarray([0, 1, 2, 1000], dtype=jnp.uint32)
+        u = np.asarray(ref.uniform_from_counter(42, idx, 0))
+        expected = _rust_reference_uniforms(42, [0, 1, 2, 1000], 0)
+        np.testing.assert_allclose(u, expected, rtol=1e-7)
+
+    def test_streams_independent(self):
+        idx = jnp.arange(1000, dtype=jnp.uint32)
+        u0 = np.asarray(ref.uniform_from_counter(7, idx, 0))
+        u1 = np.asarray(ref.uniform_from_counter(7, idx, 1))
+        assert np.corrcoef(u0, u1)[0, 1] < 0.1
+
+
+def _rust_reference_uniforms(seed, indices, stream):
+    """Python-int reimplementation (matches device/rng.rs bit-for-bit)."""
+    out = []
+    for i in indices:
+        ctr = (seed ^ ((i * 0x9E3779B9 + stream * 0x85EBCA6B) & 0xFFFFFFFF)) & 0xFFFFFFFF
+        x = ctr
+        x ^= x >> 16
+        x = (x * 0x7FEB352D) & 0xFFFFFFFF
+        x ^= x >> 15
+        x = (x * 0x846CA68B) & 0xFFFFFFFF
+        x ^= x >> 16
+        out.append(np.float32(x) * np.float32(2.0**-32))
+    return np.asarray(out, np.float32)

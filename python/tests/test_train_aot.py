@@ -1,0 +1,134 @@
+# pytest: training loop sanity + AOT artifact integrity.
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestData:
+    def test_shapes_and_range(self):
+        imgs, labels = D.generate(32, seed=0)
+        assert imgs.shape == (32, 3, 32, 32)
+        assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+        assert labels.shape == (32,)
+        assert labels.min() >= 0 and labels.max() < 10
+
+    def test_deterministic(self):
+        a, la = D.generate(8, seed=5)
+        b, lb = D.generate(8, seed=5)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_seed_changes_samples(self):
+        a, _ = D.generate(8, seed=1)
+        b, _ = D.generate(8, seed=2)
+        assert not np.allclose(a, b)
+
+    def test_classes_distinguishable(self):
+        # Mean images of two classes must differ clearly (task is learnable).
+        imgs, labels = D.generate(200, seed=0)
+        m0 = imgs[labels == 0].mean(0)
+        m1 = imgs[labels == 1].mean(0)
+        assert np.abs(m0 - m1).mean() > 0.02
+
+    def test_batches_cover_epoch(self):
+        imgs, labels = D.generate(64, seed=0)
+        seen = sum(len(bx) for bx, _ in D.batches(imgs, labels, 16))
+        assert seen == 64
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        r = T.train(arch="vgg4", steps=8, n_train=128, n_test=64,
+                    batch=32, log=lambda *a, **k: None)
+        first = np.mean([c["loss"] for c in r["curve"][:2]])
+        last = np.mean([c["loss"] for c in r["curve"][-2:]])
+        assert last < first
+
+    def test_optimizer_mapping(self):
+        i1, _ = T.optimizer_for("vgg16")
+        i2, _ = T.optimizer_for("resnet18")
+        assert i1 is T.adam_init
+        assert i2 is T.sgd_init
+
+    def test_save_load_roundtrip(self, tmp_path):
+        r = T.train(arch="vgg4", steps=2, n_train=64, n_test=64, batch=32,
+                    log=lambda *a, **k: None)
+        p = tmp_path / "params.pkl"
+        T.save_params(r["params"], str(p))
+        loaded = T.load_params(str(p))
+        assert loaded["arch"] == "vgg4"
+        np.testing.assert_allclose(
+            np.asarray(loaded["frontend"]["conv"]["w"]),
+            np.asarray(r["params"]["frontend"]["conv"]["w"]),
+        )
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestArtifacts:
+    def test_all_hlo_files_exist(self):
+        with open(os.path.join(ART, "meta.json")) as f:
+            meta = json.load(f)
+        for b in meta["batches"]:
+            for stem in ["frontend", "frontend_mtj", "backend", "full"]:
+                path = os.path.join(ART, f"{stem}_b{b}.hlo.txt")
+                assert os.path.exists(path), path
+                head = open(path).read(200)
+                assert "HloModule" in head
+
+    def test_golden_consistent_with_params(self):
+        """Re-derive the golden outputs from params.pkl — catches drift
+        between golden.json and the exported HLO weights."""
+        with open(os.path.join(ART, "golden.json")) as f:
+            g = json.load(f)
+        params = T.load_params(os.path.join(ART, "params.pkl"))
+        img = jnp.asarray(
+            np.asarray(g["img"], np.float32).reshape(1, 3, 32, 32)
+        )
+        o, _ = M.frontend_apply(params["frontend"], img)
+        np.testing.assert_array_equal(
+            np.asarray(o).ravel(), np.asarray(g["frontend_out"], np.float32)
+        )
+        logits, _ = M.backend_apply(params["backend"], o,
+                                    arch=params["arch"], train=False)
+        np.testing.assert_allclose(
+            np.asarray(logits).ravel(),
+            np.asarray(g["logits"], np.float32), rtol=1e-4, atol=1e-4,
+        )
+
+    def test_golden_mtj_matches_oracle(self):
+        with open(os.path.join(ART, "golden.json")) as f:
+            g = json.load(f)
+        with open(os.path.join(ART, "meta.json")) as f:
+            meta = json.load(f)
+        params = T.load_params(os.path.join(ART, "params.pkl"))
+        img = jnp.asarray(
+            np.asarray(g["img"], np.float32).reshape(1, 3, 32, 32)
+        )
+        o, _ = M.frontend_apply(
+            params["frontend"], img,
+            mtj_error=(meta["p_sw_high"], meta["p_sw_low"]),
+            seed=g["mtj_seed"],
+        )
+        np.testing.assert_array_equal(
+            np.asarray(o).ravel(),
+            np.asarray(g["frontend_mtj_out"], np.float32),
+        )
+
+    def test_hwcfg_json_fields(self):
+        with open(os.path.join(ART, "hwcfg.json")) as f:
+            cfg = json.load(f)
+        assert cfg["mtj"]["n_mtj_per_neuron"] == 8
+        assert cfg["network"]["first_channels"] == 32
+        assert cfg["network"]["stride"] == 2
+        assert cfg["circuit"]["vdd"] == 0.8

@@ -1,0 +1,56 @@
+//! Device-model benches: the Monte-Carlo substrate under every figure
+//! (Figs. 2, 5) and the per-neuron write/read/reset hot path that bounds
+//! the PhysicalMtj capture mode.
+
+use pixelmtj::config::{CircuitConfig, MtjConfig};
+use pixelmtj::circuit::readout::BurstReader;
+use pixelmtj::device::{neuron_error_rates, Mtj, MtjModel, MtjState, MultiMtjNeuron};
+use pixelmtj::util::bench::{bb, Bencher};
+
+fn main() {
+    let cfg = MtjConfig::default();
+    let model = MtjModel::new(&cfg);
+    let mut b = Bencher::new("device");
+
+    b.bench("switching_probability", || {
+        bb(model.switching_probability(MtjState::AntiParallel, bb(0.8), 0.7));
+    });
+
+    b.bench("tmr_and_resistance", || {
+        bb(model.resistance(MtjState::AntiParallel, bb(0.3)));
+    });
+
+    let mut i = 0u32;
+    b.bench("single_mtj_pulse", || {
+        let mut d = Mtj::new();
+        i = i.wrapping_add(1);
+        bb(d.apply_pulse(&model, 0.8, 0.7, 7, i, 0));
+    });
+
+    let mut j = 0u32;
+    b.bench("neuron_write8_read_reset", || {
+        let mut n = MultiMtjNeuron::new(8);
+        j = j.wrapping_add(1);
+        n.write_analog(&model, 0.85, 11, j);
+        bb(n.count_parallel());
+        bb(n.reset_all(&model, 11, j, 16));
+    });
+
+    let ccfg = CircuitConfig::default();
+    let reader = BurstReader::new(&model, &ccfg);
+    let mut k = 0u32;
+    b.bench("burst_read_and_reset", || {
+        let mut n = MultiMtjNeuron::new(8);
+        k = k.wrapping_add(1);
+        n.write_analog(&model, 0.85, 13, k);
+        bb(reader.read_and_reset(&model, &mut n, 13, k));
+    });
+
+    b.bench("fig5_binomial_analysis", || {
+        for n in [1usize, 2, 4, 8] {
+            bb(neuron_error_rates(0.924, 0.062, n, n / 2 + 1));
+        }
+    });
+
+    b.finish();
+}

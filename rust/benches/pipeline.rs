@@ -1,0 +1,56 @@
+//! Sensor + pipeline benches: per-frame capture cost in each fidelity
+//! mode (the L3 hot path), the analog-plane MAC loop, shutter timing
+//! model, and Fig. 4(a) circuit sweep.  These regenerate the performance
+//! side of the paper's §3.4 latency story on this testbed.
+
+use pixelmtj::circuit::pixel::fig4a_scatter;
+use pixelmtj::config::HwConfig;
+use pixelmtj::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, GlobalShutter,
+    PixelArraySim, RollingShutter,
+};
+use pixelmtj::util::bench::{bb, Bencher};
+
+fn main() {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights);
+    let gen = SceneGen::new(3, 32, 32);
+    let frame = gen.textured(3);
+    let mut b = Bencher::new("pipeline");
+
+    b.bench("scene_gen_32x32", || {
+        bb(gen.textured(bb(9)));
+    });
+
+    b.bench("analog_plane_32x32", || {
+        bb(sim.analog_plane(bb(&frame)));
+    });
+
+    b.bench("capture_ideal_32x32", || {
+        bb(sim.capture(bb(&frame), CaptureMode::Ideal));
+    });
+
+    b.bench("capture_calibrated_mtj_32x32", || {
+        bb(sim.capture(bb(&frame), CaptureMode::CalibratedMtj));
+    });
+
+    // PhysicalMtj is the slow ablation path — bench on a smaller frame.
+    let small = SceneGen::new(3, 16, 16).textured(4);
+    b.bench("capture_physical_mtj_16x16", || {
+        bb(sim.capture(bb(&small), CaptureMode::PhysicalMtj));
+    });
+
+    let gs = GlobalShutter::new(hw.clone());
+    let rs = RollingShutter::new(hw.clone());
+    b.bench("shutter_timing_models", || {
+        bb(gs.frame_timing(224, 224, bb(0.25)));
+        bb(rs.frame_timing(224, 224));
+    });
+
+    b.bench("fig4a_sweep_2000pts", || {
+        bb(fig4a_scatter(&hw.circuit, 2000, bb(7)));
+    });
+
+    b.finish();
+}

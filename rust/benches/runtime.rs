@@ -1,0 +1,76 @@
+//! PJRT runtime benches: AOT executable latency at each batch size plus
+//! the full pipeline serve throughput — the end-to-end numbers quoted in
+//! EXPERIMENTS.md §Perf.  Skipped (with a notice) when artifacts are
+//! absent.
+
+use std::sync::Arc;
+
+use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::coordinator::Pipeline;
+use pixelmtj::runtime::Runtime;
+use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
+use pixelmtj::util::bench::{bb, Bencher};
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("meta.json").exists() {
+        println!("runtime bench skipped: run `make artifacts` first");
+        return;
+    }
+    let runtime = Arc::new(Runtime::cpu(artifacts).unwrap());
+    let meta = runtime.meta.as_ref().unwrap().clone();
+    let mut b = Bencher::new("runtime");
+
+    // Frontend + backend executables at each exported batch size.
+    for &batch in &meta.batches {
+        let img_n: usize =
+            meta.img_shape[1..].iter().product::<usize>() * batch;
+        let act_n: usize =
+            meta.act_shape[1..].iter().product::<usize>() * batch;
+        let mut img_shape: Vec<i64> =
+            meta.img_shape.iter().map(|&d| d as i64).collect();
+        img_shape[0] = batch as i64;
+        let mut act_shape: Vec<i64> =
+            meta.act_shape.iter().map(|&d| d as i64).collect();
+        act_shape[0] = batch as i64;
+        let img = vec![0.5f32; img_n];
+        let act = vec![0.0f32; act_n];
+
+        let front = runtime.load(&format!("frontend_b{batch}")).unwrap();
+        b.bench(&format!("frontend_b{batch}_exec"), || {
+            bb(front.run_f32(&[(&img, &img_shape)]).unwrap());
+        });
+        let back = runtime.load(&format!("backend_b{batch}")).unwrap();
+        b.bench(&format!("backend_b{batch}_exec"), || {
+            bb(back.run_f32(&[(&act, &act_shape)]).unwrap());
+        });
+        let full = runtime.load(&format!("full_b{batch}")).unwrap();
+        b.bench(&format!("full_b{batch}_exec"), || {
+            bb(full.run_f32(&[(&img, &img_shape)]).unwrap());
+        });
+    }
+
+    // End-to-end pipeline throughput (64 frames per iteration).
+    let hw = HwConfig::load_or_default(artifacts);
+    let weights =
+        FirstLayerWeights::from_golden(artifacts.join("golden.json")).unwrap();
+    let mut cfg = PipelineConfig::default();
+    cfg.sparse_coding = SparseCoding::Rle;
+    let pipeline = Pipeline::new(
+        cfg,
+        PixelArraySim::new(hw.clone(), weights),
+        runtime.clone(),
+    )
+    .unwrap();
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..64u32).map(|i| gen.textured(i)).collect();
+    let stats = b.bench("pipeline_serve_64_frames", || {
+        bb(pipeline.serve(bb(frames.clone())).unwrap());
+    });
+    println!(
+        "→ pipeline throughput ≈ {:.1} frames/s",
+        64.0 / (stats.mean_ns / 1e9)
+    );
+
+    b.finish();
+}

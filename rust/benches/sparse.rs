@@ -1,0 +1,44 @@
+//! Link-codec benches (paper §3.2): encode/decode cost per frame for the
+//! three codings at trained-BNN sparsity (~80 %) and at dense-activation
+//! stress (50 %).  The encode path sits on the sensor workers' critical
+//! path, so ns/frame here bounds pipeline throughput.
+
+use pixelmtj::config::SparseCoding;
+use pixelmtj::coordinator::sparse::{decode, encode};
+use pixelmtj::device::rng::CounterRng;
+use pixelmtj::sensor::ActivationMap;
+use pixelmtj::util::bench::{bb, Bencher};
+
+fn random_map(p_one: f32, seed: u32) -> ActivationMap {
+    let mut rng = CounterRng::new(seed, 31);
+    let mut m = ActivationMap::new(32, 15, 15, seed);
+    for b in m.bits.iter_mut() {
+        *b = rng.next_uniform() < p_one;
+    }
+    m
+}
+
+fn main() {
+    let mut b = Bencher::new("sparse");
+    for (label, p) in [("sparse80", 0.20f32), ("dense50", 0.50f32)] {
+        let map = random_map(p, 5);
+        for coding in
+            [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle]
+        {
+            let enc = encode(&map, coding);
+            println!(
+                "payload {label} {:?}: {} bits ({:.3} b/elem)",
+                coding,
+                enc.payload_bits,
+                enc.payload_bits as f64 / map.bits.len() as f64
+            );
+            b.bench(&format!("encode_{label}_{}", coding.name()), || {
+                bb(encode(bb(&map), coding));
+            });
+            b.bench(&format!("decode_{label}_{}", coding.name()), || {
+                bb(decode(bb(&enc)).unwrap());
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Behavioural circuit simulation of the in-pixel compute path
+//! (paper §2.2, GlobalFoundries 22 nm FDX).
+//!
+//! * [`pixel`] — weight-augmented 3T pixel: photodiode, source-degenerated
+//!   weight transistors, shared-bitline MAC, Fig. 4(a) transfer curve
+//! * [`subtractor`] — two-phase capacitive subtractor with the paper's
+//!   tunable threshold-matching scheme (V_OFS = 0.5·VDD + V_SW − V_TH)
+//! * [`readout`] — MUX + comparator burst-read path and reset pulse
+//!   generation (Fig. 6)
+
+pub mod pixel;
+pub mod readout;
+pub mod subtractor;
+
+pub use pixel::{fitted_nonlinearity, norm_to_volt, pixel_mac, volt_to_norm};
+pub use readout::{BurstReadResult, BurstReader, SensePath};
+pub use subtractor::{threshold_to_volts, AnalogSubtractor, SubtractorOutput};

@@ -1,0 +1,217 @@
+//! Weight-augmented 3T pixel circuit (paper §2.2.1, Fig. 3b).
+//!
+//! Behavioural model of the GF22FDX pixel: the photodiode discharges node
+//! N proportionally to light intensity; transistor M1's current is
+//! modulated by both the gate voltage (intensity) and the source-
+//! degenerating weight transistor (width ∝ |weight|); bitline-shared
+//! pixels sum currents to produce the analog MAC.  The net transfer from
+//! normalized `Σ w·x` to the bitline voltage is the Fig. 4(a) curve —
+//! unit slope at the origin with compressive saturation — identical,
+//! constant-for-constant, to `kernels/ref.py::fitted_nonlinearity`.
+
+use crate::config::CircuitConfig;
+use crate::device::rng::CounterRng;
+
+/// Fig. 4(a) transfer curve: `f(x) = (1-α)·x + α·S·tanh(x/S)`.
+#[inline]
+pub fn fitted_nonlinearity(x: f64, cfg: &CircuitConfig) -> f64 {
+    (1.0 - cfg.nl_alpha) * x + cfg.nl_alpha * cfg.nl_sat * (x / cfg.nl_sat).tanh()
+}
+
+/// Map a normalized MAC value in `[-mac_range, mac_range]` to the bitline
+/// voltage in `[0, VDD]` (the paper's "voltage range … linearly mapped to
+/// the algorithmic normalized range of [-3, 3]").
+#[inline]
+pub fn norm_to_volt(x: f64, cfg: &CircuitConfig) -> f64 {
+    cfg.vdd * 0.5 + x / cfg.mac_range * (cfg.vdd * 0.5)
+}
+
+/// Inverse of [`norm_to_volt`].
+#[inline]
+pub fn volt_to_norm(v: f64, cfg: &CircuitConfig) -> f64 {
+    (v - cfg.vdd * 0.5) / (cfg.vdd * 0.5) * cfg.mac_range
+}
+
+/// One photodiode integration: node-N voltage after `t_us` of exposure to
+/// `intensity ∈ [0, 1]`.  Discharge is linear in intensity·time until the
+/// node saturates near ground (photodiode current is light-linear; the
+/// 5 µs integration window is sized to stay in the linear region).
+pub fn photodiode_discharge(
+    intensity: f64,
+    t_us: f64,
+    cfg: &CircuitConfig,
+) -> f64 {
+    let full_scale_us = cfg.integration_time_us; // calibrated full range
+    let drop = cfg.vdd * (intensity.clamp(0.0, 1.0) * t_us / full_scale_us);
+    (cfg.vdd - drop).max(0.0)
+}
+
+/// The shared-bitline MAC of one kernel position for one weight polarity.
+///
+/// `inputs` are normalized light intensities in `[0, 1]`; `weights` are the
+/// *magnitudes* of the same-polarity weights (the other polarity's phase
+/// runs separately, per the two-phase scheme).  Returns the normalized
+/// post-nonlinearity MAC (the algorithmic value the subtractor sees).
+pub fn pixel_mac(
+    inputs: &[f64],
+    weights: &[f64],
+    cfg: &CircuitConfig,
+    noise: Option<&mut CounterRng>,
+) -> f64 {
+    debug_assert_eq!(inputs.len(), weights.len());
+    let mac: f64 = inputs
+        .iter()
+        .zip(weights.iter())
+        .map(|(x, w)| x * w)
+        .sum();
+    let mut out = fitted_nonlinearity(mac, cfg);
+    if let Some(rng) = noise {
+        out += cfg.analog_noise_sigma * rng.next_normal() as f64;
+    }
+    out
+}
+
+/// Fig. 4(a) regenerator: sweep (weight, intensity) combinations for a
+/// 3×3×3 kernel and report (ideal W·I, simulated normalized output) pairs.
+pub fn fig4a_scatter(
+    cfg: &CircuitConfig,
+    n_points: usize,
+    seed: u32,
+) -> Vec<(f64, f64)> {
+    let mut rng = CounterRng::new(seed, 40);
+    let mut pts = Vec::with_capacity(n_points);
+    for _ in 0..n_points {
+        // 27 pixels with random intensities and signed weights such that
+        // the ideal MAC spans the paper's [-3, 3] plot range.
+        let mut ideal = 0.0;
+        let mut inputs = [0.0; 27];
+        let mut weights = [0.0; 27];
+        for i in 0..27 {
+            inputs[i] = rng.next_uniform() as f64;
+            weights[i] = (rng.next_uniform() as f64 - 0.5) * 2.0 * 0.45;
+            ideal += inputs[i] * weights[i];
+        }
+        // Two-phase simulated output (pos and neg phases subtracted).
+        let wp: Vec<f64> = weights.iter().map(|w| w.max(0.0)).collect();
+        let wn: Vec<f64> = weights.iter().map(|w| (-w).max(0.0)).collect();
+        let vp = pixel_mac(&inputs, &wp, cfg, None);
+        let vn = pixel_mac(&inputs, &wn, cfg, None);
+        let mut noise = CounterRng::new(seed ^ 0xF16_4A, 41);
+        let sim =
+            vp - vn + cfg.analog_noise_sigma * noise.next_normal() as f64;
+        pts.push((ideal, sim));
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CircuitConfig;
+
+    fn cfg() -> CircuitConfig {
+        CircuitConfig::default()
+    }
+
+    #[test]
+    fn nonlinearity_matches_python_constants() {
+        let c = cfg();
+        // f(1.0) with α=0.35, S=3: 0.65 + 1.05·tanh(1/3)
+        let want = 0.65 + 0.35 * 3.0 * (1.0f64 / 3.0).tanh();
+        assert!((fitted_nonlinearity(1.0, &c) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonlinearity_odd_symmetric() {
+        let c = cfg();
+        for x in [-2.5, -1.0, 0.3, 2.2] {
+            let f = fitted_nonlinearity(x, &c);
+            let g = fitted_nonlinearity(-x, &c);
+            assert!((f + g).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn volt_mapping_roundtrip_and_rails() {
+        let c = cfg();
+        assert!((norm_to_volt(0.0, &c) - c.vdd / 2.0).abs() < 1e-12);
+        assert!((norm_to_volt(c.mac_range, &c) - c.vdd).abs() < 1e-12);
+        assert!(norm_to_volt(-c.mac_range, &c).abs() < 1e-12);
+        for x in [-2.9, -0.4, 0.0, 1.7] {
+            assert!((volt_to_norm(norm_to_volt(x, &c), &c) - x).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn photodiode_dark_stays_at_vdd() {
+        let c = cfg();
+        assert!((photodiode_discharge(0.0, 5.0, &c) - c.vdd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn photodiode_bright_discharges_fully() {
+        let c = cfg();
+        assert!(photodiode_discharge(1.0, 5.0, &c) < 1e-9);
+    }
+
+    #[test]
+    fn photodiode_monotone_in_intensity() {
+        let c = cfg();
+        let mut prev = f64::MAX;
+        for i in 0..=10 {
+            let v = photodiode_discharge(i as f64 / 10.0, 5.0, &c);
+            assert!(v <= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn pixel_mac_matches_closed_form() {
+        let c = cfg();
+        let inputs = [0.5, 1.0, 0.0];
+        let weights = [0.2, 0.4, 0.9];
+        let mac = 0.5 * 0.2 + 1.0 * 0.4;
+        let want = fitted_nonlinearity(mac, &c);
+        assert!((pixel_mac(&inputs, &weights, &c, None) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_perturbs_output() {
+        let c = cfg();
+        let inputs = [0.5; 27];
+        let weights = [0.1; 27];
+        let clean = pixel_mac(&inputs, &weights, &c, None);
+        let mut rng = CounterRng::new(3, 9);
+        let noisy = pixel_mac(&inputs, &weights, &c, Some(&mut rng));
+        assert!((clean - noisy).abs() > 0.0);
+        assert!((clean - noisy).abs() < 10.0 * c.analog_noise_sigma);
+    }
+
+    #[test]
+    fn fig4a_tracks_ideal_line() {
+        let c = cfg();
+        let pts = fig4a_scatter(&c, 500, 1);
+        // The simulated output must track the ideal with bounded deviation
+        // (compressive near the rails, tight near the origin).
+        for &(ideal, sim) in &pts {
+            assert!(
+                (sim - ideal).abs() <= 0.12 * ideal.abs().max(1.0) + 0.05,
+                "({ideal}, {sim}) off the Fig. 4a band"
+            );
+        }
+        // And correlation is near-perfect.
+        let n = pts.len() as f64;
+        let (mx, my): (f64, f64) = (
+            pts.iter().map(|p| p.0).sum::<f64>() / n,
+            pts.iter().map(|p| p.1).sum::<f64>() / n,
+        );
+        let cov: f64 =
+            pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum::<f64>() / n;
+        let (vx, vy): (f64, f64) = (
+            pts.iter().map(|p| (p.0 - mx).powi(2)).sum::<f64>() / n,
+            pts.iter().map(|p| (p.1 - my).powi(2)).sum::<f64>() / n,
+        );
+        let r = cov / (vx * vy).sqrt();
+        assert!(r > 0.99, "correlation {r}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Burst-mode read path: MUX + comparator + reset pulse generator
+//! (paper §2.2.4, Figs. 3f-h, 6).
+//!
+//! During the read phase the source line carries the (reverse-polarity,
+//! disturb-free) read voltage; the MUX selects one MTJ at a time; the
+//! comparator senses the divider voltage against `V_REF` placed between
+//! the P and AP sense levels.  A parallel-state device produces a spike
+//! (`O_ACT`); a reset pulse follows for any device found parallel.
+
+use crate::config::{CircuitConfig, MtjConfig};
+use crate::device::mtj::{MtjModel, MtjState};
+use crate::device::neuron::MultiMtjNeuron;
+
+/// Sense-path parameters shared by every kernel's readout.
+#[derive(Debug, Clone)]
+pub struct SensePath {
+    /// Source-line load resistance (Ω).
+    pub r_load: f64,
+    /// Comparator threshold (V).
+    pub v_ref: f64,
+}
+
+impl SensePath {
+    /// Place `V_REF` a configured fraction of the way between the AP and P
+    /// sense levels (paper: "narrow sense margin" ⇒ sequential reads).
+    pub fn new(model: &MtjModel, circuit: &CircuitConfig) -> Self {
+        let mcfg = model.cfg();
+        // Load chosen near the geometric mean of R_P and R_AP to maximize
+        // the divider swing.
+        let rap = model.resistance(MtjState::AntiParallel, mcfg.read_voltage);
+        let r_load = (mcfg.r_p_ohm * rap).sqrt();
+        let v_p = mcfg.read_voltage * r_load / (mcfg.r_p_ohm + r_load);
+        let v_ap = mcfg.read_voltage * r_load / (rap + r_load);
+        let v_ref = v_ap + circuit.comparator_vref_frac * (v_p - v_ap);
+        Self { r_load, v_ref }
+    }
+
+    /// Absolute sense margin (V) between the two states.
+    pub fn sense_margin(&self, model: &MtjModel) -> f64 {
+        let mcfg = model.cfg();
+        let rap = model.resistance(MtjState::AntiParallel, mcfg.read_voltage);
+        let v_p = mcfg.read_voltage * self.r_load / (mcfg.r_p_ohm + self.r_load);
+        let v_ap = mcfg.read_voltage * self.r_load / (rap + self.r_load);
+        v_p - v_ap
+    }
+}
+
+/// One step of the Fig. 6 burst-read trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstReadStep {
+    /// Time of the read pulse (ns from burst start).
+    pub t_ns: f64,
+    /// Device index within the neuron.
+    pub device: usize,
+    /// Comparator input voltage (V_MTJ in Fig. 6).
+    pub v_mtj: f64,
+    /// Comparator output: activation spike present.
+    pub spike: bool,
+    /// Whether a reset pulse was issued after this read.
+    pub reset_issued: bool,
+}
+
+/// Result of burst-reading one multi-MTJ neuron.
+#[derive(Debug, Clone)]
+pub struct BurstReadResult {
+    pub steps: Vec<BurstReadStep>,
+    /// Majority-vote activation (≥ k spikes).
+    pub activation: bool,
+    /// Total reset pulses issued.
+    pub reset_pulses: usize,
+    /// Total burst duration (ns).
+    pub duration_ns: f64,
+}
+
+/// Burst-read engine: sequential read (+ conditional reset) of one neuron.
+#[derive(Debug, Clone)]
+pub struct BurstReader {
+    pub sense: SensePath,
+    mtj_cfg: MtjConfig,
+    majority_k: usize,
+}
+
+impl BurstReader {
+    pub fn new(model: &MtjModel, circuit: &CircuitConfig) -> Self {
+        Self {
+            sense: SensePath::new(model, circuit),
+            mtj_cfg: model.cfg().clone(),
+            majority_k: model.cfg().majority_k,
+        }
+    }
+
+    /// Read every device, majority-vote, and reset the switched ones
+    /// (paper: read first, then reset the devices found parallel).
+    pub fn read_and_reset(
+        &self,
+        model: &MtjModel,
+        neuron: &mut MultiMtjNeuron,
+        seed: u32,
+        index: u32,
+    ) -> BurstReadResult {
+        let mut steps = Vec::with_capacity(neuron.n());
+        let mut spikes = 0usize;
+        let mut t = 0.0f64;
+        let read_w = self.mtj_cfg.read_pulse_ns;
+        let reset_w = self.mtj_cfg.reset_pulse_ns;
+        let mut reset_pulses = 0usize;
+
+        // Phase 1: sequential reads through the MUX.
+        let mut fired = vec![false; neuron.n()];
+        for (m, dev) in neuron.devices().iter().enumerate() {
+            let sample = dev.read(model, self.sense.r_load);
+            debug_assert!(!sample.disturbed);
+            let spike = sample.v_sense > self.sense.v_ref;
+            fired[m] = spike;
+            spikes += spike as usize;
+            steps.push(BurstReadStep {
+                t_ns: t,
+                device: m,
+                v_mtj: sample.v_sense,
+                spike,
+                reset_issued: false,
+            });
+            t += read_w;
+        }
+
+        // Phase 2: conditional iterative reset of switched devices.
+        let before = t;
+        let pulses = neuron.reset_all(model, seed, index, 16);
+        reset_pulses += pulses;
+        t += pulses as f64 * reset_w;
+        for (step, &f) in steps.iter_mut().zip(fired.iter()) {
+            step.reset_issued = f;
+        }
+        let _ = before;
+
+        BurstReadResult {
+            steps,
+            activation: spikes >= self.majority_k,
+            reset_pulses,
+            duration_ns: t,
+        }
+    }
+
+    /// Fig. 6 regenerator: trace the burst read of a neuron prepared in an
+    /// explicit device-state pattern (e.g. P-P-AP-AP-P-P-AP-P).
+    pub fn trace_pattern(
+        &self,
+        model: &MtjModel,
+        pattern: &[MtjState],
+    ) -> BurstReadResult {
+        let mut neuron = MultiMtjNeuron::new(pattern.len());
+        for (m, &s) in pattern.iter().enumerate() {
+            // Safe: test/trace-only setup accessor.
+            neuron_set_state(&mut neuron, m, s);
+        }
+        self.read_and_reset(model, &mut neuron, 0, 0)
+    }
+}
+
+/// Internal helper to prepare explicit device patterns for traces.
+fn neuron_set_state(neuron: &mut MultiMtjNeuron, idx: usize, s: MtjState) {
+    // MultiMtjNeuron exposes devices immutably; reconstruct via write path.
+    // For trace purposes we rebuild using the unsafe-free approach below.
+    let n = neuron.n();
+    debug_assert!(idx < n);
+    // Reach in through a controlled accessor.
+    neuron.set_device_state(idx, s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CircuitConfig, MtjConfig};
+
+    fn setup() -> (MtjModel, CircuitConfig) {
+        (MtjModel::new(&MtjConfig::default()), CircuitConfig::default())
+    }
+
+    #[test]
+    fn sense_path_has_positive_margin() {
+        let (m, c) = setup();
+        let sp = SensePath::new(&m, &c);
+        assert!(sp.sense_margin(&m) > 0.01, "margin {}", sp.sense_margin(&m));
+        assert!(sp.v_ref > 0.0 && sp.v_ref < m.cfg().read_voltage);
+    }
+
+    #[test]
+    fn fig6_pattern_reproduces_paper_sequence() {
+        // Paper Fig. 6: neuron states P-P-AP-AP-P-P-AP-P ⇒ 5 spikes,
+        // majority (5 ≥ 4) ⇒ activation 1.
+        use MtjState::{AntiParallel as AP, Parallel as P};
+        let (m, c) = setup();
+        let reader = BurstReader::new(&m, &c);
+        let res = reader.trace_pattern(&m, &[P, P, AP, AP, P, P, AP, P]);
+        let spikes: Vec<bool> = res.steps.iter().map(|s| s.spike).collect();
+        assert_eq!(
+            spikes,
+            vec![true, true, false, false, true, true, false, true]
+        );
+        assert!(res.activation);
+        assert_eq!(res.steps.iter().filter(|s| s.spike).count(), 5);
+    }
+
+    #[test]
+    fn minority_pattern_does_not_activate() {
+        use MtjState::{AntiParallel as AP, Parallel as P};
+        let (m, c) = setup();
+        let reader = BurstReader::new(&m, &c);
+        let res = reader.trace_pattern(&m, &[P, AP, AP, AP, P, AP, AP, P]);
+        assert!(!res.activation, "3 of 8 must not fire");
+    }
+
+    #[test]
+    fn reset_returns_all_to_ap_and_costs_time() {
+        use MtjState::{AntiParallel as AP, Parallel as P};
+        let (m, c) = setup();
+        let reader = BurstReader::new(&m, &c);
+        let res = reader.trace_pattern(&m, &[P, P, P, P, P, P, P, P]);
+        assert!(res.reset_pulses >= 8, "every P device needs ≥1 reset pulse");
+        assert!(res.duration_ns > 8.0 * m.cfg().read_pulse_ns);
+        let _ = AP;
+    }
+
+    #[test]
+    fn all_ap_pattern_costs_no_resets() {
+        use MtjState::AntiParallel as AP;
+        let (m, c) = setup();
+        let reader = BurstReader::new(&m, &c);
+        let res = reader.trace_pattern(&m, &[AP; 8]);
+        assert_eq!(res.reset_pulses, 0);
+        assert!(!res.activation);
+        // Pure read time: 8 × 500 ps = 4 ns.
+        assert!((res.duration_ns - 8.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_read_duration_matches_pulse_budget() {
+        use MtjState::Parallel as P;
+        let (m, c) = setup();
+        let reader = BurstReader::new(&m, &c);
+        let res = reader.trace_pattern(&m, &[P; 8]);
+        let min = 8.0 * m.cfg().read_pulse_ns + 8.0 * m.cfg().reset_pulse_ns;
+        assert!(res.duration_ns >= min - 1e-9);
+    }
+}

@@ -1,0 +1,224 @@
+//! Passive analog subtractor + tunable threshold matching (paper §2.2.2).
+//!
+//! Two-phase capacitive subtraction (Fig. 3c): during phase 1 both S1 and
+//! S2 close, storing the negative-weight MAC on the top plate of C_H while
+//! the bottom plate charges to the DC offset V_OFS; during phase 2 only S1
+//! stays closed, so the top-plate swing (positive-weight MAC minus the
+//! stored value) couples onto the floating bottom plate:
+//!
+//! `V_CONV = V_OFS + (V_M,pos − V_M,neg)`
+//!
+//! **Threshold matching** (the paper's §2.2.2 contribution): the VC-MTJ
+//! switches at a device-determined `V_SW` which generally differs from the
+//! algorithm's threshold.  Setting `V_OFS = 0.5·VDD + (V_SW − V_TH)` makes
+//! "algorithm says fire" coincide with "V_CONV ≥ V_SW".  V_OFS is a global
+//! external bias, so the algorithmic threshold stays tunable after
+//! fabrication.
+
+use crate::config::CircuitConfig;
+use crate::circuit::pixel::norm_to_volt;
+
+/// Buffered output rail: the unity-gain buffer runs from a boosted IO
+/// supply (GF22FDX thick-oxide IO devices) so V_CONV can exceed the core
+/// VDD and reach the MTJ write voltages.
+pub const V_RAIL_MAX: f64 = 1.8;
+
+/// The subtractor with its programmed offset.
+#[derive(Debug, Clone)]
+pub struct AnalogSubtractor {
+    cfg: CircuitConfig,
+    /// Programmed DC offset (V): `0.5·VDD + (V_SW − V_TH)`.
+    v_ofs: f64,
+}
+
+/// Captured two-phase operation (for transient traces / Fig. 4b).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubtractorOutput {
+    /// Final convolution voltage on the bottom plate (V), rail-clamped.
+    pub v_conv: f64,
+    /// True if the output clipped at a rail (saturation is benign past
+    /// threshold, per the paper, but we track it for diagnostics).
+    pub saturated: bool,
+}
+
+impl AnalogSubtractor {
+    /// `v_sw`: MTJ switching voltage; `v_th_alg_volts`: the hardware-mapped
+    /// algorithmic threshold *as a differential voltage* (see
+    /// [`threshold_to_volts`]).
+    pub fn with_threshold_matching(
+        cfg: &CircuitConfig,
+        v_sw: f64,
+        v_th_alg_volts: f64,
+    ) -> Self {
+        let v_ofs = 0.5 * cfg.vdd + (v_sw - v_th_alg_volts);
+        Self { cfg: cfg.clone(), v_ofs }
+    }
+
+    /// Plain subtractor with mid-rail offset (no threshold matching) —
+    /// the configuration a multi-bit-ADC readout would use.
+    pub fn mid_rail(cfg: &CircuitConfig) -> Self {
+        Self { cfg: cfg.clone(), v_ofs: 0.5 * cfg.vdd }
+    }
+
+    pub fn v_ofs(&self) -> f64 {
+        self.v_ofs
+    }
+
+    /// Run both phases: `mac_neg`/`mac_pos` are the normalized
+    /// post-nonlinearity MACs from the pixel array (phase 1 / phase 2).
+    pub fn subtract(&self, mac_neg: f64, mac_pos: f64) -> SubtractorOutput {
+        let v_neg = norm_to_volt(mac_neg, &self.cfg);
+        let v_pos = norm_to_volt(mac_pos, &self.cfg);
+        let ideal = self.v_ofs + (v_pos - v_neg);
+        let v_conv = ideal.clamp(0.0, V_RAIL_MAX);
+        SubtractorOutput { v_conv, saturated: (ideal - v_conv).abs() > 1e-12 }
+    }
+
+    /// RC settling time-constant of the sampling network (ns).
+    pub fn tau_ns(&self) -> f64 {
+        // R_on · C_H: Ω · fF = 1e-15 s·1e9 ns = 1e-6 ns per Ω·fF.
+        self.cfg.switch_r_on_ohm * self.cfg.c_hold_ff * 1e-6
+    }
+
+    /// Transient trace of the two-phase operation (regenerates Fig. 4b).
+    ///
+    /// Returns `(t_ns, v_top, v_conv)` samples: phase 1 settles the top
+    /// plate to V_M(neg) and the bottom to V_OFS; phase 2 re-settles the
+    /// top to V_M(pos) with the bottom riding the coupled difference.
+    pub fn transient(
+        &self,
+        mac_neg: f64,
+        mac_pos: f64,
+        phase_ns: f64,
+        n_samples: usize,
+    ) -> Vec<(f64, f64, f64)> {
+        let tau = self.tau_ns().max(1e-3);
+        let v_neg = norm_to_volt(mac_neg, &self.cfg);
+        let v_pos = norm_to_volt(mac_pos, &self.cfg);
+        let mut out = Vec::with_capacity(2 * n_samples);
+        // Phase 1: top: 0 → v_neg; bottom pinned at v_ofs.
+        for i in 0..n_samples {
+            let t = phase_ns * i as f64 / n_samples as f64;
+            let settle = 1.0 - (-t / tau).exp();
+            out.push((t, v_neg * settle, self.v_ofs));
+        }
+        // Phase 2: top: v_neg → v_pos; bottom floats, coupled 1:1.
+        for i in 0..n_samples {
+            let t = phase_ns * i as f64 / n_samples as f64;
+            let settle = 1.0 - (-t / tau).exp();
+            let v_top = v_neg + (v_pos - v_neg) * settle;
+            let v_conv = (self.v_ofs + (v_top - v_neg)).clamp(0.0, V_RAIL_MAX);
+            out.push((phase_ns + t, v_top, v_conv));
+        }
+        out
+    }
+}
+
+/// Convert a normalized algorithmic threshold (in post-nonlinearity MAC
+/// units, e.g. `E(z_clip)·v_th − shift_c`) into the *absolute* hardware
+/// threshold voltage V_TH of the paper's offset formula.  V_TH is
+/// mid-rail-referenced (a MAC difference of exactly θ lands the bottom
+/// plate at `V_OFS + θ_scaled`, and V_OFS cancels the mid-rail term), so
+/// `V_TH = norm_to_volt(θ)` — with this convention
+/// `V_CONV ≥ V_SW  ⟺  (mac_pos − mac_neg) ≥ θ`.
+pub fn threshold_to_volts(theta_norm: f64, cfg: &CircuitConfig) -> f64 {
+    norm_to_volt(theta_norm, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CircuitConfig;
+
+    fn cfg() -> CircuitConfig {
+        CircuitConfig::default()
+    }
+
+    #[test]
+    fn offset_formula_matches_paper() {
+        let c = cfg();
+        let s = AnalogSubtractor::with_threshold_matching(&c, 0.8, 0.1);
+        assert!((s.v_ofs() - (0.5 * c.vdd + 0.7)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subtraction_is_difference_plus_offset() {
+        let c = cfg();
+        let s = AnalogSubtractor::mid_rail(&c);
+        let out = s.subtract(0.5, 1.25);
+        let want = 0.5 * c.vdd + (norm_to_volt(1.25, &c) - norm_to_volt(0.5, &c));
+        assert!((out.v_conv - want).abs() < 1e-12);
+        assert!(!out.saturated);
+    }
+
+    #[test]
+    fn threshold_matching_fires_exactly_at_algorithmic_threshold() {
+        // The core §2.2.2 property: V_CONV ≥ V_SW ⟺ (mac_pos − mac_neg)
+        // ≥ θ, independent of the device's V_SW.
+        let c = cfg();
+        let theta_norm = 0.8; // algorithmic threshold in MAC units
+        let v_th = threshold_to_volts(theta_norm, &c);
+        for v_sw in [0.6, 0.8, 1.0] {
+            let s = AnalogSubtractor::with_threshold_matching(&c, v_sw, v_th);
+            for delta in [-1.2, -0.1, 0.0, 0.05, 0.79, 0.81, 1.5, 2.9] {
+                let out = s.subtract(0.0, delta);
+                let fires = out.v_conv >= v_sw - 1e-12;
+                let should = delta >= theta_norm - 1e-12;
+                assert_eq!(
+                    fires, should,
+                    "v_sw={v_sw} delta={delta}: v_conv={}",
+                    out.v_conv
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_does_not_break_firing_decision() {
+        // Paper: "the skewed offset will not impact the final activation
+        // … even if the analog convolution output saturates".
+        let c = cfg();
+        let s = AnalogSubtractor::with_threshold_matching(&c, 0.8, 0.05);
+        let out = s.subtract(-2.9, 2.9); // enormous positive difference
+        assert!(out.saturated);
+        assert!(out.v_conv >= 0.8, "still above V_SW after clamping");
+    }
+
+    #[test]
+    fn negative_rail_clamps_to_ground() {
+        let c = cfg();
+        let s = AnalogSubtractor::mid_rail(&c);
+        let out = s.subtract(2.9, -2.9);
+        assert_eq!(out.v_conv, 0.0);
+        assert!(out.saturated);
+    }
+
+    #[test]
+    fn transient_settles_to_final_values() {
+        let c = cfg();
+        let s = AnalogSubtractor::mid_rail(&c);
+        let trace = s.transient(0.5, 1.25, 50.0, 100);
+        let (_, v_top_end, v_conv_end) = *trace.last().unwrap();
+        assert!((v_top_end - norm_to_volt(1.25, &c)).abs() < 1e-3);
+        let want = s.subtract(0.5, 1.25).v_conv;
+        assert!((v_conv_end - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn transient_phase1_bottom_pinned_to_ofs() {
+        let c = cfg();
+        let s = AnalogSubtractor::with_threshold_matching(&c, 0.8, 0.1);
+        let trace = s.transient(1.0, 2.0, 50.0, 50);
+        for &(t, _, v_conv) in trace.iter().take(50) {
+            assert!((v_conv - s.v_ofs()).abs() < 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn tau_is_physical() {
+        let c = cfg();
+        let s = AnalogSubtractor::mid_rail(&c);
+        // 2 kΩ · 20 fF = 40 ps
+        assert!((s.tau_ns() - 0.04).abs() < 1e-12);
+    }
+}

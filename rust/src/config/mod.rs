@@ -1,0 +1,451 @@
+//! Typed configuration for the whole stack.
+//!
+//! [`HwConfig`] mirrors `python/compile/hwcfg.py` field-for-field and is
+//! normally deserialized from `artifacts/hwcfg.json` (written by
+//! `make artifacts`), guaranteeing that the rust circuit simulator and the
+//! AOT-compiled model agree on every device/circuit constant.  The
+//! `Default` impls duplicate the same values so unit tests run without
+//! artifacts; `tests/golden.rs` asserts the JSON and the defaults match.
+//!
+//! [`PipelineConfig`] is the L3-only runtime configuration (queue depths,
+//! batching policy, sensor geometry), loaded from a JSON file (the offline
+//! registry has no toml crate; see rust/src/util/json.rs).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::util::json::Value;
+
+/// VC-MTJ device constants (paper §2.1, Figs. 1-2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MtjConfig {
+    /// Parallel-state resistance of the 70 nm pillar (Ω).
+    pub r_p_ohm: f64,
+    /// TMR = (R_AP − R_P)/R_P at near-zero bias; paper: > 150 %.
+    pub tmr_zero_bias: f64,
+    /// Voltage at which the TMR droops to half its zero-bias value (V).
+    pub tmr_half_voltage: f64,
+    /// Calibration voltages for AP→P switching probability (V).
+    pub sw_calib_voltages: Vec<f64>,
+    /// Measured AP→P switching probabilities at 700 ps (paper Fig. 2b).
+    pub sw_calib_prob_ap_to_p: Vec<f64>,
+    /// Full precession period (ns); switching lobes peak at odd half-periods.
+    pub precession_period_ns: f64,
+    /// Voltage of 50 % switching at the optimal pulse width (V).
+    pub v_c50: f64,
+    /// Width of the sigmoidal P_sw(V) ramp (V).
+    pub v_sigma: f64,
+    /// Reset (P→AP) pulse amplitude (V) — paper: 0.9 V.
+    pub reset_voltage: f64,
+    /// Reset pulse width (ns) — paper: 500 ps.
+    pub reset_pulse_ns: f64,
+    /// Write pulse width (ns) — paper: 700 ps.
+    pub write_pulse_ns: f64,
+    /// Read voltage (V), opposite polarity ⇒ disturb-free (VCMA).
+    pub read_voltage: f64,
+    /// Read pulse width (ns).
+    pub read_pulse_ns: f64,
+    /// Devices per neuron (paper: 8).
+    pub n_mtj_per_neuron: usize,
+    /// Majority threshold: ≥ k of n switched ⇒ activation 1 (paper: 4).
+    pub majority_k: usize,
+}
+
+impl Default for MtjConfig {
+    fn default() -> Self {
+        Self {
+            r_p_ohm: 10_000.0,
+            tmr_zero_bias: 1.55,
+            tmr_half_voltage: 0.55,
+            sw_calib_voltages: vec![0.70, 0.80, 0.90],
+            sw_calib_prob_ap_to_p: vec![0.062, 0.924, 0.9717],
+            precession_period_ns: 1.4,
+            v_c50: 0.762,
+            v_sigma: 0.040,
+            reset_voltage: 0.9,
+            reset_pulse_ns: 0.5,
+            write_pulse_ns: 0.7,
+            read_voltage: 0.10,
+            read_pulse_ns: 0.5,
+            n_mtj_per_neuron: 8,
+            majority_k: 4,
+        }
+    }
+}
+
+impl MtjConfig {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            r_p_ohm: v.get("r_p_ohm")?.as_f64()?,
+            tmr_zero_bias: v.get("tmr_zero_bias")?.as_f64()?,
+            tmr_half_voltage: v.get("tmr_half_voltage")?.as_f64()?,
+            sw_calib_voltages: v.get("sw_calib_voltages")?.as_f64_vec()?,
+            sw_calib_prob_ap_to_p: v
+                .get("sw_calib_prob_ap_to_p")?
+                .as_f64_vec()?,
+            precession_period_ns: v.get("precession_period_ns")?.as_f64()?,
+            v_c50: v.get("v_c50")?.as_f64()?,
+            v_sigma: v.get("v_sigma")?.as_f64()?,
+            reset_voltage: v.get("reset_voltage")?.as_f64()?,
+            reset_pulse_ns: v.get("reset_pulse_ns")?.as_f64()?,
+            write_pulse_ns: v.get("write_pulse_ns")?.as_f64()?,
+            read_voltage: v.get("read_voltage")?.as_f64()?,
+            read_pulse_ns: v.get("read_pulse_ns")?.as_f64()?,
+            n_mtj_per_neuron: v.get("n_mtj_per_neuron")?.as_usize()?,
+            majority_k: v.get("majority_k")?.as_usize()?,
+        })
+    }
+}
+
+/// Pixel + subtractor circuit constants (paper §2.2, GF 22 nm FDX).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitConfig {
+    pub vdd: f64,
+    /// Transfer-curve compression factor (Fig. 4a fit).
+    pub nl_alpha: f64,
+    /// Transfer-curve saturation knee (normalized units).
+    pub nl_sat: f64,
+    /// Normalized W·I range mapped to the rails ([-3, 3] in the paper).
+    pub mac_range: f64,
+    /// kTC-equivalent analog noise σ (normalized units).
+    pub analog_noise_sigma: f64,
+    /// Hold capacitor (fF).
+    pub c_hold_ff: f64,
+    /// Sampling-switch on-resistance (Ω).
+    pub switch_r_on_ohm: f64,
+    /// Comparator threshold as a fraction of the P↔AP divider swing.
+    pub comparator_vref_frac: f64,
+    /// Photodiode integration time per phase (µs); two phases per frame.
+    pub integration_time_us: f64,
+    /// Gain of the drive stage between subtractor and VC-MTJs (physical
+    /// capture mode).  Compresses the device's ~100 mV switching-
+    /// transition band (Fig. 2) so near-threshold neurons land at the
+    /// calibrated operating points — see DESIGN.md §Findings.
+    pub drive_gain: f64,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        Self {
+            vdd: 0.8,
+            nl_alpha: 0.35,
+            nl_sat: 3.0,
+            mac_range: 3.0,
+            analog_noise_sigma: 0.01,
+            c_hold_ff: 20.0,
+            switch_r_on_ohm: 2_000.0,
+            comparator_vref_frac: 0.5,
+            integration_time_us: 5.0,
+            drive_gain: 6.0,
+        }
+    }
+}
+
+impl CircuitConfig {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            vdd: v.get("vdd")?.as_f64()?,
+            nl_alpha: v.get("nl_alpha")?.as_f64()?,
+            nl_sat: v.get("nl_sat")?.as_f64()?,
+            mac_range: v.get("mac_range")?.as_f64()?,
+            analog_noise_sigma: v.get("analog_noise_sigma")?.as_f64()?,
+            c_hold_ff: v.get("c_hold_ff")?.as_f64()?,
+            switch_r_on_ohm: v.get("switch_r_on_ohm")?.as_f64()?,
+            comparator_vref_frac: v.get("comparator_vref_frac")?.as_f64()?,
+            integration_time_us: v.get("integration_time_us")?.as_f64()?,
+            drive_gain: v.get("drive_gain")?.as_f64()?,
+        })
+    }
+}
+
+/// First-layer geometry and quantization (paper §2.4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    pub in_channels: usize,
+    pub first_channels: usize,
+    pub kernel_size: usize,
+    pub stride: usize,
+    pub weight_bits: u32,
+    pub input_bits: u32,
+    pub output_bits: u32,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            in_channels: 3,
+            first_channels: 32,
+            kernel_size: 3,
+            stride: 2,
+            weight_bits: 4,
+            input_bits: 12,
+            output_bits: 1,
+        }
+    }
+}
+
+impl NetworkConfig {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            in_channels: v.get("in_channels")?.as_usize()?,
+            first_channels: v.get("first_channels")?.as_usize()?,
+            kernel_size: v.get("kernel_size")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            weight_bits: v.get("weight_bits")?.as_u32()?,
+            input_bits: v.get("input_bits")?.as_u32()?,
+            output_bits: v.get("output_bits")?.as_u32()?,
+        })
+    }
+}
+
+/// Complete device/circuit/network configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HwConfig {
+    pub mtj: MtjConfig,
+    pub circuit: CircuitConfig,
+    pub network: NetworkConfig,
+}
+
+impl HwConfig {
+    /// Load from `artifacts/hwcfg.json` (the Python-emitted source of truth).
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref()).context("loading hwcfg")?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            mtj: MtjConfig::from_json(v.get("mtj")?)?,
+            circuit: CircuitConfig::from_json(v.get("circuit")?)?,
+            network: NetworkConfig::from_json(v.get("network")?)?,
+        })
+    }
+
+    /// Load from the default artifacts location, falling back to defaults.
+    pub fn load_or_default(artifacts_dir: &Path) -> Self {
+        Self::from_json_file(artifacts_dir.join("hwcfg.json"))
+            .unwrap_or_default()
+    }
+}
+
+/// Sensor→backend link encoding (paper §3.2 discusses CSR-style schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseCoding {
+    /// Raw bit-packed binary activations (1 bit per value).
+    Dense,
+    /// Compressed sparse row over the channel-major bitmap.
+    Csr,
+    /// Run-length encoding of the zero runs.
+    Rle,
+}
+
+impl SparseCoding {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dense" => Ok(Self::Dense),
+            "csr" => Ok(Self::Csr),
+            "rle" => Ok(Self::Rle),
+            other => anyhow::bail!("unknown sparse coding '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Csr => "csr",
+            Self::Rle => "rle",
+        }
+    }
+}
+
+/// L3 pipeline configuration (not shared with Python).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Directory holding `*.hlo.txt` + `meta.json` + `hwcfg.json`.
+    pub artifacts_dir: String,
+    /// Sensor rows (image height).
+    pub sensor_height: usize,
+    /// Sensor cols (image width).
+    pub sensor_width: usize,
+    /// Batch sizes for which backend executables exist.
+    pub batch_sizes: Vec<usize>,
+    /// Max frames queued before backpressure stalls the source.
+    pub queue_depth: usize,
+    /// Maximum time a partially-filled batch waits before dispatch (µs).
+    pub batch_timeout_us: u64,
+    /// Worker threads in the sensor-simulation stage.
+    pub sensor_workers: usize,
+    /// Stochastic MTJ switching in the sensor sim (vs ideal comparator).
+    pub mtj_noise: bool,
+    /// Analog (kTC) noise injection in the pixel sim.
+    pub analog_noise: bool,
+    /// Sparse encoding for the sensor→backend link.
+    pub sparse_coding: SparseCoding,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".to_string(),
+            sensor_height: 32,
+            sensor_width: 32,
+            batch_sizes: vec![1, 8],
+            queue_depth: 64,
+            batch_timeout_us: 8_000,
+            sensor_workers: 4,
+            mtj_noise: true,
+            analog_noise: false,
+            sparse_coding: SparseCoding::Csr,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref())
+            .context("loading pipeline config")?;
+        let d = Self::default();
+        // Every field optional: the file overrides defaults.
+        let getf = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Ok(x) => x.as_f64(),
+                Err(_) => Ok(dv),
+            }
+        };
+        let getb = |k: &str, dv: bool| -> Result<bool> {
+            match v.get(k) {
+                Ok(x) => x.as_bool(),
+                Err(_) => Ok(dv),
+            }
+        };
+        Ok(Self {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(|x| Ok(x.as_str()?.to_string()))
+                .unwrap_or(d.artifacts_dir),
+            sensor_height: getf("sensor_height", d.sensor_height as f64)?
+                as usize,
+            sensor_width: getf("sensor_width", d.sensor_width as f64)? as usize,
+            batch_sizes: v
+                .get("batch_sizes")
+                .and_then(|x| x.as_usize_vec())
+                .unwrap_or(d.batch_sizes),
+            queue_depth: getf("queue_depth", d.queue_depth as f64)? as usize,
+            batch_timeout_us: getf(
+                "batch_timeout_us",
+                d.batch_timeout_us as f64,
+            )? as u64,
+            sensor_workers: getf("sensor_workers", d.sensor_workers as f64)?
+                as usize,
+            mtj_noise: getb("mtj_noise", d.mtj_noise)?,
+            analog_noise: getb("analog_noise", d.analog_noise)?,
+            sparse_coding: v
+                .get("sparse_coding")
+                .and_then(|x| SparseCoding::parse(x.as_str()?))
+                .unwrap_or(d.sparse_coding),
+        })
+    }
+}
+
+/// Manifest written by aot.py describing the exported executables.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub arch: String,
+    pub img_shape: Vec<usize>,
+    pub act_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub batches: Vec<usize>,
+    pub p_sw_high: f64,
+    pub p_sw_low: f64,
+    pub n_mtj: usize,
+    pub majority_k: usize,
+}
+
+impl ArtifactMeta {
+    pub fn from_dir(artifacts_dir: &Path) -> Result<Self> {
+        let v = Value::from_file(&artifacts_dir.join("meta.json"))
+            .context("reading artifacts meta.json (run `make artifacts`)")?;
+        Ok(Self {
+            arch: v.get("arch")?.as_str()?.to_string(),
+            img_shape: v.get("img_shape")?.as_usize_vec()?,
+            act_shape: v.get("act_shape")?.as_usize_vec()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            batches: v.get("batches")?.as_usize_vec()?,
+            p_sw_high: v.get("p_sw_high")?.as_f64()?,
+            p_sw_low: v.get("p_sw_low")?.as_f64()?,
+            n_mtj: v.get("n_mtj")?.as_usize()?,
+            majority_k: v.get("majority_k")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let cfg = HwConfig::default();
+        assert_eq!(cfg.mtj.n_mtj_per_neuron, 8);
+        assert_eq!(cfg.mtj.majority_k, 4);
+        assert!((cfg.mtj.write_pulse_ns - 0.7).abs() < 1e-12);
+        assert!((cfg.mtj.reset_pulse_ns - 0.5).abs() < 1e-12);
+        assert!((cfg.circuit.integration_time_us - 5.0).abs() < 1e-12);
+        assert_eq!(cfg.network.first_channels, 32);
+        assert_eq!(cfg.network.stride, 2);
+        assert_eq!(cfg.network.input_bits, 12);
+    }
+
+    #[test]
+    fn parses_python_emitted_hwcfg_shape() {
+        // Minimal but structurally-faithful hwcfg.json.
+        let text = r#"{
+          "circuit": {"analog_noise_sigma": 0.01, "c_hold_ff": 20.0,
+            "comparator_vref_frac": 0.5, "integration_time_us": 5.0,
+            "mac_range": 3.0, "nl_alpha": 0.35, "nl_sat": 3.0,
+            "switch_r_on_ohm": 2000.0, "vdd": 0.8, "drive_gain": 6.0},
+          "mtj": {"majority_k": 4, "n_mtj_per_neuron": 8,
+            "precession_period_ns": 1.4, "r_p_ohm": 10000.0,
+            "read_pulse_ns": 0.5, "read_voltage": 0.1,
+            "reset_pulse_ns": 0.5, "reset_voltage": 0.9,
+            "sw_calib_prob_ap_to_p": [0.062, 0.924, 0.9717],
+            "sw_calib_voltages": [0.7, 0.8, 0.9],
+            "tmr_half_voltage": 0.55, "tmr_zero_bias": 1.55,
+            "v_c50": 0.762, "v_sigma": 0.04, "write_pulse_ns": 0.7},
+          "network": {"first_channels": 32, "in_channels": 3,
+            "input_bits": 12, "kernel_size": 3, "output_bits": 1,
+            "stride": 2, "weight_bits": 4}
+        }"#;
+        let v = Value::parse(text).unwrap();
+        let cfg = HwConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, HwConfig::default(), "JSON must match defaults");
+    }
+
+    #[test]
+    fn sparse_coding_parse_and_name() {
+        for s in ["dense", "csr", "rle"] {
+            assert_eq!(SparseCoding::parse(s).unwrap().name(), s);
+        }
+        assert!(SparseCoding::parse("zip").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error_but_load_or_default_falls_back() {
+        assert!(HwConfig::from_json_file("/nonexistent/x.json").is_err());
+        let cfg = HwConfig::load_or_default(Path::new("/nonexistent"));
+        assert_eq!(cfg, HwConfig::default());
+    }
+
+    #[test]
+    fn pipeline_config_partial_json_overrides() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(&p, r#"{"sensor_height": 224, "sparse_coding": "rle"}"#)
+            .unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.sensor_height, 224);
+        assert_eq!(cfg.sparse_coding, SparseCoding::Rle);
+        assert_eq!(cfg.queue_depth, PipelineConfig::default().queue_depth);
+    }
+}

@@ -1,0 +1,149 @@
+//! Dynamic batcher for backend dispatch.
+//!
+//! The AOT backend exists at fixed batch sizes (default {1, 8}); the
+//! batcher greedily forms the largest available executable batch and
+//! falls back to singles once a frame has waited `timeout`.  Pure data
+//! structure (no threads) so the policy is unit-testable; the pipeline
+//! drives it from its dispatch loop.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// An item waiting for dispatch.
+#[derive(Debug)]
+struct Pending<T> {
+    item: T,
+    arrived: Instant,
+}
+
+/// Batching policy over configured executable sizes.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    /// Executable batch sizes, sorted descending.
+    sizes: Vec<usize>,
+    timeout: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(mut sizes: Vec<usize>, timeout: Duration) -> Self {
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(sizes.contains(&1), "batch size 1 required as fallback");
+        Self { queue: VecDeque::new(), sizes, timeout }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back(Pending { item, arrived: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Next batch to dispatch at time `now`, or `None` to keep waiting.
+    ///
+    /// Only configured sizes are ever emitted (an executable exists only
+    /// for those batch shapes).  Policy: emit the largest size as soon as
+    /// it fills; once the oldest item exceeds the timeout (or on `flush`),
+    /// emit the largest configured size that fits the queue — repeated
+    /// polling then drains the remainder as smaller batches.
+    pub fn poll(&mut self, now: Instant, flush: bool) -> Option<Vec<T>> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        let fit = self.sizes.iter().copied().find(|&s| s <= n)?;
+        let oldest_expired = now
+            .duration_since(self.queue.front().unwrap().arrived)
+            >= self.timeout;
+        if fit == self.sizes[0] || oldest_expired || flush {
+            Some(self.take(fit))
+        } else {
+            None
+        }
+    }
+
+    fn take(&mut self, k: usize) -> Vec<T> {
+        self.queue.drain(..k).map(|p| p.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher<u32> {
+        Batcher::new(vec![1, 8], Duration::from_millis(5))
+    }
+
+    #[test]
+    fn emits_full_batch_immediately() {
+        let mut b = batcher();
+        for i in 0..9 {
+            b.push(i);
+        }
+        let batch = b.poll(Instant::now(), false).unwrap();
+        assert_eq!(batch.len(), 8);
+        assert_eq!(batch, (0..8).collect::<Vec<_>>());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn waits_for_more_when_under_full_and_fresh() {
+        let mut b = batcher();
+        b.push(1);
+        b.push(2);
+        assert!(b.poll(Instant::now(), false).is_none());
+    }
+
+    #[test]
+    fn timeout_flushes_partial_as_singles() {
+        // Only configured sizes exist as executables, so a stale partial
+        // queue drains as size-1 batches.
+        let mut b = batcher();
+        b.push(1);
+        b.push(2);
+        let later = Instant::now() + Duration::from_millis(50);
+        assert_eq!(b.poll(later, false).unwrap(), vec![1]);
+        assert_eq!(b.poll(later, false).unwrap(), vec![2]);
+        assert!(b.poll(later, false).is_none());
+    }
+
+    #[test]
+    fn flush_drains_regardless_of_age() {
+        let mut b = batcher();
+        b.push(7);
+        let batch = b.poll(Instant::now(), true).unwrap();
+        assert_eq!(batch, vec![7]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn emitted_sizes_are_always_configured() {
+        let mut b = batcher();
+        for i in 0..20 {
+            b.push(i);
+        }
+        let mut all = Vec::new();
+        while let Some(batch) = b.poll(Instant::now(), true) {
+            assert!(
+                batch.len() == 8 || batch.len() == 1,
+                "illegal batch size {}",
+                batch.len()
+            );
+            all.extend(batch);
+        }
+        assert_eq!(all, (0..20).collect::<Vec<_>>(), "FIFO preserved");
+    }
+
+    #[test]
+    #[should_panic(expected = "batch size 1 required")]
+    fn requires_fallback_size() {
+        let _ = Batcher::<u32>::new(vec![8], Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the paper's system contribution as a serving pipeline.
+//!
+//! * [`sparse`] — lossless activation codecs for the sensor→backend link
+//!   (dense bitmap / CSR / Golomb-Rice RLE) with exact bit accounting
+//! * [`batcher`] — dynamic batching policy over the AOT executable sizes
+//! * [`pipeline`] — the threaded frame-serving pipeline (source →
+//!   sensor workers → link → batcher → PJRT backend → results)
+
+pub mod batcher;
+pub mod pipeline;
+pub mod sparse;
+
+pub use batcher::Batcher;
+pub use pipeline::{Classification, Pipeline, RunReport};
+pub use sparse::{decode, encode, Encoded};

@@ -1,0 +1,259 @@
+//! Fault injection + device variability for the multi-MTJ neuron.
+//!
+//! The paper's reliability argument rests on majority voting over 8
+//! devices; this module quantifies how that margin erodes under the two
+//! failure modes MTJ arrays actually exhibit:
+//!
+//! * **stuck-at faults** — a device pinned in AP (never fires: reduces the
+//!   effective n) or in P (always fires: biases toward spurious ones);
+//! * **device-to-device variability** — per-device spread of the switching
+//!   probability (σ on P_sw) from pillar-diameter / MgO-thickness
+//!   variation.
+//!
+//! Used by the failure-injection tests and the extended Fig. 5 analysis.
+
+use crate::device::neuron::binomial_tail_ge;
+use crate::device::rng;
+
+/// A stuck-at fault pattern over an n-device neuron.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StuckFaults {
+    /// Devices stuck anti-parallel (never fire).
+    pub stuck_ap: usize,
+    /// Devices stuck parallel (always read as fired).
+    pub stuck_p: usize,
+}
+
+/// Neuron-level error rates of an n-device majority-k neuron with stuck
+/// faults: healthy devices switch with `p_fire` when driven / `p_err`
+/// when not; stuck-P devices always count as fired, stuck-AP never.
+///
+/// Returns `(p_1_to_0, p_0_to_1)`.
+pub fn faulty_neuron_error_rates(
+    p_fire: f64,
+    p_err: f64,
+    n: usize,
+    k: usize,
+    faults: StuckFaults,
+) -> (f64, f64) {
+    assert!(faults.stuck_ap + faults.stuck_p <= n);
+    let healthy = n - faults.stuck_ap - faults.stuck_p;
+    // Stuck-P devices contribute `stuck_p` guaranteed counts; the healthy
+    // devices must supply the remaining k - stuck_p.
+    let need = k.saturating_sub(faults.stuck_p);
+    let fires_when_driven = if need == 0 {
+        1.0
+    } else if need > healthy {
+        0.0
+    } else {
+        binomial_tail_ge(healthy, need, p_fire)
+    };
+    let fires_when_quiet = if need == 0 {
+        1.0
+    } else if need > healthy {
+        0.0
+    } else {
+        binomial_tail_ge(healthy, need, p_err)
+    };
+    (1.0 - fires_when_driven, fires_when_quiet)
+}
+
+/// Maximum stuck-AP faults an (n, k) neuron tolerates while keeping both
+/// error modes below `bound` (yield criterion for the array).
+pub fn stuck_ap_tolerance(
+    p_fire: f64,
+    p_err: f64,
+    n: usize,
+    k: usize,
+    bound: f64,
+) -> usize {
+    let mut tol = 0;
+    for dead in 0..=n.saturating_sub(k) {
+        let (e10, e01) = faulty_neuron_error_rates(
+            p_fire,
+            p_err,
+            n,
+            k,
+            StuckFaults { stuck_ap: dead, stuck_p: 0 },
+        );
+        if e10 <= bound && e01 <= bound {
+            tol = dead;
+        } else {
+            break;
+        }
+    }
+    tol
+}
+
+/// Expected fraction of neurons (of `n` devices each) with zero stuck
+/// devices, given a per-device stuck probability `p_stuck`.
+pub fn fault_free_neuron_yield(p_stuck: f64, n: usize) -> f64 {
+    (1.0 - p_stuck).powi(n as i32)
+}
+
+/// Neuron error under Gaussian device-to-device P_sw variability
+/// (σ on the switching probability, clamped to [0, 1]), Monte-Carlo over
+/// `trials` randomly drawn neurons.  Deterministic via the counter RNG.
+pub fn variability_error_mc(
+    p_fire: f64,
+    sigma: f64,
+    n: usize,
+    k: usize,
+    trials: u32,
+    seed: u32,
+) -> f64 {
+    let mut failures = 0u64;
+    for t in 0..trials {
+        // Draw per-device probabilities for this neuron.
+        let mut fired = 0usize;
+        for m in 0..n {
+            let idx = t.wrapping_mul(n as u32).wrapping_add(m as u32);
+            // Box-Muller from two counter uniforms (streams 300/301).
+            let u1 = rng::uniform(seed, idx, 300).max(1e-12) as f64;
+            let u2 = rng::uniform(seed, idx, 301) as f64;
+            let g = (-2.0 * u1.ln()).sqrt()
+                * (2.0 * std::f64::consts::PI * u2).cos();
+            let p_dev = (p_fire + sigma * g).clamp(0.0, 1.0);
+            let u = rng::uniform(seed, idx, 302) as f64;
+            fired += (u < p_dev) as usize;
+        }
+        if fired < k {
+            failures += 1;
+        }
+    }
+    failures as f64 / trials as f64
+}
+
+/// Extended Fig. 5 table: error rates vs stuck-AP count at the paper's
+/// operating point.  Returns rows of `(dead, e10, e01)`.
+pub fn fig5_fault_extension(
+    p_fire: f64,
+    p_err: f64,
+    n: usize,
+    k: usize,
+) -> Vec<(usize, f64, f64)> {
+    (0..=n.saturating_sub(k))
+        .map(|dead| {
+            let (e10, e01) = faulty_neuron_error_rates(
+                p_fire,
+                p_err,
+                n,
+                k,
+                StuckFaults { stuck_ap: dead, stuck_p: 0 },
+            );
+            (dead, e10, e01)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::neuron::neuron_error_rates;
+
+    const P_FIRE: f64 = 0.924;
+    const P_ERR: f64 = 0.062;
+
+    #[test]
+    fn zero_faults_match_healthy_analysis() {
+        let (a10, a01) = faulty_neuron_error_rates(
+            P_FIRE, P_ERR, 8, 4, StuckFaults::default(),
+        );
+        let (b10, b01) = neuron_error_rates(P_FIRE, P_ERR, 8, 4);
+        assert!((a10 - b10).abs() < 1e-15);
+        assert!((a01 - b01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stuck_ap_raises_fail_to_fire() {
+        let mut prev = 0.0;
+        for dead in 0..=4 {
+            let (e10, _) = faulty_neuron_error_rates(
+                P_FIRE, P_ERR, 8, 4,
+                StuckFaults { stuck_ap: dead, stuck_p: 0 },
+            );
+            assert!(e10 >= prev, "dead={dead}");
+            prev = e10;
+        }
+    }
+
+    #[test]
+    fn stuck_p_raises_spurious_fire() {
+        let mut prev = 0.0;
+        for stuck in 0..=4 {
+            let (_, e01) = faulty_neuron_error_rates(
+                P_FIRE, P_ERR, 8, 4,
+                StuckFaults { stuck_ap: 0, stuck_p: stuck },
+            );
+            assert!(e01 >= prev, "stuck={stuck}");
+            prev = e01;
+        }
+    }
+
+    #[test]
+    fn four_stuck_p_always_fires() {
+        let (e10, e01) = faulty_neuron_error_rates(
+            P_FIRE, P_ERR, 8, 4,
+            StuckFaults { stuck_ap: 0, stuck_p: 4 },
+        );
+        assert_eq!(e10, 0.0);
+        assert_eq!(e01, 1.0);
+    }
+
+    #[test]
+    fn five_dead_devices_can_never_fire() {
+        let (e10, e01) = faulty_neuron_error_rates(
+            P_FIRE, P_ERR, 8, 4,
+            StuckFaults { stuck_ap: 5, stuck_p: 0 },
+        );
+        assert_eq!(e10, 1.0);
+        assert_eq!(e01, 0.0);
+    }
+
+    #[test]
+    fn paper_operating_point_tolerates_one_dead_device() {
+        // With 8 devices / k=4 at 92.4 %, one dead device keeps both error
+        // modes under 1 % — the majority margin the paper buys.
+        let tol = stuck_ap_tolerance(P_FIRE, P_ERR, 8, 4, 0.01);
+        assert!(tol >= 1, "tolerance {tol}");
+        // But not three.
+        let (e10, _) = faulty_neuron_error_rates(
+            P_FIRE, P_ERR, 8, 4,
+            StuckFaults { stuck_ap: 3, stuck_p: 0 },
+        );
+        assert!(e10 > 0.01);
+    }
+
+    #[test]
+    fn yield_model_sane() {
+        assert!((fault_free_neuron_yield(0.0, 8) - 1.0).abs() < 1e-15);
+        let y = fault_free_neuron_yield(0.001, 8);
+        assert!((y - 0.992).abs() < 1e-3);
+    }
+
+    #[test]
+    fn variability_degrades_gracefully() {
+        let e0 = variability_error_mc(P_FIRE, 0.0, 8, 4, 50_000, 1);
+        let e_hi = variability_error_mc(P_FIRE, 0.15, 8, 4, 50_000, 1);
+        let (analytic, _) = neuron_error_rates(P_FIRE, 0.0, 8, 4);
+        assert!(
+            (e0 - analytic).abs() < 2e-3,
+            "σ=0 MC {e0} vs analytic {analytic}"
+        );
+        assert!(e_hi > e0, "variability must hurt: {e_hi} vs {e0}");
+        assert!(e_hi < 0.05, "majority still absorbs σ=0.15: {e_hi}");
+    }
+
+    #[test]
+    fn fig5_extension_rows_shape() {
+        let rows = fig5_fault_extension(P_FIRE, P_ERR, 8, 4);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].0, 0);
+        assert!(rows[4].1 > rows[0].1);
+    }
+
+    #[test]
+    fn binomial_coeff_reexport_sane() {
+        assert_eq!(crate::device::neuron::binomial_coeff(8, 4), 70.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Monotone cubic (Fritsch–Carlson / PCHIP) interpolation.
+//!
+//! The VC-MTJ switching-probability curve is calibrated *exactly* through
+//! the paper's measured points (Fig. 2); a monotone interpolant guarantees
+//! no spurious overshoot between calibration points (a plain cubic spline
+//! would overshoot past 1.0 between the 0.8 V and 0.9 V points).
+
+/// Monotone piecewise-cubic Hermite interpolant over sorted knots.
+#[derive(Debug, Clone)]
+pub struct MonotoneCubic {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    /// Tangents at each knot (Fritsch–Carlson limited).
+    ms: Vec<f64>,
+}
+
+impl MonotoneCubic {
+    /// Build from `(x, y)` knots. `xs` must be strictly increasing and have
+    /// at least two entries.
+    pub fn new(xs: Vec<f64>, ys: Vec<f64>) -> Self {
+        assert!(xs.len() >= 2, "need at least two knots");
+        assert_eq!(xs.len(), ys.len());
+        assert!(
+            xs.windows(2).all(|w| w[1] > w[0]),
+            "knots must be strictly increasing"
+        );
+        let n = xs.len();
+        // Secant slopes.
+        let d: Vec<f64> = (0..n - 1)
+            .map(|i| (ys[i + 1] - ys[i]) / (xs[i + 1] - xs[i]))
+            .collect();
+        // Initial tangents: average of adjacent secants (one-sided at ends).
+        let mut ms = vec![0.0; n];
+        ms[0] = d[0];
+        ms[n - 1] = d[n - 2];
+        for i in 1..n - 1 {
+            ms[i] = if d[i - 1] * d[i] <= 0.0 {
+                0.0 // local extremum: flat tangent preserves monotonicity
+            } else {
+                (d[i - 1] + d[i]) / 2.0
+            };
+        }
+        // Fritsch–Carlson limiter.
+        for i in 0..n - 1 {
+            if d[i] == 0.0 {
+                ms[i] = 0.0;
+                ms[i + 1] = 0.0;
+            } else {
+                let a = ms[i] / d[i];
+                let b = ms[i + 1] / d[i];
+                let s = a * a + b * b;
+                if s > 9.0 {
+                    let t = 3.0 / s.sqrt();
+                    ms[i] = t * a * d[i];
+                    ms[i + 1] = t * b * d[i];
+                }
+            }
+        }
+        Self { xs, ys, ms }
+    }
+
+    /// Evaluate at `x`; clamps to the end values outside the knot range.
+    pub fn eval(&self, x: f64) -> f64 {
+        let n = self.xs.len();
+        if x <= self.xs[0] {
+            return self.ys[0];
+        }
+        if x >= self.xs[n - 1] {
+            return self.ys[n - 1];
+        }
+        // Binary search for the containing interval.
+        let i = match self
+            .xs
+            .binary_search_by(|v| v.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => return self.ys[i],
+            Err(i) => i - 1,
+        };
+        let h = self.xs[i + 1] - self.xs[i];
+        let t = (x - self.xs[i]) / h;
+        let (t2, t3) = (t * t, t * t * t);
+        let h00 = 2.0 * t3 - 3.0 * t2 + 1.0;
+        let h10 = t3 - 2.0 * t2 + t;
+        let h01 = -2.0 * t3 + 3.0 * t2;
+        let h11 = t3 - t2;
+        h00 * self.ys[i]
+            + h10 * h * self.ms[i]
+            + h01 * self.ys[i + 1]
+            + h11 * h * self.ms[i + 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_through_knots() {
+        let c = MonotoneCubic::new(
+            vec![0.0, 1.0, 2.0, 3.0],
+            vec![0.0, 0.1, 0.9, 1.0],
+        );
+        for (x, y) in [(0.0, 0.0), (1.0, 0.1), (2.0, 0.9), (3.0, 1.0)] {
+            assert!((c.eval(x) - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn monotone_between_knots_no_overshoot() {
+        let c = MonotoneCubic::new(
+            vec![0.5, 0.7, 0.8, 0.9, 1.2],
+            vec![0.001, 0.062, 0.924, 0.9717, 0.985],
+        );
+        let mut prev = -1.0;
+        for i in 0..=700 {
+            let x = 0.5 + i as f64 * 0.001;
+            let y = c.eval(x);
+            assert!(y >= prev - 1e-12, "non-monotone at {x}: {y} < {prev}");
+            assert!((0.0..=1.0).contains(&y), "overshoot at {x}: {y}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let c = MonotoneCubic::new(vec![0.0, 1.0], vec![0.2, 0.8]);
+        assert_eq!(c.eval(-5.0), 0.2);
+        assert_eq!(c.eval(5.0), 0.8);
+    }
+
+    #[test]
+    fn flat_segments_stay_flat() {
+        let c = MonotoneCubic::new(
+            vec![0.0, 1.0, 2.0, 3.0],
+            vec![0.5, 0.5, 0.5, 1.0],
+        );
+        for i in 0..=100 {
+            let x = i as f64 * 0.02;
+            assert!((c.eval(x) - 0.5).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted_knots() {
+        MonotoneCubic::new(vec![1.0, 0.0], vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,21 @@
+//! VC-MTJ device physics (paper §2.1) — the substrate the paper's
+//! global-shutter scheme is built on.
+//!
+//! * [`rng`] — counter-based RNG, bit-identical to the Pallas kernels
+//! * [`interp`] — monotone cubic interpolation for measured device curves
+//! * [`mtj`] — single-device model: R(V), TMR droop, precessional
+//!   switching, disturb-free reads, endurance
+//! * [`neuron`] — multi-device majority neuron + exact binomial error
+//!   analysis (regenerates Fig. 5)
+
+//! * [`fault`] — stuck-at faults, device variability, yield analysis
+
+pub mod fault;
+pub mod interp;
+pub mod mtj;
+pub mod neuron;
+pub mod rng;
+
+pub use fault::{faulty_neuron_error_rates, StuckFaults};
+pub use mtj::{Mtj, MtjModel, MtjState, ReadSample};
+pub use neuron::{neuron_error_rates, MultiMtjNeuron};

@@ -1,0 +1,372 @@
+//! VC-MTJ device physics model (paper §2.1, Figs. 1-2).
+//!
+//! Calibrated to the paper's fabricated 70 nm pillars:
+//! * TMR > 150 % at near-zero read bias, drooping with |V| (Fig. 1b);
+//! * precessional AP→P switching: 6.2 % @0.7 V, 92.4 % @0.8 V,
+//!   97.17 % @0.9 V for 700 ps pulses (Fig. 2b) — reproduced *exactly*
+//!   via monotone-cubic interpolation through the measured points;
+//! * pulse-width dependence: sin² precession lobes with thermal damping,
+//!   normalized so the 700 ps calibration width is the lobe peak;
+//! * disturb-free reads using reverse-polarity bias (VCMA raises the
+//!   barrier): positive voltage = write polarity, negative = read polarity.
+
+use crate::config::MtjConfig;
+use crate::device::interp::MonotoneCubic;
+use crate::device::rng;
+
+/// Free-layer magnetization state relative to the pinned layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Low resistance; represents a fired (1) neuron after a write.
+    Parallel,
+    /// High resistance; the reset (0) state of the paper's neurons.
+    AntiParallel,
+}
+
+/// Outcome of a read pulse, as seen by the comparator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReadSample {
+    /// Voltage at the comparator input (divider of R_MTJ vs load).
+    pub v_sense: f64,
+    /// True if the device was disturbed by the read (must never happen
+    /// with reverse-polarity reads).
+    pub disturbed: bool,
+}
+
+/// Shared, immutable switching model — one per config, used by every
+/// device in the array (devices carry only their state + endurance).
+#[derive(Debug, Clone)]
+pub struct MtjModel {
+    cfg: MtjConfig,
+    /// P_sw(V) at the calibration pulse width (700 ps), AP→P.
+    p_sw_v: MonotoneCubic,
+}
+
+impl MtjModel {
+    pub fn new(cfg: &MtjConfig) -> Self {
+        // Exact interpolation through the measured Fig. 2(b) points with
+        // physically-motivated anchors: no switching at 0 V / 0.5 V,
+        // saturation slightly below 1 above 1 V (residual thermal error).
+        let mut xs = vec![0.0, 0.5];
+        let mut ys = vec![0.0, 0.001];
+        xs.extend_from_slice(&cfg.sw_calib_voltages);
+        ys.extend_from_slice(&cfg.sw_calib_prob_ap_to_p);
+        let y_last = *ys.last().unwrap();
+        xs.push(1.2);
+        ys.push((y_last + 0.015).min(0.999));
+        Self { cfg: cfg.clone(), p_sw_v: MonotoneCubic::new(xs, ys) }
+    }
+
+    pub fn cfg(&self) -> &MtjConfig {
+        &self.cfg
+    }
+
+    /// TMR(V) = TMR₀ / (1 + (V / V_h)²) — the Fig. 1(b) droop: R_AP falls
+    /// toward R_P at large |V| of either polarity.
+    pub fn tmr(&self, v: f64) -> f64 {
+        let r = v / self.cfg.tmr_half_voltage;
+        self.cfg.tmr_zero_bias / (1.0 + r * r)
+    }
+
+    /// Device resistance at bias `v` (Fig. 1b).
+    pub fn resistance(&self, state: MtjState, v: f64) -> f64 {
+        match state {
+            MtjState::Parallel => self.cfg.r_p_ohm,
+            MtjState::AntiParallel => self.cfg.r_p_ohm * (1.0 + self.tmr(v)),
+        }
+    }
+
+    /// Precession lobe vs pulse width, normalized to 1 at the calibration
+    /// width (T/2).  sin² lobes with exponential damping toward the
+    /// long-pulse 50/50 regime.
+    pub fn pulse_lobe(&self, pulse_ns: f64) -> f64 {
+        if pulse_ns <= 0.0 {
+            return 0.0;
+        }
+        let t_half = self.cfg.precession_period_ns / 2.0;
+        let tau = 3.0 * self.cfg.precession_period_ns; // thermal damping
+        let raw = |t: f64| -> f64 {
+            let s = (std::f64::consts::PI * t
+                / self.cfg.precession_period_ns)
+                .sin();
+            let osc = s * s;
+            0.5 + (osc - 0.5) * (-t / tau).exp()
+        };
+        (raw(pulse_ns) / raw(t_half)).clamp(0.0, 1.0 / raw(t_half))
+    }
+
+    /// Switching probability for a voltage pulse of amplitude `v` (write
+    /// polarity, volts) and width `pulse_ns`, starting `from` the given
+    /// state.  AP→P follows the Fig. 2(b) calibration; P→AP (Fig. 2a) is
+    /// slightly weaker — the paper picks AP as the reset state for exactly
+    /// this asymmetry.
+    pub fn switching_probability(
+        &self,
+        from: MtjState,
+        v: f64,
+        pulse_ns: f64,
+    ) -> f64 {
+        if v <= 0.0 {
+            // Reverse polarity (read direction): VCMA *raises* the barrier;
+            // no switching — this is the disturb-free read property.
+            return 0.0;
+        }
+        let p_v = match from {
+            MtjState::AntiParallel => self.p_sw_v.eval(v),
+            // P→AP: shifted calibration (≈20 mV harder) and a slightly
+            // lower ceiling, per Fig. 2(a) vs 2(b).
+            MtjState::Parallel => 0.97 * self.p_sw_v.eval(v - 0.02),
+        };
+        (p_v * self.pulse_lobe(pulse_ns)).clamp(0.0, 1.0)
+    }
+}
+
+/// One physical VC-MTJ: state + endurance bookkeeping.
+///
+/// Stochastic decisions take explicit `(seed, index, stream)` coordinates
+/// so that array-level simulations reproduce the AOT kernels bit-for-bit
+/// (see `device::rng`).
+#[derive(Debug, Clone)]
+pub struct Mtj {
+    state: MtjState,
+    write_cycles: u64,
+}
+
+impl Default for Mtj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mtj {
+    /// Devices power up in the reset (anti-parallel) state.
+    pub fn new() -> Self {
+        Self { state: MtjState::AntiParallel, write_cycles: 0 }
+    }
+
+    pub fn state(&self) -> MtjState {
+        self.state
+    }
+
+    pub fn write_cycles(&self) -> u64 {
+        self.write_cycles
+    }
+
+    /// Force a state (test/bench setup).
+    pub fn set_state(&mut self, s: MtjState) {
+        self.state = s;
+    }
+
+    /// Apply a write-polarity voltage pulse; the device switches with the
+    /// model probability using the deterministic counter RNG.
+    /// Returns `true` if the state toggled.
+    pub fn apply_pulse(
+        &mut self,
+        model: &MtjModel,
+        v: f64,
+        pulse_ns: f64,
+        seed: u32,
+        index: u32,
+        stream: u32,
+    ) -> bool {
+        self.write_cycles += 1;
+        let p = model.switching_probability(self.state, v, pulse_ns);
+        let u = rng::uniform(seed, index, stream);
+        if (u as f64) < p {
+            self.state = match self.state {
+                MtjState::Parallel => MtjState::AntiParallel,
+                MtjState::AntiParallel => MtjState::Parallel,
+            };
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reset toward AP (paper: 0.9 V / 500 ps, iterated until it lands).
+    /// Returns the number of pulses applied (≥1).
+    pub fn reset(
+        &mut self,
+        model: &MtjModel,
+        seed: u32,
+        index: u32,
+        max_iters: usize,
+    ) -> usize {
+        let mut pulses = 0;
+        for it in 0..max_iters {
+            if self.state == MtjState::AntiParallel {
+                break;
+            }
+            pulses += 1;
+            self.apply_pulse(
+                model,
+                model.cfg.reset_voltage,
+                model.cfg.reset_pulse_ns,
+                seed,
+                index,
+                0x8000_0000u32.wrapping_add(it as u32),
+            );
+        }
+        pulses
+    }
+
+    /// Disturb-free read: reverse-polarity bias through a resistive load
+    /// `r_load`, producing the comparator input voltage.
+    pub fn read(&self, model: &MtjModel, r_load: f64) -> ReadSample {
+        let v_read = model.cfg.read_voltage;
+        // Divider: v_sense = v_read * r_load / (r_mtj + r_load); the MTJ
+        // sees -(v_read - v_sense) (reverse polarity) ⇒ zero disturb prob.
+        let r_mtj = self.resistance_at_read(model);
+        let v_sense = v_read * r_load / (r_mtj + r_load);
+        ReadSample { v_sense, disturbed: false }
+    }
+
+    fn resistance_at_read(&self, model: &MtjModel) -> f64 {
+        // Read bias is small; evaluate R at the actual read voltage.
+        model.resistance(self.state, model.cfg.read_voltage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MtjConfig;
+
+    fn model() -> MtjModel {
+        MtjModel::new(&MtjConfig::default())
+    }
+
+    #[test]
+    fn reproduces_paper_calibration_points_exactly() {
+        let m = model();
+        let w = m.cfg().write_pulse_ns;
+        for (&v, &p) in m
+            .cfg()
+            .sw_calib_voltages
+            .iter()
+            .zip(m.cfg().sw_calib_prob_ap_to_p.iter())
+        {
+            let got = m.switching_probability(MtjState::AntiParallel, v, w);
+            assert!(
+                (got - p).abs() < 1e-9,
+                "P_sw({v} V) = {got}, paper says {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn tmr_exceeds_150_percent_at_low_bias() {
+        let m = model();
+        assert!(m.tmr(0.001) > 1.5, "paper: TMR > 150 % near zero bias");
+    }
+
+    #[test]
+    fn tmr_droops_with_either_polarity() {
+        let m = model();
+        assert!(m.tmr(0.5) < m.tmr(0.0));
+        assert!(m.tmr(-0.5) < m.tmr(0.0));
+        assert!((m.tmr(0.4) - m.tmr(-0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resistance_ordering() {
+        let m = model();
+        let rp = m.resistance(MtjState::Parallel, 0.001);
+        let rap = m.resistance(MtjState::AntiParallel, 0.001);
+        assert!(rap > 2.5 * rp, "TMR > 150 % ⇒ R_AP > 2.5 R_P");
+    }
+
+    #[test]
+    fn no_switching_below_threshold_band() {
+        let m = model();
+        let p = m.switching_probability(MtjState::AntiParallel, 0.3, 0.7);
+        assert!(p < 1e-3, "sub-threshold switching {p}");
+    }
+
+    #[test]
+    fn reverse_polarity_never_switches() {
+        let m = model();
+        assert_eq!(
+            m.switching_probability(MtjState::AntiParallel, -0.8, 0.7),
+            0.0
+        );
+        assert_eq!(m.switching_probability(MtjState::Parallel, -0.9, 10.0), 0.0);
+    }
+
+    #[test]
+    fn pulse_lobe_peaks_at_half_period() {
+        let m = model();
+        let t_half = m.cfg().precession_period_ns / 2.0;
+        let peak = m.pulse_lobe(t_half);
+        assert!((peak - 1.0).abs() < 1e-12);
+        assert!(m.pulse_lobe(0.1) < peak);
+        assert!(m.pulse_lobe(t_half * 2.0) < peak); // full period: back down
+    }
+
+    #[test]
+    fn p_to_ap_is_weaker_than_ap_to_p() {
+        let m = model();
+        let p_apd = m.switching_probability(MtjState::AntiParallel, 0.8, 0.7);
+        let p_pd = m.switching_probability(MtjState::Parallel, 0.8, 0.7);
+        assert!(p_pd < p_apd, "paper picks AP as reset for this asymmetry");
+    }
+
+    #[test]
+    fn monte_carlo_matches_probability() {
+        let m = model();
+        let n = 100_000;
+        let mut hits = 0;
+        for i in 0..n {
+            let mut d = Mtj::new();
+            if d.apply_pulse(&m, 0.8, 0.7, 77, i, 0) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.924).abs() < 5e-3, "MC rate {rate}");
+    }
+
+    #[test]
+    fn reset_is_idempotent_and_bounded() {
+        let m = model();
+        let mut d = Mtj::new();
+        d.set_state(MtjState::Parallel);
+        let pulses = d.reset(&m, 5, 0, 16);
+        assert_eq!(d.state(), MtjState::AntiParallel);
+        assert!(pulses >= 1 && pulses <= 16);
+        // Already AP: zero pulses.
+        assert_eq!(d.reset(&m, 5, 0, 16), 0);
+    }
+
+    #[test]
+    fn read_sense_margin_separates_states() {
+        let m = model();
+        let mut d = Mtj::new();
+        let r_load = m.cfg().r_p_ohm * 1.6; // geometric-mean-ish load
+        let v_ap = d.read(&m, r_load).v_sense;
+        d.set_state(MtjState::Parallel);
+        let v_p = d.read(&m, r_load).v_sense;
+        assert!(v_p > v_ap, "P (low R) must sense higher");
+        let margin = (v_p - v_ap) / m.cfg().read_voltage;
+        assert!(margin > 0.2, "sense margin {margin} too narrow");
+    }
+
+    #[test]
+    fn reads_never_disturb() {
+        let m = model();
+        let d = Mtj::new();
+        for _ in 0..1000 {
+            assert!(!d.read(&m, 10_000.0).disturbed);
+        }
+    }
+
+    #[test]
+    fn endurance_counts_writes() {
+        let m = model();
+        let mut d = Mtj::new();
+        for i in 0..100 {
+            d.apply_pulse(&m, 0.8, 0.7, 1, i, 0);
+        }
+        assert_eq!(d.write_cycles(), 100);
+    }
+}

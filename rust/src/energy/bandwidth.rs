@@ -1,0 +1,89 @@
+//! Bandwidth-reduction model (paper Eq. 3, §3.2).
+//!
+//! `C = (in_elems / out_elems) · (b_inp / b_out) · 4/3` — the factor by
+//! which the in-pixel system shrinks the sensor→backend traffic relative
+//! to a raw Bayer readout.  For the paper's VGG16/ImageNet geometry
+//! (224×224×3 @12 b in, 111×111×32 @1 b out) C ≈ 6.
+
+use crate::config::HwConfig;
+use crate::energy::model::Geometry;
+
+/// Eq. 3 bandwidth-reduction factor.
+pub fn reduction_factor(geom: &Geometry, cfg: &HwConfig) -> f64 {
+    let elems = geom.in_elems() as f64 / geom.out_elems() as f64;
+    let bits = cfg.network.input_bits as f64 / cfg.network.output_bits as f64;
+    elems * bits * (4.0 / 3.0)
+}
+
+/// Effective reduction when the binary output is further sparse-coded to
+/// `coded_bits` for a frame (paper: "opportunity to further reduce the
+/// bandwidth (even more than 6×) via effective sparse coding schemes").
+pub fn effective_reduction(
+    geom: &Geometry,
+    cfg: &HwConfig,
+    coded_bits: u64,
+) -> f64 {
+    let baseline_bits =
+        geom.in_elems() as f64 * cfg.network.input_bits as f64 * 4.0 / 3.0;
+    baseline_bits / coded_bits.max(1) as f64
+}
+
+/// Shannon bound for a Bernoulli(p) bitmap — the best any entropy coder
+/// can do per element (used to sanity-check the RLE/Golomb encoder).
+pub fn entropy_bits_per_element(ones_rate: f64) -> f64 {
+    let p = ones_rate.clamp(1e-12, 1.0 - 1e-12);
+    -(p * p.log2() + (1.0 - p) * (1.0 - p).log2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    #[test]
+    fn eq3_yields_paper_value_of_6() {
+        let cfg = HwConfig::default();
+        let geom = Geometry::imagenet_vgg16(&cfg);
+        let c = reduction_factor(&geom, &cfg);
+        assert!(
+            (5.5..=6.5).contains(&c),
+            "Eq. 3 C = {c}, paper reports 6"
+        );
+    }
+
+    #[test]
+    fn sparse_coding_beats_dense_reduction() {
+        let cfg = HwConfig::default();
+        let geom = Geometry::imagenet_vgg16(&cfg);
+        let dense = reduction_factor(&geom, &cfg);
+        // At 79 % sparsity the entropy bound is ~0.74 bits/element.
+        let coded =
+            (geom.out_elems() as f64 * entropy_bits_per_element(0.21)) as u64;
+        let eff = effective_reduction(&geom, &cfg, coded);
+        assert!(eff > dense, "coded {eff} must beat dense {dense}");
+        assert!(
+            (7.0..=12.0).contains(&eff),
+            "coded reduction {eff} out of the paper's 'up to 8.5×' band"
+        );
+    }
+
+    #[test]
+    fn entropy_is_symmetric_and_peaks_at_half() {
+        assert!((entropy_bits_per_element(0.5) - 1.0).abs() < 1e-12);
+        assert!(
+            (entropy_bits_per_element(0.2) - entropy_bits_per_element(0.8))
+                .abs()
+                < 1e-12
+        );
+        assert!(entropy_bits_per_element(0.01) < 0.1);
+    }
+
+    #[test]
+    fn cifar_geometry_reduction() {
+        // 32×32 sensor, 15×15×32 out: C = (3072/7200)·12·4/3 ≈ 6.8.
+        let cfg = HwConfig::default();
+        let geom = Geometry::from_cfg(&cfg, 32, 32);
+        let c = reduction_factor(&geom, &cfg);
+        assert!((6.0..=7.5).contains(&c), "CIFAR C = {c}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Per-operation energy constants (pJ) for the three compared systems.
+//!
+//! Calibration: the paper reports *normalized* energies (Fig. 9) from
+//! GF22FDX HSpice sims it does not tabulate, so absolute constants here
+//! are drawn from the ISSCC/JSSC literature its citation chain uses
+//! ([6, 7, 12-17]) and then sanity-locked against the paper's stated
+//! ratios (front-end 8.2× vs baseline, 8.0× vs in-sensor [17], comm up to
+//! 8.5×).  `energy::tests` asserts each ratio lands inside ±15 % of the
+//! paper's value — the calibration contract.
+
+/// Per-pixel per-integration energy of the in-pixel path (pJ): photodiode
+/// + in-pixel weight-transistor bias, no long bitline to charge
+/// (paper §3.4: "absence of the need to charge the large bitline
+/// capacitance per pixel").
+pub const E_PIX_INT: f64 = 0.25;
+
+/// Per-pixel readout energy of a conventional CIS (pJ): bitline charge,
+/// column amplifier, CDS — the cost the in-pixel scheme avoids.
+pub const E_PIX_READ_BASELINE: f64 = 2.2;
+
+/// 12-bit column ADC conversion (pJ) — commercial CIS class [6, 7].
+pub const E_ADC_12B: f64 = 7.5;
+
+/// In-sensor computing [17]: per-kernel-output multi-bit ADC conversion
+/// (pJ, ~6-bit QAT precision SAR).
+pub const E_ADC_INSENSOR: f64 = 0.86;
+
+/// Analog MAC per kernel output (weight-transistor currents during one
+/// phase), shared by ours and the in-sensor periphery (pJ).
+pub const E_MAC_ANALOG: f64 = 0.03;
+
+/// Passive subtractor sample (switch + C_H charge) per output (pJ).
+pub const E_SUBTRACTOR: f64 = 0.005;
+
+/// Unity-gain buffer burst (power-gated outside the 8 × 700 ps write
+/// phase) per output (pJ).
+pub const E_BUFFER: f64 = 0.02;
+
+/// One VC-MTJ write pulse: CV² on the ~fF MTJ + driver (pJ).  VCMA
+/// switching is field-driven — no sustained current — hence ~fJ scale
+/// [35].
+pub const E_MTJ_WRITE: f64 = 0.0012;
+
+/// One VC-MTJ read pulse (divider current at 0.1 V for 500 ps) (pJ).
+pub const E_MTJ_READ: f64 = 0.0008;
+
+/// Comparator evaluation per read (pJ) — clocked dynamic comparator.
+pub const E_COMPARATOR: f64 = 0.002;
+
+/// One reset pulse (0.9 V / 500 ps) (pJ).
+pub const E_MTJ_RESET: f64 = 0.0015;
+
+/// LVDS link energy per bit on-PCB (pJ/bit) — paper §3.3's comm model.
+pub const E_LVDS_PER_BIT: f64 = 2.0;
+
+/// In-sensor output precision (bits/activation) for the comm comparison
+/// ([17]-class QAT output).
+pub const B_INSENSOR_OUT: u32 = 6;

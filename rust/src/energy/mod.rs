@@ -1,0 +1,18 @@
+//! Energy, bandwidth, and latency accounting (paper §3.2–3.4, Fig. 9,
+//! Eq. 3).
+//!
+//! * [`constants`] — per-operation energies calibrated to the paper's
+//!   reported ratios (see the calibration contract in that module)
+//! * [`model`] — front-end + communication energy for ours / in-sensor
+//!   [17] / conventional baseline
+//! * [`bandwidth`] — Eq. 3 reduction factor and sparse-coding bounds
+
+pub mod bandwidth;
+pub mod constants;
+pub mod model;
+
+pub use bandwidth::{effective_reduction, entropy_bits_per_element, reduction_factor};
+pub use model::{
+    comm_bits, comm_energy_pj, frontend_baseline, frontend_insensor,
+    frontend_ours, frontend_ours_analytic, CommBits, FrontEndEnergy, Geometry,
+};

@@ -1,0 +1,40 @@
+//! # pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel
+//!
+//! Rust coordinator (L3) for the reproduction of *"Voltage-Controlled
+//! Magnetic Tunnel Junction based ADC-less Global Shutter
+//! Processing-in-Pixel for Extreme-Edge Intelligence"* (Kaiser, Datta,
+//! et al., 2024).
+//!
+//! The crate simulates the full sensor system — VC-MTJ device physics,
+//! the weight-augmented pixel circuit, the analog subtractor with the
+//! paper's tunable threshold-matching scheme, multi-MTJ majority neurons,
+//! and the global-shutter burst read path — and serves frames through the
+//! AOT-compiled JAX/Pallas backend (`artifacts/*.hlo.txt`) via PJRT.
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the experiment index):
+//! * [`config`] — typed configuration, loaded from `artifacts/hwcfg.json`
+//!   (single source of truth shared with the Python build path)
+//! * [`device`] — VC-MTJ physics: R(V), TMR droop, precessional switching
+//!   probability, multi-device majority neurons, endurance tracking
+//! * [`circuit`] — behavioural pixel/subtractor/readout circuit simulation
+//! * [`sensor`] — pixel array, kernel tiling, global vs rolling shutter
+//! * [`coordinator`] — frame pipeline: scheduler, burst engine, sparse
+//!   encoder, batcher, backend dispatch
+//! * [`energy`] — energy / bandwidth / latency accounting (paper §3.2-3.4)
+//! * [`runtime`] — PJRT client wrapper executing the AOT artifacts
+//! * [`metrics`] — counters and run reports
+
+pub mod config;
+pub mod coordinator;
+pub mod circuit;
+pub mod device;
+pub mod energy;
+pub mod metrics;
+pub mod reports;
+pub mod runtime;
+pub mod sensor;
+pub mod util;
+pub mod validate;
+
+pub use config::HwConfig;

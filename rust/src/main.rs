@@ -1,0 +1,166 @@
+//! pixelmtj — leader entrypoint for the VC-MTJ processing-in-pixel stack.
+//!
+//! Subcommands:
+//! * `serve`    — run the frame-serving pipeline on synthetic scenes and
+//!                print throughput/latency metrics
+//! * `report`   — regenerate a paper table/figure (`report all` for every
+//!                artifact; see DESIGN.md's experiment index)
+//! * `validate` — check the AOT artifacts against the golden vectors
+//! * `info`     — print configuration + artifact inventory
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::coordinator::Pipeline;
+use pixelmtj::reports::{self, ReportCtx};
+use pixelmtj::runtime::Runtime;
+use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
+use pixelmtj::util::cli::Args;
+
+const USAGE: &str = "\
+pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel
+
+USAGE:
+  pixelmtj serve    [--frames N] [--workers N] [--coding dense|csr|rle]
+                    [--no-mtj-noise] [--artifacts DIR] [--config FILE]
+  pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
+  pixelmtj validate [--artifacts DIR]
+  pixelmtj info     [--artifacts DIR]
+
+Reports: fig1b fig2 fig4a fig4b fig5 fig6 fig8 fig9 bandwidth latency table1";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.command.as_deref() {
+        Some("serve") => serve(&args),
+        Some("report") => report(&args),
+        Some("validate") => validate(&args),
+        Some("info") => info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let frames_n = args.usize_or("frames", 256)?;
+    let workers = args.usize_or("workers", 4)?;
+    let coding = SparseCoding::parse(&args.str_or("coding", "rle"))?;
+    let no_noise = args.flag("no-mtj-noise");
+    let dir = artifacts_dir(args);
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => PipelineConfig::from_json_file(path)?,
+        None => PipelineConfig::default(),
+    };
+    args.finish()?;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg.sensor_workers = workers;
+    cfg.sparse_coding = coding;
+    cfg.mtj_noise = !no_noise;
+
+    let hw = HwConfig::load_or_default(&dir);
+    let weights = FirstLayerWeights::from_golden(dir.join("golden.json"))
+        .context("loading first-layer weights (run `make artifacts`)")?;
+    let sim = PixelArraySim::new(hw.clone(), weights);
+    let runtime = Arc::new(Runtime::cpu(&dir)?);
+    println!(
+        "platform={} arch={} frames={} workers={} coding={}",
+        runtime.platform(),
+        runtime.meta.as_ref().map(|m| m.arch.clone()).unwrap_or_default(),
+        frames_n,
+        cfg.sensor_workers,
+        cfg.sparse_coding.name(),
+    );
+
+    let gen = SceneGen::new(
+        hw.network.in_channels,
+        cfg.sensor_height,
+        cfg.sensor_width,
+    );
+    let frames: Vec<_> = (0..frames_n as u32).map(|i| gen.textured(i)).collect();
+
+    let pipeline = Pipeline::new(cfg, sim, runtime)?;
+    let report = pipeline.serve(frames)?;
+
+    println!(
+        "\nserved {} frames in {:.2} s → {:.1} fps (wall-clock, simulated sensor)",
+        report.results.len(),
+        report.wall_time.as_secs_f64(),
+        report.fps
+    );
+    println!("{}", report.metrics.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let dir = artifacts_dir(args);
+    let out = PathBuf::from(args.str_or("out", "reports"));
+    args.finish()?;
+    let ctx = ReportCtx::new(&dir, &out)?;
+    reports::run(&id, &ctx)
+}
+
+fn validate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    args.finish()?;
+    let report = pixelmtj::validate::run(&dir)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    args.finish()?;
+    let hw = HwConfig::load_or_default(&dir);
+    println!("artifacts dir: {}", dir.display());
+    println!(
+        "device: R_P={:.0} Ω, TMR₀={:.0} %, {} MTJs/neuron (majority ≥{})",
+        hw.mtj.r_p_ohm,
+        hw.mtj.tmr_zero_bias * 100.0,
+        hw.mtj.n_mtj_per_neuron,
+        hw.mtj.majority_k
+    );
+    println!(
+        "first layer: {}→{} ch, k={}, stride={}, {}-bit weights",
+        hw.network.in_channels,
+        hw.network.first_channels,
+        hw.network.kernel_size,
+        hw.network.stride,
+        hw.network.weight_bits
+    );
+    match Runtime::cpu(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            match &rt.meta {
+                Some(m) => println!(
+                    "artifacts: arch={} img{:?} act{:?} batches{:?}",
+                    m.arch, m.img_shape, m.act_shape, m.batches
+                ),
+                None => println!(
+                    "artifacts: meta.json missing (run `make artifacts`)"
+                ),
+            }
+        }
+        Err(e) => bail!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

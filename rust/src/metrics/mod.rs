@@ -1,0 +1,192 @@
+//! Lightweight metrics: counters + log-bucketed latency histograms,
+//! aggregated into JSON run reports (consumed by EXPERIMENTS.md).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Monotone counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with power-of-two microsecond buckets
+/// (1 µs … ~17 s) plus exact running mean.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    total_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..25).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1)
+            .min(self.buckets.len() - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, since: Instant) {
+        self.record_us(since.elapsed().as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.total_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << self.buckets.len()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::Num(self.count() as f64)),
+            ("mean_us", Value::Num(self.mean_us())),
+            ("p50_us_le", Value::Num(self.quantile_us(0.5) as f64)),
+            ("p99_us_le", Value::Num(self.quantile_us(0.99) as f64)),
+        ])
+    }
+}
+
+/// Aggregated pipeline metrics.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    pub frames_in: Counter,
+    pub frames_out: Counter,
+    pub frames_dropped: Counter,
+    pub batches: Counter,
+    pub batch_occupancy_sum: Counter,
+    pub link_bits: Counter,
+    pub mtj_writes: Counter,
+    pub mtj_resets: Counter,
+    pub capture_latency: LatencyHistogram,
+    pub encode_latency: LatencyHistogram,
+    pub backend_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+}
+
+impl PipelineMetrics {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum.get() as f64 / b as f64
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("frames_in", Value::Num(self.frames_in.get() as f64)),
+            ("frames_out", Value::Num(self.frames_out.get() as f64)),
+            ("frames_dropped", Value::Num(self.frames_dropped.get() as f64)),
+            ("batches", Value::Num(self.batches.get() as f64)),
+            ("mean_batch_occupancy", Value::Num(self.mean_batch_occupancy())),
+            ("link_bits", Value::Num(self.link_bits.get() as f64)),
+            ("mtj_writes", Value::Num(self.mtj_writes.get() as f64)),
+            ("mtj_resets", Value::Num(self.mtj_resets.get() as f64)),
+            ("capture_latency", self.capture_latency.to_json()),
+            ("encode_latency", self.encode_latency.to_json()),
+            ("backend_latency", self.backend_latency.to_json()),
+            ("e2e_latency", self.e2e_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 2, 4, 100, 1000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 221.4).abs() < 0.01);
+        assert!(h.quantile_us(0.5) <= 8);
+        assert!(h.quantile_us(1.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_handles_zero() {
+        let h = LatencyHistogram::new();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = PipelineMetrics::default();
+        m.frames_in.add(3);
+        m.batches.inc();
+        m.batch_occupancy_sum.add(8);
+        let j = m.to_json();
+        assert_eq!(j.get("frames_in").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(
+            j.get("mean_batch_occupancy").unwrap().as_f64().unwrap(),
+            8.0
+        );
+    }
+}

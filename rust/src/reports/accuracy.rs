@@ -1,0 +1,318 @@
+//! Accuracy experiments on the AOT-exported network: Table 1 and the
+//! Fig. 8 activation-error sweep, evaluated end-to-end through the rust
+//! sensor simulator + PJRT backend (no Python on the eval path).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::HwConfig;
+use crate::device::rng;
+use crate::reports::ReportCtx;
+use crate::runtime::Runtime;
+use crate::sensor::{
+    ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+};
+use crate::util::json::Value;
+
+/// Labeled synthetic eval frames exported by aot.py.
+pub struct EvalSet {
+    pub frames: Vec<Frame>,
+    pub labels: Vec<usize>,
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let v = Value::from_file(path).context("loading evalset.json")?;
+        let n = v.get("n")?.as_usize()?;
+        let shape = v.get("shape")?.as_usize_vec()?;
+        let (c, h, w) = (shape[0], shape[1], shape[2]);
+        let labels = v.get("labels")?.as_usize_vec()?;
+        let pixels = v.get("pixels_u12")?.as_f64_vec()?;
+        let per = c * h * w;
+        let mut frames = Vec::with_capacity(n);
+        for i in 0..n {
+            let data: Vec<f32> = pixels[i * per..(i + 1) * per]
+                .iter()
+                .map(|&x| (x / 4095.0) as f32)
+                .collect();
+            frames.push(Frame::from_data(c, h, w, data, i as u32)?);
+        }
+        Ok(Self { frames, labels })
+    }
+}
+
+/// Classify activation maps through the AOT backend in batches of 8.
+fn classify(
+    runtime: &Runtime,
+    maps: &[ActivationMap],
+) -> Result<Vec<usize>> {
+    let meta = runtime.meta.as_ref().context("artifacts meta missing")?;
+    let act_elems: usize = meta.act_shape[1..].iter().product();
+    let nc = meta.num_classes;
+    let mut out = Vec::with_capacity(maps.len());
+    let mut i = 0;
+    while i < maps.len() {
+        let b = if maps.len() - i >= 8 { 8 } else { 1 };
+        let exe = runtime.load(&format!("backend_b{b}"))?;
+        let mut input = Vec::with_capacity(b * act_elems);
+        for m in &maps[i..i + b] {
+            input.extend(m.to_f32());
+        }
+        let mut shape: Vec<i64> =
+            meta.act_shape.iter().map(|&d| d as i64).collect();
+        shape[0] = b as i64;
+        let logits = &exe.run_f32(&[(&input, &shape)])?[0];
+        for j in 0..b {
+            let row = &logits[j * nc..(j + 1) * nc];
+            let label = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            out.push(label);
+        }
+        i += b;
+    }
+    Ok(out)
+}
+
+/// Flip activation bits with asymmetric error rates (Fig. 8's model):
+/// 1→0 with `p10` ("neuron fails to activate"), 0→1 with `p01`.
+fn inject_errors(map: &ActivationMap, p10: f64, p01: f64, seed: u32) -> ActivationMap {
+    let mut out = map.clone();
+    for (i, b) in out.bits.iter_mut().enumerate() {
+        let u = rng::uniform(seed ^ 0xE44, i as u32, 200) as f64;
+        if *b && u < p10 {
+            *b = false;
+        } else if !*b && u < p01 {
+            *b = true;
+        }
+    }
+    out
+}
+
+/// Accuracy of the full pipeline over the eval set.
+pub fn evalset_accuracy(
+    runtime: &Runtime,
+    sim: &PixelArraySim,
+    eval: &EvalSet,
+    mode: CaptureMode,
+    errors: Option<(f64, f64)>,
+) -> Result<(f64, f64)> {
+    let mut maps = Vec::with_capacity(eval.frames.len());
+    let mut sparsity = 0.0;
+    for frame in &eval.frames {
+        let (mut map, _) = sim.capture(frame, mode);
+        if let Some((p10, p01)) = errors {
+            map = inject_errors(&map, p10, p01, frame.seq);
+        }
+        sparsity += map.sparsity();
+        maps.push(map);
+    }
+    let preds = classify(runtime, &maps)?;
+    let correct = preds
+        .iter()
+        .zip(eval.labels.iter())
+        .filter(|(p, l)| p == l)
+        .count();
+    Ok((
+        correct as f64 / eval.labels.len() as f64,
+        sparsity / eval.frames.len() as f64,
+    ))
+}
+
+fn setup(ctx: &ReportCtx) -> Result<(Arc<Runtime>, PixelArraySim, EvalSet)> {
+    let hw = HwConfig::load_or_default(&ctx.artifacts_dir);
+    let weights =
+        FirstLayerWeights::from_golden(ctx.artifacts_dir.join("golden.json"))?;
+    let sim = PixelArraySim::new(hw, weights);
+    let runtime = Arc::new(Runtime::cpu(&ctx.artifacts_dir)?);
+    let eval = EvalSet::load(&ctx.artifacts_dir.join("evalset.json"))?;
+    Ok((runtime, sim, eval))
+}
+
+/// Fig. 8: test accuracy vs binary-activation error percentage.
+pub fn fig8(ctx: &ReportCtx) -> Result<()> {
+    let (runtime, sim, eval) = setup(ctx)?;
+    let (base_acc, _) =
+        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)?;
+    println!("ideal-comparator accuracy: {:.2} %", base_acc * 100.0);
+    println!(
+        "\n{:>9} | {:>26} {:>26}",
+        "error %", "fails-to-activate (1→0)", "incorrectly-activates (0→1)"
+    );
+    let sweep = [0.0, 0.01, 0.02, 0.05, 0.10, 0.15, 0.20];
+    let mut rows = Vec::new();
+    for &e in &sweep {
+        let (acc10, _) = evalset_accuracy(
+            &runtime, &sim, &eval, CaptureMode::Ideal, Some((e, 0.0)),
+        )?;
+        let (acc01, _) = evalset_accuracy(
+            &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.0, e)),
+        )?;
+        println!(
+            "{:>9.1} | {:>25.2}% {:>25.2}%",
+            e * 100.0,
+            acc10 * 100.0,
+            acc01 * 100.0
+        );
+        rows.push(Value::arr_f64(&[e * 100.0, acc10 * 100.0, acc01 * 100.0]));
+    }
+    println!(
+        "→ paper Fig. 8: accuracy collapses beyond ~10 % (1→0) / ~3 % (0→1);\n  \
+         0→1 errors hurt faster because sparse activations make spurious ones salient."
+    );
+    ctx.save(
+        "fig8",
+        &Value::obj(vec![
+            ("baseline_acc_pct", Value::Num(base_acc * 100.0)),
+            ("rows_errpct_acc10_acc01", Value::Arr(rows)),
+        ]),
+    )
+}
+
+/// Ablation report: accuracy vs the drive-stage gain in physical capture
+/// mode (DESIGN.md §Findings 1) and vs the sparse coding choice.
+pub fn ablation(ctx: &ReportCtx) -> Result<()> {
+    use crate::config::SparseCoding;
+    use crate::coordinator::sparse;
+
+    let (runtime, _, eval) = setup(ctx)?;
+    let hw = HwConfig::load_or_default(&ctx.artifacts_dir);
+
+    println!("drive-gain ablation (physical circuit + device capture):");
+    println!("{:>6} {:>9}", "gain", "acc %");
+    let mut gain_rows = Vec::new();
+    for gain in [1.0, 2.0, 4.0, 6.0, 8.0] {
+        let mut hw_g = hw.clone();
+        hw_g.circuit.drive_gain = gain;
+        let w = FirstLayerWeights::from_golden(
+            ctx.artifacts_dir.join("golden.json"),
+        )?;
+        let sim_g = PixelArraySim::new(hw_g, w);
+        let (acc, _) = evalset_accuracy(
+            &runtime, &sim_g, &eval, CaptureMode::PhysicalMtj, None,
+        )?;
+        println!("{gain:>6.1} {:>9.2}", acc * 100.0);
+        gain_rows.push(Value::arr_f64(&[gain, acc * 100.0]));
+    }
+
+    println!("\nsparse-coding ablation (bits/frame over the eval set):");
+    let w = FirstLayerWeights::from_golden(
+        ctx.artifacts_dir.join("golden.json"),
+    )?;
+    let sim = PixelArraySim::new(hw, w);
+    let mut code_rows = Vec::new();
+    for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+        let mut bits = 0u64;
+        let n = eval.frames.len().min(48);
+        for frame in eval.frames.iter().take(n) {
+            let (map, _) = sim.capture(frame, CaptureMode::CalibratedMtj);
+            bits += sparse::encode(&map, coding).payload_bits;
+        }
+        let per = bits as f64 / n as f64;
+        println!("  {:<6} {:>10.0} bits/frame", coding.name(), per);
+        code_rows.push(Value::obj(vec![
+            ("coding", Value::Str(coding.name().into())),
+            ("bits_per_frame", Value::Num(per)),
+        ]));
+    }
+    ctx.save(
+        "ablation",
+        &Value::obj(vec![
+            ("drive_gain_rows", Value::Arr(gain_rows)),
+            ("coding_rows", Value::Arr(code_rows)),
+        ]),
+    )
+}
+
+/// Paper Table 1 rows (CIFAR10/ImageNet accuracies, reported) — these are
+/// the published numbers; our small-scale measured trend follows below.
+const PAPER_TABLE1: &[(&str, &str, f64, f64, f64)] = &[
+    ("VGG16", "CIFAR10", 94.10, 93.08, 79.24),
+    ("ResNet18", "CIFAR10", 93.34, 92.11, 72.59),
+    ("ResNet18*", "CIFAR10", 94.28, 93.46, 82.59),
+    ("ResNet20", "CIFAR10", 93.18, 92.24, 76.50),
+    ("ResNet34*", "CIFAR10", 94.68, 93.40, 83.29),
+    ("ResNet50*", "CIFAR10", 94.90, 93.71, 83.54),
+    ("VGG16", "ImageNet", 70.08, 67.72, 75.22),
+];
+
+/// Table 1: paper values + our measured end-to-end results.
+pub fn table1(ctx: &ReportCtx) -> Result<()> {
+    println!("paper-reported (full-scale CIFAR10/ImageNet):");
+    println!(
+        "{:<11} {:<9} {:>8} {:>8} {:>8}",
+        "network", "dataset", "DNN %", "BNN %", "Sp. %"
+    );
+    for &(net, ds, dnn, bnn, sp) in PAPER_TABLE1 {
+        println!("{net:<11} {ds:<9} {dnn:>8.2} {bnn:>8.2} {sp:>8.2}");
+    }
+
+    let (runtime, sim, eval) = setup(ctx)?;
+    let arch = runtime.meta.as_ref().unwrap().arch.clone();
+    let (acc_ideal, sp_ideal) =
+        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)?;
+    let (acc_mtj, sp_mtj) = evalset_accuracy(
+        &runtime, &sim, &eval, CaptureMode::CalibratedMtj, None,
+    )?;
+    println!("\nmeasured (this repo, synthetic 10-class corpus, {} frames):",
+        eval.frames.len());
+    println!(
+        "{:<24} {:>10} {:>10}",
+        "configuration", "acc %", "sparsity %"
+    );
+    println!(
+        "{:<24} {:>10.2} {:>10.2}",
+        format!("{arch} ideal comparator"),
+        acc_ideal * 100.0,
+        sp_ideal * 100.0
+    );
+    println!(
+        "{:<24} {:>10.2} {:>10.2}",
+        format!("{arch} 8-MTJ neurons"),
+        acc_mtj * 100.0,
+        sp_mtj * 100.0
+    );
+    let drop = (acc_ideal - acc_mtj) * 100.0;
+    println!(
+        "→ multi-MTJ stochastic switching costs {:.2} pp (paper: no significant drop at <0.1 % neuron error)",
+        drop
+    );
+    // Optional small-scale sweep from train.py --table1.
+    if let Ok(v) =
+        Value::from_file(&ctx.artifacts_dir.join("table1_small.json"))
+    {
+        println!("\nsmall-scale BNN sweep (python train.py --table1): {}",
+            v.to_string_compact());
+    }
+    ctx.save(
+        "table1",
+        &Value::obj(vec![
+            ("arch", Value::Str(arch)),
+            ("acc_ideal_pct", Value::Num(acc_ideal * 100.0)),
+            ("acc_mtj_pct", Value::Num(acc_mtj * 100.0)),
+            ("sparsity_pct", Value::Num(sp_ideal * 100.0)),
+            ("mtj_drop_pp", Value::Num(drop)),
+            (
+                "paper_rows",
+                Value::Arr(
+                    PAPER_TABLE1
+                        .iter()
+                        .map(|&(n, d, a, b, s)| {
+                            Value::obj(vec![
+                                ("network", Value::Str(n.into())),
+                                ("dataset", Value::Str(d.into())),
+                                ("dnn", Value::Num(a)),
+                                ("bnn", Value::Num(b)),
+                                ("sparsity", Value::Num(s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )
+}

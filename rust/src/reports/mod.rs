@@ -1,0 +1,75 @@
+//! Report generators: one per table/figure of the paper's evaluation
+//! (see DESIGN.md's experiment index).  Each generator prints an aligned
+//! text rendering of the paper artifact and writes machine-readable JSON
+//! to `reports/<id>.json` for EXPERIMENTS.md.
+//!
+//! Run via the CLI: `pixelmtj report <id>` or `pixelmtj report all`.
+
+mod accuracy;
+mod device_reports;
+mod system_reports;
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+
+pub use accuracy::{evalset_accuracy, EvalSet};
+
+/// Context shared by all report generators.
+pub struct ReportCtx {
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+impl ReportCtx {
+    pub fn new(artifacts_dir: &Path, out_dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(Self {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            out_dir: out_dir.to_path_buf(),
+        })
+    }
+
+    /// Persist a report's JSON payload.
+    pub fn save(&self, id: &str, payload: &Value) -> Result<()> {
+        let path = self.out_dir.join(format!("{id}.json"));
+        std::fs::write(&path, payload.to_string_pretty())?;
+        println!("  [saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// All report ids in paper order (plus the `faults` extension; the
+/// `ablation` report is heavier and runs only on request).
+pub const ALL_REPORTS: &[&str] = &[
+    "fig1b", "fig2", "fig4a", "fig4b", "fig5", "fig6", "fig8", "fig9",
+    "bandwidth", "latency", "table1", "faults",
+];
+
+/// Dispatch one report by id.
+pub fn run(id: &str, ctx: &ReportCtx) -> Result<()> {
+    match id {
+        "faults" => device_reports::faults(ctx),
+        "ablation" => accuracy::ablation(ctx),
+        "fig1b" => device_reports::fig1b(ctx),
+        "fig2" => device_reports::fig2(ctx),
+        "fig4a" => device_reports::fig4a(ctx),
+        "fig4b" => device_reports::fig4b(ctx),
+        "fig5" => device_reports::fig5(ctx),
+        "fig6" => device_reports::fig6(ctx),
+        "fig8" => accuracy::fig8(ctx),
+        "fig9" => system_reports::fig9(ctx),
+        "bandwidth" => system_reports::bandwidth(ctx),
+        "latency" => system_reports::latency(ctx),
+        "table1" => accuracy::table1(ctx),
+        "all" => {
+            for r in ALL_REPORTS {
+                println!("\n═══ report {r} ═══");
+                run(r, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown report '{other}' (try: {})", ALL_REPORTS.join(", ")),
+    }
+}

@@ -1,0 +1,172 @@
+//! PJRT runtime: load and execute the AOT artifacts (`artifacts/*.hlo.txt`).
+//!
+//! The interchange format is HLO *text* — jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).  All executables are
+//! compiled once at startup and cached; execution is synchronous on the
+//! caller thread (the PJRT CPU client runs its own thread pool internally),
+//! so the tokio coordinator wraps calls in `spawn_blocking`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::ArtifactMeta;
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 input buffers of the given shapes.  Returns the
+    /// flattened f32 outputs (the AOT functions return 1-tuples which are
+    /// unwrapped here; multi-output tuples come back in order).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, shape)| {
+                xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .with_context(|| format!("reshaping input to {shape:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with explicit literals (for non-f32 inputs, e.g. u32 seeds).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = lit.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("converting output to f32"))
+            .collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT CPU runtime with an executable cache keyed by artifact stem.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    pub meta: Option<ArtifactMeta>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let meta = ArtifactMeta::from_dir(&dir).ok();
+        Ok(Self { client, artifacts_dir: dir, cache: Mutex::new(HashMap::new()), meta })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<stem>.hlo.txt` (cached).
+    pub fn load(&self, stem: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(stem) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{stem}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {:?} missing — run `make artifacts`", path);
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {stem}"))?;
+        let e = std::sync::Arc::new(Executable { name: stem.to_string(), exe });
+        self.cache.lock().unwrap().insert(stem.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Preload the standard artifact set for the configured batch sizes.
+    pub fn preload(&self, batches: &[usize]) -> Result<()> {
+        for &b in batches {
+            for stem in ["frontend", "frontend_mtj", "backend", "full"] {
+                self.load(&format!("{stem}_b{b}"))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Helper: build a u32 scalar literal (e.g. the per-frame MTJ seed).
+pub fn u32_scalar(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("meta.json").exists()
+    }
+
+    #[test]
+    fn missing_artifact_is_friendly_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let err = match rt.load("nonexistent_model") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing artifact must fail"),
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn loads_and_caches_backend() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let a = rt.load("backend_b1").unwrap();
+        let b = rt.load("backend_b1").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "second load must hit cache");
+    }
+
+    #[test]
+    fn backend_executes_with_correct_shapes() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts()).unwrap();
+        let meta = rt.meta.as_ref().unwrap().clone();
+        let exe = rt.load("backend_b1").unwrap();
+        let n: usize = meta.act_shape.iter().product();
+        let input = vec![0.0f32; n];
+        let shape: Vec<i64> = meta.act_shape.iter().map(|&d| d as i64).collect();
+        let out = exe.run_f32(&[(&input, &shape)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), meta.num_classes);
+        assert!(out[0].iter().all(|x| x.is_finite()));
+    }
+}

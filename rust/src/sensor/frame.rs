@@ -1,0 +1,126 @@
+//! Frame and activation-map containers for the sensor pipeline.
+
+use anyhow::{bail, Result};
+
+/// One captured scene: normalized light intensities in `[0, 1]`,
+/// channel-major (CHW) like the rest of the stack.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub data: Vec<f32>,
+    /// Monotone sequence number; doubles as the stochastic seed.
+    pub seq: u32,
+}
+
+impl Frame {
+    pub fn new(channels: usize, height: usize, width: usize, seq: u32) -> Self {
+        Self {
+            channels,
+            height,
+            width,
+            data: vec![0.0; channels * height * width],
+            seq,
+        }
+    }
+
+    pub fn from_data(
+        channels: usize,
+        height: usize,
+        width: usize,
+        data: Vec<f32>,
+        seq: u32,
+    ) -> Result<Self> {
+        if data.len() != channels * height * width {
+            bail!(
+                "frame data length {} != {}x{}x{}",
+                data.len(),
+                channels,
+                height,
+                width
+            );
+        }
+        Ok(Self { channels, height, width, data, seq })
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.height + y) * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.height + y) * self.width + x] = v;
+    }
+}
+
+/// Binary activation map produced by the in-pixel layer: CHW bits.
+#[derive(Debug, Clone)]
+pub struct ActivationMap {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub bits: Vec<bool>,
+    pub seq: u32,
+}
+
+impl ActivationMap {
+    pub fn new(channels: usize, height: usize, width: usize, seq: u32) -> Self {
+        Self {
+            channels,
+            height,
+            width,
+            bits: vec![false; channels * height * width],
+            seq,
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
+        (c * self.height + y) * self.width + x
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
+        self.bits[self.idx(c, y, x)]
+    }
+
+    /// Fraction of zeros (paper §3.2 reports ≥ 75 % for trained BNNs).
+    pub fn sparsity(&self) -> f64 {
+        let ones = self.bits.iter().filter(|&&b| b).count();
+        1.0 - ones as f64 / self.bits.len() as f64
+    }
+
+    /// Flatten to f32 {0,1} in CHW order (backend input layout).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| b as u8 as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_indexing_roundtrip() {
+        let mut f = Frame::new(3, 4, 5, 0);
+        f.set(2, 3, 4, 0.7);
+        assert_eq!(f.get(2, 3, 4), 0.7);
+        assert_eq!(f.data[(2 * 4 + 3) * 5 + 4], 0.7);
+    }
+
+    #[test]
+    fn frame_length_validation() {
+        assert!(Frame::from_data(3, 2, 2, vec![0.0; 11], 0).is_err());
+        assert!(Frame::from_data(3, 2, 2, vec![0.0; 12], 0).is_ok());
+    }
+
+    #[test]
+    fn activation_sparsity() {
+        let mut a = ActivationMap::new(1, 2, 2, 0);
+        a.bits[0] = true;
+        assert_eq!(a.sparsity(), 0.75);
+        assert_eq!(a.to_f32(), vec![1.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Sensor layer: the pixel array and its shutter controllers.
+//!
+//! * [`frame`] — frame / binary-activation containers
+//! * [`weights`] — first-layer weights loaded from the AOT golden export
+//! * [`array`] — the in-pixel compute array (three fidelity modes)
+//! * [`shutter`] — global-shutter timing vs rolling-shutter baseline,
+//!   motion-skew metrics
+//! * [`scene`] — synthetic scene generation (static + moving) for the
+//!   examples and benches
+
+pub mod array;
+pub mod frame;
+pub mod scene;
+pub mod shutter;
+pub mod weights;
+
+pub use array::{CaptureMode, CaptureStats, PixelArraySim};
+pub use frame::{ActivationMap, Frame};
+pub use shutter::{motion_skew_rms_px, FrameTiming, GlobalShutter, RollingShutter};
+pub use weights::FirstLayerWeights;

@@ -1,0 +1,189 @@
+//! Synthetic scene generation for examples, benches, and the motion-blur
+//! experiment (no camera or dataset on this image — see DESIGN.md's
+//! substitution log).
+//!
+//! Mirrors `python/compile/data.py`: class-conditioned Gabor gratings +
+//! colored blobs with per-sample jitter, so rust-generated frames exercise
+//! the same statistics the network was trained on.  Additionally provides
+//! a *moving* scene (a bright bar translating at constant velocity) whose
+//! rolling- vs global-shutter captures regenerate the motion-skew
+//! comparison.
+
+use crate::device::rng::CounterRng;
+use crate::sensor::frame::Frame;
+
+/// Generator for CIFAR-shaped synthetic scenes.
+pub struct SceneGen {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl SceneGen {
+    pub fn new(channels: usize, height: usize, width: usize) -> Self {
+        Self { channels, height, width }
+    }
+
+    /// A textured scene: 3 oriented gratings + 2 blobs, normalized [0, 1].
+    pub fn textured(&self, seq: u32) -> Frame {
+        let mut rng = CounterRng::new(seq ^ 0x5CE_4E, 60);
+        let mut f = Frame::new(self.channels, self.height, self.width, seq);
+        let mut params = Vec::new();
+        for _ in 0..3 {
+            params.push((
+                0.15 + 0.6 * rng.next_uniform() as f64,         // freq
+                std::f64::consts::PI * rng.next_uniform() as f64, // theta
+                2.0 * std::f64::consts::PI * rng.next_uniform() as f64, // phase
+                (0..self.channels)
+                    .map(|_| 0.2 + 0.8 * rng.next_uniform() as f64)
+                    .collect::<Vec<_>>(),
+            ));
+        }
+        let mut max = 1e-6f64;
+        let mut acc =
+            vec![0.0f64; self.channels * self.height * self.width];
+        for (freq, theta, phase, color) in &params {
+            let (ct, st) = (theta.cos(), theta.sin());
+            for y in 0..self.height {
+                for x in 0..self.width {
+                    let wave = (freq * (x as f64 * ct + y as f64 * st)
+                        + phase)
+                        .sin();
+                    for c in 0..self.channels {
+                        let i = (c * self.height + y) * self.width + x;
+                        acc[i] += color[c] * (0.5 + 0.5 * wave);
+                        max = max.max(acc[i]);
+                    }
+                }
+            }
+        }
+        for (dst, &src) in f.data.iter_mut().zip(acc.iter()) {
+            *dst = (src / max) as f32;
+        }
+        f
+    }
+
+    /// A dark scene with a bright vertical bar whose left edge sits at
+    /// `bar_x` (fractional pixels supported via linear coverage).
+    pub fn moving_bar(&self, bar_x: f64, bar_w: f64, seq: u32) -> Frame {
+        let mut f = Frame::new(self.channels, self.height, self.width, seq);
+        for y in 0..self.height {
+            for x in 0..self.width {
+                // Coverage of pixel [x, x+1) by the bar [bar_x, bar_x+bar_w).
+                let lo = bar_x.max(x as f64);
+                let hi = (bar_x + bar_w).min(x as f64 + 1.0);
+                let cov = (hi - lo).clamp(0.0, 1.0) as f32;
+                for c in 0..self.channels {
+                    f.set(c, y, x, 0.05 + 0.9 * cov);
+                }
+            }
+        }
+        f
+    }
+
+    /// Rolling-shutter capture of a bar moving at `velocity_px_per_s`:
+    /// each output row samples the scene `row_time_us` later, skewing the
+    /// bar.  Returns the skewed frame.
+    pub fn moving_bar_rolling(
+        &self,
+        x0: f64,
+        bar_w: f64,
+        velocity_px_per_s: f64,
+        row_time_us: f64,
+        seq: u32,
+    ) -> Frame {
+        let mut f = Frame::new(self.channels, self.height, self.width, seq);
+        for y in 0..self.height {
+            let t_s = y as f64 * row_time_us * 1e-6;
+            let bar_x = x0 + velocity_px_per_s * t_s;
+            for x in 0..self.width {
+                let lo = bar_x.max(x as f64);
+                let hi = (bar_x + bar_w).min(x as f64 + 1.0);
+                let cov = (hi - lo).clamp(0.0, 1.0) as f32;
+                for c in 0..self.channels {
+                    f.set(c, y, x, 0.05 + 0.9 * cov);
+                }
+            }
+        }
+        f
+    }
+}
+
+/// Mean per-row centroid displacement (px) between two frames — the image-
+/// domain motion-skew measurement used by the motion_blur example.
+pub fn row_centroid_skew(reference: &Frame, skewed: &Frame) -> f64 {
+    assert_eq!(reference.height, skewed.height);
+    let mut total = 0.0;
+    let mut rows = 0;
+    for y in 0..reference.height {
+        let c0 = row_centroid(reference, y);
+        let c1 = row_centroid(skewed, y);
+        if let (Some(a), Some(b)) = (c0, c1) {
+            total += (b - a).abs();
+            rows += 1;
+        }
+    }
+    if rows == 0 {
+        0.0
+    } else {
+        total / rows as f64
+    }
+}
+
+fn row_centroid(f: &Frame, y: usize) -> Option<f64> {
+    let mut wsum = 0.0;
+    let mut xsum = 0.0;
+    for x in 0..f.width {
+        let v = (f.get(0, y, x) as f64 - 0.05).max(0.0);
+        wsum += v;
+        xsum += v * x as f64;
+    }
+    if wsum < 1e-9 {
+        None
+    } else {
+        Some(xsum / wsum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn textured_in_range_and_deterministic() {
+        let g = SceneGen::new(3, 32, 32);
+        let a = g.textured(5);
+        let b = g.textured(5);
+        assert_eq!(a.data, b.data);
+        assert!(a.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(a.data.iter().any(|&v| v > 0.5), "not all dark");
+    }
+
+    #[test]
+    fn different_seq_different_scene() {
+        let g = SceneGen::new(3, 16, 16);
+        assert_ne!(g.textured(1).data, g.textured(2).data);
+    }
+
+    #[test]
+    fn bar_coverage_is_antialiased() {
+        let g = SceneGen::new(1, 4, 16);
+        let f = g.moving_bar(3.5, 2.0, 0);
+        // Pixel 3 is half covered, 4 fully, 5 half.
+        assert!((f.get(0, 0, 3) - (0.05 + 0.45)).abs() < 1e-6);
+        assert!((f.get(0, 0, 4) - 0.95).abs() < 1e-6);
+        assert!((f.get(0, 0, 5) - (0.05 + 0.45)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rolling_capture_skews_bar() {
+        let g = SceneGen::new(1, 32, 64);
+        let global = g.moving_bar(10.0, 4.0, 0);
+        let rolling = g.moving_bar_rolling(10.0, 4.0, 50_000.0, 100.0, 0);
+        let skew = row_centroid_skew(&global, &rolling);
+        assert!(skew > 1.0, "expected visible skew, got {skew}");
+        // Zero velocity ⇒ no skew.
+        let still = g.moving_bar_rolling(10.0, 4.0, 0.0, 100.0, 0);
+        assert!(row_centroid_skew(&global, &still) < 1e-9);
+    }
+}

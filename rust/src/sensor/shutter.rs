@@ -1,0 +1,217 @@
+//! Shutter timing models: the paper's global-shutter scheme vs the
+//! rolling-shutter baseline (paper §1, §2.2.4, §3.4).
+//!
+//! The VC-MTJ array stores every neuron's activation simultaneously after
+//! the two integration phases, so the whole frame samples the scene at one
+//! instant (global shutter).  A conventional in-pixel design without
+//! non-volatile storage must expose and read row blocks sequentially
+//! (rolling shutter), skewing moving scenes and — for multi-channel
+//! in-pixel convolutions — multiplying the skew by the channel count.
+
+use crate::config::HwConfig;
+
+/// Timing breakdown of one frame capture (µs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameTiming {
+    pub integration_us: f64,
+    pub write_us: f64,
+    pub read_us: f64,
+    pub reset_us: f64,
+    pub total_us: f64,
+}
+
+impl FrameTiming {
+    pub fn fps(&self) -> f64 {
+        1e6 / self.total_us
+    }
+}
+
+/// Global-shutter controller: the paper's scheme.
+///
+/// Writes and reads are column-parallel and row-sequential (standard CIS
+/// readout parallelism); each output row carries `c_out` channels ×
+/// `n_mtj` devices in its burst.
+#[derive(Debug, Clone)]
+pub struct GlobalShutter {
+    pub cfg: HwConfig,
+}
+
+impl GlobalShutter {
+    pub fn new(cfg: HwConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Frame timing for an `h×w` sensor; `reset_fraction` is the fraction
+    /// of devices needing reset pulses (≈ the ones-rate of the frame).
+    pub fn frame_timing(&self, h: usize, w: usize, reset_fraction: f64) -> FrameTiming {
+        let net = &self.cfg.network;
+        let mtj = &self.cfg.mtj;
+        let (oh, _ow) = (
+            (h - net.kernel_size) / net.stride + 1,
+            (w - net.kernel_size) / net.stride + 1,
+        );
+        // Two integration phases (negative then positive weights).
+        let integration_us = 2.0 * self.cfg.circuit.integration_time_us;
+        // Row-sequential bursts: rows × channels × devices × pulse.
+        let row_bursts = (oh * net.first_channels * mtj.n_mtj_per_neuron) as f64;
+        let write_us = row_bursts * mtj.write_pulse_ns * 1e-3;
+        let read_us = row_bursts * mtj.read_pulse_ns * 1e-3;
+        let reset_us =
+            row_bursts * reset_fraction.clamp(0.0, 1.0) * mtj.reset_pulse_ns * 1e-3;
+        FrameTiming {
+            integration_us,
+            write_us,
+            read_us,
+            reset_us,
+            total_us: integration_us + write_us + read_us + reset_us,
+        }
+    }
+
+    /// All rows sample the scene at the same instant: zero skew.
+    pub fn row_skew_us(&self, _h: usize, _w: usize) -> f64 {
+        0.0
+    }
+}
+
+/// Rolling-shutter baseline: rows exposed/processed sequentially, channels
+/// multiplying the per-row cost (the effect the paper's intro warns
+/// about for multi-channel in-pixel designs without storage).
+#[derive(Debug, Clone)]
+pub struct RollingShutter {
+    pub cfg: HwConfig,
+    /// Channels processed per row pass (1 for a conventional sequential
+    /// in-pixel design; `first_channels` if channel-parallel ADC banks).
+    pub channels_per_pass: usize,
+}
+
+impl RollingShutter {
+    pub fn new(cfg: HwConfig) -> Self {
+        Self { cfg, channels_per_pass: 1 }
+    }
+
+    /// Time offset between the first and last output row's exposure (µs).
+    pub fn row_skew_us(&self, h: usize, _w: usize) -> f64 {
+        let net = &self.cfg.network;
+        let oh = (h - net.kernel_size) / net.stride + 1;
+        let passes =
+            (net.first_channels + self.channels_per_pass - 1) / self.channels_per_pass;
+        // Each row of each pass needs its own integration window.
+        (oh * passes) as f64 * self.cfg.circuit.integration_time_us
+    }
+
+    pub fn frame_timing(&self, h: usize, w: usize) -> FrameTiming {
+        let skew = self.row_skew_us(h, w);
+        // Two phases like ours, plus the rolling exposure dominates.
+        let integration_us = 2.0 * skew.max(self.cfg.circuit.integration_time_us);
+        FrameTiming {
+            integration_us,
+            write_us: 0.0,
+            read_us: 0.0,
+            reset_us: 0.0,
+            total_us: integration_us,
+        }
+    }
+}
+
+/// Motion-blur metric: RMS pixel displacement across output rows for an
+/// object moving horizontally at `velocity_px_per_s`, given the shutter's
+/// row skew.  Global shutter ⇒ 0; rolling shutter grows linearly with
+/// skew and velocity (paper §1: "motion blur, impacting image quality").
+pub fn motion_skew_rms_px(row_skew_us: f64, h_out: usize, velocity_px_per_s: f64) -> f64 {
+    if h_out == 0 {
+        return 0.0;
+    }
+    let per_row_us = row_skew_us / h_out as f64;
+    let mut acc = 0.0;
+    for r in 0..h_out {
+        let dt_s = r as f64 * per_row_us * 1e-6;
+        let dx = velocity_px_per_s * dt_s;
+        acc += dx * dx;
+    }
+    (acc / h_out as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HwConfig {
+        HwConfig::default()
+    }
+
+    #[test]
+    fn paper_latency_bound_224() {
+        // Paper §3.4: convolution + read of all neurons < 70 µs for
+        // 224×224, k=3, stride 2.
+        let gs = GlobalShutter::new(cfg());
+        let t = gs.frame_timing(224, 224, 0.25);
+        assert!(
+            t.total_us < 70.0,
+            "global-shutter frame time {} µs ≥ 70 µs",
+            t.total_us
+        );
+        // And the integration phases alone are 10 µs.
+        assert!((t.integration_us - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn global_shutter_fps_beats_rolling() {
+        let gs = GlobalShutter::new(cfg());
+        let rs = RollingShutter::new(cfg());
+        let f_gs = gs.frame_timing(224, 224, 0.25).fps();
+        let f_rs = rs.frame_timing(224, 224).fps();
+        assert!(
+            f_gs > 10.0 * f_rs,
+            "global {f_gs} fps must dwarf rolling {f_rs} fps"
+        );
+    }
+
+    #[test]
+    fn global_shutter_has_zero_skew() {
+        let gs = GlobalShutter::new(cfg());
+        assert_eq!(gs.row_skew_us(224, 224), 0.0);
+        assert_eq!(motion_skew_rms_px(0.0, 111, 1000.0), 0.0);
+    }
+
+    #[test]
+    fn rolling_skew_scales_with_channels() {
+        let mut rs = RollingShutter::new(cfg());
+        let skew1 = rs.row_skew_us(224, 224);
+        rs.channels_per_pass = 32;
+        let skew32 = rs.row_skew_us(224, 224);
+        assert!(
+            (skew1 / skew32 - 32.0).abs() < 1e-9,
+            "sequential channels multiply skew 32×"
+        );
+    }
+
+    #[test]
+    fn motion_blur_grows_with_velocity() {
+        let rs = RollingShutter::new(cfg());
+        let skew = rs.row_skew_us(224, 224);
+        let slow = motion_skew_rms_px(skew, 111, 100.0);
+        let fast = motion_skew_rms_px(skew, 111, 1000.0);
+        assert!(fast > 9.0 * slow && fast < 11.0 * slow);
+        assert!(slow > 0.0);
+    }
+
+    #[test]
+    fn reset_fraction_increases_frame_time() {
+        let gs = GlobalShutter::new(cfg());
+        let t0 = gs.frame_timing(224, 224, 0.0).total_us;
+        let t1 = gs.frame_timing(224, 224, 1.0).total_us;
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn timing_components_sum() {
+        let gs = GlobalShutter::new(cfg());
+        let t = gs.frame_timing(64, 64, 0.5);
+        assert!(
+            (t.total_us
+                - (t.integration_us + t.write_us + t.read_us + t.reset_us))
+                .abs()
+                < 1e-12
+        );
+    }
+}

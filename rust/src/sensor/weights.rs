@@ -1,0 +1,151 @@
+//! First-layer weights for the pixel array, loaded from the AOT golden
+//! export (`artifacts/golden.json`).
+//!
+//! The pixel array embeds the BN-fused, 4-bit-quantized first-layer
+//! weights as transistor geometries (paper §2.2.1); the rust sensor sim
+//! loads the same fused tensor the AOT frontend was lowered with, so the
+//! two paths implement the *same network*.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Value;
+
+/// Fused first-layer parameters (OIHW weights + comparator shift).
+#[derive(Debug, Clone)]
+pub struct FirstLayerWeights {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k: usize,
+    /// OIHW weight tensor (BN scale already folded in).
+    pub w: Vec<f32>,
+    /// Per-channel comparator shift B (BN shift, paper §2.4.1).
+    pub shift: Vec<f32>,
+    /// Trainable threshold v_th (paper Eq. 1).
+    pub v_th: f32,
+}
+
+impl FirstLayerWeights {
+    pub fn from_golden<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref()).context("loading golden.json")?;
+        let shape = v.get("w_shape")?.as_usize_vec()?;
+        if shape.len() != 4 {
+            bail!("w_shape must be OIHW, got {shape:?}");
+        }
+        let (c_out, c_in, kh, kw) = (shape[0], shape[1], shape[2], shape[3]);
+        if kh != kw {
+            bail!("non-square kernels unsupported: {shape:?}");
+        }
+        let w = v.get("w_fused")?.as_f32_vec()?;
+        if w.len() != c_out * c_in * kh * kw {
+            bail!("weight length {} != shape {shape:?}", w.len());
+        }
+        let shift = v.get("bn_shift")?.as_f32_vec()?;
+        if shift.len() != c_out {
+            bail!("shift length {} != c_out {c_out}", shift.len());
+        }
+        Ok(Self {
+            c_out,
+            c_in,
+            k: kh,
+            w,
+            shift,
+            v_th: v.get("v_th")?.as_f64()? as f32,
+        })
+    }
+
+    /// Random weights for tests/benches without artifacts: deterministic,
+    /// zero-mean, 4-bit-quantized like the trained export.
+    pub fn synthetic(c_out: usize, c_in: usize, k: usize, seed: u32) -> Self {
+        use crate::device::rng::CounterRng;
+        let mut rng = CounterRng::new(seed, 77);
+        let n = c_out * c_in * k * k;
+        let mut w: Vec<f32> = (0..n)
+            .map(|_| (rng.next_uniform() - 0.5) * 0.9)
+            .collect();
+        // 4-bit symmetric quantization (mirrors model.quantize_weights).
+        let max = w.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-8);
+        let scale = max / 7.0;
+        for x in w.iter_mut() {
+            *x = (*x / scale).round().clamp(-7.0, 7.0) * scale;
+        }
+        Self {
+            c_out,
+            c_in,
+            k,
+            w,
+            shift: vec![0.0; c_out],
+            v_th: 2.0,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, o: usize, i: usize, ky: usize, kx: usize) -> f32 {
+        self.w[((o * self.c_in + i) * self.k + ky) * self.k + kx]
+    }
+
+    /// Split into (positive, negative-magnitude) flattened kernels for one
+    /// output channel, in the same (i, ky, kx) order as the patch loop.
+    pub fn split_channel(&self, o: usize) -> (Vec<f64>, Vec<f64>) {
+        let n = self.c_in * self.k * self.k;
+        let base = o * n;
+        let mut pos = Vec::with_capacity(n);
+        let mut neg = Vec::with_capacity(n);
+        for idx in 0..n {
+            let w = self.w[base + idx] as f64;
+            pos.push(w.max(0.0));
+            neg.push((-w).max(0.0));
+        }
+        (pos, neg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_weights_are_quantized_and_deterministic() {
+        let a = FirstLayerWeights::synthetic(8, 3, 3, 5);
+        let b = FirstLayerWeights::synthetic(8, 3, 3, 5);
+        assert_eq!(a.w, b.w);
+        // 4-bit: at most 15 distinct levels.
+        let mut levels: Vec<i32> = a
+            .w
+            .iter()
+            .map(|&x| {
+                let max = a.w.iter().fold(0.0f32, |m, &y| m.max(y.abs()));
+                (x / (max / 7.0)).round() as i32
+            })
+            .collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 15);
+    }
+
+    #[test]
+    fn split_channel_partitions_signs() {
+        let w = FirstLayerWeights::synthetic(4, 3, 3, 9);
+        let (pos, neg) = w.split_channel(2);
+        for (idx, (&p, &n)) in pos.iter().zip(neg.iter()).enumerate() {
+            assert!(p >= 0.0 && n >= 0.0);
+            let orig = w.at(2, idx / 9, (idx % 9) / 3, idx % 3) as f64;
+            assert!((p - n - orig).abs() < 1e-6, "idx {idx}");
+            assert!(p == 0.0 || n == 0.0, "one-hot sign split");
+        }
+    }
+
+    #[test]
+    fn golden_load_if_artifacts_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/golden.json");
+        if !path.exists() {
+            return;
+        }
+        let w = FirstLayerWeights::from_golden(&path).unwrap();
+        assert_eq!(w.c_out, 32);
+        assert_eq!(w.c_in, 3);
+        assert_eq!(w.k, 3);
+        assert!(w.v_th > 0.0);
+    }
+}

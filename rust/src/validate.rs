@@ -1,0 +1,180 @@
+//! Artifact validation: executes every AOT executable against the golden
+//! vectors exported by `aot.py` and cross-checks the rust sensor
+//! simulator against the same network.  This is the cross-language
+//! correctness gate (`pixelmtj validate`, also exercised by
+//! `rust/tests/golden.rs`).
+
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::config::HwConfig;
+use crate::runtime::{u32_scalar, Runtime};
+use crate::sensor::{CaptureMode, FirstLayerWeights, Frame, PixelArraySim};
+use crate::util::json::Value;
+
+/// Result of one validation check.
+#[derive(Debug)]
+pub struct Check {
+    pub name: &'static str,
+    pub pass: bool,
+    pub detail: String,
+}
+
+/// Run all checks; `Ok(report)` even when individual checks fail — the
+/// report text carries pass/fail per check; errors are reserved for
+/// missing artifacts.
+pub fn run(artifacts_dir: &Path) -> Result<String> {
+    let checks = run_checks(artifacts_dir)?;
+    let mut out = String::new();
+    let mut all = true;
+    for c in &checks {
+        all &= c.pass;
+        let _ = writeln!(
+            out,
+            "[{}] {:<38} {}",
+            if c.pass { "PASS" } else { "FAIL" },
+            c.name,
+            c.detail
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{} ({}/{} checks passed)",
+        if all { "VALID" } else { "INVALID" },
+        checks.iter().filter(|c| c.pass).count(),
+        checks.len()
+    );
+    if !all {
+        bail!("artifact validation failed:\n{out}");
+    }
+    Ok(out)
+}
+
+pub fn run_checks(artifacts_dir: &Path) -> Result<Vec<Check>> {
+    let golden = Value::from_file(&artifacts_dir.join("golden.json"))
+        .context("golden.json missing — run `make artifacts`")?;
+    let runtime = Runtime::cpu(artifacts_dir)?;
+    let meta = runtime
+        .meta
+        .as_ref()
+        .context("meta.json missing — run `make artifacts`")?
+        .clone();
+
+    let img = golden.get("img")?.as_f32_vec()?;
+    let want_front = golden.get("frontend_out")?.as_f32_vec()?;
+    let want_mtj = golden.get("frontend_mtj_out")?.as_f32_vec()?;
+    let want_logits = golden.get("logits")?.as_f32_vec()?;
+    let mtj_seed = golden.get("mtj_seed")?.as_u32()?;
+    let img_shape: Vec<i64> = meta.img_shape.iter().map(|&d| d as i64).collect();
+    let act_shape: Vec<i64> = meta.act_shape.iter().map(|&d| d as i64).collect();
+
+    let mut checks = Vec::new();
+
+    // 1. AOT frontend (ideal comparator) reproduces the oracle bits.
+    let front = runtime.load("frontend_b1")?;
+    let got = &front.run_f32(&[(&img, &img_shape)])?[0];
+    let diff = count_diff(got, &want_front);
+    checks.push(Check {
+        name: "frontend_b1 vs oracle",
+        pass: diff == 0,
+        detail: format!("{diff}/{} bits differ", want_front.len()),
+    });
+
+    // 2. AOT stochastic frontend reproduces the oracle draw-for-draw.
+    let front_mtj = runtime.load("frontend_mtj_b1")?;
+    let img_lit = xla::Literal::vec1(&img).reshape(&img_shape)?;
+    let got_mtj = &front_mtj.run_literals(&[img_lit, u32_scalar(mtj_seed)])?[0];
+    let diff = count_diff(got_mtj, &want_mtj);
+    checks.push(Check {
+        name: "frontend_mtj_b1 vs oracle (seeded)",
+        pass: diff == 0,
+        detail: format!("{diff}/{} bits differ", want_mtj.len()),
+    });
+
+    // 3. Backend logits.
+    let backend = runtime.load("backend_b1")?;
+    let got_logits = &backend.run_f32(&[(&want_front, &act_shape)])?[0];
+    let max_err = max_abs_diff(got_logits, &want_logits);
+    checks.push(Check {
+        name: "backend_b1 logits vs oracle",
+        pass: max_err < 1e-3,
+        detail: format!("max |Δ| = {max_err:.2e}"),
+    });
+
+    // 4. Fused full model agrees with frontend∘backend.
+    let full = runtime.load("full_b1")?;
+    let got_full = &full.run_f32(&[(&img, &img_shape)])?[0];
+    let max_err_full = max_abs_diff(got_full, &want_logits);
+    checks.push(Check {
+        name: "full_b1 vs composed stages",
+        pass: max_err_full < 1e-3,
+        detail: format!("max |Δ| = {max_err_full:.2e}"),
+    });
+
+    // 5. Rust sensor simulator agrees with the AOT frontend.
+    let hw = HwConfig::from_json_file(artifacts_dir.join("hwcfg.json"))?;
+    let weights =
+        FirstLayerWeights::from_golden(artifacts_dir.join("golden.json"))?;
+    let sim = PixelArraySim::new(hw.clone(), weights);
+    let frame = Frame::from_data(
+        meta.img_shape[1],
+        meta.img_shape[2],
+        meta.img_shape[3],
+        img.clone(),
+        mtj_seed,
+    )?;
+    let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
+    let agree = map
+        .bits
+        .iter()
+        .zip(want_front.iter())
+        .filter(|(&b, &w)| (b as u8 as f32) == w)
+        .count();
+    let rate = agree as f64 / want_front.len() as f64;
+    checks.push(Check {
+        name: "rust sensor sim vs AOT frontend",
+        pass: rate >= 0.995,
+        detail: format!("{:.3} % bit agreement", rate * 100.0),
+    });
+
+    // 6. Rust stochastic capture agrees with the seeded AOT MTJ frontend
+    //    wherever the ideal bits agree (the RNG must match exactly).
+    let (map_mtj, _) = sim.capture(&frame, CaptureMode::CalibratedMtj);
+    let mut mismatched_draws = 0usize;
+    let mut comparable = 0usize;
+    for i in 0..map.bits.len() {
+        if (map.bits[i] as u8 as f32) == want_front[i] {
+            comparable += 1;
+            if (map_mtj.bits[i] as u8 as f32) != want_mtj[i] {
+                mismatched_draws += 1;
+            }
+        }
+    }
+    checks.push(Check {
+        name: "rust MTJ draws vs pallas kernel",
+        pass: mismatched_draws == 0,
+        detail: format!("{mismatched_draws}/{comparable} comparable sites differ"),
+    });
+
+    // 7. hwcfg.json matches the rust defaults (single source of truth).
+    checks.push(Check {
+        name: "hwcfg.json = rust defaults",
+        pass: hw == HwConfig::default(),
+        detail: String::new(),
+    });
+
+    Ok(checks)
+}
+
+fn count_diff(a: &[f32], b: &[f32]) -> usize {
+    a.iter().zip(b.iter()).filter(|(x, y)| x != y).count()
+        + a.len().abs_diff(b.len())
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}

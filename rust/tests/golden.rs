@@ -1,0 +1,68 @@
+//! Golden cross-language validation: the AOT artifacts must reproduce the
+//! Python oracle bit-for-bit, and the rust sensor simulator must agree
+//! with both.  Skips gracefully when artifacts have not been built.
+
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("meta.json").exists()
+        && artifacts().join("golden.json").exists()
+}
+
+#[test]
+fn all_validation_checks_pass() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let checks = pixelmtj::validate::run_checks(&artifacts()).unwrap();
+    assert_eq!(checks.len(), 7);
+    for c in &checks {
+        assert!(c.pass, "check '{}' failed: {}", c.name, c.detail);
+    }
+}
+
+#[test]
+fn validate_report_is_human_readable() {
+    if !have_artifacts() {
+        return;
+    }
+    let report = pixelmtj::validate::run(&artifacts()).unwrap();
+    assert!(report.contains("VALID"));
+    assert!(report.contains("frontend_b1"));
+}
+
+#[test]
+fn hwcfg_json_matches_rust_defaults() {
+    if !have_artifacts() {
+        return;
+    }
+    // The single-source-of-truth contract between hwcfg.py and config/.
+    let from_json = pixelmtj::config::HwConfig::from_json_file(
+        artifacts().join("hwcfg.json"),
+    )
+    .unwrap();
+    assert_eq!(from_json, pixelmtj::config::HwConfig::default());
+}
+
+#[test]
+fn golden_frontend_sparsity_in_trained_band() {
+    if !have_artifacts() {
+        return;
+    }
+    // Trained BNN activations should be sparse (paper §3.2: ≥75 %).
+    let v = pixelmtj::util::json::Value::from_file(
+        &artifacts().join("golden.json"),
+    )
+    .unwrap();
+    let bits = v.get("frontend_out").unwrap().as_f32_vec().unwrap();
+    let sparsity = 1.0 - bits.iter().sum::<f32>() as f64 / bits.len() as f64;
+    assert!(
+        sparsity > 0.5,
+        "trained frontend sparsity {sparsity} suspiciously low"
+    );
+}

@@ -1,0 +1,212 @@
+//! Integration tests: the serving pipeline end to end over the runtime,
+//! plus cross-module flows (sensor → codec → energy accounting).
+//! Runtime-dependent tests skip when artifacts are absent.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::coordinator::{sparse, Pipeline};
+use pixelmtj::energy::{self, Geometry};
+use pixelmtj::reports::{evalset_accuracy, EvalSet};
+use pixelmtj::runtime::Runtime;
+use pixelmtj::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
+};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("meta.json").exists()
+}
+
+fn make_pipeline(cfg: PipelineConfig) -> (Pipeline, Arc<Runtime>) {
+    let hw = HwConfig::load_or_default(&artifacts());
+    let weights =
+        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
+            .unwrap();
+    let runtime = Arc::new(Runtime::cpu(artifacts()).unwrap());
+    let sim = PixelArraySim::new(hw, weights);
+    (Pipeline::new(cfg, sim, runtime.clone()).unwrap(), runtime)
+}
+
+#[test]
+fn pipeline_serves_all_frames_in_order() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = PipelineConfig::default();
+    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
+    let (pipeline, _) = make_pipeline(cfg);
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..40u32).map(|i| gen.textured(i)).collect();
+    let report = pipeline.serve(frames).unwrap();
+    assert_eq!(report.results.len(), 40);
+    let seqs: Vec<u32> = report.results.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (0..40).collect::<Vec<_>>(), "results must be ordered");
+    assert_eq!(report.metrics.frames_out.get(), 40);
+    assert_eq!(report.metrics.frames_dropped.get(), 0);
+    assert!(report.fps > 0.0);
+}
+
+#[test]
+fn pipeline_is_deterministic_across_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = PipelineConfig::default();
+    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
+    let (p1, _) = make_pipeline(cfg.clone());
+    let (p2, _) = make_pipeline(cfg);
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..16u32).map(|i| gen.textured(i)).collect();
+    let a = p1.serve(frames.clone()).unwrap();
+    let b = p2.serve(frames).unwrap();
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.seq, y.seq);
+        assert_eq!(x.label, y.label, "seq {}: labels differ", x.seq);
+        assert_eq!(x.link_bits, y.link_bits);
+    }
+}
+
+#[test]
+fn pipeline_batches_fill_under_load() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = PipelineConfig::default();
+    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
+    cfg.batch_timeout_us = 50_000; // generous: let batches fill
+    let (pipeline, _) = make_pipeline(cfg);
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..64u32).map(|i| gen.textured(i)).collect();
+    let report = pipeline.serve(frames).unwrap();
+    assert!(
+        report.metrics.mean_batch_occupancy() > 2.0,
+        "expected batched dispatch, got mean occupancy {}",
+        report.metrics.mean_batch_occupancy()
+    );
+}
+
+#[test]
+fn codecs_agree_and_bits_feed_energy_model() {
+    // Sensor → each codec → identical decode → energy accounting.
+    let hw = HwConfig::default();
+    let sim = PixelArraySim::new(
+        hw.clone(),
+        FirstLayerWeights::synthetic(32, 3, 3, 3),
+    );
+    let frame = SceneGen::new(3, 32, 32).textured(11);
+    let (map, stats) = sim.capture(&frame, CaptureMode::CalibratedMtj);
+    let mut payloads = Vec::new();
+    for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+        let enc = sparse::encode(&map, coding);
+        let dec = sparse::decode(&enc).unwrap();
+        assert_eq!(dec.bits, map.bits, "{coding:?} roundtrip");
+        payloads.push(enc.payload_bits);
+    }
+    // Energy model consumes the measured bits.
+    let geom = Geometry::from_cfg(&hw, 32, 32);
+    let fe = energy::frontend_ours(&geom, &stats).total_pj();
+    assert!(fe > 0.0);
+    let comm = energy::comm_energy_pj(payloads[2]);
+    assert!(comm > 0.0 && comm < energy::comm_energy_pj(payloads[0]) * 2.0);
+}
+
+#[test]
+fn evalset_accuracy_beats_chance_and_mtj_noise_is_mild() {
+    if !have_artifacts() {
+        return;
+    }
+    let hw = HwConfig::load_or_default(&artifacts());
+    let weights =
+        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
+            .unwrap();
+    let sim = PixelArraySim::new(hw, weights);
+    let runtime = Runtime::cpu(artifacts()).unwrap();
+    let eval = EvalSet::load(&artifacts().join("evalset.json")).unwrap();
+    let (acc_ideal, sparsity) =
+        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)
+            .unwrap();
+    let (acc_mtj, _) = evalset_accuracy(
+        &runtime,
+        &sim,
+        &eval,
+        CaptureMode::CalibratedMtj,
+        None,
+    )
+    .unwrap();
+    assert!(acc_ideal > 0.5, "trained model should beat chance: {acc_ideal}");
+    assert!(
+        acc_ideal - acc_mtj < 0.08,
+        "multi-MTJ noise cost too high: {acc_ideal} → {acc_mtj}"
+    );
+    assert!(
+        sparsity > 0.5,
+        "trained activations should be sparse: {sparsity}"
+    );
+}
+
+#[test]
+fn fig8_error_asymmetry_holds() {
+    if !have_artifacts() {
+        return;
+    }
+    // Paper Fig. 8: 0→1 errors (spurious activations in a sparse map)
+    // degrade accuracy much faster than 1→0 errors.
+    let hw = HwConfig::load_or_default(&artifacts());
+    let weights =
+        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
+            .unwrap();
+    let sim = PixelArraySim::new(hw, weights);
+    let runtime = Runtime::cpu(artifacts()).unwrap();
+    let eval = EvalSet::load(&artifacts().join("evalset.json")).unwrap();
+    let (acc_10, _) = evalset_accuracy(
+        &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.10, 0.0)),
+    )
+    .unwrap();
+    let (acc_01, _) = evalset_accuracy(
+        &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.0, 0.10)),
+    )
+    .unwrap();
+    assert!(
+        acc_10 > acc_01 + 0.1,
+        "expected 1→0 tolerance ≫ 0→1: {acc_10} vs {acc_01}"
+    );
+}
+
+#[test]
+fn frontend_artifact_matches_sensor_sim_on_fresh_scenes() {
+    if !have_artifacts() {
+        return;
+    }
+    // Beyond the golden vector: arbitrary scenes must agree too.
+    let hw = HwConfig::load_or_default(&artifacts());
+    let weights =
+        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
+            .unwrap();
+    let sim = PixelArraySim::new(hw, weights);
+    let runtime = Runtime::cpu(artifacts()).unwrap();
+    let meta = runtime.meta.as_ref().unwrap().clone();
+    let exe = runtime.load("frontend_b1").unwrap();
+    let gen = SceneGen::new(3, 32, 32);
+    let shape: Vec<i64> = meta.img_shape.iter().map(|&d| d as i64).collect();
+    for seq in [3u32, 17, 99] {
+        let frame = gen.textured(seq);
+        let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
+        let aot = &exe.run_f32(&[(&frame.data, &shape)]).unwrap()[0];
+        let agree = map
+            .bits
+            .iter()
+            .zip(aot.iter())
+            .filter(|(&b, &w)| (b as u8 as f32) == w)
+            .count() as f64
+            / aot.len() as f64;
+        assert!(
+            agree >= 0.999,
+            "seq {seq}: sensor sim vs AOT agreement {agree}"
+        );
+    }
+}

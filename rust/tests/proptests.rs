@@ -1,0 +1,225 @@
+//! Property tests over coordinator + substrate invariants, driven by the
+//! in-tree deterministic property harness (`util::prop` — the offline
+//! registry has no proptest; failures reproduce from the printed case
+//! number).
+
+use std::time::{Duration, Instant};
+
+use pixelmtj::circuit::subtractor::{threshold_to_volts, AnalogSubtractor};
+use pixelmtj::config::{CircuitConfig, HwConfig, MtjConfig, SparseCoding};
+use pixelmtj::coordinator::sparse::{decode, encode};
+use pixelmtj::coordinator::Batcher;
+use pixelmtj::device::interp::MonotoneCubic;
+use pixelmtj::device::mtj::{MtjModel, MtjState};
+use pixelmtj::device::neuron_error_rates;
+use pixelmtj::sensor::{ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim};
+use pixelmtj::util::prop::{check, Gen};
+
+fn arbitrary_map(g: &mut Gen) -> ActivationMap {
+    let c = g.usize_in(1, 8);
+    let h = g.usize_in(1, 20);
+    let w = g.usize_in(1, 20);
+    let p = g.f64_in(0.0, 1.0);
+    let mut m = ActivationMap::new(c, h, w, g.u32());
+    let bools = g.vec_bool(c * h * w, p);
+    m.bits.copy_from_slice(&bools);
+    m
+}
+
+#[test]
+fn prop_codec_roundtrip_all_codings() {
+    check("codec roundtrip", 150, |g| {
+        let m = arbitrary_map(g);
+        for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+            let enc = encode(&m, coding);
+            let dec = decode(&enc).map_err(|e| format!("{coding:?}: {e}"))?;
+            if dec.bits != m.bits {
+                return Err(format!("{coding:?} roundtrip mismatch"));
+            }
+            if enc.payload_bits == 0 && !m.bits.is_empty() {
+                return Err("zero payload for nonempty map".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_payload_is_exactly_one_bit_per_element() {
+    check("dense payload", 50, |g| {
+        let m = arbitrary_map(g);
+        let enc = encode(&m, SparseCoding::Dense);
+        if enc.payload_bits != m.bits.len() as u64 {
+            return Err(format!(
+                "{} != {}",
+                enc.payload_bits,
+                m.bits.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_emits_only_configured_sizes_and_preserves_fifo() {
+    check("batcher sizes+fifo", 100, |g| {
+        let sizes = vec![1usize, g.usize_in(2, 16)];
+        let timeout = Duration::from_micros(g.usize_in(0, 500) as u64);
+        let mut b = Batcher::new(sizes.clone(), timeout);
+        let n = g.usize_in(0, 100);
+        for i in 0..n {
+            b.push(i);
+        }
+        let mut drained = Vec::new();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        while let Some(batch) = b.poll(deadline, true) {
+            if !sizes.contains(&batch.len()) {
+                return Err(format!("illegal batch size {}", batch.len()));
+            }
+            drained.extend(batch);
+        }
+        if drained != (0..n).collect::<Vec<_>>() {
+            return Err("FIFO violated".into());
+        }
+        if !b.is_empty() {
+            return Err("flush left items behind".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threshold_matching_equivalence() {
+    // ∀ (v_sw, θ, Δ): V_CONV ≥ V_SW ⟺ Δ ≥ θ — the paper's §2.2.2
+    // tunable-mapping contract, for any device switching voltage.
+    let cfg = CircuitConfig::default();
+    check("threshold matching", 300, |g| {
+        let v_sw = g.f64_in(0.5, 1.1);
+        let theta = g.f64_in(-1.5, 1.5);
+        let delta = g.f64_in(-2.9, 2.9);
+        let sub = AnalogSubtractor::with_threshold_matching(
+            &cfg,
+            v_sw,
+            threshold_to_volts(theta, &cfg),
+        );
+        let out = sub.subtract(0.0, delta);
+        let fires = out.v_conv >= v_sw - 1e-9;
+        let should = delta >= theta - 1e-9;
+        if fires != should && (delta - theta).abs() > 1e-6 {
+            return Err(format!(
+                "v_sw={v_sw} θ={theta} Δ={delta}: fires={fires} should={should}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_switching_probability_monotone_in_voltage() {
+    let model = MtjModel::new(&MtjConfig::default());
+    check("P_sw monotone", 200, |g| {
+        let v1 = g.f64_in(0.0, 1.2);
+        let v2 = g.f64_in(0.0, 1.2);
+        let (lo, hi) = if v1 < v2 { (v1, v2) } else { (v2, v1) };
+        let p_lo = model.switching_probability(MtjState::AntiParallel, lo, 0.7);
+        let p_hi = model.switching_probability(MtjState::AntiParallel, hi, 0.7);
+        if p_lo > p_hi + 1e-9 {
+            return Err(format!("P({lo})={p_lo} > P({hi})={p_hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monotone_cubic_never_overshoots() {
+    check("pchip bounds", 100, |g| {
+        let n = g.usize_in(2, 8);
+        let mut xs = vec![0.0];
+        for _ in 1..n {
+            xs.push(xs.last().unwrap() + g.f64_in(0.05, 1.0));
+        }
+        let mut ys = vec![g.f64_in(0.0, 0.1)];
+        for _ in 1..n {
+            ys.push(ys.last().unwrap() + g.f64_in(0.0, 0.5));
+        }
+        let c = MonotoneCubic::new(xs.clone(), ys.clone());
+        let (lo, hi) = (ys[0], *ys.last().unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=200 {
+            let x = xs[0] + (xs[n - 1] - xs[0]) * i as f64 / 200.0;
+            let y = c.eval(x);
+            if y < lo - 1e-9 || y > hi + 1e-9 {
+                return Err(format!("overshoot at {x}: {y} ∉ [{lo}, {hi}]"));
+            }
+            if y < prev - 1e-9 {
+                return Err(format!("non-monotone at {x}"));
+            }
+            prev = y;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_majority_error_decreases_with_devices() {
+    check("majority monotone", 100, |g| {
+        let p_fire = g.f64_in(0.6, 0.99);
+        let (e1, _) = neuron_error_rates(p_fire, 0.0, 1, 1);
+        let (e8, _) = neuron_error_rates(p_fire, 0.0, 8, 4);
+        if e8 > e1 + 1e-12 {
+            return Err(format!("8-device error {e8} > single {e1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_capture_deterministic_and_stats_consistent() {
+    let hw = HwConfig::default();
+    let sim = PixelArraySim::new(
+        hw,
+        FirstLayerWeights::synthetic(8, 3, 3, 2),
+    );
+    check("capture determinism", 25, |g| {
+        let h = g.usize_in(8, 24);
+        let w = g.usize_in(8, 24);
+        let mut frame = Frame::new(3, h, w, g.u32());
+        let data = g.vec_f64(3 * h * w, 0.0, 1.0);
+        for (d, s) in frame.data.iter_mut().zip(data.iter()) {
+            *d = *s as f32;
+        }
+        let (a, sa) = sim.capture(&frame, CaptureMode::CalibratedMtj);
+        let (b, sb) = sim.capture(&frame, CaptureMode::CalibratedMtj);
+        if a.bits != b.bits || sa != sb {
+            return Err("capture not deterministic".into());
+        }
+        if sa.ones as usize != a.bits.iter().filter(|&&x| x).count() {
+            return Err("stats.ones inconsistent".into());
+        }
+        if sa.elements as usize != a.bits.len() {
+            return Err("stats.elements inconsistent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_numeric_trees() {
+    use pixelmtj::util::json::Value;
+    check("json roundtrip", 100, |g| {
+        let n = g.usize_in(0, 40);
+        let xs = g.vec_f64(n, -1e6, 1e6);
+        let v = Value::obj(vec![
+            ("xs", Value::arr_f64(&xs)),
+            ("flag", Value::Bool(g.bool())),
+            ("name", Value::Str(format!("case-{}", g.u32()))),
+        ]);
+        for text in [v.to_string_pretty(), v.to_string_compact()] {
+            let back = Value::parse(&text).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err("roundtrip mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
