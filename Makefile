@@ -1,0 +1,29 @@
+# Top-level developer entry points.  `check` mirrors CI; the tier-1 gate
+# is `cargo build --release && cargo test -q` (default features — the
+# native backend needs no artifacts).
+
+RUST_DIR := rust
+
+.PHONY: check build test fmt clippy bench-backend artifacts
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+fmt:
+	cd $(RUST_DIR) && cargo fmt --check
+
+clippy:
+	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
+
+check: fmt clippy build test
+
+# Perf trajectory: native XNOR vs dense reference → rust/BENCH_backend.json
+bench-backend:
+	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench backend
+
+# AOT artifact export (requires the Python/JAX toolchain; see python/).
+artifacts:
+	python3 python/compile/aot.py --out $(RUST_DIR)/artifacts

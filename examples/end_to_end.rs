@@ -1,23 +1,23 @@
 //! End-to-end driver (the EXPERIMENTS.md validation run): serve a batch of
 //! frames through the full system — synthetic scenes → in-pixel sensor sim
 //! with stochastic multi-MTJ neurons → sparse-coded link → dynamic batcher
-//! → AOT backend on PJRT — then measure accuracy on the labeled eval set
-//! and summarize energy/bandwidth/latency against the paper's claims.
+//! → pluggable inference backend — then measure accuracy on the labeled
+//! eval set (when artifacts are present) and summarize energy/bandwidth/
+//! latency against the paper's claims.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example end_to_end -- [n_frames]
+//! cargo run --release --example end_to_end -- [n_frames]
+//! # with artifacts + `--features pjrt` the AOT network serves instead of
+//! # the native XNOR backend
 //! ```
 
-use std::sync::Arc;
-
+use pixelmtj::backend::{self, InferenceBackend as _};
 use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
 use pixelmtj::coordinator::Pipeline;
 use pixelmtj::energy::{self, Geometry};
 use pixelmtj::reports::{evalset_accuracy, EvalSet};
-use pixelmtj::runtime::Runtime;
 use pixelmtj::sensor::{
-    scene::SceneGen, CaptureMode, FirstLayerWeights, GlobalShutter,
-    PixelArraySim,
+    scene::SceneGen, CaptureMode, GlobalShutter, PixelArraySim,
 };
 
 fn main() -> anyhow::Result<()> {
@@ -27,18 +27,34 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(256);
     let artifacts = std::path::Path::new("artifacts");
     let hw = HwConfig::load_or_default(artifacts);
-    let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
-    let runtime = Arc::new(Runtime::cpu(artifacts)?);
-    let arch = runtime.meta.as_ref().unwrap().arch.clone();
+    let weights = backend::load_weights(artifacts, &hw)?;
 
-    println!("═══ 1. serving pipeline ({n_frames} synthetic frames, arch {arch}) ═══");
     let mut cfg = PipelineConfig::default();
     cfg.sparse_coding = SparseCoding::Rle;
-    let sim = PixelArraySim::new(hw.clone(), weights);
-    let gen = SceneGen::new(3, cfg.sensor_height, cfg.sensor_width);
+    let be = backend::auto(
+        artifacts,
+        &hw,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        cfg.sensor_workers,
+        weights.clone(),
+    )?;
+    if be.name().starts_with("native") {
+        eprintln!(
+            "warning: native synthetic classifier head — accuracy figures \
+             exercise the flow, not the trained model"
+        );
+    }
+    println!(
+        "═══ 1. serving pipeline ({n_frames} synthetic frames, backend {}) ═══",
+        be.arch()
+    );
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let (sensor_h, sensor_w) = (cfg.sensor_height, cfg.sensor_width);
+    let gen = SceneGen::new(3, sensor_h, sensor_w);
     let frames: Vec<_> =
         (0..n_frames as u32).map(|i| gen.textured(i)).collect();
-    let pipeline = Pipeline::new(cfg, sim, runtime.clone())?;
+    let pipeline = Pipeline::new(cfg, sim, be.clone())?;
     let report = pipeline.serve(frames)?;
     let m = &report.metrics;
     println!(
@@ -71,22 +87,47 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n═══ 2. accuracy on the labeled eval set ═══");
-    let weights2 =
-        FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
-    let sim2 = PixelArraySim::new(hw.clone(), weights2);
-    let eval = EvalSet::load(&artifacts.join("evalset.json"))?;
-    let (acc_ideal, sp) =
-        evalset_accuracy(&runtime, &sim2, &eval, CaptureMode::Ideal, None)?;
-    let (acc_mtj, _) = evalset_accuracy(
-        &runtime, &sim2, &eval, CaptureMode::CalibratedMtj, None,
-    )?;
-    println!(
-        "{} frames: ideal comparator {:.2} % | 8-MTJ neurons {:.2} % | sparsity {:.1} %",
-        eval.frames.len(),
-        acc_ideal * 100.0,
-        acc_mtj * 100.0,
-        sp * 100.0
-    );
+    match EvalSet::load(&artifacts.join("evalset.json")) {
+        // The backend was sized for the pipeline's sensor geometry; an
+        // eval set with different frame dims can't share it.
+        Ok(eval)
+            if eval.frames.first().map(|f| (f.height, f.width))
+                != Some((sensor_h, sensor_w)) =>
+        {
+            println!(
+                "skipped: eval set geometry differs from the \
+                 {sensor_h}×{sensor_w} pipeline sensor"
+            )
+        }
+        Ok(eval) => {
+            let sim2 = PixelArraySim::new(hw.clone(), weights.clone());
+            let (acc_ideal, sp) = evalset_accuracy(
+                be.as_ref(),
+                &sim2,
+                &eval,
+                CaptureMode::Ideal,
+                None,
+            )?;
+            let (acc_mtj, _) = evalset_accuracy(
+                be.as_ref(),
+                &sim2,
+                &eval,
+                CaptureMode::CalibratedMtj,
+                None,
+            )?;
+            println!(
+                "{} frames: ideal comparator {:.2} % | 8-MTJ neurons {:.2} % | sparsity {:.1} %",
+                eval.frames.len(),
+                acc_ideal * 100.0,
+                acc_mtj * 100.0,
+                sp * 100.0
+            );
+        }
+        Err(e) => println!(
+            "skipped: eval set unavailable ({e:#}) — run `make artifacts` \
+             for the labeled corpus"
+        ),
+    }
 
     println!("\n═══ 3. paper-claim summary (ImageNet/VGG16 geometry) ═══");
     let geom = Geometry::imagenet_vgg16(&hw);

@@ -1,27 +1,25 @@
 //! Quickstart: capture one synthetic scene with the in-pixel sensor
-//! simulator and classify it through the AOT backend — the minimal
-//! end-to-end path.
+//! simulator and classify it through the inference backend — the minimal
+//! end-to-end path.  Runs anywhere: with AOT artifacts (and the `pjrt`
+//! feature) it uses the exported network, otherwise the native XNOR
+//! backend with synthetic weights.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use std::sync::Arc;
-
+use pixelmtj::backend::{self, InferenceBackend as _};
 use pixelmtj::config::HwConfig;
-use pixelmtj::runtime::Runtime;
-use pixelmtj::sensor::{
-    scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
-};
+use pixelmtj::sensor::{scene::SceneGen, CaptureMode, PixelArraySim};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::Path::new("artifacts");
 
-    // 1. Load the hardware config + trained first-layer weights that the
-    //    AOT artifacts were built with.
+    // 1. Load the hardware config + first-layer weights (the trained
+    //    golden export when present, deterministic synthetic otherwise).
     let hw = HwConfig::load_or_default(artifacts);
-    let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
-    let sim = PixelArraySim::new(hw.clone(), weights);
+    let weights = backend::load_weights(artifacts, &hw)?;
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
 
     // 2. Generate a synthetic scene and run the in-pixel first layer with
     //    stochastic 8-MTJ majority neurons.
@@ -39,13 +37,9 @@ fn main() -> anyhow::Result<()> {
         stats.mtj_writes, stats.mtj_reads, stats.mtj_resets
     );
 
-    // 3. Classify through the AOT-compiled backend (PJRT, no Python).
-    let runtime = Arc::new(Runtime::cpu(artifacts)?);
-    let meta = runtime.meta.as_ref().expect("run `make artifacts` first");
-    let exe = runtime.load("backend_b1")?;
-    let input = activations.to_f32();
-    let shape: Vec<i64> = meta.act_shape.iter().map(|&d| d as i64).collect();
-    let logits = &exe.run_f32(&[(&input, &shape)])?[0];
+    // 3. Classify through the best-available backend (no Python).
+    let be = backend::auto(artifacts, &hw, 32, 32, 1, weights)?;
+    let logits = be.run_backend(&activations.to_f32(), 1)?;
     let label = logits
         .iter()
         .enumerate()
@@ -54,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap();
     println!(
         "backend ({}): predicted class {label}, logits {logits:.2?}",
-        meta.arch
+        be.arch()
     );
     Ok(())
 }

@@ -1,30 +1,40 @@
 //! Table 1 harness: accuracy of the exported BNN through the full
 //! hardware path, under each capture fidelity, plus the Fig. 8-style
-//! error-injection summary at the paper's operating point.
+//! error-injection summary at the paper's operating point.  Requires the
+//! labeled eval set (`make artifacts`); with the `pjrt` feature the AOT
+//! classifier serves, otherwise the native backend's synthetic head
+//! exercises the same flow.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example table1_accuracy
 //! ```
 
-use std::sync::Arc;
-
+use anyhow::Context;
+use pixelmtj::backend::{self, InferenceBackend as _};
 use pixelmtj::config::HwConfig;
 use pixelmtj::device::neuron_error_rates;
 use pixelmtj::reports::{evalset_accuracy, EvalSet};
-use pixelmtj::runtime::Runtime;
 use pixelmtj::sensor::{CaptureMode, FirstLayerWeights, PixelArraySim};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::Path::new("artifacts");
     let hw = HwConfig::load_or_default(artifacts);
     let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
-    let sim = PixelArraySim::new(hw.clone(), weights);
-    let runtime = Arc::new(Runtime::cpu(artifacts)?);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
     let eval = EvalSet::load(&artifacts.join("evalset.json"))?;
-    let arch = runtime.meta.as_ref().unwrap().arch.clone();
+    let first = eval.frames.first().context("empty eval set")?;
+    let (eh, ew) = (first.height, first.width);
+    let be = backend::auto(artifacts, &hw, eh, ew, 4, weights)?;
+    if be.name().starts_with("native") {
+        eprintln!(
+            "warning: native synthetic classifier head — accuracy rows below \
+             exercise the flow, not the trained Table 1 model"
+        );
+    }
 
     println!(
-        "arch {arch}, {} labeled synthetic frames (paper Table 1 analogue)\n",
+        "backend {}, {} labeled synthetic frames (paper Table 1 analogue)\n",
+        be.arch(),
         eval.frames.len()
     );
     println!("{:<34} {:>9} {:>11}", "capture fidelity", "acc %", "sparsity %");
@@ -33,13 +43,13 @@ fn main() -> anyhow::Result<()> {
         ("calibrated 8-MTJ neurons", CaptureMode::CalibratedMtj),
         ("physical circuit + devices", CaptureMode::PhysicalMtj),
     ] {
-        let (acc, sp) = evalset_accuracy(&runtime, &sim, &eval, mode, None)?;
+        let (acc, sp) = evalset_accuracy(be.as_ref(), &sim, &eval, mode, None)?;
         println!("{name:<34} {:>9.2} {:>11.2}", acc * 100.0, sp * 100.0);
     }
 
     // The paper's Table 1 condition: 0.1 % switching error both ways.
     let (acc, _) = evalset_accuracy(
-        &runtime,
+        be.as_ref(),
         &sim,
         &eval,
         CaptureMode::Ideal,
@@ -64,7 +74,11 @@ fn main() -> anyhow::Result<()> {
         let w = FirstLayerWeights::from_golden(artifacts.join("golden.json"))?;
         let sim_g = PixelArraySim::new(hw_g, w);
         let (acc, _) = evalset_accuracy(
-            &runtime, &sim_g, &eval, CaptureMode::PhysicalMtj, None,
+            be.as_ref(),
+            &sim_g,
+            &eval,
+            CaptureMode::PhysicalMtj,
+            None,
         )?;
         println!("{gain:<12} {:>9.2}", acc * 100.0);
     }

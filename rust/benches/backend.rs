@@ -1,0 +1,81 @@
+//! Backend benches: the native XNOR-popcount engine vs its dense f32
+//! reference — the classifier hot path behind the serving pipeline.
+//! Emits `BENCH_backend.json` (frames/sec for both paths + speedup) so
+//! the perf trajectory is machine-diffable across PRs.
+
+use pixelmtj::backend::{InferenceBackend, NativeBackend, NativePath};
+use pixelmtj::config::HwConfig;
+use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights};
+use pixelmtj::util::bench::{bb, Bencher};
+use pixelmtj::util::json::Value;
+
+fn main() {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let packed = NativeBackend::new(hw.clone(), weights.clone(), 32, 32, 4);
+    let dense = NativeBackend::new(hw, weights, 32, 32, 4)
+        .with_path(NativePath::DenseRef);
+    println!("model: {}\n", packed.arch());
+
+    // Real activation maps from the in-pixel frontend (≈80 % sparse).
+    let gen = SceneGen::new(3, 32, 32);
+    let act = packed.run_frontend(&gen.textured(5)).unwrap().to_f32();
+    let elems = packed.act_elems();
+    let mut batch8 = Vec::with_capacity(8 * elems);
+    for i in 0..8u32 {
+        batch8.extend(packed.run_frontend(&gen.textured(i)).unwrap().to_f32());
+    }
+
+    let mut b = Bencher::new("backend");
+    let s_packed1 = b
+        .bench("native_xnor_b1", || {
+            bb(packed.run_backend(bb(&act), 1).unwrap());
+        })
+        .clone();
+    let s_dense1 = b
+        .bench("dense_reference_b1", || {
+            bb(dense.run_backend(bb(&act), 1).unwrap());
+        })
+        .clone();
+    let s_packed8 = b
+        .bench("native_xnor_b8", || {
+            bb(packed.run_backend(bb(&batch8), 8).unwrap());
+        })
+        .clone();
+    let s_dense8 = b
+        .bench("dense_reference_b8", || {
+            bb(dense.run_backend(bb(&batch8), 8).unwrap());
+        })
+        .clone();
+
+    let speedup_b1 = s_dense1.mean_ns / s_packed1.mean_ns;
+    let fps_packed8 = 8.0 / (s_packed8.mean_ns / 1e9);
+    let fps_dense8 = 8.0 / (s_dense8.mean_ns / 1e9);
+    println!(
+        "\n→ XNOR-popcount vs dense reference: {speedup_b1:.1}× at b=1, \
+         {:.1}× at b=8 ({fps_packed8:.0} vs {fps_dense8:.0} frames/s)",
+        s_dense8.mean_ns / s_packed8.mean_ns
+    );
+
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("backend".into())),
+        ("native_b1_ns", Value::Num(s_packed1.mean_ns)),
+        ("dense_b1_ns", Value::Num(s_dense1.mean_ns)),
+        ("speedup_b1", Value::Num(speedup_b1)),
+        ("native_b8_ns", Value::Num(s_packed8.mean_ns)),
+        ("dense_b8_ns", Value::Num(s_dense8.mean_ns)),
+        (
+            "speedup_b8",
+            Value::Num(s_dense8.mean_ns / s_packed8.mean_ns),
+        ),
+        ("native_b8_fps", Value::Num(fps_packed8)),
+        ("dense_b8_fps", Value::Num(fps_dense8)),
+    ]);
+    let path = "BENCH_backend.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    b.finish();
+}

@@ -1,10 +1,11 @@
-//! PJRT runtime benches: AOT executable latency at each batch size plus
-//! the full pipeline serve throughput — the end-to-end numbers quoted in
-//! EXPERIMENTS.md §Perf.  Skipped (with a notice) when artifacts are
-//! absent.
+//! PJRT runtime benches (feature `pjrt`): AOT executable latency at each
+//! batch size plus the full pipeline serve throughput — the end-to-end
+//! numbers quoted in EXPERIMENTS.md §Perf.  Skipped (with a notice) when
+//! artifacts are absent.
 
 use std::sync::Arc;
 
+use pixelmtj::backend::PjrtBackend;
 use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
 use pixelmtj::coordinator::Pipeline;
 use pixelmtj::runtime::Runtime;
@@ -50,16 +51,18 @@ fn main() {
         });
     }
 
-    // End-to-end pipeline throughput (64 frames per iteration).
+    // End-to-end pipeline throughput (64 frames per iteration) through
+    // the PJRT backend behind the InferenceBackend trait.
     let hw = HwConfig::load_or_default(artifacts);
     let weights =
         FirstLayerWeights::from_golden(artifacts.join("golden.json")).unwrap();
     let mut cfg = PipelineConfig::default();
     cfg.sparse_coding = SparseCoding::Rle;
+    let backend = Arc::new(PjrtBackend::from_runtime(runtime.clone()).unwrap());
     let pipeline = Pipeline::new(
         cfg,
         PixelArraySim::new(hw.clone(), weights),
-        runtime.clone(),
+        backend,
     )
     .unwrap();
     let gen = SceneGen::new(3, 32, 32);

@@ -1,0 +1,194 @@
+//! Pluggable inference backends (the L3 dispatch layer).
+//!
+//! The serving pipeline talks to the classifier through the
+//! [`InferenceBackend`] trait instead of a concrete runtime, so the same
+//! coordinator code drives:
+//!
+//! * [`NativeBackend`] — the default: a pure-Rust engine that exploits the
+//!   paper's *binary* first-layer activations (Hoyer-regularized BAyNN,
+//!   §2.4) by packing them into `u64` lanes and evaluating the classifier
+//!   head with XNOR-popcount inner loops.  No Python, no artifacts, no
+//!   XLA — it runs anywhere the crate compiles.
+//! * `PjrtBackend` (feature `pjrt`) — the PJRT/XLA runtime executing the
+//!   AOT-compiled artifacts (`artifacts/*.hlo.txt`), i.e. the original
+//!   `runtime::Runtime` refactored behind the trait.
+//!
+//! Selection is threaded through [`crate::config::PipelineConfig::backend`]
+//! and the `--backend native|pjrt` CLI flag; [`create`] and [`auto`] are
+//! the two construction paths.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::{NativeBackend, NativeModel, NativePath};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{BackendKind, HwConfig, PipelineConfig};
+use crate::sensor::{ActivationMap, FirstLayerWeights, Frame};
+
+/// A classifier backend for the serving pipeline.
+///
+/// The pipeline's sensor workers produce dense `{0,1}` activation buffers
+/// (the sensor→backend link payload after decode); `run_backend` turns a
+/// batch of them into logits.  `run_frontend` exposes the backend's own
+/// first-layer path (ideal comparator) for validation and full-model
+/// flows that bypass the sensor simulator.
+pub trait InferenceBackend: Send + Sync {
+    /// Short identifier ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable model/arch description for banners and reports.
+    fn arch(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Per-frame activation tensor geometry `(channels, height, width)`.
+    fn act_shape(&self) -> [usize; 3];
+
+    /// Flattened per-frame activation element count.
+    fn act_elems(&self) -> usize {
+        let [c, h, w] = self.act_shape();
+        c * h * w
+    }
+
+    /// Number of output classes per frame.
+    fn num_classes(&self) -> usize;
+
+    /// Warm up everything needed to serve the given batch sizes.
+    fn preload(&self, batches: &[usize]) -> Result<()>;
+
+    /// First layer on a raw frame with the ideal comparator.
+    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap>;
+
+    /// Classify `batch` frames of dense `{0,1}` activations laid out
+    /// contiguously (`batch × act_elems`); returns `batch × num_classes`
+    /// logits in the same order.
+    fn run_backend(&self, acts: &[f32], batch: usize) -> Result<Vec<f32>>;
+}
+
+/// First-layer weights for backend construction: the AOT golden export
+/// when present, deterministic synthetic weights when *absent* (so the
+/// native path serves without any artifacts).  A golden.json that exists
+/// but fails to parse is a hard error — silently substituting synthetic
+/// weights for a corrupt trained export would poison every downstream
+/// number.
+pub fn load_weights(
+    artifacts_dir: &Path,
+    hw: &HwConfig,
+) -> Result<FirstLayerWeights> {
+    let path = artifacts_dir.join("golden.json");
+    if path.exists() {
+        FirstLayerWeights::from_golden(&path)
+            .with_context(|| format!("parsing {}", path.display()))
+    } else {
+        Ok(FirstLayerWeights::synthetic(
+            hw.network.first_channels,
+            hw.network.in_channels,
+            hw.network.kernel_size,
+            1,
+        ))
+    }
+}
+
+/// Build the backend selected by `cfg.backend`.  `weights` seeds the
+/// native path's first layer (pass the same tensor the sensor sim uses,
+/// e.g. via [`load_weights`] — loading once keeps them in sync); the
+/// PJRT path carries its weights inside the AOT artifacts and ignores it.
+pub fn create(
+    kind: BackendKind,
+    hw: &HwConfig,
+    cfg: &PipelineConfig,
+    weights: FirstLayerWeights,
+) -> Result<Arc<dyn InferenceBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new(
+            hw.clone(),
+            weights,
+            cfg.sensor_height,
+            cfg.sensor_width,
+            cfg.sensor_workers,
+        ))),
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Arc::new(PjrtBackend::new(Path::new(&cfg.artifacts_dir))?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "backend 'pjrt' is not compiled in — rebuild with \
+                     `--features pjrt` or use `--backend native`"
+                )
+            }
+        }
+    }
+}
+
+/// Best-available backend for an artifacts directory: PJRT when compiled
+/// in and artifacts exist, the native engine otherwise.  `weights` feeds
+/// the native fallback (see [`create`] for the sync rationale).
+pub fn auto(
+    artifacts_dir: &Path,
+    hw: &HwConfig,
+    sensor_height: usize,
+    sensor_width: usize,
+    workers: usize,
+    weights: FirstLayerWeights,
+) -> Result<Arc<dyn InferenceBackend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_dir.join("meta.json").exists() {
+            match PjrtBackend::new(artifacts_dir) {
+                Ok(b) => return Ok(Arc::new(b)),
+                Err(e) => eprintln!(
+                    "note: pjrt backend unavailable ({e:#}); \
+                     falling back to native"
+                ),
+            }
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
+    Ok(Arc::new(NativeBackend::new(
+        hw.clone(),
+        weights,
+        sensor_height,
+        sensor_width,
+        workers,
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_weights() -> FirstLayerWeights {
+        FirstLayerWeights::synthetic(32, 3, 3, 1)
+    }
+
+    #[test]
+    fn auto_falls_back_to_native_without_artifacts() {
+        let hw = HwConfig::default();
+        let b = auto(Path::new("/nonexistent"), &hw, 32, 32, 2, test_weights())
+            .unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.act_shape(), [32, 15, 15]);
+        assert_eq!(b.act_elems(), 32 * 15 * 15);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_kind_errors_cleanly_when_not_compiled() {
+        let hw = HwConfig::default();
+        let cfg = PipelineConfig::default();
+        let err =
+            create(BackendKind::Pjrt, &hw, &cfg, test_weights()).err().unwrap();
+        assert!(format!("{err}").contains("--features pjrt"));
+    }
+}

@@ -1,0 +1,464 @@
+//! Native bit-packed XNOR BNN inference engine.
+//!
+//! The in-pixel first layer emits *binary* activations, so the classifier
+//! head can use the standard XNOR-Net trick: encode ±1 values as single
+//! bits packed into `u64` lanes and evaluate each binary dot product as
+//!
+//! ```text
+//!   dot(x, w) = n − 2 · popcount(x ⊕ w)        x, w ∈ {0,1}ⁿ ≙ {−1,+1}ⁿ
+//! ```
+//!
+//! which turns 64 multiply-accumulates into one XOR + one `count_ones`.
+//! Every layer's preactivation is an exact integer, and f32 represents
+//! integers exactly up to 2²⁴ ≫ any fan-in here, so the dense ±1.0 f32
+//! reference path ([`NativeModel::infer_dense`]) is *bit-identical* to the
+//! packed path — the parity suite (`tests/backend_parity.rs`) and the
+//! `validate` check pin that equivalence, and `benches/backend.rs`
+//! measures the speedup.
+//!
+//! The classifier head is a synthetic binary MLP (deterministic from a
+//! seed): the repo's trained export covers only the fused first layer
+//! (`golden.json`), so the head stands in for the AOT backend the way
+//! `FirstLayerWeights::synthetic` stands in for the golden weights.
+//! Everything downstream — trait, packing, batching, parallelism — is
+//! independent of where the weights come from.
+
+use anyhow::{ensure, Result};
+
+use crate::config::HwConfig;
+use crate::device::rng::CounterRng;
+use crate::sensor::{
+    ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+};
+
+use super::InferenceBackend;
+
+/// Which inner-loop implementation `run_backend` uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativePath {
+    /// Bit-packed XNOR-popcount lanes (the fast path, default).
+    Packed,
+    /// Dense ±1.0 f32 matmuls over the same weights (parity reference).
+    DenseRef,
+}
+
+/// `⌈bits / 64⌉`: `u64` words needed for a packed row of `bits` lanes.
+#[inline]
+fn words_for(bits: usize) -> usize {
+    bits / 64 + usize::from(bits % 64 != 0)
+}
+
+/// Pack `{0,1}` activations (as f32) into `u64` lanes, bit = 1 ⇔ +1.
+/// Padding bits stay zero, matching the zero padding in weight rows so
+/// the XOR contributes nothing there.
+fn pack_f32(xs: &[f32]) -> Vec<u64> {
+    let mut out = vec![0u64; words_for(xs.len())];
+    for (i, &x) in xs.iter().enumerate() {
+        if x > 0.5 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// One binary dense layer: `out_features × in_features` sign weights
+/// stored packed only (bit = 1 ⇔ +1 — the dense reference path decodes
+/// ±1.0 on the fly rather than keeping a second multi-MB weight copy),
+/// plus a per-output integer threshold for binarization.
+pub struct BinaryDense {
+    pub in_features: usize,
+    pub out_features: usize,
+    /// Words per packed row: ⌈in_features / 64⌉.
+    words: usize,
+    /// Packed rows, `out_features × words`.
+    w_packed: Vec<u64>,
+    /// Binarization threshold on the integer preactivation.
+    thresh: Vec<i32>,
+}
+
+impl BinaryDense {
+    /// Deterministic synthetic layer (weights ±1 uniform, small centred
+    /// thresholds so outputs stay non-degenerate).
+    fn synthetic(in_features: usize, out_features: usize, rng: &mut CounterRng) -> Self {
+        let words = words_for(in_features);
+        let mut w_packed = vec![0u64; out_features * words];
+        for o in 0..out_features {
+            for i in 0..in_features {
+                if rng.next_uniform() < 0.5 {
+                    w_packed[o * words + i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        let thresh = (0..out_features)
+            .map(|_| (rng.next_uniform() * 5.0) as i32 - 2)
+            .collect();
+        Self { in_features, out_features, words, w_packed, thresh }
+    }
+
+    /// Weight of (output `o`, input `i`) as ±1.0.
+    #[inline]
+    fn weight(&self, o: usize, i: usize) -> f32 {
+        if (self.w_packed[o * self.words + i / 64] >> (i % 64)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Integer preactivation of output `o` over packed ±1 inputs.
+    #[inline]
+    fn preact_packed(&self, o: usize, x: &[u64]) -> i32 {
+        let row = &self.w_packed[o * self.words..(o + 1) * self.words];
+        let mut differing = 0u32;
+        for (&xw, &ww) in x.iter().zip(row.iter()) {
+            differing += (xw ^ ww).count_ones();
+        }
+        self.in_features as i32 - 2 * differing as i32
+    }
+
+    /// f32 preactivation of output `o` over dense ±1.0 inputs, via
+    /// multiply-accumulate (no XNOR/popcount).  Every partial sum is an
+    /// integer with |sum| ≤ in_features < 2²⁴, so this is exact and
+    /// equals `preact_packed` for matching inputs.
+    #[inline]
+    fn preact_dense(&self, o: usize, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (i, &xi) in x.iter().enumerate() {
+            acc += xi * self.weight(o, i);
+        }
+        acc
+    }
+}
+
+/// The native classifier: binarized hidden layers + an affine logit head.
+pub struct NativeModel {
+    /// Per-frame input geometry `(channels, height, width)`.
+    pub act_shape: [usize; 3],
+    hidden: Vec<BinaryDense>,
+    head: BinaryDense,
+    head_scale: Vec<f32>,
+    head_bias: Vec<f32>,
+}
+
+impl NativeModel {
+    /// Deterministic synthetic model for the given activation geometry.
+    pub fn synthetic(
+        act_shape: [usize; 3],
+        hidden_dims: &[usize],
+        num_classes: usize,
+        seed: u32,
+    ) -> Self {
+        let mut rng = CounterRng::new(seed, 91);
+        let mut dims = vec![act_shape.iter().product::<usize>()];
+        dims.extend_from_slice(hidden_dims);
+        let hidden = dims
+            .windows(2)
+            .map(|d| BinaryDense::synthetic(d[0], d[1], &mut rng))
+            .collect();
+        let head =
+            BinaryDense::synthetic(*dims.last().unwrap(), num_classes, &mut rng);
+        let head_scale =
+            (0..num_classes).map(|_| 0.05 + rng.next_uniform() * 0.1).collect();
+        let head_bias =
+            (0..num_classes).map(|_| (rng.next_uniform() - 0.5) * 0.5).collect();
+        Self { act_shape, hidden, head, head_scale, head_bias }
+    }
+
+    pub fn act_elems(&self) -> usize {
+        self.act_shape.iter().product()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.head.out_features
+    }
+
+    /// XNOR-popcount inference of one frame's `{0,1}` activations.
+    pub fn infer_packed(&self, act: &[f32], logits: &mut [f32]) {
+        let mut cur = pack_f32(act);
+        for layer in &self.hidden {
+            let mut next = vec![0u64; words_for(layer.out_features)];
+            for o in 0..layer.out_features {
+                if layer.preact_packed(o, &cur) >= layer.thresh[o] {
+                    next[o / 64] |= 1u64 << (o % 64);
+                }
+            }
+            cur = next;
+        }
+        for o in 0..self.head.out_features {
+            logits[o] = self.head.preact_packed(o, &cur) as f32
+                * self.head_scale[o]
+                + self.head_bias[o];
+        }
+    }
+
+    /// Dense ±1.0 f32 reference over the same weights (bit-identical to
+    /// [`Self::infer_packed`]; see the module docs for why).
+    pub fn infer_dense(&self, act: &[f32], logits: &mut [f32]) {
+        let mut cur: Vec<f32> =
+            act.iter().map(|&a| if a > 0.5 { 1.0 } else { -1.0 }).collect();
+        for layer in &self.hidden {
+            let mut next = vec![0.0f32; layer.out_features];
+            for (o, slot) in next.iter_mut().enumerate() {
+                *slot = if layer.preact_dense(o, &cur) >= layer.thresh[o] as f32
+                {
+                    1.0
+                } else {
+                    -1.0
+                };
+            }
+            cur = next;
+        }
+        for o in 0..self.head.out_features {
+            logits[o] = self.head.preact_dense(o, &cur) * self.head_scale[o]
+                + self.head_bias[o];
+        }
+    }
+}
+
+/// Pure-Rust inference backend: sensor-sim frontend + bit-packed XNOR
+/// classifier head, batch-parallel across `std::thread` workers.
+pub struct NativeBackend {
+    sim: PixelArraySim,
+    model: NativeModel,
+    workers: usize,
+    path: NativePath,
+}
+
+impl NativeBackend {
+    /// Hidden-layer widths of the synthetic classifier head.
+    pub const DEFAULT_HIDDEN: &'static [usize] = &[256];
+    /// Classes in the synthetic 10-class corpus (matches the AOT export).
+    pub const DEFAULT_CLASSES: usize = 10;
+    /// Default head-weight seed (any fixed value; determinism is what
+    /// matters for reproducible serving).
+    pub const MODEL_SEED: u32 = 0x0B17_BA5E;
+
+    pub fn new(
+        hw: HwConfig,
+        weights: FirstLayerWeights,
+        sensor_height: usize,
+        sensor_width: usize,
+        workers: usize,
+    ) -> Self {
+        Self::with_model_seed(
+            hw,
+            weights,
+            sensor_height,
+            sensor_width,
+            workers,
+            Self::MODEL_SEED,
+        )
+    }
+
+    pub fn with_model_seed(
+        hw: HwConfig,
+        weights: FirstLayerWeights,
+        sensor_height: usize,
+        sensor_width: usize,
+        workers: usize,
+        model_seed: u32,
+    ) -> Self {
+        let sim = PixelArraySim::new(hw, weights);
+        let (oh, ow) = sim.out_hw(sensor_height, sensor_width);
+        let c_out = sim.weights.c_out;
+        let model = NativeModel::synthetic(
+            [c_out, oh, ow],
+            Self::DEFAULT_HIDDEN,
+            Self::DEFAULT_CLASSES,
+            model_seed,
+        );
+        Self { sim, model, workers: workers.max(1), path: NativePath::Packed }
+    }
+
+    /// Switch between the packed path and the dense reference path.
+    pub fn with_path(mut self, path: NativePath) -> Self {
+        self.path = path;
+        self
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    #[inline]
+    fn infer_one(&self, act: &[f32], logits: &mut [f32]) {
+        match self.path {
+            NativePath::Packed => self.model.infer_packed(act, logits),
+            NativePath::DenseRef => self.model.infer_dense(act, logits),
+        }
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        match self.path {
+            NativePath::Packed => "native",
+            NativePath::DenseRef => "native-dense",
+        }
+    }
+
+    fn arch(&self) -> String {
+        let mut dims = vec![self.model.act_elems()];
+        dims.extend(self.model.hidden.iter().map(|l| l.out_features));
+        dims.push(self.model.num_classes());
+        format!(
+            "xnor-mlp {}",
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("-")
+        )
+    }
+
+    fn act_shape(&self) -> [usize; 3] {
+        self.model.act_shape
+    }
+
+    fn num_classes(&self) -> usize {
+        self.model.num_classes()
+    }
+
+    fn preload(&self, _batches: &[usize]) -> Result<()> {
+        Ok(()) // nothing to compile: weights are resident
+    }
+
+    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap> {
+        let (oh, ow) = self.sim.out_hw(frame.height, frame.width);
+        let [_, mh, mw] = self.model.act_shape;
+        ensure!(
+            (oh, ow) == (mh, mw),
+            "frame {}×{} maps to {oh}×{ow} activations; backend built for {mh}×{mw}",
+            frame.height,
+            frame.width,
+        );
+        Ok(self.sim.capture(frame, CaptureMode::Ideal).0)
+    }
+
+    fn run_backend(&self, acts: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let elems = self.model.act_elems();
+        ensure!(
+            acts.len() == batch * elems,
+            "activation buffer has {} elements, want batch {batch} × {elems}",
+            acts.len()
+        );
+        let nc = self.model.num_classes();
+        let mut out = vec![0.0f32; batch * nc];
+        let workers = self.workers.min(batch.max(1));
+        if workers <= 1 || batch <= 1 {
+            for (item, logits) in acts.chunks(elems).zip(out.chunks_mut(nc)) {
+                self.infer_one(item, logits);
+            }
+            return Ok(out);
+        }
+        let per = batch.div_euclid(workers) + usize::from(batch % workers != 0);
+        std::thread::scope(|s| {
+            for (in_chunk, out_chunk) in
+                acts.chunks(per * elems).zip(out.chunks_mut(per * nc))
+            {
+                let _worker = s.spawn(move || {
+                    for (item, logits) in
+                        in_chunk.chunks(elems).zip(out_chunk.chunks_mut(nc))
+                    {
+                        self.infer_one(item, logits);
+                    }
+                });
+            }
+            // handles join implicitly at scope exit
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_sets_expected_bits() {
+        let mut xs = vec![0.0f32; 70];
+        xs[0] = 1.0;
+        xs[63] = 1.0;
+        xs[64] = 1.0;
+        let packed = pack_f32(&xs);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed[0], (1u64 << 63) | 1);
+        assert_eq!(packed[1], 1);
+    }
+
+    #[test]
+    fn xnor_popcount_matches_naive_dot() {
+        let mut rng = CounterRng::new(3, 8);
+        let layer = BinaryDense::synthetic(130, 5, &mut rng);
+        // Random {0,1} input, checked against the ±1 naive dot product.
+        let mut irng = CounterRng::new(9, 2);
+        let act: Vec<f32> = (0..130)
+            .map(|_| if irng.next_uniform() < 0.3 { 1.0 } else { 0.0 })
+            .collect();
+        let packed = pack_f32(&act);
+        let pm: Vec<f32> =
+            act.iter().map(|&a| if a > 0.5 { 1.0 } else { -1.0 }).collect();
+        for o in 0..5 {
+            let naive: i32 = (0..130)
+                .map(|i| {
+                    let x = if act[i] > 0.5 { 1i32 } else { -1 };
+                    x * layer.weight(o, i) as i32
+                })
+                .sum();
+            assert_eq!(layer.preact_packed(o, &packed), naive, "output {o}");
+            assert_eq!(layer.preact_dense(o, &pm) as i32, naive);
+        }
+    }
+
+    #[test]
+    fn packed_and_dense_paths_bit_identical() {
+        let model = NativeModel::synthetic([8, 5, 5], &[64, 32], 10, 11);
+        let mut rng = CounterRng::new(21, 4);
+        for trial in 0..10 {
+            let act: Vec<f32> = (0..model.act_elems())
+                .map(|_| if rng.next_uniform() < 0.25 { 1.0 } else { 0.0 })
+                .collect();
+            let mut a = vec![0.0f32; 10];
+            let mut b = vec![0.0f32; 10];
+            model.infer_packed(&act, &mut a);
+            model.infer_dense(&act, &mut b);
+            assert_eq!(a, b, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn backend_shapes_and_determinism() {
+        let hw = HwConfig::default();
+        let w = FirstLayerWeights::synthetic(32, 3, 3, 2);
+        let backend = NativeBackend::new(hw, w, 32, 32, 2);
+        assert_eq!(backend.act_shape(), [32, 15, 15]);
+        assert_eq!(backend.num_classes(), 10);
+        assert!(backend.arch().starts_with("xnor-mlp"));
+        let act = vec![0.0f32; backend.act_elems()];
+        let x = backend.run_backend(&act, 1).unwrap();
+        let y = backend.run_backend(&act, 1).unwrap();
+        assert_eq!(x, y);
+        assert_eq!(x.len(), 10);
+    }
+
+    #[test]
+    fn batched_equals_sequential_across_worker_counts() {
+        let hw = HwConfig::default();
+        let w = FirstLayerWeights::synthetic(16, 3, 3, 5);
+        let mut rng = CounterRng::new(33, 6);
+        let b1 = NativeBackend::new(hw.clone(), w.clone(), 20, 20, 1);
+        let b4 = NativeBackend::new(hw, w, 20, 20, 4);
+        let elems = b1.act_elems();
+        let batch = 7usize;
+        let acts: Vec<f32> = (0..batch * elems)
+            .map(|_| if rng.next_uniform() < 0.2 { 1.0 } else { 0.0 })
+            .collect();
+        let seq = b1.run_backend(&acts, batch).unwrap();
+        let par = b4.run_backend(&acts, batch).unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn run_backend_rejects_bad_lengths() {
+        let hw = HwConfig::default();
+        let w = FirstLayerWeights::synthetic(8, 3, 3, 1);
+        let backend = NativeBackend::new(hw, w, 16, 16, 1);
+        assert!(backend.run_backend(&[0.0; 3], 1).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! PJRT implementation of [`InferenceBackend`] (feature `pjrt`): the
+//! original `runtime::Runtime` serving path refactored behind the trait.
+//! Executes the AOT artifacts (`artifacts/*.hlo.txt`) on the PJRT CPU
+//! client; requires `meta.json` for shapes and batch inventory.
+
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::ArtifactMeta;
+use crate::runtime::Runtime;
+use crate::sensor::{ActivationMap, Frame};
+
+use super::InferenceBackend;
+
+/// PJRT/XLA backend over the AOT artifact set.
+pub struct PjrtBackend {
+    runtime: Arc<Runtime>,
+    meta: ArtifactMeta,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        Self::from_runtime(Arc::new(Runtime::cpu(artifacts_dir)?))
+    }
+
+    /// Wrap an existing runtime (shares its executable cache).
+    pub fn from_runtime(runtime: Arc<Runtime>) -> Result<Self> {
+        let meta = runtime
+            .meta
+            .as_ref()
+            .ok_or_else(|| {
+                anyhow!("artifacts meta.json missing — run `make artifacts`")
+            })?
+            .clone();
+        ensure!(
+            meta.act_shape.len() == 4 && meta.img_shape.len() == 4,
+            "meta.json shapes must be rank-4 (batch, c, h, w)"
+        );
+        Ok(Self { runtime, meta })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn arch(&self) -> String {
+        format!("{} ({})", self.meta.arch, self.runtime.platform())
+    }
+
+    fn act_shape(&self) -> [usize; 3] {
+        [self.meta.act_shape[1], self.meta.act_shape[2], self.meta.act_shape[3]]
+    }
+
+    fn num_classes(&self) -> usize {
+        self.meta.num_classes
+    }
+
+    fn preload(&self, batches: &[usize]) -> Result<()> {
+        self.runtime
+            .preload(batches)
+            .context("preloading AOT executables")
+    }
+
+    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap> {
+        ensure!(
+            [frame.channels, frame.height, frame.width]
+                == [
+                    self.meta.img_shape[1],
+                    self.meta.img_shape[2],
+                    self.meta.img_shape[3]
+                ],
+            "frame {}×{}×{} does not match artifact img shape {:?}",
+            frame.channels,
+            frame.height,
+            frame.width,
+            self.meta.img_shape
+        );
+        let exe = self.runtime.load("frontend_b1")?;
+        let shape: Vec<i64> =
+            self.meta.img_shape.iter().map(|&d| d as i64).collect();
+        let out = exe.run_f32(&[(&frame.data, &shape)])?;
+        ensure!(!out.is_empty(), "frontend_b1 returned no outputs");
+        let [c, h, w] = self.act_shape();
+        ensure!(
+            out[0].len() == c * h * w,
+            "frontend_b1 returned {} elements, want {}",
+            out[0].len(),
+            c * h * w
+        );
+        let bits = out[0].iter().map(|&x| x > 0.5).collect();
+        Ok(ActivationMap { channels: c, height: h, width: w, bits, seq: frame.seq })
+    }
+
+    fn run_backend(&self, acts: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let elems = self.act_elems();
+        ensure!(
+            acts.len() == batch * elems,
+            "activation buffer has {} elements, want batch {batch} × {elems}",
+            acts.len()
+        );
+        let exe = self.runtime.load(&format!("backend_b{batch}"))?;
+        let mut shape: Vec<i64> =
+            self.meta.act_shape.iter().map(|&d| d as i64).collect();
+        shape[0] = batch as i64;
+        let mut out = exe.run_f32(&[(acts, &shape)])?;
+        ensure!(!out.is_empty(), "backend_b{batch} returned no outputs");
+        let logits = out.swap_remove(0);
+        ensure!(
+            logits.len() == batch * self.meta.num_classes,
+            "backend_b{batch} returned {} logits, want {}",
+            logits.len(),
+            batch * self.meta.num_classes
+        );
+        Ok(logits)
+    }
+}

@@ -228,6 +228,35 @@ impl HwConfig {
     }
 }
 
+/// Which inference backend serves the classifier head (see
+/// `crate::backend`): the native bit-packed XNOR engine (default, no
+/// artifacts or XLA needed) or the PJRT runtime over the AOT artifacts
+/// (requires the `pjrt` cargo feature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Self::Native),
+            "pjrt" => Ok(Self::Pjrt),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (expected 'native' or 'pjrt')"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Sensor→backend link encoding (paper §3.2 discusses CSR-style schemes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparseCoding {
@@ -281,6 +310,8 @@ pub struct PipelineConfig {
     pub analog_noise: bool,
     /// Sparse encoding for the sensor→backend link.
     pub sparse_coding: SparseCoding,
+    /// Inference backend serving the classifier head.
+    pub backend: BackendKind,
 }
 
 impl Default for PipelineConfig {
@@ -296,6 +327,7 @@ impl Default for PipelineConfig {
             mtj_noise: true,
             analog_noise: false,
             sparse_coding: SparseCoding::Csr,
+            backend: BackendKind::Native,
         }
     }
 }
@@ -339,10 +371,16 @@ impl PipelineConfig {
                 as usize,
             mtj_noise: getb("mtj_noise", d.mtj_noise)?,
             analog_noise: getb("analog_noise", d.analog_noise)?,
-            sparse_coding: v
-                .get("sparse_coding")
-                .and_then(|x| SparseCoding::parse(x.as_str()?))
-                .unwrap_or(d.sparse_coding),
+            // Enum fields default when absent but reject invalid values —
+            // silently falling back would serve the wrong codec/backend.
+            sparse_coding: match v.get("sparse_coding") {
+                Ok(x) => SparseCoding::parse(x.as_str()?)?,
+                Err(_) => d.sparse_coding,
+            },
+            backend: match v.get("backend") {
+                Ok(x) => BackendKind::parse(x.as_str()?)?,
+                Err(_) => d.backend,
+            },
         })
     }
 }
@@ -441,11 +479,36 @@ mod tests {
         let dir = std::env::temp_dir().join("pixelmtj_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("pipe.json");
-        std::fs::write(&p, r#"{"sensor_height": 224, "sparse_coding": "rle"}"#)
-            .unwrap();
+        std::fs::write(
+            &p,
+            r#"{"sensor_height": 224, "sparse_coding": "rle", "backend": "pjrt"}"#,
+        )
+        .unwrap();
         let cfg = PipelineConfig::from_json_file(&p).unwrap();
         assert_eq!(cfg.sensor_height, 224);
         assert_eq!(cfg.sparse_coding, SparseCoding::Rle);
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
         assert_eq!(cfg.queue_depth, PipelineConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn backend_kind_parse_and_name() {
+        for s in ["native", "pjrt"] {
+            assert_eq!(BackendKind::parse(s).unwrap().name(), s);
+        }
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(PipelineConfig::default().backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn pipeline_config_rejects_invalid_backend_value() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(&p, r#"{"backend": "Pjrt"}"#).unwrap();
+        assert!(
+            PipelineConfig::from_json_file(&p).is_err(),
+            "typo'd backend value must error, not silently default"
+        );
     }
 }

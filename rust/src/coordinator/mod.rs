@@ -2,9 +2,12 @@
 //!
 //! * [`sparse`] — lossless activation codecs for the sensor→backend link
 //!   (dense bitmap / CSR / Golomb-Rice RLE) with exact bit accounting
-//! * [`batcher`] — dynamic batching policy over the AOT executable sizes
+//! * [`batcher`] — dynamic batching policy over the configured batch sizes
+//!   (for PJRT these are the AOT executable shapes; the native backend
+//!   accepts any size and uses the same policy for throughput)
 //! * [`pipeline`] — the threaded frame-serving pipeline (source →
-//!   sensor workers → link → batcher → PJRT backend → results)
+//!   sensor workers → link → batcher → pluggable inference backend →
+//!   results)
 
 pub mod batcher;
 pub mod pipeline;

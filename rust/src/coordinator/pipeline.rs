@@ -5,13 +5,14 @@
 //!     (backpressure)       (PixelArraySim capture)      │
 //!                                                       ▼
 //!  results ◄── backend executor ◄── dynamic batcher ◄───┘
-//!              (PJRT, AOT artifacts)   ({1,8} + timeout)
+//!       (InferenceBackend dispatch)    ({1,8} + timeout)
 //! ```
 //!
 //! Threading: std threads + bounded `mpsc::sync_channel`s (the offline
-//! registry has no tokio).  The PJRT CPU client parallelizes internally,
-//! so one backend executor thread suffices; sensor simulation is the
-//! CPU-bound stage and gets `sensor_workers` threads.
+//! registry has no tokio).  The backend parallelizes internally (PJRT's
+//! thread pool, or the native engine's batch workers), so one backend
+//! executor thread suffices; sensor simulation is the CPU-bound stage and
+//! gets `sensor_workers` threads.
 //!
 //! Everything is deterministic given the frame sequence numbers: capture
 //! noise derives from `frame.seq`, so a re-run reproduces identical
@@ -23,11 +24,11 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::backend::InferenceBackend;
 use crate::config::PipelineConfig;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::sparse;
 use crate::metrics::PipelineMetrics;
-use crate::runtime::Runtime;
 use crate::sensor::{CaptureMode, Frame, PixelArraySim};
 
 /// One classified frame.
@@ -61,7 +62,7 @@ struct Activation {
 pub struct Pipeline {
     cfg: PipelineConfig,
     sim: Arc<PixelArraySim>,
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn InferenceBackend>,
     metrics: Arc<PipelineMetrics>,
 }
 
@@ -69,17 +70,21 @@ impl Pipeline {
     pub fn new(
         cfg: PipelineConfig,
         sim: PixelArraySim,
-        runtime: Arc<Runtime>,
+        backend: Arc<dyn InferenceBackend>,
     ) -> Result<Self> {
-        runtime
+        backend
             .preload(&cfg.batch_sizes)
-            .context("preloading backend executables")?;
+            .with_context(|| format!("preloading {} backend", backend.name()))?;
         Ok(Self {
             cfg,
             sim: Arc::new(sim),
-            runtime,
+            backend,
             metrics: Arc::new(PipelineMetrics::default()),
         })
+    }
+
+    pub fn backend(&self) -> &Arc<dyn InferenceBackend> {
+        &self.backend
     }
 
     pub fn metrics(&self) -> Arc<PipelineMetrics> {
@@ -217,31 +222,21 @@ impl Pipeline {
         batch: Vec<Activation>,
         results: &mut Vec<Classification>,
     ) -> Result<()> {
-        let meta = self
-            .runtime
-            .meta
-            .as_ref()
-            .ok_or_else(|| anyhow!("artifacts meta.json missing"))?;
         let b = batch.len();
-        let exe = self.runtime.load(&format!("backend_b{b}"))?;
-        let act_elems: usize = meta.act_shape[1..].iter().product();
+        let act_elems = self.backend.act_elems();
         let mut input = Vec::with_capacity(b * act_elems);
         for a in &batch {
             debug_assert_eq!(a.dense.len(), act_elems);
             input.extend_from_slice(&a.dense);
         }
-        let mut shape: Vec<i64> =
-            meta.act_shape.iter().map(|&d| d as i64).collect();
-        shape[0] = b as i64;
 
         let t_exec = Instant::now();
-        let out = exe.run_f32(&[(&input, &shape)])?;
+        let logits_all = self.backend.run_backend(&input, b)?;
         self.metrics.backend_latency.record(t_exec);
         self.metrics.batches.inc();
         self.metrics.batch_occupancy_sum.add(b as u64);
 
-        let logits_all = &out[0];
-        let nc = meta.num_classes;
+        let nc = self.backend.num_classes();
         for (i, a) in batch.into_iter().enumerate() {
             let logits = logits_all[i * nc..(i + 1) * nc].to_vec();
             let label = argmax(&logits);

@@ -8,23 +8,31 @@
 //! The crate simulates the full sensor system — VC-MTJ device physics,
 //! the weight-augmented pixel circuit, the analog subtractor with the
 //! paper's tunable threshold-matching scheme, multi-MTJ majority neurons,
-//! and the global-shutter burst read path — and serves frames through the
-//! AOT-compiled JAX/Pallas backend (`artifacts/*.hlo.txt`) via PJRT.
-//! Python never runs on the request path.
+//! and the global-shutter burst read path — and serves frames through a
+//! pluggable inference backend: the native bit-packed XNOR engine by
+//! default (pure Rust, no artifacts), or the AOT-compiled JAX/Pallas
+//! backend (`artifacts/*.hlo.txt`) via PJRT when built with the `pjrt`
+//! feature.  Python never runs on the request path.
 //!
 //! Module map (see DESIGN.md for the experiment index):
 //! * [`config`] — typed configuration, loaded from `artifacts/hwcfg.json`
-//!   (single source of truth shared with the Python build path)
+//!   (single source of truth shared with the Python build path), plus the
+//!   L3 pipeline/backend selection
 //! * [`device`] — VC-MTJ physics: R(V), TMR droop, precessional switching
 //!   probability, multi-device majority neurons, endurance tracking
 //! * [`circuit`] — behavioural pixel/subtractor/readout circuit simulation
 //! * [`sensor`] — pixel array, kernel tiling, global vs rolling shutter
 //! * [`coordinator`] — frame pipeline: scheduler, burst engine, sparse
 //!   encoder, batcher, backend dispatch
+//! * [`backend`] — the `InferenceBackend` trait and its implementations:
+//!   `NativeBackend` (XNOR-popcount over `u64` lanes) and `PjrtBackend`
+//!   (feature `pjrt`)
 //! * [`energy`] — energy / bandwidth / latency accounting (paper §3.2-3.4)
 //! * [`runtime`] — PJRT client wrapper executing the AOT artifacts
+//!   (feature `pjrt`)
 //! * [`metrics`] — counters and run reports
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod circuit;
@@ -32,6 +40,7 @@ pub mod device;
 pub mod energy;
 pub mod metrics;
 pub mod reports;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sensor;
 pub mod util;

@@ -2,20 +2,21 @@
 //!
 //! Subcommands:
 //! * `serve`    — run the frame-serving pipeline on synthetic scenes and
-//!                print throughput/latency metrics
+//!                print throughput/latency metrics (native backend by
+//!                default — no artifacts required)
 //! * `report`   — regenerate a paper table/figure (`report all` for every
 //!                artifact; see DESIGN.md's experiment index)
-//! * `validate` — check the AOT artifacts against the golden vectors
-//! * `info`     — print configuration + artifact inventory
+//! * `validate` — check the golden vectors against the rust stack (and
+//!                the AOT artifacts when built with `--features pjrt`)
+//! * `info`     — print configuration + backend/artifact inventory
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::sync::Arc;
 
-use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::backend::{self, InferenceBackend as _};
+use pixelmtj::config::{BackendKind, HwConfig, PipelineConfig, SparseCoding};
 use pixelmtj::coordinator::Pipeline;
 use pixelmtj::reports::{self, ReportCtx};
-use pixelmtj::runtime::Runtime;
 use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
 use pixelmtj::util::cli::Args;
 
@@ -24,7 +25,8 @@ pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel
 
 USAGE:
   pixelmtj serve    [--frames N] [--workers N] [--coding dense|csr|rle]
-                    [--no-mtj-noise] [--artifacts DIR] [--config FILE]
+                    [--backend native|pjrt] [--no-mtj-noise]
+                    [--artifacts DIR] [--config FILE]
   pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
   pixelmtj validate [--artifacts DIR]
   pixelmtj info     [--artifacts DIR]
@@ -56,10 +58,32 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
+/// First-layer weights via `backend::load_weights` (golden export when
+/// present, synthetic when absent, hard error when corrupt), with a
+/// notice on fallback — the native backend serves either way.
+fn sensor_weights(
+    dir: &std::path::Path,
+    hw: &HwConfig,
+) -> Result<FirstLayerWeights> {
+    let golden = dir.join("golden.json");
+    if !golden.exists() {
+        eprintln!(
+            "note: {} missing — using synthetic first-layer weights",
+            golden.display()
+        );
+    }
+    backend::load_weights(dir, hw)
+}
+
 fn serve(args: &Args) -> Result<()> {
     let frames_n = args.usize_or("frames", 256)?;
     let workers = args.usize_or("workers", 4)?;
     let coding = SparseCoding::parse(&args.str_or("coding", "rle"))?;
+    // Only override the config-file backend when --backend is given.
+    let kind = match args.opt_str("backend") {
+        Some(s) => Some(BackendKind::parse(&s)?),
+        None => None,
+    };
     let no_noise = args.flag("no-mtj-noise");
     let dir = artifacts_dir(args);
     let mut cfg = match args.opt_str("config") {
@@ -71,16 +95,19 @@ fn serve(args: &Args) -> Result<()> {
     cfg.sensor_workers = workers;
     cfg.sparse_coding = coding;
     cfg.mtj_noise = !no_noise;
+    if let Some(kind) = kind {
+        cfg.backend = kind;
+    }
 
     let hw = HwConfig::load_or_default(&dir);
-    let weights = FirstLayerWeights::from_golden(dir.join("golden.json"))
-        .context("loading first-layer weights (run `make artifacts`)")?;
-    let sim = PixelArraySim::new(hw.clone(), weights);
-    let runtime = Arc::new(Runtime::cpu(&dir)?);
+    let weights = sensor_weights(&dir, &hw)?;
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let be = backend::create(cfg.backend, &hw, &cfg, weights)
+        .context("constructing inference backend")?;
     println!(
-        "platform={} arch={} frames={} workers={} coding={}",
-        runtime.platform(),
-        runtime.meta.as_ref().map(|m| m.arch.clone()).unwrap_or_default(),
+        "backend={} arch={} frames={} workers={} coding={}",
+        be.name(),
+        be.arch(),
         frames_n,
         cfg.sensor_workers,
         cfg.sparse_coding.name(),
@@ -93,7 +120,7 @@ fn serve(args: &Args) -> Result<()> {
     );
     let frames: Vec<_> = (0..frames_n as u32).map(|i| gen.textured(i)).collect();
 
-    let pipeline = Pipeline::new(cfg, sim, runtime)?;
+    let pipeline = Pipeline::new(cfg, sim, be)?;
     let report = pipeline.serve(frames)?;
 
     println!(
@@ -147,20 +174,35 @@ fn info(args: &Args) -> Result<()> {
         hw.network.stride,
         hw.network.weight_bits
     );
-    match Runtime::cpu(&dir) {
-        Ok(rt) => {
-            println!("PJRT platform: {}", rt.platform());
-            match &rt.meta {
-                Some(m) => println!(
-                    "artifacts: arch={} img{:?} act{:?} batches{:?}",
-                    m.arch, m.img_shape, m.act_shape, m.batches
-                ),
-                None => println!(
-                    "artifacts: meta.json missing (run `make artifacts`)"
-                ),
-            }
+    let cfg = PipelineConfig::default();
+    // `auto` already constructs (and for pjrt, compiles) the backend; its
+    // arch string carries the platform, so nothing is built twice here.
+    let weights = sensor_weights(&dir, &hw)?;
+    let be = backend::auto(
+        &dir,
+        &hw,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        1,
+        weights,
+    )?;
+    println!(
+        "backend: {} ({}) — act {:?}, {} classes",
+        be.name(),
+        be.arch(),
+        be.act_shape(),
+        be.num_classes()
+    );
+    match pixelmtj::config::ArtifactMeta::from_dir(&dir) {
+        Ok(m) => println!(
+            "artifacts: arch={} img{:?} act{:?} batches{:?}",
+            m.arch, m.img_shape, m.act_shape, m.batches
+        ),
+        Err(_) => {
+            println!("artifacts: meta.json missing (run `make artifacts`)")
         }
-        Err(e) => bail!("PJRT unavailable: {e}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT: not compiled in (build with --features pjrt)");
     Ok(())
 }

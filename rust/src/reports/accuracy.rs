@@ -1,15 +1,18 @@
-//! Accuracy experiments on the AOT-exported network: Table 1 and the
-//! Fig. 8 activation-error sweep, evaluated end-to-end through the rust
-//! sensor simulator + PJRT backend (no Python on the eval path).
+//! Accuracy experiments on the exported network: Table 1 and the Fig. 8
+//! activation-error sweep, evaluated end-to-end through the rust sensor
+//! simulator + the configured inference backend (no Python on the eval
+//! path).  With the `pjrt` feature + artifacts this runs the AOT-exported
+//! classifier; otherwise the native backend's synthetic head stands in
+//! (useful for exercising the flow, not for accuracy claims).
 
 use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::backend::InferenceBackend;
 use crate::config::HwConfig;
 use crate::device::rng;
 use crate::reports::ReportCtx;
-use crate::runtime::Runtime;
 use crate::sensor::{
     ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
 };
@@ -42,27 +45,23 @@ impl EvalSet {
     }
 }
 
-/// Classify activation maps through the AOT backend in batches of 8.
+/// Classify activation maps through the backend in batches of 8 (the
+/// batch shapes every backend serves).
 fn classify(
-    runtime: &Runtime,
+    backend: &dyn InferenceBackend,
     maps: &[ActivationMap],
 ) -> Result<Vec<usize>> {
-    let meta = runtime.meta.as_ref().context("artifacts meta missing")?;
-    let act_elems: usize = meta.act_shape[1..].iter().product();
-    let nc = meta.num_classes;
+    let act_elems = backend.act_elems();
+    let nc = backend.num_classes();
     let mut out = Vec::with_capacity(maps.len());
     let mut i = 0;
     while i < maps.len() {
         let b = if maps.len() - i >= 8 { 8 } else { 1 };
-        let exe = runtime.load(&format!("backend_b{b}"))?;
         let mut input = Vec::with_capacity(b * act_elems);
         for m in &maps[i..i + b] {
             input.extend(m.to_f32());
         }
-        let mut shape: Vec<i64> =
-            meta.act_shape.iter().map(|&d| d as i64).collect();
-        shape[0] = b as i64;
-        let logits = &exe.run_f32(&[(&input, &shape)])?[0];
+        let logits = backend.run_backend(&input, b)?;
         for j in 0..b {
             let row = &logits[j * nc..(j + 1) * nc];
             let label = row
@@ -95,7 +94,7 @@ fn inject_errors(map: &ActivationMap, p10: f64, p01: f64, seed: u32) -> Activati
 
 /// Accuracy of the full pipeline over the eval set.
 pub fn evalset_accuracy(
-    runtime: &Runtime,
+    backend: &dyn InferenceBackend,
     sim: &PixelArraySim,
     eval: &EvalSet,
     mode: CaptureMode,
@@ -111,7 +110,7 @@ pub fn evalset_accuracy(
         sparsity += map.sparsity();
         maps.push(map);
     }
-    let preds = classify(runtime, &maps)?;
+    let preds = classify(backend, &maps)?;
     let correct = preds
         .iter()
         .zip(eval.labels.iter())
@@ -123,21 +122,40 @@ pub fn evalset_accuracy(
     ))
 }
 
-fn setup(ctx: &ReportCtx) -> Result<(Arc<Runtime>, PixelArraySim, EvalSet)> {
+fn setup(
+    ctx: &ReportCtx,
+) -> Result<(Arc<dyn InferenceBackend>, PixelArraySim, EvalSet)> {
     let hw = HwConfig::load_or_default(&ctx.artifacts_dir);
     let weights =
         FirstLayerWeights::from_golden(ctx.artifacts_dir.join("golden.json"))?;
-    let sim = PixelArraySim::new(hw, weights);
-    let runtime = Arc::new(Runtime::cpu(&ctx.artifacts_dir)?);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
     let eval = EvalSet::load(&ctx.artifacts_dir.join("evalset.json"))?;
-    Ok((runtime, sim, eval))
+    let frame = eval.frames.first().context("empty eval set")?;
+    let backend = crate::backend::auto(
+        &ctx.artifacts_dir,
+        &hw,
+        frame.height,
+        frame.width,
+        4,
+        weights,
+    )?;
+    if backend.name().starts_with("native") {
+        eprintln!(
+            "warning: serving the native backend's synthetic classifier \
+             head — accuracy numbers below exercise the flow but are NOT \
+             trained-model measurements (build with --features pjrt + \
+             artifacts for those)"
+        );
+    }
+    Ok((backend, sim, eval))
 }
 
 /// Fig. 8: test accuracy vs binary-activation error percentage.
 pub fn fig8(ctx: &ReportCtx) -> Result<()> {
-    let (runtime, sim, eval) = setup(ctx)?;
+    let (backend, sim, eval) = setup(ctx)?;
+    let backend = backend.as_ref();
     let (base_acc, _) =
-        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)?;
+        evalset_accuracy(backend, &sim, &eval, CaptureMode::Ideal, None)?;
     println!("ideal-comparator accuracy: {:.2} %", base_acc * 100.0);
     println!(
         "\n{:>9} | {:>26} {:>26}",
@@ -147,10 +165,10 @@ pub fn fig8(ctx: &ReportCtx) -> Result<()> {
     let mut rows = Vec::new();
     for &e in &sweep {
         let (acc10, _) = evalset_accuracy(
-            &runtime, &sim, &eval, CaptureMode::Ideal, Some((e, 0.0)),
+            backend, &sim, &eval, CaptureMode::Ideal, Some((e, 0.0)),
         )?;
         let (acc01, _) = evalset_accuracy(
-            &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.0, e)),
+            backend, &sim, &eval, CaptureMode::Ideal, Some((0.0, e)),
         )?;
         println!(
             "{:>9.1} | {:>25.2}% {:>25.2}%",
@@ -179,7 +197,8 @@ pub fn ablation(ctx: &ReportCtx) -> Result<()> {
     use crate::config::SparseCoding;
     use crate::coordinator::sparse;
 
-    let (runtime, _, eval) = setup(ctx)?;
+    let (backend, _, eval) = setup(ctx)?;
+    let backend = backend.as_ref();
     let hw = HwConfig::load_or_default(&ctx.artifacts_dir);
 
     println!("drive-gain ablation (physical circuit + device capture):");
@@ -193,7 +212,7 @@ pub fn ablation(ctx: &ReportCtx) -> Result<()> {
         )?;
         let sim_g = PixelArraySim::new(hw_g, w);
         let (acc, _) = evalset_accuracy(
-            &runtime, &sim_g, &eval, CaptureMode::PhysicalMtj, None,
+            backend, &sim_g, &eval, CaptureMode::PhysicalMtj, None,
         )?;
         println!("{gain:>6.1} {:>9.2}", acc * 100.0);
         gain_rows.push(Value::arr_f64(&[gain, acc * 100.0]));
@@ -251,12 +270,13 @@ pub fn table1(ctx: &ReportCtx) -> Result<()> {
         println!("{net:<11} {ds:<9} {dnn:>8.2} {bnn:>8.2} {sp:>8.2}");
     }
 
-    let (runtime, sim, eval) = setup(ctx)?;
-    let arch = runtime.meta.as_ref().unwrap().arch.clone();
+    let (backend, sim, eval) = setup(ctx)?;
+    let backend = backend.as_ref();
+    let arch = backend.arch();
     let (acc_ideal, sp_ideal) =
-        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)?;
+        evalset_accuracy(backend, &sim, &eval, CaptureMode::Ideal, None)?;
     let (acc_mtj, sp_mtj) = evalset_accuracy(
-        &runtime, &sim, &eval, CaptureMode::CalibratedMtj, None,
+        backend, &sim, &eval, CaptureMode::CalibratedMtj, None,
     )?;
     println!("\nmeasured (this repo, synthetic 10-class corpus, {} frames):",
         eval.frames.len());

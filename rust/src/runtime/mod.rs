@@ -4,8 +4,12 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).  All executables are
 //! compiled once at startup and cached; execution is synchronous on the
-//! caller thread (the PJRT CPU client runs its own thread pool internally),
-//! so the tokio coordinator wraps calls in `spawn_blocking`.
+//! caller thread (the PJRT CPU client runs its own thread pool internally).
+//!
+//! Compiled only under the `pjrt` cargo feature; the serving pipeline
+//! reaches it through `backend::PjrtBackend`.  With the default in-tree
+//! `vendor/xla-stub` dependency this module compiles but every runtime
+//! entry point reports that real xla bindings are required.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -41,15 +45,40 @@ impl Executable {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = lit.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().context("converting output to f32"))
-            .collect()
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let buf = result
+            .first()
+            .and_then(|device| device.first())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{}' returned no output buffers",
+                    self.name
+                )
+            })?;
+        let lit = buf.to_literal_sync().with_context(|| {
+            format!("fetching result literal of artifact '{}'", self.name)
+        })?;
+        // Most AOT exports return 1-tuples, but some lowerings emit a bare
+        // array — accept both instead of failing on `to_tuple`.
+        match lit.to_tuple() {
+            Ok(parts) => parts
+                .into_iter()
+                .map(|p| {
+                    p.to_vec::<f32>().with_context(|| {
+                        format!(
+                            "converting artifact '{}' tuple output to f32",
+                            self.name
+                        )
+                    })
+                })
+                .collect(),
+            Err(_) => Ok(vec![lit.to_vec::<f32>().with_context(|| {
+                format!(
+                    "converting artifact '{}' non-tuple output to f32",
+                    self.name
+                )
+            })?]),
+        }
     }
 
     pub fn name(&self) -> &str {

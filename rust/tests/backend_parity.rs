@@ -1,0 +1,162 @@
+//! Parity suite for the native XNOR backend: the bit-packed popcount
+//! path must be bit-identical to its dense f32 reference and consistent
+//! with the sensor simulator's comparator output, across several seeds
+//! and sensor shapes — plus a full end-to-end pipeline run on the native
+//! backend with no artifacts and no skips.
+
+use std::sync::Arc;
+
+use pixelmtj::backend::{InferenceBackend, NativeBackend, NativePath};
+use pixelmtj::config::{BackendKind, HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::coordinator::Pipeline;
+use pixelmtj::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
+};
+
+fn backend_pair(
+    hw: &HwConfig,
+    weights: &FirstLayerWeights,
+    h: usize,
+    w: usize,
+    workers: usize,
+) -> (NativeBackend, NativeBackend) {
+    (
+        NativeBackend::new(hw.clone(), weights.clone(), h, w, workers),
+        NativeBackend::new(hw.clone(), weights.clone(), h, w, workers)
+            .with_path(NativePath::DenseRef),
+    )
+}
+
+#[test]
+fn packed_equals_dense_across_seeds_and_shapes() {
+    let hw = HwConfig::default();
+    for &(h, w) in &[(16usize, 16usize), (20, 24), (32, 32)] {
+        for seed in [1u32, 7, 42] {
+            let weights = FirstLayerWeights::synthetic(32, 3, 3, seed);
+            let (packed, dense) = backend_pair(&hw, &weights, h, w, 2);
+            let gen = SceneGen::new(3, h, w);
+            for f in 0..3u32 {
+                let frame =
+                    gen.textured(seed.wrapping_mul(31).wrapping_add(f));
+                let map = packed.run_frontend(&frame).unwrap();
+                let act = map.to_f32();
+                let a = packed.run_backend(&act, 1).unwrap();
+                let b = dense.run_backend(&act, 1).unwrap();
+                assert_eq!(a, b, "h{h} w{w} seed{seed} frame{f}");
+                assert_eq!(a.len(), packed.num_classes());
+                assert!(a.iter().all(|x| x.is_finite()));
+                // Logits must actually discriminate (not all equal).
+                assert!(a.iter().any(|&x| (x - a[0]).abs() > 1e-6));
+            }
+        }
+    }
+}
+
+#[test]
+fn frontend_matches_sensor_sim_comparator() {
+    let hw = HwConfig::default();
+    for seed in [2u32, 9] {
+        let weights = FirstLayerWeights::synthetic(32, 3, 3, seed);
+        let sim = PixelArraySim::new(hw.clone(), weights.clone());
+        let backend = NativeBackend::new(hw.clone(), weights, 32, 32, 1);
+        let gen = SceneGen::new(3, 32, 32);
+        for f in [3u32, 17, 99] {
+            let frame = gen.textured(f);
+            let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
+            let via_backend = backend.run_frontend(&frame).unwrap();
+            assert_eq!(
+                map.bits, via_backend.bits,
+                "seed {seed} frame {f}: frontend disagrees with sensor sim"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_matches_single_frame_runs() {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 4);
+    let backend = NativeBackend::new(hw.clone(), weights.clone(), 32, 32, 4);
+    let gen = SceneGen::new(3, 32, 32);
+    let elems = backend.act_elems();
+    let nc = backend.num_classes();
+    let maps: Vec<Vec<f32>> = (0..8u32)
+        .map(|i| backend.run_frontend(&gen.textured(i)).unwrap().to_f32())
+        .collect();
+    let mut batch_buf = Vec::with_capacity(8 * elems);
+    for m in &maps {
+        batch_buf.extend_from_slice(m);
+    }
+    let batched = backend.run_backend(&batch_buf, 8).unwrap();
+    for (i, m) in maps.iter().enumerate() {
+        let single = backend.run_backend(m, 1).unwrap();
+        assert_eq!(
+            &batched[i * nc..(i + 1) * nc],
+            single.as_slice(),
+            "frame {i}"
+        );
+    }
+}
+
+#[test]
+fn pipeline_end_to_end_on_native_backend() {
+    // The acceptance-criteria flow: no artifacts, no skips.
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 9);
+    let mut cfg = PipelineConfig::default();
+    assert_eq!(cfg.backend, BackendKind::Native, "native must be the default");
+    cfg.sparse_coding = SparseCoding::Rle;
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let backend = Arc::new(NativeBackend::new(
+        hw,
+        weights,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        2,
+    ));
+    let nc = backend.num_classes();
+    let pipeline = Pipeline::new(cfg, sim, backend).unwrap();
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..24u32).map(|i| gen.textured(i)).collect();
+    let report = pipeline.serve(frames).unwrap();
+    assert_eq!(report.results.len(), 24);
+    let seqs: Vec<u32> = report.results.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (0..24).collect::<Vec<_>>(), "results must be ordered");
+    assert_eq!(report.metrics.frames_out.get(), 24);
+    assert_eq!(report.metrics.frames_dropped.get(), 0);
+    for r in &report.results {
+        assert_eq!(r.logits.len(), nc);
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+        assert!(r.label < nc);
+        assert!(r.link_bits > 0);
+    }
+}
+
+#[test]
+fn pipeline_native_is_deterministic_across_runs() {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 13);
+    let serve_once = || {
+        let cfg = PipelineConfig::default();
+        let sim = PixelArraySim::new(hw.clone(), weights.clone());
+        let backend = Arc::new(NativeBackend::new(
+            hw.clone(),
+            weights.clone(),
+            cfg.sensor_height,
+            cfg.sensor_width,
+            3,
+        ));
+        let pipeline = Pipeline::new(cfg, sim, backend).unwrap();
+        let gen = SceneGen::new(3, 32, 32);
+        let frames: Vec<_> = (0..16u32).map(|i| gen.textured(i)).collect();
+        pipeline.serve(frames).unwrap()
+    };
+    let a = serve_once();
+    let b = serve_once();
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.seq, y.seq);
+        assert_eq!(x.logits, y.logits, "seq {}: logits differ", x.seq);
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.link_bits, y.link_bits);
+    }
+}

@@ -20,7 +20,19 @@ fn all_validation_checks_pass() {
         return;
     }
     let checks = pixelmtj::validate::run_checks(&artifacts()).unwrap();
-    assert_eq!(checks.len(), 7);
+    // 4 native checks always.  Under `pjrt` either +4 AOT executable
+    // checks (real xla bindings) or +1 failing runtime-construction check
+    // (the vendor stub) — the pass assertions below are the gate for the
+    // latter, not the count.
+    if cfg!(feature = "pjrt") {
+        assert!(
+            checks.len() == 8 || checks.len() == 5,
+            "unexpected check count {}",
+            checks.len()
+        );
+    } else {
+        assert_eq!(checks.len(), 4);
+    }
     for c in &checks {
         assert!(c.pass, "check '{}' failed: {}", c.name, c.detail);
     }
@@ -33,7 +45,11 @@ fn validate_report_is_human_readable() {
     }
     let report = pixelmtj::validate::run(&artifacts()).unwrap();
     assert!(report.contains("VALID"));
-    assert!(report.contains("frontend_b1"));
+    assert!(report.contains("rust sensor sim vs golden frontend"));
+    assert!(report.contains("native packed vs dense reference"));
+    if cfg!(feature = "pjrt") {
+        assert!(report.contains("frontend_b1"));
+    }
 }
 
 #[test]

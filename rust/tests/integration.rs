@@ -1,45 +1,36 @@
-//! Integration tests: the serving pipeline end to end over the runtime,
-//! plus cross-module flows (sensor → codec → energy accounting).
-//! Runtime-dependent tests skip when artifacts are absent.
+//! Integration tests: the serving pipeline end to end over the pluggable
+//! backend, plus cross-module flows (sensor → codec → energy accounting).
+//! The pipeline tests run on the native backend so they never skip; the
+//! AOT-artifact tests live in the `pjrt` module (feature-gated) and skip
+//! when artifacts are absent.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
+use pixelmtj::backend::NativeBackend;
 use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
 use pixelmtj::coordinator::{sparse, Pipeline};
 use pixelmtj::energy::{self, Geometry};
-use pixelmtj::reports::{evalset_accuracy, EvalSet};
-use pixelmtj::runtime::Runtime;
 use pixelmtj::sensor::{
     scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
 };
 
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn have_artifacts() -> bool {
-    artifacts().join("meta.json").exists()
-}
-
-fn make_pipeline(cfg: PipelineConfig) -> (Pipeline, Arc<Runtime>) {
-    let hw = HwConfig::load_or_default(&artifacts());
-    let weights =
-        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
-            .unwrap();
-    let runtime = Arc::new(Runtime::cpu(artifacts()).unwrap());
-    let sim = PixelArraySim::new(hw, weights);
-    (Pipeline::new(cfg, sim, runtime.clone()).unwrap(), runtime)
+fn native_pipeline(cfg: PipelineConfig) -> Pipeline {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let backend = Arc::new(NativeBackend::new(
+        hw,
+        weights,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        cfg.sensor_workers,
+    ));
+    Pipeline::new(cfg, sim, backend).unwrap()
 }
 
 #[test]
 fn pipeline_serves_all_frames_in_order() {
-    if !have_artifacts() {
-        return;
-    }
-    let mut cfg = PipelineConfig::default();
-    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
-    let (pipeline, _) = make_pipeline(cfg);
+    let pipeline = native_pipeline(PipelineConfig::default());
     let gen = SceneGen::new(3, 32, 32);
     let frames: Vec<_> = (0..40u32).map(|i| gen.textured(i)).collect();
     let report = pipeline.serve(frames).unwrap();
@@ -53,13 +44,8 @@ fn pipeline_serves_all_frames_in_order() {
 
 #[test]
 fn pipeline_is_deterministic_across_runs() {
-    if !have_artifacts() {
-        return;
-    }
-    let mut cfg = PipelineConfig::default();
-    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
-    let (p1, _) = make_pipeline(cfg.clone());
-    let (p2, _) = make_pipeline(cfg);
+    let p1 = native_pipeline(PipelineConfig::default());
+    let p2 = native_pipeline(PipelineConfig::default());
     let gen = SceneGen::new(3, 32, 32);
     let frames: Vec<_> = (0..16u32).map(|i| gen.textured(i)).collect();
     let a = p1.serve(frames.clone()).unwrap();
@@ -73,13 +59,9 @@ fn pipeline_is_deterministic_across_runs() {
 
 #[test]
 fn pipeline_batches_fill_under_load() {
-    if !have_artifacts() {
-        return;
-    }
     let mut cfg = PipelineConfig::default();
-    cfg.artifacts_dir = artifacts().to_string_lossy().into_owned();
     cfg.batch_timeout_us = 50_000; // generous: let batches fill
-    let (pipeline, _) = make_pipeline(cfg);
+    let pipeline = native_pipeline(cfg);
     let gen = SceneGen::new(3, 32, 32);
     let frames: Vec<_> = (0..64u32).map(|i| gen.textured(i)).collect();
     let report = pipeline.serve(frames).unwrap();
@@ -115,98 +97,122 @@ fn codecs_agree_and_bits_feed_energy_model() {
     assert!(comm > 0.0 && comm < energy::comm_energy_pj(payloads[0]) * 2.0);
 }
 
-#[test]
-fn evalset_accuracy_beats_chance_and_mtj_noise_is_mild() {
-    if !have_artifacts() {
-        return;
-    }
-    let hw = HwConfig::load_or_default(&artifacts());
-    let weights =
-        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
-            .unwrap();
-    let sim = PixelArraySim::new(hw, weights);
-    let runtime = Runtime::cpu(artifacts()).unwrap();
-    let eval = EvalSet::load(&artifacts().join("evalset.json")).unwrap();
-    let (acc_ideal, sparsity) =
-        evalset_accuracy(&runtime, &sim, &eval, CaptureMode::Ideal, None)
-            .unwrap();
-    let (acc_mtj, _) = evalset_accuracy(
-        &runtime,
-        &sim,
-        &eval,
-        CaptureMode::CalibratedMtj,
-        None,
-    )
-    .unwrap();
-    assert!(acc_ideal > 0.5, "trained model should beat chance: {acc_ideal}");
-    assert!(
-        acc_ideal - acc_mtj < 0.08,
-        "multi-MTJ noise cost too high: {acc_ideal} → {acc_mtj}"
-    );
-    assert!(
-        sparsity > 0.5,
-        "trained activations should be sparse: {sparsity}"
-    );
-}
+/// Tests that execute the AOT artifacts through the PJRT backend; these
+/// skip when artifacts have not been built.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::path::PathBuf;
 
-#[test]
-fn fig8_error_asymmetry_holds() {
-    if !have_artifacts() {
-        return;
-    }
-    // Paper Fig. 8: 0→1 errors (spurious activations in a sparse map)
-    // degrade accuracy much faster than 1→0 errors.
-    let hw = HwConfig::load_or_default(&artifacts());
-    let weights =
-        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
-            .unwrap();
-    let sim = PixelArraySim::new(hw, weights);
-    let runtime = Runtime::cpu(artifacts()).unwrap();
-    let eval = EvalSet::load(&artifacts().join("evalset.json")).unwrap();
-    let (acc_10, _) = evalset_accuracy(
-        &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.10, 0.0)),
-    )
-    .unwrap();
-    let (acc_01, _) = evalset_accuracy(
-        &runtime, &sim, &eval, CaptureMode::Ideal, Some((0.0, 0.10)),
-    )
-    .unwrap();
-    assert!(
-        acc_10 > acc_01 + 0.1,
-        "expected 1→0 tolerance ≫ 0→1: {acc_10} vs {acc_01}"
-    );
-}
+    use pixelmtj::backend::{InferenceBackend, PjrtBackend};
+    use pixelmtj::config::HwConfig;
+    use pixelmtj::reports::{evalset_accuracy, EvalSet};
+    use pixelmtj::sensor::{
+        scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
+    };
 
-#[test]
-fn frontend_artifact_matches_sensor_sim_on_fresh_scenes() {
-    if !have_artifacts() {
-        return;
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
-    // Beyond the golden vector: arbitrary scenes must agree too.
-    let hw = HwConfig::load_or_default(&artifacts());
-    let weights =
-        FirstLayerWeights::from_golden(artifacts().join("golden.json"))
-            .unwrap();
-    let sim = PixelArraySim::new(hw, weights);
-    let runtime = Runtime::cpu(artifacts()).unwrap();
-    let meta = runtime.meta.as_ref().unwrap().clone();
-    let exe = runtime.load("frontend_b1").unwrap();
-    let gen = SceneGen::new(3, 32, 32);
-    let shape: Vec<i64> = meta.img_shape.iter().map(|&d| d as i64).collect();
-    for seq in [3u32, 17, 99] {
-        let frame = gen.textured(seq);
-        let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
-        let aot = &exe.run_f32(&[(&frame.data, &shape)]).unwrap()[0];
-        let agree = map
-            .bits
-            .iter()
-            .zip(aot.iter())
-            .filter(|(&b, &w)| (b as u8 as f32) == w)
-            .count() as f64
-            / aot.len() as f64;
+
+    fn have_artifacts() -> bool {
+        artifacts().join("meta.json").exists()
+    }
+
+    fn setup() -> (PjrtBackend, PixelArraySim, EvalSet) {
+        let hw = HwConfig::load_or_default(&artifacts());
+        let weights =
+            FirstLayerWeights::from_golden(artifacts().join("golden.json"))
+                .unwrap();
+        let sim = PixelArraySim::new(hw, weights);
+        let backend = PjrtBackend::new(&artifacts()).unwrap();
+        let eval = EvalSet::load(&artifacts().join("evalset.json")).unwrap();
+        (backend, sim, eval)
+    }
+
+    #[test]
+    fn evalset_accuracy_beats_chance_and_mtj_noise_is_mild() {
+        if !have_artifacts() {
+            return;
+        }
+        let (backend, sim, eval) = setup();
+        let (acc_ideal, sparsity) =
+            evalset_accuracy(&backend, &sim, &eval, CaptureMode::Ideal, None)
+                .unwrap();
+        let (acc_mtj, _) = evalset_accuracy(
+            &backend,
+            &sim,
+            &eval,
+            CaptureMode::CalibratedMtj,
+            None,
+        )
+        .unwrap();
         assert!(
-            agree >= 0.999,
-            "seq {seq}: sensor sim vs AOT agreement {agree}"
+            acc_ideal > 0.5,
+            "trained model should beat chance: {acc_ideal}"
         );
+        assert!(
+            acc_ideal - acc_mtj < 0.08,
+            "multi-MTJ noise cost too high: {acc_ideal} → {acc_mtj}"
+        );
+        assert!(
+            sparsity > 0.5,
+            "trained activations should be sparse: {sparsity}"
+        );
+    }
+
+    #[test]
+    fn fig8_error_asymmetry_holds() {
+        if !have_artifacts() {
+            return;
+        }
+        // Paper Fig. 8: 0→1 errors (spurious activations in a sparse map)
+        // degrade accuracy much faster than 1→0 errors.
+        let (backend, sim, eval) = setup();
+        let (acc_10, _) = evalset_accuracy(
+            &backend,
+            &sim,
+            &eval,
+            CaptureMode::Ideal,
+            Some((0.10, 0.0)),
+        )
+        .unwrap();
+        let (acc_01, _) = evalset_accuracy(
+            &backend,
+            &sim,
+            &eval,
+            CaptureMode::Ideal,
+            Some((0.0, 0.10)),
+        )
+        .unwrap();
+        assert!(
+            acc_10 > acc_01 + 0.1,
+            "expected 1→0 tolerance ≫ 0→1: {acc_10} vs {acc_01}"
+        );
+    }
+
+    #[test]
+    fn frontend_artifact_matches_sensor_sim_on_fresh_scenes() {
+        if !have_artifacts() {
+            return;
+        }
+        // Beyond the golden vector: arbitrary scenes must agree too.
+        let (backend, sim, _) = setup();
+        let gen = SceneGen::new(3, 32, 32);
+        for seq in [3u32, 17, 99] {
+            let frame = gen.textured(seq);
+            let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
+            let aot = backend.run_frontend(&frame).unwrap();
+            let agree = map
+                .bits
+                .iter()
+                .zip(aot.bits.iter())
+                .filter(|(a, b)| a == b)
+                .count() as f64
+                / aot.bits.len() as f64;
+            assert!(
+                agree >= 0.999,
+                "seq {seq}: sensor sim vs AOT agreement {agree}"
+            );
+        }
     }
 }

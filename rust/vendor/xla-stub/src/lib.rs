@@ -1,0 +1,132 @@
+//! Offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The pixelmtj `pjrt` cargo feature needs an `xla` crate to compile, but
+//! the build environment has no XLA toolchain.  This stub mirrors exactly
+//! the API surface `pixelmtj::runtime` uses and fails at *runtime* with a
+//! descriptive error instead of failing the *build*.  To execute AOT
+//! artifacts for real, point the `xla` dependency in `rust/Cargo.toml`
+//! (or a `[patch]` section in the workspace root) at real bindings, e.g.
+//! a local checkout of xla-rs built against `xla_extension`.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error behaviour closely enough
+/// for `anyhow::Context` chaining.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the in-tree xla stub (no PJRT). \
+         Replace rust/vendor/xla-stub with real xla bindings to execute \
+         AOT artifacts, or run with the default native backend instead"
+    )))
+}
+
+/// Host literal: carries data so `vec1`/`scalar`/`reshape` construction
+/// succeeds; device-side conversions report the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _f32s: Vec<f32>,
+    _dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { _f32s: data.to_vec(), _dims: vec![data.len() as i64] }
+    }
+
+    pub fn scalar(v: u32) -> Literal {
+        Literal { _f32s: vec![v as f32], _dims: Vec::new() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _f32s: self._f32s.clone(), _dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// PJRT client handle; `cpu()` always fails in the stub, so the
+/// execution methods below are unreachable but keep callers typechecked.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_succeeds_execution_reports_stub() {
+        let lit = Literal::vec1(&[1.0, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
