@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy bench-backend artifacts
+.PHONY: check build test fmt clippy bench-backend bench-stream artifacts
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -23,6 +23,10 @@ check: fmt clippy build test
 # Perf trajectory: native XNOR vs dense reference → rust/BENCH_backend.json
 bench-backend:
 	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench backend
+
+# Streaming scaling: fps + e2e latency vs workers → rust/BENCH_stream.json
+bench-stream:
+	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench stream
 
 # AOT artifact export (requires the Python/JAX toolchain; see python/).
 artifacts:

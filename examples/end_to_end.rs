@@ -138,11 +138,22 @@ fn main() -> anyhow::Result<()> {
     let c = energy::reduction_factor(&geom, &hw);
     let gs = GlobalShutter::new(hw.clone());
     let t = gs.frame_timing(224, 224, ones);
-    println!("front-end energy:  {:.1}× vs baseline (paper 8.2×), {:.1}× vs in-sensor (paper 8.0×)",
-        fe_base / fe_ours, fe_ins / fe_ours);
+    println!(
+        "front-end energy:  {:.1}× vs baseline (paper 8.2×), \
+         {:.1}× vs in-sensor (paper 8.0×)",
+        fe_base / fe_ours,
+        fe_ins / fe_ours
+    );
     println!("bandwidth (Eq. 3): {c:.1}× (paper 6×)");
-    println!("frame latency:     {:.1} µs global shutter (paper <70 µs) → {:.0} device-fps",
-        t.total_us, t.fps());
-    println!("\nall numbers land in EXPERIMENTS.md — see `pixelmtj report all` for the full set");
+    println!(
+        "frame latency:     {:.1} µs global shutter (paper <70 µs) → \
+         {:.0} device-fps",
+        t.total_us,
+        t.fps()
+    );
+    println!(
+        "\nall numbers land in EXPERIMENTS.md — see `pixelmtj report all` \
+         for the full set"
+    );
     Ok(())
 }

@@ -30,10 +30,16 @@ fn main() -> anyhow::Result<()> {
     let rs = RollingShutter::new(hw.clone());
     let row_time_us = rs.row_skew_us(h, w) / sim.out_hw(h, w).0 as f64;
 
-    println!("rolling-shutter row skew: {:.1} µs/row ({} output rows ⇒ {:.1} ms/frame)",
-        row_time_us, sim.out_hw(h, w).0, rs.row_skew_us(h, w) / 1e3);
-    println!("global-shutter row skew: {} µs (all rows sampled at once)\n",
-        gs.row_skew_us(h, w));
+    println!(
+        "rolling-shutter row skew: {:.1} µs/row ({} output rows ⇒ {:.1} ms/frame)",
+        row_time_us,
+        sim.out_hw(h, w).0,
+        rs.row_skew_us(h, w) / 1e3
+    );
+    println!(
+        "global-shutter row skew: {} µs (all rows sampled at once)\n",
+        gs.row_skew_us(h, w)
+    );
 
     println!(
         "{:>12} {:>14} {:>14} {:>16}",

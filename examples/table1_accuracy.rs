@@ -89,6 +89,9 @@ fn main() -> anyhow::Result<()> {
         e10 * 100.0,
         e01 * 100.0
     );
-    println!("paper Table 1 (full-scale reference): VGG16/CIFAR10 BNN 93.08 % (DNN 94.10 %), sparsity 79.24 %");
+    println!(
+        "paper Table 1 (full-scale reference): VGG16/CIFAR10 BNN 93.08 % \
+         (DNN 94.10 %), sparsity 79.24 %"
+    );
     Ok(())
 }

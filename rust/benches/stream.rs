@@ -1,0 +1,159 @@
+//! Streaming server bench: frames/sec and e2e latency vs sensor-worker
+//! count and batch policy on the steady-rate workload.  Emits
+//! `BENCH_stream.json` so the scaling trajectory is machine-diffable
+//! across PRs; `PIXELMTJ_BENCH_FAST=1` shrinks the workload for CI.
+//!
+//! The acceptance claim this file pins: multi-worker throughput on the
+//! steady workload is at least single-worker throughput (the sensor-sim
+//! stage is the CPU-bound one, so sharding it must not hurt).
+
+use std::sync::Arc;
+
+use pixelmtj::backend::NativeBackend;
+use pixelmtj::config::{HwConfig, PipelineConfig, Workload};
+use pixelmtj::coordinator::{feed, make_source, Pipeline};
+use pixelmtj::sensor::{FirstLayerWeights, PixelArraySim};
+use pixelmtj::util::json::Value;
+
+struct RunResult {
+    workers: usize,
+    batch_sizes: Vec<usize>,
+    fps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_occupancy: f64,
+}
+
+fn run_stream(
+    workers: usize,
+    batch_sizes: Vec<usize>,
+    frames: u32,
+) -> anyhow::Result<RunResult> {
+    let hw = HwConfig::default();
+    let cfg = PipelineConfig {
+        sensor_workers: workers,
+        batch_sizes: batch_sizes.clone(),
+        workload: Workload::Steady,
+        ..PipelineConfig::default()
+    };
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    // Deliberately not Pipeline::synthetic_native: the backend's internal
+    // batch pool stays constant across runs so multi_worker_speedup
+    // isolates the sensor-stage sharding, not backend threading.
+    let backend = Arc::new(NativeBackend::new(
+        hw.clone(),
+        weights,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        PipelineConfig::default().sensor_workers,
+    ));
+    let channels = hw.network.in_channels;
+    let pipeline = Pipeline::new(cfg, sim, backend)?;
+
+    let mut source = make_source(pipeline.config(), channels, frames);
+    let server = pipeline.stream()?;
+    if let Err(feed_err) = feed(&server, &mut *source) {
+        return Err(server.fail_shutdown(feed_err));
+    }
+    let report = server.shutdown()?;
+    anyhow::ensure!(
+        report.results.len() == frames as usize,
+        "lost frames: {} of {frames}",
+        report.results.len()
+    );
+
+    let metrics = pipeline.metrics();
+    Ok(RunResult {
+        workers,
+        batch_sizes,
+        fps: report.fps,
+        p50_us: metrics.e2e_latency.quantile_us(0.5),
+        p99_us: metrics.e2e_latency.quantile_us(0.99),
+        mean_occupancy: metrics.mean_batch_occupancy(),
+    })
+}
+
+fn main() {
+    let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+    let frames: u32 = if fast { 192 } else { 768 };
+    let worker_counts = [1usize, 2, 4];
+    let policies: [&[usize]; 2] = [&[1], &[1, 8]];
+
+    println!("stream bench: steady workload, {frames} frames per run\n");
+    let mut runs = Vec::new();
+    for &workers in &worker_counts {
+        for policy in policies {
+            let r = run_stream(workers, policy.to_vec(), frames)
+                .expect("stream run failed");
+            println!(
+                "workers={} batch_sizes={:?}: {:>8.1} fps  e2e p50 ≤ {} µs  \
+                 p99 ≤ {} µs  (occupancy {:.2})",
+                r.workers,
+                r.batch_sizes,
+                r.fps,
+                r.p50_us,
+                r.p99_us,
+                r.mean_occupancy
+            );
+            runs.push(r);
+        }
+    }
+
+    // The scaling headline: best multi-worker vs single-worker throughput
+    // under the dynamic {1,8} policy.
+    let fps_of = |w: usize| {
+        runs.iter()
+            .filter(|r| r.workers == w && r.batch_sizes == [1, 8])
+            .map(|r| r.fps)
+            .next()
+            .unwrap_or(0.0)
+    };
+    let single = fps_of(1);
+    let multi = worker_counts[1..]
+        .iter()
+        .map(|&w| fps_of(w))
+        .fold(0.0f64, f64::max);
+    println!(
+        "\n→ steady workload: single-worker {single:.1} fps, best \
+         multi-worker {multi:.1} fps ({:.2}× scaling)",
+        multi / single.max(1e-9)
+    );
+
+    let run_objs: Vec<Value> = runs
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("workers", Value::Num(r.workers as f64)),
+                (
+                    "batch_sizes",
+                    Value::Str(
+                        r.batch_sizes
+                            .iter()
+                            .map(|s| s.to_string())
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    ),
+                ),
+                ("fps", Value::Num(r.fps)),
+                ("e2e_p50_us_le", Value::Num(r.p50_us as f64)),
+                ("e2e_p99_us_le", Value::Num(r.p99_us as f64)),
+                ("mean_batch_occupancy", Value::Num(r.mean_occupancy)),
+            ])
+        })
+        .collect();
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("stream".into())),
+        ("workload", Value::Str("steady".into())),
+        ("frames_per_run", Value::Num(frames as f64)),
+        ("single_worker_fps", Value::Num(single)),
+        ("multi_worker_fps", Value::Num(multi)),
+        ("multi_worker_speedup", Value::Num(multi / single.max(1e-9))),
+        ("runs", Value::Arr(run_objs)),
+    ]);
+    let path = "BENCH_stream.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -287,6 +287,42 @@ impl SparseCoding {
     }
 }
 
+/// Synthetic streaming workload shape (see `coordinator::stream` for the
+/// generators).  The paper's global-shutter burst read motivates serving
+/// continuous frame streams, so scenario diversity lives here rather than
+/// in ad-hoc bench loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Textured scenes arriving as fast as backpressure allows.
+    Steady,
+    /// Bursts of frames separated by idle gaps (event-driven capture).
+    Bursty,
+    /// A bright bar sweeping across the array at varying speeds — the
+    /// motion-blur scene family from the shutter-skew experiment.
+    MotionSweep,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "steady" => Ok(Self::Steady),
+            "bursty" => Ok(Self::Bursty),
+            "motion" => Ok(Self::MotionSweep),
+            other => anyhow::bail!(
+                "unknown workload '{other}' (expected 'steady', 'bursty' or 'motion')"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Steady => "steady",
+            Self::Bursty => "bursty",
+            Self::MotionSweep => "motion",
+        }
+    }
+}
+
 /// L3 pipeline configuration (not shared with Python).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PipelineConfig {
@@ -312,6 +348,12 @@ pub struct PipelineConfig {
     pub sparse_coding: SparseCoding,
     /// Inference backend serving the classifier head.
     pub backend: BackendKind,
+    /// Synthetic workload for `serve --stream` / benches.
+    pub workload: Workload,
+    /// Frames per burst for the bursty workload.
+    pub burst_len: usize,
+    /// Idle gap between bursts (µs) for the bursty workload.
+    pub burst_gap_us: u64,
 }
 
 impl Default for PipelineConfig {
@@ -328,6 +370,9 @@ impl Default for PipelineConfig {
             analog_noise: false,
             sparse_coding: SparseCoding::Csr,
             backend: BackendKind::Native,
+            workload: Workload::Steady,
+            burst_len: 16,
+            burst_gap_us: 2_000,
         }
     }
 }
@@ -381,6 +426,12 @@ impl PipelineConfig {
                 Ok(x) => BackendKind::parse(x.as_str()?)?,
                 Err(_) => d.backend,
             },
+            workload: match v.get("workload") {
+                Ok(x) => Workload::parse(x.as_str()?)?,
+                Err(_) => d.workload,
+            },
+            burst_len: getf("burst_len", d.burst_len as f64)? as usize,
+            burst_gap_us: getf("burst_gap_us", d.burst_gap_us as f64)? as u64,
         })
     }
 }
@@ -489,6 +540,33 @@ mod tests {
         assert_eq!(cfg.sparse_coding, SparseCoding::Rle);
         assert_eq!(cfg.backend, BackendKind::Pjrt);
         assert_eq!(cfg.queue_depth, PipelineConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn workload_parse_and_name() {
+        for s in ["steady", "bursty", "motion"] {
+            assert_eq!(Workload::parse(s).unwrap().name(), s);
+        }
+        assert!(Workload::parse("spiky").is_err());
+        assert_eq!(PipelineConfig::default().workload, Workload::Steady);
+    }
+
+    #[test]
+    fn pipeline_config_stream_keys_parse() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(
+            &p,
+            r#"{"workload": "bursty", "burst_len": 4, "burst_gap_us": 500}"#,
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.workload, Workload::Bursty);
+        assert_eq!(cfg.burst_len, 4);
+        assert_eq!(cfg.burst_gap_us, 500);
+        std::fs::write(&p, r#"{"workload": "spiky"}"#).unwrap();
+        assert!(PipelineConfig::from_json_file(&p).is_err());
     }
 
     #[test]

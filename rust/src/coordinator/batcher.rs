@@ -23,6 +23,11 @@ pub struct Batcher<T> {
     /// Executable batch sizes, sorted descending.
     sizes: Vec<usize>,
     timeout: Duration,
+    /// Set once the wait-deadline fires; cleared when the queue empties.
+    /// Keeps a timed-out queue draining across repeated polls instead of
+    /// granting the post-drain front item a fresh timeout (items admitted
+    /// just before expiry would otherwise wait almost 2× the bound).
+    draining: bool,
 }
 
 impl<T> Batcher<T> {
@@ -30,11 +35,15 @@ impl<T> Batcher<T> {
         assert!(!sizes.is_empty(), "need at least one batch size");
         sizes.sort_unstable_by(|a, b| b.cmp(a));
         assert!(sizes.contains(&1), "batch size 1 required as fallback");
-        Self { queue: VecDeque::new(), sizes, timeout }
+        Self { queue: VecDeque::new(), sizes, timeout, draining: false }
     }
 
     pub fn push(&mut self, item: T) {
-        self.queue.push_back(Pending { item, arrived: Instant::now() });
+        self.push_at(item, Instant::now());
+    }
+
+    fn push_at(&mut self, item: T, arrived: Instant) {
+        self.queue.push_back(Pending { item, arrived });
     }
 
     pub fn len(&self) -> usize {
@@ -51,17 +60,23 @@ impl<T> Batcher<T> {
     /// for those batch shapes).  Policy: emit the largest size as soon as
     /// it fills; once the oldest item exceeds the timeout (or on `flush`),
     /// emit the largest configured size that fits the queue — repeated
-    /// polling then drains the remainder as smaller batches.
+    /// polling then drains the *entire* queue as smaller batches.  The
+    /// drain sticks until the queue empties: items that arrived during the
+    /// timed-out spell are not re-stamped with a fresh wait-deadline.
     pub fn poll(&mut self, now: Instant, flush: bool) -> Option<Vec<T>> {
         let n = self.queue.len();
         if n == 0 {
+            self.draining = false;
             return None;
         }
         let fit = self.sizes.iter().copied().find(|&s| s <= n)?;
         let oldest_expired = now
             .duration_since(self.queue.front().unwrap().arrived)
             >= self.timeout;
-        if fit == self.sizes[0] || oldest_expired || flush {
+        if oldest_expired {
+            self.draining = true;
+        }
+        if fit == self.sizes[0] || self.draining || flush {
             Some(self.take(fit))
         } else {
             None
@@ -69,7 +84,11 @@ impl<T> Batcher<T> {
     }
 
     fn take(&mut self, k: usize) -> Vec<T> {
-        self.queue.drain(..k).map(|p| p.item).collect()
+        let batch: Vec<T> = self.queue.drain(..k).map(|p| p.item).collect();
+        if self.queue.is_empty() {
+            self.draining = false;
+        }
+        batch
     }
 }
 
@@ -112,6 +131,37 @@ mod tests {
         assert_eq!(b.poll(later, false).unwrap(), vec![1]);
         assert_eq!(b.poll(later, false).unwrap(), vec![2]);
         assert!(b.poll(later, false).is_none());
+    }
+
+    #[test]
+    fn timed_out_queue_drains_fully_across_polls() {
+        // Regression: after a partial drain of a timed-out queue, the
+        // remaining items must NOT be granted a fresh wait-deadline.  Item
+        // 2 arrives just before the head expires; the old policy re-judged
+        // the queue by item 2's own age after emitting item 1, stalling it
+        // for nearly another full timeout.
+        let mut b = batcher(); // sizes {1, 8}, timeout 5 ms
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        b.push_at(2, t0 + Duration::from_millis(4));
+        let t_expired = t0 + Duration::from_millis(6);
+        assert_eq!(b.poll(t_expired, false).unwrap(), vec![1]);
+        assert_eq!(
+            b.poll(t_expired, false).unwrap(),
+            vec![2],
+            "drain must continue until the queue empties"
+        );
+        assert!(b.poll(t_expired, false).is_none());
+        // A new spell after the queue emptied gets a fresh deadline.
+        b.push_at(3, t_expired);
+        assert!(
+            b.poll(t_expired + Duration::from_millis(1), false).is_none(),
+            "fresh queue must wait out its own timeout"
+        );
+        assert_eq!(
+            b.poll(t_expired + Duration::from_millis(6), false).unwrap(),
+            vec![3]
+        );
     }
 
     #[test]

@@ -5,14 +5,21 @@
 //! * [`batcher`] — dynamic batching policy over the configured batch sizes
 //!   (for PJRT these are the AOT executable shapes; the native backend
 //!   accepts any size and uses the same policy for throughput)
-//! * [`pipeline`] — the threaded frame-serving pipeline (source →
-//!   sensor workers → link → batcher → pluggable inference backend →
-//!   results)
+//! * [`stream`] — the concurrent streaming frame server (bounded queues,
+//!   sharded sensor workers, dynamic batching, backpressure, drain/shutdown)
+//!   plus the [`stream::FrameSource`] synthetic workload generators
+//! * [`pipeline`] — the one-shot serving facade (`serve` a `Vec<Frame>` to
+//!   completion) delegating through the streaming core
 
 pub mod batcher;
 pub mod pipeline;
 pub mod sparse;
+pub mod stream;
 
 pub use batcher::Batcher;
 pub use pipeline::{Classification, Pipeline, RunReport};
 pub use sparse::{decode, encode, Encoded};
+pub use stream::{
+    feed, make_source, BurstySource, FrameSource, MotionSweepSource,
+    SteadySource, StreamServer,
+};

@@ -1,35 +1,22 @@
-//! The frame-serving pipeline: the L3 system contribution.
+//! The frame-serving pipeline: a one-shot facade over the concurrent
+//! streaming core in [`crate::coordinator::stream`].
 //!
-//! ```text
-//!  source ──►[bounded queue]──► sensor workers ──► link (sparse codec)
-//!     (backpressure)       (PixelArraySim capture)      │
-//!                                                       ▼
-//!  results ◄── backend executor ◄── dynamic batcher ◄───┘
-//!       (InferenceBackend dispatch)    ({1,8} + timeout)
-//! ```
-//!
-//! Threading: std threads + bounded `mpsc::sync_channel`s (the offline
-//! registry has no tokio).  The backend parallelizes internally (PJRT's
-//! thread pool, or the native engine's batch workers), so one backend
-//! executor thread suffices; sensor simulation is the CPU-bound stage and
-//! gets `sensor_workers` threads.
-//!
-//! Everything is deterministic given the frame sequence numbers: capture
-//! noise derives from `frame.seq`, so a re-run reproduces identical
-//! classifications.
+//! `Pipeline` owns the sensor simulator, the inference backend, and the
+//! shared metrics.  [`Pipeline::serve`] runs a pre-collected frame batch
+//! to completion by feeding a [`StreamServer`] and shutting it down;
+//! [`Pipeline::stream`] hands out the live server for continuous
+//! `submit`/`drain` serving.  Both paths execute the identical stage
+//! threads, so stream and one-shot classifications agree frame for frame.
 
-use anyhow::{anyhow, Context, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::backend::InferenceBackend;
-use crate::config::PipelineConfig;
-use crate::coordinator::batcher::Batcher;
-use crate::coordinator::sparse;
+use crate::backend::{InferenceBackend, NativeBackend};
+use crate::config::{HwConfig, PipelineConfig};
+use crate::coordinator::stream::StreamServer;
 use crate::metrics::PipelineMetrics;
-use crate::sensor::{CaptureMode, Frame, PixelArraySim};
+use crate::sensor::{FirstLayerWeights, Frame, PixelArraySim};
 
 /// One classified frame.
 #[derive(Debug, Clone)]
@@ -48,14 +35,6 @@ pub struct RunReport {
     pub metrics: Arc<PipelineMetrics>,
     pub wall_time: Duration,
     pub fps: f64,
-}
-
-struct Activation {
-    seq: u32,
-    dense: Vec<f32>,
-    sparsity: f64,
-    link_bits: u64,
-    t_start: Instant,
 }
 
 /// The serving pipeline over one sensor + one backend.
@@ -83,6 +62,24 @@ impl Pipeline {
         })
     }
 
+    /// A pipeline over the native backend with the deterministic
+    /// synthetic first-layer weights — no artifacts, no Python, no XLA.
+    /// The one scaffolding the examples and integration tests share, so
+    /// they all exercise the same configuration.
+    pub fn synthetic_native(cfg: PipelineConfig) -> Result<Self> {
+        let hw = HwConfig::default();
+        let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+        let sim = PixelArraySim::new(hw.clone(), weights.clone());
+        let backend = Arc::new(NativeBackend::new(
+            hw,
+            weights,
+            cfg.sensor_height,
+            cfg.sensor_width,
+            cfg.sensor_workers,
+        ));
+        Self::new(cfg, sim, backend)
+    }
+
     pub fn backend(&self) -> &Arc<dyn InferenceBackend> {
         &self.backend
     }
@@ -91,12 +88,20 @@ impl Pipeline {
         self.metrics.clone()
     }
 
-    fn capture_mode(&self) -> CaptureMode {
-        if self.cfg.mtj_noise {
-            CaptureMode::CalibratedMtj
-        } else {
-            CaptureMode::Ideal
-        }
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Start a live streaming server sharing this pipeline's sensor,
+    /// backend, and metrics.  Multiple sequential servers are fine; their
+    /// counters all fold into the same [`PipelineMetrics`].
+    pub fn stream(&self) -> Result<StreamServer> {
+        StreamServer::start(
+            &self.cfg,
+            self.sim.clone(),
+            self.backend.clone(),
+            self.metrics.clone(),
+        )
     }
 
     /// Serve a finite stream of frames to completion, returning per-frame
@@ -104,220 +109,15 @@ impl Pipeline {
     pub fn serve(&self, frames: Vec<Frame>) -> Result<RunReport> {
         let t0 = Instant::now();
         let n_frames = frames.len();
-        let (frame_tx, frame_rx) =
-            sync_channel::<(Frame, Instant)>(self.cfg.queue_depth);
-        let (act_tx, act_rx) =
-            sync_channel::<Activation>(self.cfg.queue_depth);
-        let frame_rx = SharedReceiver::new(frame_rx);
-
-        // Sensor workers.
-        let mut workers = Vec::new();
-        for _ in 0..self.cfg.sensor_workers.max(1) {
-            let rx = frame_rx.clone();
-            let tx = act_tx.clone();
-            let sim = self.sim.clone();
-            let metrics = self.metrics.clone();
-            let mode = self.capture_mode();
-            let coding = self.cfg.sparse_coding;
-            workers.push(std::thread::spawn(move || -> Result<()> {
-                while let Some((frame, t_start)) = rx.recv() {
-                    let t_cap = Instant::now();
-                    let (map, stats) = sim.capture(&frame, mode);
-                    metrics.capture_latency.record(t_cap);
-                    metrics.mtj_writes.add(stats.mtj_writes);
-                    metrics.mtj_resets.add(stats.mtj_resets);
-
-                    // Simulate the sensor→backend link: encode, account
-                    // bits, decode on the far side.
-                    let t_enc = Instant::now();
-                    let enc = sparse::encode(&map, coding);
-                    let decoded = sparse::decode(&enc)
-                        .context("link decode (codec bug)")?;
-                    metrics.encode_latency.record(t_enc);
-                    metrics.link_bits.add(enc.payload_bits);
-                    debug_assert_eq!(decoded.bits, map.bits);
-
-                    let act = Activation {
-                        seq: frame.seq,
-                        dense: decoded.to_f32(),
-                        sparsity: map.sparsity(),
-                        link_bits: enc.payload_bits,
-                        t_start,
-                    };
-                    if act_tx_send(&tx, act).is_err() {
-                        break; // downstream closed
-                    }
-                }
-                Ok(())
-            }));
-        }
-        drop(act_tx);
-
-        // Source (this thread feeds; bounded channel provides backpressure).
-        let feeder = {
-            let metrics = self.metrics.clone();
-            std::thread::spawn(move || {
-                for frame in frames {
-                    metrics.frames_in.inc();
-                    if frame_tx.send((frame, Instant::now())).is_err() {
-                        metrics.frames_dropped.inc();
-                        break;
-                    }
-                }
-                // frame_tx drops here: workers drain and exit.
-            })
-        };
-
-        // Batcher + backend executor (this thread).
-        let results = self.dispatch_loop(act_rx, n_frames)?;
-
-        feeder.join().map_err(|_| anyhow!("feeder panicked"))?;
-        for w in workers {
-            w.join().map_err(|_| anyhow!("worker panicked"))??;
-        }
-
-        let wall_time = t0.elapsed();
-        let fps = n_frames as f64 / wall_time.as_secs_f64();
-        let mut results = results;
-        results.sort_by_key(|r| r.seq);
-        Ok(RunReport { results, metrics: self.metrics.clone(), wall_time, fps })
-    }
-
-    fn dispatch_loop(
-        &self,
-        act_rx: Receiver<Activation>,
-        expected: usize,
-    ) -> Result<Vec<Classification>> {
-        let mut batcher: Batcher<Activation> = Batcher::new(
-            self.cfg.batch_sizes.clone(),
-            Duration::from_micros(self.cfg.batch_timeout_us),
-        );
-        let mut results = Vec::with_capacity(expected);
-        let mut open = true;
-        while open || !batcher.is_empty() {
-            if open {
-                match act_rx.recv_timeout(Duration::from_micros(
-                    self.cfg.batch_timeout_us.max(100),
-                )) {
-                    Ok(act) => batcher.push(act),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                        open = false;
-                    }
-                }
-                // Drain whatever else is ready without blocking.
-                while let Ok(act) = act_rx.try_recv() {
-                    batcher.push(act);
-                }
-            }
-            while let Some(batch) = batcher.poll(Instant::now(), !open) {
-                self.execute_batch(batch, &mut results)?;
+        let server = self.stream()?;
+        for frame in frames {
+            if let Err(submit_err) = server.submit(frame) {
+                return Err(server.fail_shutdown(submit_err));
             }
         }
-        Ok(results)
-    }
-
-    fn execute_batch(
-        &self,
-        batch: Vec<Activation>,
-        results: &mut Vec<Classification>,
-    ) -> Result<()> {
-        let b = batch.len();
-        let act_elems = self.backend.act_elems();
-        let mut input = Vec::with_capacity(b * act_elems);
-        for a in &batch {
-            debug_assert_eq!(a.dense.len(), act_elems);
-            input.extend_from_slice(&a.dense);
-        }
-
-        let t_exec = Instant::now();
-        let logits_all = self.backend.run_backend(&input, b)?;
-        self.metrics.backend_latency.record(t_exec);
-        self.metrics.batches.inc();
-        self.metrics.batch_occupancy_sum.add(b as u64);
-
-        let nc = self.backend.num_classes();
-        for (i, a) in batch.into_iter().enumerate() {
-            let logits = logits_all[i * nc..(i + 1) * nc].to_vec();
-            let label = argmax(&logits);
-            self.metrics.e2e_latency.record(a.t_start);
-            self.metrics.frames_out.inc();
-            results.push(Classification {
-                seq: a.seq,
-                logits,
-                label,
-                sparsity: a.sparsity,
-                link_bits: a.link_bits,
-            });
-        }
-        Ok(())
-    }
-}
-
-fn act_tx_send(
-    tx: &SyncSender<Activation>,
-    act: Activation,
-) -> Result<(), std::sync::mpsc::SendError<Activation>> {
-    tx.send(act)
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
-
-/// A cloneable wrapper distributing one `Receiver` across workers.
-struct SharedReceiver<T> {
-    inner: Arc<std::sync::Mutex<Receiver<T>>>,
-    live: Arc<AtomicUsize>,
-}
-
-impl<T> Clone for SharedReceiver<T> {
-    fn clone(&self) -> Self {
-        self.live.fetch_add(1, Ordering::Relaxed);
-        Self { inner: self.inner.clone(), live: self.live.clone() }
-    }
-}
-
-impl<T> SharedReceiver<T> {
-    fn new(rx: Receiver<T>) -> Self {
-        Self {
-            inner: Arc::new(std::sync::Mutex::new(rx)),
-            live: Arc::new(AtomicUsize::new(1)),
-        }
-    }
-
-    fn recv(&self) -> Option<T> {
-        self.inner.lock().unwrap().recv().ok()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_picks_largest() {
-        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-    }
-
-    #[test]
-    fn shared_receiver_distributes_items() {
-        let (tx, rx) = sync_channel::<u32>(8);
-        let shared = SharedReceiver::new(rx);
-        let a = shared.clone();
-        for i in 0..4 {
-            tx.send(i).unwrap();
-        }
-        drop(tx);
-        let mut got = Vec::new();
-        while let Some(v) = a.recv() {
-            got.push(v);
-        }
-        assert_eq!(got, vec![0, 1, 2, 3]);
+        let mut report = server.shutdown()?;
+        report.wall_time = t0.elapsed();
+        report.fps = n_frames as f64 / report.wall_time.as_secs_f64();
+        Ok(report)
     }
 }

@@ -1,0 +1,810 @@
+//! Concurrent streaming frame server: the global-shutter burst read as a
+//! long-lived service.
+//!
+//! ```text
+//!  submit()/try_submit() ──►[bounded frame queue]──► sensor workers ──► link
+//!       (backpressure)          (PixelArraySim, sharded)    (sparse codec)
+//!                                                                │
+//!  drain()/shutdown() ◄── dispatcher (dynamic batcher ◄──────────┘
+//!                              + InferenceBackend)
+//! ```
+//!
+//! [`StreamServer`] owns the stage threads.  Frames enter through
+//! [`StreamServer::submit`] (blocks while the bounded queue is full) or
+//! [`StreamServer::try_submit`] (hands the frame back instead of blocking);
+//! classifications accumulate until [`StreamServer::drain`] collects them;
+//! [`StreamServer::shutdown`] closes the intake, finishes every in-flight
+//! frame, and joins all threads.  `Pipeline::serve` is a thin one-shot
+//! wrapper over this core.
+//!
+//! Threading: std threads + bounded `mpsc::sync_channel`s (the offline
+//! registry has no tokio).  The backend parallelizes internally (PJRT's
+//! thread pool, or the native engine's batch workers), so one dispatcher
+//! thread suffices; sensor simulation is the CPU-bound stage and is sharded
+//! across `sensor_workers` threads.  Everything stays deterministic given
+//! the frame sequence numbers: capture noise derives from `frame.seq`, so
+//! streaming and one-shot runs classify identically.
+//!
+//! [`FrameSource`] supplies synthetic workloads (steady-rate, bursty,
+//! motion-blur sweeps) so the CLI, the example, and the benches exercise
+//! the same scenario generators.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::InferenceBackend;
+use crate::config::{PipelineConfig, SparseCoding, Workload};
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::pipeline::{Classification, RunReport};
+use crate::coordinator::sparse;
+use crate::metrics::PipelineMetrics;
+use crate::sensor::{scene::SceneGen, CaptureMode, Frame, PixelArraySim};
+
+/// A frame in the source queue, stamped at submission for e2e latency.
+struct Submitted {
+    frame: Frame,
+    t_submit: Instant,
+}
+
+/// A decoded activation waiting for batched dispatch.
+struct Activation {
+    seq: u32,
+    dense: Vec<f32>,
+    sparsity: f64,
+    link_bits: u64,
+    t_submit: Instant,
+    t_act: Instant,
+}
+
+/// State shared between the caller-facing handle and the stage threads.
+#[derive(Default)]
+struct Shared {
+    results: Mutex<Vec<Classification>>,
+    progress: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    frame_depth: AtomicU64,
+    act_depth: AtomicU64,
+    /// Count of drains in progress: while nonzero the dispatcher flushes
+    /// partial batches eagerly instead of waiting out the batch timeout.
+    /// A refcount (not a bool) so one drain finishing cannot clobber a
+    /// concurrent drain's eager-flush request.
+    flush: AtomicU64,
+    /// A stage thread exited with an error.
+    failed: AtomicBool,
+    /// The dispatcher thread has returned (shutdown or failure).
+    dispatcher_done: AtomicBool,
+}
+
+impl Shared {
+    /// Pre-send depth accounting shared by `submit`/`try_submit`: the
+    /// gauge increment must happen BEFORE the frame enters the channel —
+    /// once visible, a worker may decrement `frame_depth`, and an
+    /// increment ordered after that would wrap the counter.  Returns the
+    /// post-increment depth for the peak gauge.
+    fn begin_submit(&self) -> u64 {
+        self.frame_depth.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Roll back [`begin_submit`](Self::begin_submit) after a failed
+    /// enqueue (the frame never became visible to a worker).
+    fn rollback_submit(&self) {
+        self.frame_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Count a successfully enqueued frame.  `submitted` moves only
+    /// AFTER the send: a pre-send bump that later rolls back could be
+    /// snapshotted by a concurrent `drain` as a phantom frame that never
+    /// completes, hanging the collector.  (`completed` may transiently
+    /// exceed `submitted`; `in_flight` saturates and `drain` only ever
+    /// waits on an entry snapshot, so that ordering is harmless.)
+    fn commit_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn fail(&self) {
+        self.failed.store(true, Ordering::SeqCst);
+        let _guard = self.results.lock();
+        self.progress.notify_all();
+    }
+
+    fn in_flight(&self) -> u64 {
+        self.submitted
+            .load(Ordering::SeqCst)
+            .saturating_sub(self.completed.load(Ordering::SeqCst))
+    }
+}
+
+/// Drops one reference on the `flush` refcount however `drain` exits.
+struct FlushGuard<'a>(&'a Shared);
+
+impl Drop for FlushGuard<'_> {
+    fn drop(&mut self) {
+        self.0.flush.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Sets `dispatcher_done` however the dispatcher thread exits (including
+/// panics), so `drain` can never wait forever on a dead dispatcher.
+struct DispatcherDoneGuard(Arc<Shared>);
+
+impl Drop for DispatcherDoneGuard {
+    fn drop(&mut self) {
+        self.0.dispatcher_done.store(true, Ordering::SeqCst);
+        let _guard = self.0.results.lock();
+        self.0.progress.notify_all();
+    }
+}
+
+/// The concurrent streaming serving layer over one sensor + one backend.
+///
+/// Stage threads start immediately; the server is ready for `submit` as
+/// soon as `start` returns.  Dropping the server without `shutdown` closes
+/// the queues and detaches the threads (they exit on their own); call
+/// `shutdown` to join them and collect errors.
+pub struct StreamServer {
+    shared: Arc<Shared>,
+    metrics: Arc<PipelineMetrics>,
+    frame_tx: Option<SyncSender<Submitted>>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    dispatcher: Option<JoinHandle<Result<()>>>,
+    t_start: Instant,
+}
+
+impl StreamServer {
+    /// Spawn the capture → sensor-shard → batcher → backend stages and
+    /// return the serving handle.  `metrics` is shared so a surrounding
+    /// `Pipeline` (or test) observes per-stage counters live.
+    pub fn start(
+        cfg: &PipelineConfig,
+        sim: Arc<PixelArraySim>,
+        backend: Arc<dyn InferenceBackend>,
+        metrics: Arc<PipelineMetrics>,
+    ) -> Result<Self> {
+        if cfg.batch_sizes.is_empty() || !cfg.batch_sizes.contains(&1) {
+            bail!(
+                "batch_sizes must be non-empty and include 1 as the \
+                 single-frame fallback (got {:?})",
+                cfg.batch_sizes
+            );
+        }
+        let shared = Arc::new(Shared::default());
+        let depth = cfg.queue_depth.max(1);
+        let (frame_tx, frame_rx) = sync_channel::<Submitted>(depth);
+        let (act_tx, act_rx) = sync_channel::<Activation>(depth);
+        let frame_rx = SharedReceiver::new(frame_rx);
+        let mode = if cfg.mtj_noise {
+            CaptureMode::CalibratedMtj
+        } else {
+            CaptureMode::Ideal
+        };
+
+        let mut workers = Vec::new();
+        for _ in 0..cfg.sensor_workers.max(1) {
+            let rx = frame_rx.clone();
+            let tx = act_tx.clone();
+            let sim = sim.clone();
+            let worker_metrics = metrics.clone();
+            let worker_shared = shared.clone();
+            let coding = cfg.sparse_coding;
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                let out = worker_loop(
+                    rx,
+                    tx,
+                    sim,
+                    worker_metrics,
+                    worker_shared.clone(),
+                    mode,
+                    coding,
+                );
+                if out.is_err() {
+                    worker_shared.fail();
+                }
+                out
+            }));
+        }
+        drop(act_tx);
+
+        let batcher: Batcher<Activation> = Batcher::new(
+            cfg.batch_sizes.clone(),
+            Duration::from_micros(cfg.batch_timeout_us),
+        );
+        let recv_tick = Duration::from_micros(cfg.batch_timeout_us.max(100));
+        let dispatcher = {
+            let backend = backend.clone();
+            let disp_metrics = metrics.clone();
+            let disp_shared = shared.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let _done = DispatcherDoneGuard(disp_shared.clone());
+                let out = dispatch_loop(
+                    backend.as_ref(),
+                    &disp_metrics,
+                    &disp_shared,
+                    act_rx,
+                    batcher,
+                    recv_tick,
+                );
+                if out.is_err() {
+                    disp_shared.fail();
+                }
+                out
+            })
+        };
+
+        Ok(Self {
+            shared,
+            metrics,
+            frame_tx: Some(frame_tx),
+            workers,
+            dispatcher: Some(dispatcher),
+            t_start: Instant::now(),
+        })
+    }
+
+    pub fn metrics(&self) -> Arc<PipelineMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Frames submitted but not yet classified.
+    pub fn in_flight(&self) -> u64 {
+        self.shared.in_flight()
+    }
+
+    /// Feed one frame, blocking while the bounded frame queue is full —
+    /// backpressure throttles the producer instead of dropping frames.
+    pub fn submit(&self, frame: Frame) -> Result<()> {
+        let tx = self
+            .frame_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("stream is shut down"))?;
+        if self.shared.failed.load(Ordering::SeqCst) {
+            bail!("a stream stage failed; shut down to collect the error");
+        }
+        let depth = self.shared.begin_submit();
+        self.metrics.frame_queue_peak.observe(depth);
+        self.metrics.frames_in.inc();
+        let sub = Submitted { frame, t_submit: Instant::now() };
+        if tx.send(sub).is_err() {
+            self.shared.rollback_submit();
+            self.metrics.frames_dropped.inc();
+            bail!("stream workers stopped (frame queue closed)");
+        }
+        self.shared.commit_submit();
+        Ok(())
+    }
+
+    /// Non-blocking submit: when the bounded queue is full (or the stream
+    /// is down) the frame is handed back to the caller, who may drop it,
+    /// retry later, or fall back to the blocking [`submit`](Self::submit).
+    /// Only a full queue counts as `submit_rejected` — a dead stream hands
+    /// the frame back without touching the load-shedding counter (the
+    /// blocking path surfaces the actual failure).
+    pub fn try_submit(&self, frame: Frame) -> std::result::Result<(), Frame> {
+        let tx = match self.frame_tx.as_ref() {
+            Some(tx) => tx,
+            None => return Err(frame),
+        };
+        if self.shared.failed.load(Ordering::SeqCst) {
+            return Err(frame);
+        }
+        let depth = self.shared.begin_submit();
+        let sub = Submitted { frame, t_submit: Instant::now() };
+        match tx.try_send(sub) {
+            Ok(()) => {
+                self.shared.commit_submit();
+                self.metrics.frame_queue_peak.observe(depth);
+                self.metrics.frames_in.inc();
+                Ok(())
+            }
+            Err(TrySendError::Full(sub)) => {
+                self.shared.rollback_submit();
+                self.metrics.submit_rejected.inc();
+                Err(sub.frame)
+            }
+            Err(TrySendError::Disconnected(sub)) => {
+                // Never counted in frames_in, so not a drop either.
+                self.shared.rollback_submit();
+                Err(sub.frame)
+            }
+        }
+    }
+
+    /// Block until every frame submitted before this call has been
+    /// classified, then return the classifications accumulated since the
+    /// last drain, sorted by sequence number.  The stream stays open for
+    /// further submits.
+    ///
+    /// Results form one shared pool: with concurrent drains, each
+    /// classification is delivered to exactly one caller, and which one
+    /// is unspecified — a drain can even return empty when a rival
+    /// collected its frames first.  Give each collector its own server
+    /// if per-caller attribution matters.
+    pub fn drain(&self) -> Result<Vec<Classification>> {
+        self.shared.flush.fetch_add(1, Ordering::SeqCst);
+        let _flush = FlushGuard(&self.shared);
+        // Snapshot the goalpost at entry: waiting on the live counter
+        // would let a sustained concurrent producer starve the collector
+        // (and pin flush, degrading batching) indefinitely.
+        let target = self.shared.submitted.load(Ordering::SeqCst);
+        let mut results = self.shared.results.lock().unwrap();
+        loop {
+            let done = self.shared.completed.load(Ordering::SeqCst);
+            if done >= target {
+                break;
+            }
+            if self.shared.failed.load(Ordering::SeqCst) {
+                bail!(
+                    "a stream stage failed with {} frames in flight",
+                    target - done
+                );
+            }
+            if self.shared.dispatcher_done.load(Ordering::SeqCst) {
+                bail!(
+                    "dispatcher exited with {} frames in flight",
+                    target - done
+                );
+            }
+            let (guard, _) = self
+                .shared
+                .progress
+                .wait_timeout(results, Duration::from_millis(20))
+                .unwrap();
+            results = guard;
+        }
+        let mut out = std::mem::take(&mut *results);
+        drop(results);
+        out.sort_by_key(|r| r.seq);
+        Ok(out)
+    }
+
+    /// Tear down after a failed submit/drain, preferring the stage
+    /// thread's root-cause error (joined via shutdown) over the generic
+    /// caller-facing `err` — submit only sees "a stage failed", while the
+    /// JoinHandles hold the worker's actual decode/backend error.
+    pub fn fail_shutdown(self, err: anyhow::Error) -> anyhow::Error {
+        match self.shutdown() {
+            Err(stage_err) => stage_err,
+            Ok(_) => err,
+        }
+    }
+
+    /// Close the intake, finish every in-flight frame, join all stage
+    /// threads, and return the final run report.  `results` holds the
+    /// classifications not yet collected by a `drain`, seq-sorted; the
+    /// shared metrics cover the whole stream lifetime either way.
+    pub fn shutdown(mut self) -> Result<RunReport> {
+        drop(self.frame_tx.take()); // workers drain the queue and exit
+        for worker in self.workers.drain(..) {
+            worker.join().map_err(|_| anyhow!("sensor worker panicked"))??;
+        }
+        if let Some(dispatcher) = self.dispatcher.take() {
+            dispatcher.join().map_err(|_| anyhow!("dispatcher panicked"))??;
+        }
+        let mut results =
+            std::mem::take(&mut *self.shared.results.lock().unwrap());
+        results.sort_by_key(|r| r.seq);
+        let wall_time = self.t_start.elapsed();
+        // Lifetime throughput: count frames collected by earlier drains
+        // too, not just the tail left in `results`.
+        let completed = self.shared.completed.load(Ordering::SeqCst);
+        let fps = completed as f64 / wall_time.as_secs_f64();
+        Ok(RunReport { results, metrics: self.metrics.clone(), wall_time, fps })
+    }
+}
+
+/// Sensor-shard stage: capture the frame, run the sensor→backend link
+/// codec, and queue the decoded activation for dispatch.
+fn worker_loop(
+    rx: SharedReceiver<Submitted>,
+    tx: SyncSender<Activation>,
+    sim: Arc<PixelArraySim>,
+    metrics: Arc<PipelineMetrics>,
+    shared: Arc<Shared>,
+    mode: CaptureMode,
+    coding: SparseCoding,
+) -> Result<()> {
+    while let Some(sub) = rx.recv() {
+        shared.frame_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.frame_queue_wait.record(sub.t_submit);
+        let t_cap = Instant::now();
+        let (map, stats) = sim.capture(&sub.frame, mode);
+        metrics.capture_latency.record(t_cap);
+        metrics.mtj_writes.add(stats.mtj_writes);
+        metrics.mtj_resets.add(stats.mtj_resets);
+
+        // Simulate the sensor→backend link: encode, account bits, decode
+        // on the far side.
+        let t_enc = Instant::now();
+        let enc = sparse::encode(&map, coding);
+        let decoded = sparse::decode(&enc).context("link decode (codec bug)")?;
+        metrics.encode_latency.record(t_enc);
+        metrics.link_bits.add(enc.payload_bits);
+        debug_assert_eq!(decoded.bits, map.bits);
+
+        let act = Activation {
+            seq: sub.frame.seq,
+            dense: decoded.to_f32(),
+            sparsity: map.sparsity(),
+            link_bits: enc.payload_bits,
+            t_submit: sub.t_submit,
+            t_act: Instant::now(),
+        };
+        let depth = shared.act_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        metrics.act_queue_peak.observe(depth);
+        if tx.send(act).is_err() {
+            shared.act_depth.fetch_sub(1, Ordering::Relaxed);
+            break; // downstream closed
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch stage: drive the dynamic batcher and the inference backend.
+fn dispatch_loop(
+    backend: &dyn InferenceBackend,
+    metrics: &PipelineMetrics,
+    shared: &Shared,
+    act_rx: Receiver<Activation>,
+    mut batcher: Batcher<Activation>,
+    recv_tick: Duration,
+) -> Result<()> {
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        if open {
+            match act_rx.recv_timeout(recv_tick) {
+                Ok(act) => {
+                    shared.act_depth.fetch_sub(1, Ordering::Relaxed);
+                    batcher.push(act);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+            // Drain whatever else is ready without blocking.
+            while let Ok(act) = act_rx.try_recv() {
+                shared.act_depth.fetch_sub(1, Ordering::Relaxed);
+                batcher.push(act);
+            }
+        }
+        let flush = !open || shared.flush.load(Ordering::SeqCst) > 0;
+        while let Some(batch) = batcher.poll(Instant::now(), flush) {
+            execute_batch(backend, metrics, shared, batch)?;
+        }
+    }
+    Ok(())
+}
+
+fn execute_batch(
+    backend: &dyn InferenceBackend,
+    metrics: &PipelineMetrics,
+    shared: &Shared,
+    batch: Vec<Activation>,
+) -> Result<()> {
+    let b = batch.len();
+    let act_elems = backend.act_elems();
+    let mut input = Vec::with_capacity(b * act_elems);
+    for act in &batch {
+        debug_assert_eq!(act.dense.len(), act_elems);
+        // Residency ends here, at dispatch — not after the backend run.
+        metrics.batch_wait.record(act.t_act);
+        input.extend_from_slice(&act.dense);
+    }
+
+    let t_exec = Instant::now();
+    let logits_all = backend.run_backend(&input, b)?;
+    metrics.backend_latency.record(t_exec);
+    metrics.batches.inc();
+    metrics.batch_occupancy_sum.add(b as u64);
+
+    let nc = backend.num_classes();
+    let mut results = shared.results.lock().unwrap();
+    for (i, act) in batch.into_iter().enumerate() {
+        let logits = logits_all[i * nc..(i + 1) * nc].to_vec();
+        let label = argmax(&logits);
+        metrics.e2e_latency.record(act.t_submit);
+        metrics.frames_out.inc();
+        results.push(Classification {
+            seq: act.seq,
+            logits,
+            label,
+            sparsity: act.sparsity,
+            link_bits: act.link_bits,
+        });
+    }
+    // Bump + notify under the lock (like Shared::fail): a notify fired
+    // between drain's stale read of `completed` and its wait would
+    // otherwise be lost, stalling drain for its full fallback timeout.
+    shared.completed.fetch_add(b as u64, Ordering::SeqCst);
+    shared.progress.notify_all();
+    drop(results);
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// A cloneable wrapper distributing one `Receiver` across workers.
+struct SharedReceiver<T> {
+    inner: Arc<Mutex<Receiver<T>>>,
+}
+
+impl<T> Clone for SharedReceiver<T> {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl<T> SharedReceiver<T> {
+    fn new(rx: Receiver<T>) -> Self {
+        Self { inner: Arc::new(Mutex::new(rx)) }
+    }
+
+    fn recv(&self) -> Option<T> {
+        self.inner.lock().unwrap().recv().ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic workload generators
+// ---------------------------------------------------------------------------
+
+/// A frame supply for streaming mode: synthetic workload generators here,
+/// or any external producer (a camera bridge, a replay log) downstream.
+pub trait FrameSource: Send {
+    /// Identifier for banners and bench output.
+    fn name(&self) -> &'static str;
+
+    /// Next frame, or `None` once the workload is exhausted.
+    fn next_frame(&mut self) -> Option<Frame>;
+
+    /// Modeled idle time *after* the frame just emitted (`ZERO` = arrive
+    /// as fast as backpressure allows).
+    fn gap(&self) -> Duration {
+        Duration::ZERO
+    }
+}
+
+/// Shared exhaustion state for the synthetic sources: yields sequence
+/// numbers `0..total` once, then `None`.  Keeps the termination
+/// semantics in one place so the source family cannot drift.
+struct SeqCounter {
+    next: u32,
+    total: u32,
+}
+
+impl SeqCounter {
+    fn new(total: u32) -> Self {
+        Self { next: 0, total }
+    }
+
+    fn next_seq(&mut self) -> Option<u32> {
+        if self.next >= self.total {
+            return None;
+        }
+        let seq = self.next;
+        self.next += 1;
+        Some(seq)
+    }
+}
+
+/// Textured scenes arriving at the maximum rate backpressure allows.
+pub struct SteadySource {
+    gen: SceneGen,
+    seqs: SeqCounter,
+}
+
+impl SteadySource {
+    pub fn new(channels: usize, height: usize, width: usize, total: u32) -> Self {
+        Self {
+            gen: SceneGen::new(channels, height, width),
+            seqs: SeqCounter::new(total),
+        }
+    }
+}
+
+impl FrameSource for SteadySource {
+    fn name(&self) -> &'static str {
+        "steady"
+    }
+
+    fn next_frame(&mut self) -> Option<Frame> {
+        self.seqs.next_seq().map(|seq| self.gen.textured(seq))
+    }
+}
+
+/// Bursts of textured frames separated by idle gaps — the event-driven
+/// capture pattern of the P2M line of work.
+pub struct BurstySource {
+    gen: SceneGen,
+    seqs: SeqCounter,
+    burst_len: u32,
+    idle: Duration,
+}
+
+impl BurstySource {
+    pub fn new(
+        channels: usize,
+        height: usize,
+        width: usize,
+        total: u32,
+        burst_len: usize,
+        idle: Duration,
+    ) -> Self {
+        Self {
+            gen: SceneGen::new(channels, height, width),
+            seqs: SeqCounter::new(total),
+            burst_len: burst_len.max(1) as u32,
+            idle,
+        }
+    }
+}
+
+impl FrameSource for BurstySource {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn next_frame(&mut self) -> Option<Frame> {
+        self.seqs.next_seq().map(|seq| self.gen.textured(seq))
+    }
+
+    fn gap(&self) -> Duration {
+        // `seqs.next` already points past the frame just emitted: pause
+        // after every full burst.
+        if self.seqs.next > 0 && self.seqs.next % self.burst_len == 0 {
+            self.idle
+        } else {
+            Duration::ZERO
+        }
+    }
+}
+
+/// A bright bar sweeping across the array, cycling widths — the
+/// motion-blur scene family of the shutter-skew experiment as a stream.
+pub struct MotionSweepSource {
+    gen: SceneGen,
+    seqs: SeqCounter,
+}
+
+impl MotionSweepSource {
+    pub fn new(channels: usize, height: usize, width: usize, total: u32) -> Self {
+        Self {
+            gen: SceneGen::new(channels, height, width),
+            seqs: SeqCounter::new(total),
+        }
+    }
+}
+
+impl FrameSource for MotionSweepSource {
+    fn name(&self) -> &'static str {
+        "motion"
+    }
+
+    fn next_frame(&mut self) -> Option<Frame> {
+        let seq = self.seqs.next_seq()?;
+        const SWEEP: u32 = 64; // frames per full left-to-right pass
+        let phase = f64::from(seq % SWEEP) / f64::from(SWEEP);
+        let bar_w = 2.0 + f64::from((seq / SWEEP) % 3); // 2, 3, 4 px passes
+        let bar_x = phase * (self.gen.width as f64 + bar_w) - bar_w;
+        Some(self.gen.moving_bar(bar_x, bar_w, seq))
+    }
+}
+
+/// Build the workload generator configured in `cfg` over `total` frames.
+pub fn make_source(
+    cfg: &PipelineConfig,
+    channels: usize,
+    total: u32,
+) -> Box<dyn FrameSource> {
+    let (h, w) = (cfg.sensor_height, cfg.sensor_width);
+    match cfg.workload {
+        Workload::Steady => Box::new(SteadySource::new(channels, h, w, total)),
+        Workload::Bursty => Box::new(BurstySource::new(
+            channels,
+            h,
+            w,
+            total,
+            cfg.burst_len,
+            Duration::from_micros(cfg.burst_gap_us),
+        )),
+        Workload::MotionSweep => {
+            Box::new(MotionSweepSource::new(channels, h, w, total))
+        }
+    }
+}
+
+/// Feed `source` to exhaustion through blocking submits (backpressure
+/// throttles the feeder instead of dropping frames), honoring the source's
+/// pacing gaps.  Returns the number of frames submitted.
+pub fn feed(server: &StreamServer, source: &mut dyn FrameSource) -> Result<u64> {
+    let mut n = 0;
+    let mut next = source.next_frame();
+    while let Some(frame) = next {
+        server.submit(frame)?;
+        n += 1;
+        // Gap reflects the frame just submitted; only sleep it when
+        // another frame follows — a trailing idle would pad wall time
+        // (and deflate fps) after the workload is already exhausted.
+        let idle = source.gap();
+        next = source.next_frame();
+        if next.is_some() && !idle.is_zero() {
+            std::thread::sleep(idle);
+        }
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn shared_receiver_distributes_items() {
+        let (tx, rx) = sync_channel::<u32>(8);
+        let shared = SharedReceiver::new(rx);
+        let a = shared.clone();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Some(v) = a.recv() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn steady_source_yields_total_deterministically() {
+        let mut a = SteadySource::new(3, 8, 8, 5);
+        let mut b = SteadySource::new(3, 8, 8, 5);
+        let mut n = 0;
+        while let Some(x) = a.next_frame() {
+            let y = b.next_frame().unwrap();
+            assert_eq!(x.seq, y.seq);
+            assert_eq!(x.data, y.data);
+            assert!(a.gap().is_zero(), "steady source never pauses");
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        assert!(b.next_frame().is_none());
+    }
+
+    #[test]
+    fn bursty_source_pauses_between_bursts_only() {
+        let idle = Duration::from_millis(1);
+        let mut s = BurstySource::new(1, 4, 4, 6, 2, idle);
+        let mut gaps = Vec::new();
+        while s.next_frame().is_some() {
+            gaps.push(!s.gap().is_zero());
+        }
+        assert_eq!(gaps, vec![false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn motion_sweep_covers_total_with_moving_content() {
+        let mut s = MotionSweepSource::new(1, 8, 16, 10);
+        let mut frames = Vec::new();
+        while let Some(f) = s.next_frame() {
+            frames.push(f);
+        }
+        assert_eq!(frames.len(), 10);
+        assert_ne!(frames[0].data, frames[5].data, "bar must move");
+    }
+}

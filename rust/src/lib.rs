@@ -22,8 +22,9 @@
 //!   probability, multi-device majority neurons, endurance tracking
 //! * [`circuit`] — behavioural pixel/subtractor/readout circuit simulation
 //! * [`sensor`] — pixel array, kernel tiling, global vs rolling shutter
-//! * [`coordinator`] — frame pipeline: scheduler, burst engine, sparse
-//!   encoder, batcher, backend dispatch
+//! * [`coordinator`] — concurrent streaming frame server (bounded queues,
+//!   backpressure, dynamic batching, drain/shutdown), the one-shot
+//!   pipeline facade, sparse link codecs, synthetic workload generators
 //! * [`backend`] — the `InferenceBackend` trait and its implementations:
 //!   `NativeBackend` (XNOR-popcount over `u64` lanes) and `PjrtBackend`
 //!   (feature `pjrt`)

@@ -10,12 +10,14 @@
 //!                the AOT artifacts when built with `--features pjrt`)
 //! * `info`     — print configuration + backend/artifact inventory
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
 use pixelmtj::backend::{self, InferenceBackend as _};
-use pixelmtj::config::{BackendKind, HwConfig, PipelineConfig, SparseCoding};
-use pixelmtj::coordinator::Pipeline;
+use pixelmtj::config::{
+    BackendKind, HwConfig, PipelineConfig, SparseCoding, Workload,
+};
+use pixelmtj::coordinator::{stream, FrameSource as _, Pipeline};
 use pixelmtj::reports::{self, ReportCtx};
 use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
 use pixelmtj::util::cli::Args;
@@ -27,6 +29,8 @@ USAGE:
   pixelmtj serve    [--frames N] [--workers N] [--coding dense|csr|rle]
                     [--backend native|pjrt] [--no-mtj-noise]
                     [--artifacts DIR] [--config FILE]
+                    [--stream] [--workload steady|bursty|motion]
+                    [--queue-depth N] [--burst-len N] [--burst-gap-us N]
   pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
   pixelmtj validate [--artifacts DIR]
   pixelmtj info     [--artifacts DIR]
@@ -77,26 +81,69 @@ fn sensor_weights(
 
 fn serve(args: &Args) -> Result<()> {
     let frames_n = args.usize_or("frames", 256)?;
-    let workers = args.usize_or("workers", 4)?;
-    let coding = SparseCoding::parse(&args.str_or("coding", "rle"))?;
-    // Only override the config-file backend when --backend is given.
+    // Options override the config-file value only when actually given —
+    // otherwise the file's (or default's) setting stands.
+    let coding = match args.opt_str("coding") {
+        Some(s) => Some(SparseCoding::parse(&s)?),
+        None => None,
+    };
     let kind = match args.opt_str("backend") {
         Some(s) => Some(BackendKind::parse(&s)?),
         None => None,
     };
-    let no_noise = args.flag("no-mtj-noise");
+    let no_noise = args.flag("no-mtj-noise")?;
+    let streaming = args.flag("stream")?;
+    let workload = match args.opt_str("workload") {
+        Some(s) => Some(Workload::parse(&s)?),
+        None => None,
+    };
+    // Workload-generator options only drive the synthetic stream source;
+    // oneshot mode serves caller-built frames, so accepting them there
+    // would silently measure the wrong scene (util/cli.rs: fail loudly).
+    if !streaming {
+        for name in ["workload", "burst-len", "burst-gap-us"] {
+            if args.opt_str(name).is_some() {
+                bail!("--{name} requires --stream");
+            }
+        }
+    }
     let dir = artifacts_dir(args);
     let mut cfg = match args.opt_str("config") {
         Some(path) => PipelineConfig::from_json_file(path)?,
         None => PipelineConfig::default(),
     };
+    // CLI overrides config-file values, which override defaults.
+    cfg.sensor_workers = args.usize_or("workers", cfg.sensor_workers)?;
+    cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
+    cfg.burst_len = args.usize_or("burst-len", cfg.burst_len)?;
+    cfg.burst_gap_us =
+        args.usize_or("burst-gap-us", cfg.burst_gap_us as usize)? as u64;
     args.finish()?;
     cfg.artifacts_dir = dir.to_string_lossy().into_owned();
-    cfg.sensor_workers = workers;
-    cfg.sparse_coding = coding;
-    cfg.mtj_noise = !no_noise;
+    if let Some(coding) = coding {
+        cfg.sparse_coding = coding;
+    }
+    if no_noise {
+        cfg.mtj_noise = false;
+    }
     if let Some(kind) = kind {
         cfg.backend = kind;
+    }
+    if let Some(w) = workload {
+        cfg.workload = w;
+    }
+    // Same fail-loudly rule within streaming mode: burst shaping only
+    // drives the bursty generator, so it must not silently no-op under
+    // another workload.
+    if streaming && cfg.workload != Workload::Bursty {
+        for name in ["burst-len", "burst-gap-us"] {
+            if args.opt_str(name).is_some() {
+                bail!(
+                    "--{name} requires --workload bursty (got {})",
+                    cfg.workload.name()
+                );
+            }
+        }
     }
 
     let hw = HwConfig::load_or_default(&dir);
@@ -105,23 +152,54 @@ fn serve(args: &Args) -> Result<()> {
     let be = backend::create(cfg.backend, &hw, &cfg, weights)
         .context("constructing inference backend")?;
     println!(
-        "backend={} arch={} frames={} workers={} coding={}",
+        "backend={} arch={} frames={} workers={} coding={} mode={}",
         be.name(),
         be.arch(),
         frames_n,
         cfg.sensor_workers,
         cfg.sparse_coding.name(),
+        if streaming { "stream" } else { "oneshot" },
     );
 
-    let gen = SceneGen::new(
-        hw.network.in_channels,
-        cfg.sensor_height,
-        cfg.sensor_width,
-    );
-    let frames: Vec<_> = (0..frames_n as u32).map(|i| gen.textured(i)).collect();
-
+    let channels = hw.network.in_channels;
     let pipeline = Pipeline::new(cfg, sim, be)?;
-    let report = pipeline.serve(frames)?;
+    let report = if streaming {
+        // Continuous serving: a workload generator feeds the stream server
+        // through blocking submits (backpressure pacing), then a shutdown
+        // finishes the in-flight tail.
+        let cfg = pipeline.config();
+        let mut source = stream::make_source(cfg, channels, frames_n as u32);
+        println!(
+            "workload={} queue_depth={} batch_timeout_us={}",
+            source.name(),
+            cfg.queue_depth,
+            cfg.batch_timeout_us
+        );
+        let server = pipeline.stream()?;
+        if let Err(feed_err) = stream::feed(&server, &mut *source) {
+            return Err(server.fail_shutdown(feed_err));
+        }
+        server.shutdown()?
+    } else {
+        // CLI workload options hard-error without --stream; a config
+        // file is an ambient profile, so its stream-only keys get a
+        // notice instead of a rejection.
+        if pipeline.config().workload != Workload::Steady {
+            eprintln!(
+                "note: config workload={} is ignored in oneshot mode \
+                 (pass --stream to use it)",
+                pipeline.config().workload.name()
+            );
+        }
+        let gen = SceneGen::new(
+            channels,
+            pipeline.config().sensor_height,
+            pipeline.config().sensor_width,
+        );
+        let frames: Vec<_> =
+            (0..frames_n as u32).map(|i| gen.textured(i)).collect();
+        pipeline.serve(frames)?
+    };
 
     println!(
         "\nserved {} frames in {:.2} s → {:.1} fps (wall-clock, simulated sensor)",

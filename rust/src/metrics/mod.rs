@@ -26,6 +26,26 @@ impl Counter {
     }
 }
 
+/// Peak-tracking gauge (lock-free): `observe` keeps the maximum ever seen.
+///
+/// Queue depths fluctuate too fast for a sampled instantaneous value to
+/// mean anything in a run report; the high-water mark is the number that
+/// tells you whether a bounded queue actually filled (backpressure engaged).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub fn observe(&self, v: u64) {
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 /// Latency histogram with power-of-two microsecond buckets
 /// (1 µs … ~17 s) plus exact running mean.
 #[derive(Debug)]
@@ -107,11 +127,26 @@ pub struct PipelineMetrics {
     pub frames_in: Counter,
     pub frames_out: Counter,
     pub frames_dropped: Counter,
+    /// Non-blocking submits rejected because the frame queue was full.
+    pub submit_rejected: Counter,
     pub batches: Counter,
     pub batch_occupancy_sum: Counter,
     pub link_bits: Counter,
     pub mtj_writes: Counter,
     pub mtj_resets: Counter,
+    /// High-water mark of the bounded source→sensor frame queue.  Counts
+    /// frames momentarily in a submitter's pre-send or a worker's
+    /// post-recv hand too, so it can read a few above `queue_depth`
+    /// (bounded by `queue_depth + workers + concurrent submitters`).
+    pub frame_queue_peak: Gauge,
+    /// High-water mark of the sensor→batcher activation queue.
+    pub act_queue_peak: Gauge,
+    /// Time a frame waited in the source queue before a sensor worker
+    /// picked it up (the backpressure signal).
+    pub frame_queue_wait: LatencyHistogram,
+    /// Time an activation waited between the sensor stage and dispatch
+    /// (queue + batcher residency).
+    pub batch_wait: LatencyHistogram,
     pub capture_latency: LatencyHistogram,
     pub encode_latency: LatencyHistogram,
     pub backend_latency: LatencyHistogram,
@@ -132,11 +167,16 @@ impl PipelineMetrics {
             ("frames_in", Value::Num(self.frames_in.get() as f64)),
             ("frames_out", Value::Num(self.frames_out.get() as f64)),
             ("frames_dropped", Value::Num(self.frames_dropped.get() as f64)),
+            ("submit_rejected", Value::Num(self.submit_rejected.get() as f64)),
             ("batches", Value::Num(self.batches.get() as f64)),
             ("mean_batch_occupancy", Value::Num(self.mean_batch_occupancy())),
             ("link_bits", Value::Num(self.link_bits.get() as f64)),
             ("mtj_writes", Value::Num(self.mtj_writes.get() as f64)),
             ("mtj_resets", Value::Num(self.mtj_resets.get() as f64)),
+            ("frame_queue_peak", Value::Num(self.frame_queue_peak.peak() as f64)),
+            ("act_queue_peak", Value::Num(self.act_queue_peak.peak() as f64)),
+            ("frame_queue_wait", self.frame_queue_wait.to_json()),
+            ("batch_wait", self.batch_wait.to_json()),
             ("capture_latency", self.capture_latency.to_json()),
             ("encode_latency", self.encode_latency.to_json()),
             ("backend_latency", self.backend_latency.to_json()),
@@ -177,13 +217,25 @@ mod tests {
     }
 
     #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::default();
+        assert_eq!(g.peak(), 0);
+        g.observe(3);
+        g.observe(7);
+        g.observe(2);
+        assert_eq!(g.peak(), 7);
+    }
+
+    #[test]
     fn metrics_json_shape() {
         let m = PipelineMetrics::default();
         m.frames_in.add(3);
         m.batches.inc();
         m.batch_occupancy_sum.add(8);
+        m.frame_queue_peak.observe(5);
         let j = m.to_json();
         assert_eq!(j.get("frames_in").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("frame_queue_peak").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(
             j.get("mean_batch_occupancy").unwrap().as_f64().unwrap(),
             8.0

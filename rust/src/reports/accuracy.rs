@@ -278,8 +278,10 @@ pub fn table1(ctx: &ReportCtx) -> Result<()> {
     let (acc_mtj, sp_mtj) = evalset_accuracy(
         backend, &sim, &eval, CaptureMode::CalibratedMtj, None,
     )?;
-    println!("\nmeasured (this repo, synthetic 10-class corpus, {} frames):",
-        eval.frames.len());
+    println!(
+        "\nmeasured (this repo, synthetic 10-class corpus, {} frames):",
+        eval.frames.len()
+    );
     println!(
         "{:<24} {:>10} {:>10}",
         "configuration", "acc %", "sparsity %"
@@ -298,15 +300,18 @@ pub fn table1(ctx: &ReportCtx) -> Result<()> {
     );
     let drop = (acc_ideal - acc_mtj) * 100.0;
     println!(
-        "→ multi-MTJ stochastic switching costs {:.2} pp (paper: no significant drop at <0.1 % neuron error)",
+        "→ multi-MTJ stochastic switching costs {:.2} pp (paper: no \
+         significant drop at <0.1 % neuron error)",
         drop
     );
     // Optional small-scale sweep from train.py --table1.
     if let Ok(v) =
         Value::from_file(&ctx.artifacts_dir.join("table1_small.json"))
     {
-        println!("\nsmall-scale BNN sweep (python train.py --table1): {}",
-            v.to_string_compact());
+        println!(
+            "\nsmall-scale BNN sweep (python train.py --table1): {}",
+            v.to_string_compact()
+        );
     }
     ctx.save(
         "table1",

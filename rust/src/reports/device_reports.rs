@@ -76,10 +76,12 @@ pub fn fig2(ctx: &ReportCtx) -> Result<()> {
         t += 0.1;
     }
     // The calibration contract at the paper's 700 ps write pulse.
-    println!("→ at 700 ps, AP→P: {:.3} @0.7 V, {:.3} @0.8 V, {:.4} @0.9 V",
+    println!(
+        "→ at 700 ps, AP→P: {:.3} @0.7 V, {:.3} @0.8 V, {:.4} @0.9 V",
         model.switching_probability(MtjState::AntiParallel, 0.7, 0.7),
         model.switching_probability(MtjState::AntiParallel, 0.8, 0.7),
-        model.switching_probability(MtjState::AntiParallel, 0.9, 0.7));
+        model.switching_probability(MtjState::AntiParallel, 0.9, 0.7)
+    );
     println!("  paper measured:    0.062,       0.924,       0.9717");
     ctx.save(
         "fig2",
@@ -304,9 +306,15 @@ pub fn fig6(ctx: &ReportCtx) -> Result<()> {
     let reader = BurstReader::new(&model, &hw.circuit);
     let pattern = [P, P, AP, AP, P, P, AP, P];
     let res = reader.trace_pattern(&model, &pattern);
-    println!("comparator V_REF = {:.4} V, sense margin = {:.4} V",
-        reader.sense.v_ref, reader.sense.sense_margin(&model));
-    println!("{:>6} {:>8} {:>10} {:>7} {:>7}", "dev", "t (ns)", "V_MTJ (V)", "O_ACT", "reset");
+    println!(
+        "comparator V_REF = {:.4} V, sense margin = {:.4} V",
+        reader.sense.v_ref,
+        reader.sense.sense_margin(&model)
+    );
+    println!(
+        "{:>6} {:>8} {:>10} {:>7} {:>7}",
+        "dev", "t (ns)", "V_MTJ (V)", "O_ACT", "reset"
+    );
     let mut rows = Vec::new();
     for s in &res.steps {
         println!(

@@ -99,10 +99,16 @@ pub fn fig9(ctx: &ReportCtx) -> Result<()> {
         fe_ours / fe_base,
         c_ours / c_base
     );
-    println!("\n→ front-end improvement: {:.1}× vs baseline (paper 8.2×), {:.1}× vs in-sensor (paper 8.0×)",
-        fe_base / fe_ours, fe_ins / fe_ours);
-    println!("→ comm improvement (coded): {:.1}× vs baseline (paper: up to 8.5×)",
-        c_base / c_ours);
+    println!(
+        "\n→ front-end improvement: {:.1}× vs baseline (paper 8.2×), \
+         {:.1}× vs in-sensor (paper 8.0×)",
+        fe_base / fe_ours,
+        fe_ins / fe_ours
+    );
+    println!(
+        "→ comm improvement (coded): {:.1}× vs baseline (paper: up to 8.5×)",
+        c_base / c_ours
+    );
     ctx.save(
         "fig9",
         &Value::obj(vec![

@@ -16,6 +16,10 @@ pub struct Args {
     options: BTreeMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    /// Names read as value options (not bare flags) — lets `finish`
+    /// reject an option whose value was forgotten (`--workload` with no
+    /// value parses as a flag and would otherwise silently default).
+    value_names: std::cell::RefCell<Vec<String>>,
 }
 
 impl Args {
@@ -53,13 +57,20 @@ impl Args {
         self.consumed.borrow_mut().push(key.to_string());
     }
 
-    pub fn flag(&self, name: &str) -> bool {
+    /// A bare `--name` flag.  `--name value` is a usage error for
+    /// flag-only names: the stray value would otherwise swallow the flag
+    /// silently (`serve --stream 64` quietly running oneshot mode).
+    pub fn flag(&self, name: &str) -> Result<bool> {
         self.mark(name);
-        self.flags.iter().any(|f| f == name)
+        if let Some(v) = self.options.get(name) {
+            bail!("--{name} is a flag and takes no value (got {v:?})");
+        }
+        Ok(self.flags.iter().any(|f| f == name))
     }
 
     pub fn opt_str(&self, name: &str) -> Option<String> {
         self.mark(name);
+        self.value_names.borrow_mut().push(name.to_string());
         self.options.get(name).cloned()
     }
 
@@ -98,6 +109,9 @@ impl Args {
             }
         }
         for key in &self.flags {
+            if self.value_names.borrow().iter().any(|c| c == key) {
+                bail!("--{key} expects a value");
+            }
             if !consumed.iter().any(|c| c == key) {
                 bail!("unknown flag --{key}");
             }
@@ -119,7 +133,7 @@ mod tests {
         let a = parse("serve --frames 100 --mtj-noise --rate=2.5");
         assert_eq!(a.command.as_deref(), Some("serve"));
         assert_eq!(a.usize_or("frames", 1).unwrap(), 100);
-        assert!(a.flag("mtj-noise"));
+        assert!(a.flag("mtj-noise").unwrap());
         assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
         a.finish().unwrap();
     }
@@ -136,6 +150,20 @@ mod tests {
         let a = parse("serve --tpyo 3");
         let _ = a.usize_or("frames", 1);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_with_attached_value_is_error() {
+        let a = parse("serve --stream 64");
+        assert!(a.flag("stream").is_err());
+    }
+
+    #[test]
+    fn option_without_value_is_error() {
+        let a = parse("serve --workload --frames 64");
+        let _ = a.usize_or("frames", 1);
+        assert!(a.opt_str("workload").is_none());
+        assert!(a.finish().is_err(), "--workload lost its value");
     }
 
     #[test]

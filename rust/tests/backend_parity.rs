@@ -103,9 +103,11 @@ fn pipeline_end_to_end_on_native_backend() {
     // The acceptance-criteria flow: no artifacts, no skips.
     let hw = HwConfig::default();
     let weights = FirstLayerWeights::synthetic(32, 3, 3, 9);
-    let mut cfg = PipelineConfig::default();
+    let cfg = PipelineConfig {
+        sparse_coding: SparseCoding::Rle,
+        ..PipelineConfig::default()
+    };
     assert_eq!(cfg.backend, BackendKind::Native, "native must be the default");
-    cfg.sparse_coding = SparseCoding::Rle;
     let sim = PixelArraySim::new(hw.clone(), weights.clone());
     let backend = Arc::new(NativeBackend::new(
         hw,

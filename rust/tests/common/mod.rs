@@ -1,0 +1,11 @@
+//! Shared scaffolding for the native-backend integration tests
+//! (`tests/integration.rs`, `tests/streaming.rs`).
+
+use pixelmtj::config::PipelineConfig;
+use pixelmtj::coordinator::Pipeline;
+
+/// A pipeline over the native backend with deterministic synthetic
+/// weights — no artifacts needed, so these tests never skip.
+pub fn native_pipeline(cfg: PipelineConfig) -> Pipeline {
+    Pipeline::synthetic_native(cfg).unwrap()
+}

@@ -4,29 +4,15 @@
 //! AOT-artifact tests live in the `pjrt` module (feature-gated) and skip
 //! when artifacts are absent.
 
-use std::sync::Arc;
-
-use pixelmtj::backend::NativeBackend;
 use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
-use pixelmtj::coordinator::{sparse, Pipeline};
+use pixelmtj::coordinator::sparse;
 use pixelmtj::energy::{self, Geometry};
 use pixelmtj::sensor::{
     scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
 };
 
-fn native_pipeline(cfg: PipelineConfig) -> Pipeline {
-    let hw = HwConfig::default();
-    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
-    let sim = PixelArraySim::new(hw.clone(), weights.clone());
-    let backend = Arc::new(NativeBackend::new(
-        hw,
-        weights,
-        cfg.sensor_height,
-        cfg.sensor_width,
-        cfg.sensor_workers,
-    ));
-    Pipeline::new(cfg, sim, backend).unwrap()
-}
+mod common;
+use common::native_pipeline;
 
 #[test]
 fn pipeline_serves_all_frames_in_order() {
@@ -59,8 +45,10 @@ fn pipeline_is_deterministic_across_runs() {
 
 #[test]
 fn pipeline_batches_fill_under_load() {
-    let mut cfg = PipelineConfig::default();
-    cfg.batch_timeout_us = 50_000; // generous: let batches fill
+    let cfg = PipelineConfig {
+        batch_timeout_us: 50_000, // generous: let batches fill
+        ..PipelineConfig::default()
+    };
     let pipeline = native_pipeline(cfg);
     let gen = SceneGen::new(3, 32, 32);
     let frames: Vec<_> = (0..64u32).map(|i| gen.textured(i)).collect();

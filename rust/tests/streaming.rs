@@ -1,0 +1,156 @@
+//! Streaming-layer integration tests: backpressure on the bounded frame
+//! queue, clean shutdown with in-flight frames, drain keeping the stream
+//! open, and stream-vs-oneshot classification parity.  All on the native
+//! backend so nothing skips.
+
+use pixelmtj::config::PipelineConfig;
+use pixelmtj::sensor::{scene::SceneGen, Frame};
+
+mod common;
+use common::native_pipeline;
+
+fn textured_frames(n: u32) -> Vec<Frame> {
+    let gen = SceneGen::new(3, 32, 32);
+    (0..n).map(|i| gen.textured(i)).collect()
+}
+
+#[test]
+fn stream_matches_oneshot_classifications() {
+    // Capture noise derives from frame.seq, so the explicit
+    // submit/drain path must classify identically to one-shot serve —
+    // independent of how frames landed in batches.
+    let oneshot = native_pipeline(PipelineConfig::default());
+    let a = oneshot.serve(textured_frames(20)).unwrap();
+
+    let streaming = native_pipeline(PipelineConfig::default());
+    let server = streaming.stream().unwrap();
+    for frame in textured_frames(20) {
+        server.submit(frame).unwrap();
+    }
+    let b = server.drain().unwrap();
+    let report = server.shutdown().unwrap();
+    assert!(report.results.is_empty(), "drain already took everything");
+
+    assert_eq!(a.results.len(), 20);
+    assert_eq!(b.len(), 20);
+    for (x, y) in a.results.iter().zip(b.iter()) {
+        assert_eq!(x.seq, y.seq);
+        assert_eq!(x.label, y.label, "seq {}: labels differ", x.seq);
+        assert_eq!(x.logits, y.logits, "seq {}: logits differ", x.seq);
+        assert_eq!(x.link_bits, y.link_bits);
+    }
+}
+
+#[test]
+fn try_submit_rejects_at_capacity_then_recovers() {
+    // A tiny bounded queue + a producer ~1000× faster than the sensor
+    // stage: non-blocking submits must bounce, and the bounced frames
+    // must be servable afterwards via blocking submits.
+    let cfg = PipelineConfig {
+        queue_depth: 1,
+        sensor_workers: 1,
+        ..PipelineConfig::default()
+    };
+    let pipeline = native_pipeline(cfg);
+    let server = pipeline.stream().unwrap();
+
+    let mut rejected = Vec::new();
+    for frame in textured_frames(64) {
+        if let Err(frame) = server.try_submit(frame) {
+            rejected.push(frame);
+        }
+    }
+    assert!(
+        !rejected.is_empty(),
+        "a depth-1 queue under a fast producer must reject some frames"
+    );
+    let metrics = pipeline.metrics();
+    assert_eq!(metrics.submit_rejected.get(), rejected.len() as u64);
+
+    for frame in rejected {
+        server.submit(frame).unwrap(); // blocking path absorbs the rest
+    }
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 64, "no frame may be lost");
+    let seqs: Vec<u32> = results.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (0..64).collect::<Vec<_>>());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn blocking_submit_bounds_queue_depth() {
+    let cfg = PipelineConfig {
+        queue_depth: 2,
+        sensor_workers: 2,
+        ..PipelineConfig::default()
+    };
+    let pipeline = native_pipeline(cfg);
+    let server = pipeline.stream().unwrap();
+    for frame in textured_frames(32) {
+        server.submit(frame).unwrap();
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.results.len(), 32);
+    let metrics = pipeline.metrics();
+    // In-queue frames are capped by the channel bound; the peak counter
+    // additionally sees one frame per worker hand and the blocked
+    // submitter itself — but never the whole 32-frame workload.
+    let peak = metrics.frame_queue_peak.peak();
+    assert!(
+        peak <= 2 + 2 + 1,
+        "backpressure failed: frame queue peaked at {peak}"
+    );
+    assert_eq!(metrics.frames_dropped.get(), 0);
+}
+
+#[test]
+fn shutdown_finishes_in_flight_frames() {
+    // No drain: shutdown alone must finish everything already submitted.
+    let pipeline = native_pipeline(PipelineConfig::default());
+    let server = pipeline.stream().unwrap();
+    for frame in textured_frames(24) {
+        server.submit(frame).unwrap();
+    }
+    // No in_flight() > 0 assertion here: a slow runner could classify
+    // all 24 frames before it runs, flaking the now-enforcing CI gate.
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.results.len(), 24);
+    let seqs: Vec<u32> = report.results.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, (0..24).collect::<Vec<_>>(), "seq-sorted results");
+    assert_eq!(report.metrics.frames_out.get(), 24);
+}
+
+#[test]
+fn drain_keeps_stream_open_for_more_frames() {
+    let pipeline = native_pipeline(PipelineConfig::default());
+    let server = pipeline.stream().unwrap();
+    for frame in textured_frames(8) {
+        server.submit(frame).unwrap();
+    }
+    let first = server.drain().unwrap();
+    assert_eq!(first.len(), 8);
+    assert_eq!(server.in_flight(), 0);
+
+    let gen = SceneGen::new(3, 32, 32);
+    for i in 8..12u32 {
+        server.submit(gen.textured(i)).unwrap();
+    }
+    let second = server.drain().unwrap();
+    let seqs: Vec<u32> = second.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, vec![8, 9, 10, 11]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn stream_rejects_batch_sizes_without_single_frame_fallback() {
+    let cfg = PipelineConfig {
+        batch_sizes: vec![8],
+        ..PipelineConfig::default()
+    };
+    let pipeline = native_pipeline(cfg);
+    let err = match pipeline.stream() {
+        Ok(_) => panic!("must refuse batch_sizes without the size-1 fallback"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("batch_sizes"));
+}
