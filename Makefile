@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy bench-backend bench-stream artifacts
+.PHONY: check build test fmt clippy bench-backend bench-stream bench-sweep sweep artifacts
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -27,6 +27,14 @@ bench-backend:
 # Streaming scaling: fps + e2e latency vs workers → rust/BENCH_stream.json
 bench-stream:
 	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench stream
+
+# Sweep scaling: cells/sec vs worker count → rust/BENCH_sweep.json
+bench-sweep:
+	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench sweep
+
+# Default reliability campaign (paper's calibrated points) → rust/reports/
+sweep:
+	cd $(RUST_DIR) && cargo run --release -- sweep
 
 # AOT artifact export (requires the Python/JAX toolchain; see python/).
 artifacts:

@@ -1,0 +1,116 @@
+//! Sweep engine scaling bench: cells/sec vs worker count on a fixed
+//! campaign grid → `BENCH_sweep.json`.
+//!
+//! The acceptance claim this file pins: the campaign is embarrassingly
+//! parallel across cells, so throughput scales with workers (>2× from
+//! 1 → 4 on a ≥4-core machine; on smaller machines the speedup is
+//! core-bound and the JSON records whatever was measured).
+//! `PIXELMTJ_BENCH_FAST=1` shrinks trials for CI smoke runs.
+
+use std::time::Instant;
+
+use pixelmtj::config::SweepConfig;
+use pixelmtj::sweep::run_sweep;
+use pixelmtj::util::json::Value;
+
+struct Run {
+    threads: usize,
+    cells: usize,
+    wall_s: f64,
+    cells_per_sec: f64,
+}
+
+/// 24 cells spanning voltage × majority × variability — uniform per-cell
+/// cost, several cells per worker at every measured thread count.
+const GRID: &str = "v=0.7,0.75,0.8,0.85,0.9,0.95;k=4,5;sigma=0,0.05";
+
+fn run(threads: usize, trials: u32) -> Run {
+    let cfg = SweepConfig {
+        grid: GRID.to_string(),
+        trials,
+        threads,
+        seed: 9,
+        ..SweepConfig::default()
+    };
+    let t0 = Instant::now();
+    let summary = run_sweep(&cfg).expect("sweep bench run failed");
+    let wall_s = t0.elapsed().as_secs_f64();
+    Run {
+        threads,
+        cells: summary.cells.len(),
+        wall_s,
+        cells_per_sec: summary.cells.len() as f64 / wall_s.max(1e-9),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+    let trials: u32 = if fast { 8 } else { 32 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "sweep bench: {trials} trials/cell on grid {GRID} \
+         ({cores} cores available)\n"
+    );
+
+    // Warm-up run so page faults / lazy init don't tax the 1-thread
+    // baseline.
+    let _ = run(1, 1);
+
+    let worker_counts = [1usize, 2, 4];
+    let mut runs = Vec::new();
+    for &threads in &worker_counts {
+        let r = run(threads, trials);
+        println!(
+            "threads={:<2} {:>3} cells in {:>6.2} s → {:>7.2} cells/s",
+            r.threads, r.cells, r.wall_s, r.cells_per_sec
+        );
+        runs.push(r);
+    }
+
+    let cps = |t: usize| {
+        runs.iter()
+            .find(|r| r.threads == t)
+            .map(|r| r.cells_per_sec)
+            .unwrap_or(0.0)
+    };
+    let speedup_2 = cps(2) / cps(1).max(1e-9);
+    let speedup_4 = cps(4) / cps(1).max(1e-9);
+    println!(
+        "\n→ scaling: 1→2 workers {speedup_2:.2}×, 1→4 workers \
+         {speedup_4:.2}×"
+    );
+    if speedup_4 < 2.0 && cores >= 4 {
+        eprintln!(
+            "warning: 1→4 scaling {speedup_4:.2}× below the 2× target \
+             on a {cores}-core machine"
+        );
+    }
+
+    let run_objs: Vec<Value> = runs
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("threads", Value::Num(r.threads as f64)),
+                ("cells", Value::Num(r.cells as f64)),
+                ("wall_s", Value::Num(r.wall_s)),
+                ("cells_per_sec", Value::Num(r.cells_per_sec)),
+            ])
+        })
+        .collect();
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("sweep".into())),
+        ("grid", Value::Str(GRID.into())),
+        ("trials_per_cell", Value::Num(trials as f64)),
+        ("cores_available", Value::Num(cores as f64)),
+        ("speedup_1_to_2", Value::Num(speedup_2)),
+        ("speedup_1_to_4", Value::Num(speedup_4)),
+        ("runs", Value::Arr(run_objs)),
+    ]);
+    let path = "BENCH_sweep.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

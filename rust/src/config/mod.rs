@@ -436,6 +436,77 @@ impl PipelineConfig {
     }
 }
 
+/// Monte-Carlo reliability sweep campaign configuration (see
+/// [`crate::sweep`]).  The grid spec string is parsed by
+/// `sweep::SweepGrid::parse`; keeping it textual here keeps config free
+/// of a dependency on the sweep layer and makes the CLI, config file,
+/// and report echo share one canonical spelling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Cartesian grid spec (`v=0.7,0.8;k=4,5;...`).
+    pub grid: String,
+    /// Monte-Carlo trials (frames) per cell.
+    pub trials: u32,
+    /// Worker threads; 0 = one per available core.  Never affects
+    /// results — only wall-clock (the sweep determinism contract).
+    pub threads: usize,
+    /// Campaign seed for the counter RNG.
+    pub seed: u32,
+    /// Frame height fed to the sensor sim.
+    pub sensor_height: usize,
+    /// Frame width fed to the sensor sim.
+    pub sensor_width: usize,
+    /// Directory the JSON report is written to.
+    pub out_dir: String,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            // The paper's three calibrated voltages; everything else at
+            // the Fig. 5 operating point (700 ps, n=8, k=4).
+            grid: "v=0.7,0.8,0.9".to_string(),
+            trials: 64,
+            threads: 0,
+            seed: 1,
+            sensor_height: 32,
+            sensor_width: 32,
+            out_dir: "reports".to_string(),
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref())
+            .context("loading sweep config")?;
+        let d = Self::default();
+        let getf = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Ok(x) => x.as_f64(),
+                Err(_) => Ok(dv),
+            }
+        };
+        let gets = |k: &str, dv: String| -> Result<String> {
+            match v.get(k) {
+                Ok(x) => Ok(x.as_str()?.to_string()),
+                Err(_) => Ok(dv),
+            }
+        };
+        Ok(Self {
+            grid: gets("grid", d.grid)?,
+            trials: getf("trials", d.trials as f64)? as u32,
+            threads: getf("threads", d.threads as f64)? as usize,
+            seed: getf("seed", d.seed as f64)? as u32,
+            sensor_height: getf("sensor_height", d.sensor_height as f64)?
+                as usize,
+            sensor_width: getf("sensor_width", d.sensor_width as f64)?
+                as usize,
+            out_dir: gets("out_dir", d.out_dir)?,
+        })
+    }
+}
+
 /// Manifest written by aot.py describing the exported executables.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -567,6 +638,27 @@ mod tests {
         assert_eq!(cfg.burst_gap_us, 500);
         std::fs::write(&p, r#"{"workload": "spiky"}"#).unwrap();
         assert!(PipelineConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn sweep_config_defaults_and_partial_json() {
+        let d = SweepConfig::default();
+        assert_eq!(d.grid, "v=0.7,0.8,0.9");
+        assert_eq!(d.threads, 0, "0 = auto");
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.json");
+        std::fs::write(
+            &p,
+            r#"{"grid": "v=0.9;k=5", "trials": 16, "threads": 2}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.grid, "v=0.9;k=5");
+        assert_eq!(cfg.trials, 16);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(cfg.out_dir, d.out_dir);
     }
 
     #[test]

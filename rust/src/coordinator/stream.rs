@@ -525,7 +525,10 @@ fn execute_batch(
     Ok(())
 }
 
-fn argmax(xs: &[f32]) -> usize {
+/// Label from a logit vector.  Also used by the sweep engine
+/// (`crate::sweep`) so its agreement metric applies the exact
+/// tie-breaking the serving path does (ties pick the last maximum).
+pub(crate) fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())

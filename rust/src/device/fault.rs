@@ -24,6 +24,17 @@ pub struct StuckFaults {
     pub stuck_p: usize,
 }
 
+impl StuckFaults {
+    pub fn new(stuck_ap: usize, stuck_p: usize) -> Self {
+        Self { stuck_ap, stuck_p }
+    }
+
+    /// Total stuck devices (of either polarity).
+    pub fn total(&self) -> usize {
+        self.stuck_ap + self.stuck_p
+    }
+}
+
 /// Neuron-level error rates of an n-device majority-k neuron with stuck
 /// faults: healthy devices switch with `p_fire` when driven / `p_err`
 /// when not; stuck-P devices always count as fired, stuck-AP never.
@@ -109,10 +120,7 @@ pub fn variability_error_mc(
         for m in 0..n {
             let idx = t.wrapping_mul(n as u32).wrapping_add(m as u32);
             // Box-Muller from two counter uniforms (streams 300/301).
-            let u1 = rng::uniform(seed, idx, 300).max(1e-12) as f64;
-            let u2 = rng::uniform(seed, idx, 301) as f64;
-            let g = (-2.0 * u1.ln()).sqrt()
-                * (2.0 * std::f64::consts::PI * u2).cos();
+            let g = rng::normal(seed, idx, 300, 301);
             let p_dev = (p_fire + sigma * g).clamp(0.0, 1.0);
             let u = rng::uniform(seed, idx, 302) as f64;
             fired += (u < p_dev) as usize;

@@ -16,6 +16,9 @@ pub mod mtj;
 pub mod neuron;
 pub mod rng;
 
-pub use fault::{faulty_neuron_error_rates, StuckFaults};
+pub use fault::{
+    faulty_neuron_error_rates, fig5_fault_extension, stuck_ap_tolerance,
+    StuckFaults,
+};
 pub use mtj::{Mtj, MtjModel, MtjState, ReadSample};
 pub use neuron::{neuron_error_rates, MultiMtjNeuron};

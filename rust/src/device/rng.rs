@@ -33,6 +33,17 @@ pub fn uniform(seed: u32, index: u32, stream: u32) -> f32 {
     fmix32(ctr) as f32 * 2.0_f32.powi(-32)
 }
 
+/// Standard normal at explicit counter coordinates: Box-Muller over two
+/// uniform streams.  The coordinate-addressed sibling of
+/// [`CounterRng::next_normal`] — shared by the fault model and the sweep
+/// engine so their Gaussian draws stay numerically identical.
+#[inline]
+pub fn normal(seed: u32, index: u32, stream_u1: u32, stream_u2: u32) -> f64 {
+    let u1 = (uniform(seed, index, stream_u1) as f64).max(1e-12);
+    let u2 = uniform(seed, index, stream_u2) as f64;
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
 /// Stateful convenience wrapper: a stream of uniforms for one logical
 /// sequence (e.g. per-frame analog noise), advancing the index.
 #[derive(Debug, Clone)]
@@ -137,6 +148,22 @@ mod tests {
         let (mut s, mut sq) = (0.0f64, 0.0f64);
         for _ in 0..n {
             let x = rng.next_normal() as f64;
+            s += x;
+            sq += x * x;
+        }
+        let mean = s / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn coordinate_normal_is_deterministic_and_standard() {
+        assert_eq!(normal(3, 7, 5, 6), normal(3, 7, 5, 6));
+        let n = 50_000u32;
+        let (mut s, mut sq) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            let x = normal(11, i, 40, 41);
             s += x;
             sq += x * x;
         }

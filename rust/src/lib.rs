@@ -28,6 +28,8 @@
 //! * [`backend`] — the `InferenceBackend` trait and its implementations:
 //!   `NativeBackend` (XNOR-popcount over `u64` lanes) and `PjrtBackend`
 //!   (feature `pjrt`)
+//! * [`sweep`] — parallel Monte-Carlo reliability sweep engine over the
+//!   joint operating space (deterministic for any thread count)
 //! * [`energy`] — energy / bandwidth / latency accounting (paper §3.2-3.4)
 //! * [`runtime`] — PJRT client wrapper executing the AOT artifacts
 //!   (feature `pjrt`)
@@ -44,6 +46,7 @@ pub mod reports;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sensor;
+pub mod sweep;
 pub mod util;
 pub mod validate;
 

@@ -6,6 +6,8 @@
 //!                default — no artifacts required)
 //! * `report`   — regenerate a paper table/figure (`report all` for every
 //!                artifact; see DESIGN.md's experiment index)
+//! * `sweep`    — parallel Monte-Carlo reliability campaign over a grid
+//!                of operating points (bit-identical for any --threads)
 //! * `validate` — check the golden vectors against the rust stack (and
 //!                the AOT artifacts when built with `--features pjrt`)
 //! * `info`     — print configuration + backend/artifact inventory
@@ -15,10 +17,10 @@ use std::path::PathBuf;
 
 use pixelmtj::backend::{self, InferenceBackend as _};
 use pixelmtj::config::{
-    BackendKind, HwConfig, PipelineConfig, SparseCoding, Workload,
+    BackendKind, HwConfig, PipelineConfig, SparseCoding, SweepConfig, Workload,
 };
 use pixelmtj::coordinator::{stream, FrameSource as _, Pipeline};
-use pixelmtj::reports::{self, ReportCtx};
+use pixelmtj::reports::{self, sweep_report, ReportCtx};
 use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
 use pixelmtj::util::cli::Args;
 
@@ -32,10 +34,13 @@ USAGE:
                     [--stream] [--workload steady|bursty|motion]
                     [--queue-depth N] [--burst-len N] [--burst-gap-us N]
   pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
+  pixelmtj sweep    [--grid SPEC] [--trials N] [--threads N] [--seed N]
+                    [--height N] [--width N] [--out DIR] [--config FILE]
   pixelmtj validate [--artifacts DIR]
   pixelmtj info     [--artifacts DIR]
 
-Reports: fig1b fig2 fig4a fig4b fig5 fig6 fig8 fig9 bandwidth latency table1";
+Reports: fig1b fig2 fig4a fig4b fig5 fig6 fig8 fig9 bandwidth latency table1
+Sweep grid keys: v pulse n k ap p sigma mode (see rust/README.md)";
 
 fn main() {
     if let Err(e) = run() {
@@ -49,6 +54,7 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("serve") => serve(&args),
         Some("report") => report(&args),
+        Some("sweep") => sweep(&args),
         Some("validate") => validate(&args),
         Some("info") => info(&args),
         _ => {
@@ -222,6 +228,41 @@ fn report(args: &Args) -> Result<()> {
     args.finish()?;
     let ctx = ReportCtx::new(&dir, &out)?;
     reports::run(&id, &ctx)
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    // Same layering as serve: config file provides the ambient profile,
+    // explicit flags override it, and unknown/valueless/attached options
+    // are rejected by finish() (the PR 2 hardening rules — the sweep
+    // grid flags are equally rejected under every other subcommand
+    // because those handlers never consume them).
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => SweepConfig::from_json_file(path)?,
+        None => SweepConfig::default(),
+    };
+    if let Some(grid) = args.opt_str("grid") {
+        cfg.grid = grid;
+    }
+    cfg.trials = args.u32_or("trials", cfg.trials)?;
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    cfg.seed = args.u32_or("seed", cfg.seed)?;
+    cfg.sensor_height = args.usize_or("height", cfg.sensor_height)?;
+    cfg.sensor_width = args.usize_or("width", cfg.sensor_width)?;
+    cfg.out_dir = args.str_or("out", &cfg.out_dir);
+    args.finish()?;
+
+    let summary = pixelmtj::sweep::run_sweep(&cfg)?;
+    sweep_report::print_table(&summary);
+    println!(
+        "\n{} cells × {} trials in {:.2} s on {} threads → {:.1} cells/s",
+        summary.cells.len(),
+        summary.trials,
+        summary.wall_secs,
+        summary.threads_used,
+        summary.cells.len() as f64 / summary.wall_secs.max(1e-9)
+    );
+    sweep_report::save(&PathBuf::from(&cfg.out_dir), &summary)?;
+    Ok(())
 }
 
 fn validate(args: &Args) -> Result<()> {

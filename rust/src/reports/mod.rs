@@ -7,6 +7,7 @@
 
 mod accuracy;
 mod device_reports;
+pub mod sweep_report;
 mod system_reports;
 
 use anyhow::{bail, Result};

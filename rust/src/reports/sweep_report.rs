@@ -1,0 +1,138 @@
+//! Sweep campaign report: aligned table + deterministic JSON payload.
+//!
+//! The JSON intentionally excludes wall-clock and worker count — those
+//! are run facts, not results — so the file written for `--threads 1`
+//! and `--threads 8` is byte-identical (the golden-test contract in
+//! `tests/sweep.rs`).
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use crate::sweep::{CellResult, SweepSummary};
+use crate::util::json::Value;
+
+fn cell_json(c: &CellResult) -> Value {
+    Value::obj(vec![
+        ("v", Value::Num(c.cell.op.v_write)),
+        ("pulse_ns", Value::Num(c.cell.op.pulse_ns)),
+        ("n", Value::Num(c.cell.op.n as f64)),
+        ("k", Value::Num(c.cell.op.k as f64)),
+        ("stuck_ap", Value::Num(c.cell.op.faults.stuck_ap as f64)),
+        ("stuck_p", Value::Num(c.cell.op.faults.stuck_p as f64)),
+        ("sigma", Value::Num(c.cell.op.sigma_psw)),
+        ("mode", Value::Str(c.cell.mode.name().to_string())),
+        ("trials", Value::Num(c.trials as f64)),
+        ("elements_per_frame", Value::Num(c.elements_per_frame as f64)),
+        ("ber", Value::Num(c.ber)),
+        ("e10", Value::Num(c.e10)),
+        ("e01", Value::Num(c.e01)),
+        ("agreement", Value::Num(c.agreement)),
+        ("mean_sparsity", Value::Num(c.mean_sparsity)),
+        ("energy_pj_per_frame", Value::Num(c.energy_pj_per_frame)),
+    ])
+}
+
+/// Deterministic JSON payload for a campaign summary.
+pub fn to_json(s: &SweepSummary) -> Value {
+    Value::obj(vec![
+        ("suite", Value::Str("sweep".to_string())),
+        ("grid", Value::Str(s.grid.clone())),
+        ("trials", Value::Num(s.trials as f64)),
+        ("seed", Value::Num(s.seed as f64)),
+        ("sensor_height", Value::Num(s.sensor_height as f64)),
+        ("sensor_width", Value::Num(s.sensor_width as f64)),
+        ("cells", Value::Arr(s.cells.iter().map(cell_json).collect())),
+    ])
+}
+
+/// Print the campaign as an aligned table (one row per cell).
+pub fn print_table(s: &SweepSummary) {
+    println!(
+        "{:>5} {:>6} {:>3} {:>3} {:>3} {:>3} {:>6} {:>10} | {:>9} {:>9} \
+         {:>9} {:>7} {:>8} {:>10}",
+        "V",
+        "t(ns)",
+        "n",
+        "k",
+        "ap",
+        "p",
+        "σ",
+        "mode",
+        "BER",
+        "e10",
+        "e01",
+        "agree",
+        "sparsity",
+        "pJ/frame"
+    );
+    for c in &s.cells {
+        println!(
+            "{:>5.2} {:>6.2} {:>3} {:>3} {:>3} {:>3} {:>6.3} {:>10} | \
+             {:>9.3e} {:>9.3e} {:>9.3e} {:>7.3} {:>8.3} {:>10.1}",
+            c.cell.op.v_write,
+            c.cell.op.pulse_ns,
+            c.cell.op.n,
+            c.cell.op.k,
+            c.cell.op.faults.stuck_ap,
+            c.cell.op.faults.stuck_p,
+            c.cell.op.sigma_psw,
+            c.cell.mode.name(),
+            c.ber,
+            c.e10,
+            c.e01,
+            c.agreement,
+            c.mean_sparsity,
+            c.energy_pj_per_frame
+        );
+    }
+}
+
+/// Persist the campaign JSON as `<out_dir>/sweep.json`.
+pub fn save(out_dir: &Path, s: &SweepSummary) -> Result<PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join("sweep.json");
+    std::fs::write(&path, to_json(s).to_string_pretty())?;
+    println!("  [saved {}]", path.display());
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepConfig;
+    use crate::sweep::run_sweep;
+
+    fn tiny_summary() -> SweepSummary {
+        run_sweep(&SweepConfig {
+            grid: "v=0.9".to_string(),
+            trials: 2,
+            threads: 1,
+            sensor_height: 16,
+            sensor_width: 16,
+            ..SweepConfig::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn json_excludes_run_facts_and_roundtrips() {
+        let s = tiny_summary();
+        let v = to_json(&s);
+        assert!(v.get("threads").is_err(), "threads must not leak into JSON");
+        assert!(v.get("wall_secs").is_err());
+        let text = v.to_string_pretty();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+        let cells = v.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("mode").unwrap().as_str().unwrap(), "calibrated");
+    }
+
+    #[test]
+    fn save_writes_sweep_json() {
+        let dir = std::env::temp_dir().join("pixelmtj_sweep_report_test");
+        let path = save(&dir, &tiny_summary()).unwrap();
+        assert!(path.ends_with("sweep.json"));
+        let v = Value::from_file(&path).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "sweep");
+    }
+}

@@ -14,10 +14,13 @@
 //!   switching, then the burst reader majority-votes; used for the
 //!   circuit-level figures and ablations.
 
+use anyhow::Result;
+
 use crate::circuit::readout::BurstReader;
 use crate::circuit::subtractor::{threshold_to_volts, AnalogSubtractor};
-use crate::config::HwConfig;
-use crate::device::mtj::MtjModel;
+use crate::config::{HwConfig, MtjConfig};
+use crate::device::fault::StuckFaults;
+use crate::device::mtj::{MtjModel, MtjState};
 use crate::device::neuron::MultiMtjNeuron;
 use crate::device::rng;
 use crate::sensor::frame::{ActivationMap, Frame};
@@ -29,6 +32,75 @@ pub enum CaptureMode {
     Ideal,
     CalibratedMtj,
     PhysicalMtj,
+}
+
+impl CaptureMode {
+    /// Parse the CLI / sweep-grid spelling of a capture mode.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ideal" => Ok(Self::Ideal),
+            "calibrated" => Ok(Self::CalibratedMtj),
+            "physical" => Ok(Self::PhysicalMtj),
+            other => anyhow::bail!(
+                "unknown capture mode '{other}' (expected 'ideal', \
+                 'calibrated' or 'physical')"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Ideal => "ideal",
+            Self::CalibratedMtj => "calibrated",
+            Self::PhysicalMtj => "physical",
+        }
+    }
+}
+
+/// Operating point + reliability knobs for one sweep cell (see
+/// [`crate::sweep`]): the write drive, the pulse width, the neuron
+/// redundancy, and the two failure-mode injections the fault model
+/// quantifies analytically in [`crate::device::fault`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Drive amplitude for a firing neuron (V, write polarity).
+    pub v_write: f64,
+    /// Write pulse width (ns).
+    pub pulse_ns: f64,
+    /// Devices per neuron.
+    pub n: usize,
+    /// Majority threshold: ≥ `k` fired devices ⇒ activation 1.  A `k` of
+    /// zero degenerates to an always-firing neuron (the sweep grid
+    /// rejects it; the raw API follows the math).
+    pub k: usize,
+    /// Stuck-at fault pattern applied to every neuron.
+    pub faults: StuckFaults,
+    /// Device-to-device Gaussian σ on P_sw (per-device probability is
+    /// clamped back to [0, 1]).
+    pub sigma_psw: f64,
+    /// Seed for the *static* per-(element, device) P_sw offsets drawn
+    /// when `sigma_psw > 0`.  Device-to-device variation is fixed at
+    /// fabrication, so these draws must not depend on the frame: a weak
+    /// device stays weak on every capture.  The sweep engine stamps the
+    /// campaign seed here; `frame.seq` continues to drive the per-frame
+    /// switching draws.
+    pub sigma_seed: u32,
+}
+
+impl OperatingPoint {
+    /// The paper's calibrated operating point for this device config
+    /// (0.8 V / 700 ps, n = 8, k = 4, no faults, no variability).
+    pub fn from_cfg(cfg: &MtjConfig) -> Self {
+        Self {
+            v_write: cfg.sw_calib_voltages[1],
+            pulse_ns: cfg.write_pulse_ns,
+            n: cfg.n_mtj_per_neuron,
+            k: cfg.majority_k,
+            faults: StuckFaults::default(),
+            sigma_psw: 0.0,
+            sigma_seed: 0,
+        }
+    }
 }
 
 /// Event counters consumed by the energy model.
@@ -238,6 +310,179 @@ impl PixelArraySim {
         (map, stats)
     }
 
+    /// Capture one frame at an explicit [`OperatingPoint`] — the sweep
+    /// engine's entry into the sensor.  Same analog plane and threshold
+    /// matching as [`Self::capture`], but the write drive, pulse width,
+    /// neuron redundancy, stuck-at faults, and P_sw variability are
+    /// overridden per call:
+    ///
+    /// * `Ideal` — noiseless comparator reference (`op` is ignored);
+    /// * `CalibratedMtj` — firing neurons are driven at `op.v_write`,
+    ///   quiet neurons one calibration step lower (the same quantization
+    ///   the default capture applies at 0.8 / 0.7 V);
+    /// * `PhysicalMtj` — per-channel threshold-matched subtractor centred
+    ///   on `op.v_write`, drive-gain stage (both shared with
+    ///   [`Self::capture`]'s physical path via `channel_subtractor` /
+    ///   `drive_voltage`), then the device model at the continuous drive
+    ///   voltage.  The burst read is the deterministic comparator (spike
+    ///   ⟺ device parallel — exactly what `BurstReader` produces for
+    ///   healthy devices, see the bit-parity test below), which is what
+    ///   admits stuck-at and σ injection; `mtj_resets` counts switched
+    ///   devices rather than iterative reset pulses (a ≲3 % energy
+    ///   approximation).
+    ///
+    /// Every stochastic draw uses `(frame.seq, element, stream)` counter
+    /// coordinates, so the result depends only on the frame and the
+    /// operating point — never on threading or call order (the
+    /// determinism contract `tests/sweep.rs` pins).
+    pub fn capture_at(
+        &self,
+        frame: &Frame,
+        op: &OperatingPoint,
+        mode: CaptureMode,
+    ) -> (ActivationMap, CaptureStats) {
+        let (z, ext, mut stats) = self.analog_plane(frame);
+        let (oh, ow) = self.out_hw(frame.height, frame.width);
+        let mut map = ActivationMap::new(self.weights.c_out, oh, ow, frame.seq);
+
+        match mode {
+            CaptureMode::Ideal => {
+                for (i, &zv) in z.iter().enumerate() {
+                    map.bits[i] = zv >= ext;
+                }
+                stats.comparator_evals += z.len() as u64;
+            }
+            CaptureMode::CalibratedMtj => {
+                let volts = &self.cfg.mtj.sw_calib_voltages;
+                let step =
+                    if volts.len() >= 2 { volts[1] - volts[0] } else { 0.1 };
+                let p_hi = self.model.switching_probability(
+                    MtjState::AntiParallel,
+                    op.v_write,
+                    op.pulse_ns,
+                );
+                let p_lo = self.model.switching_probability(
+                    MtjState::AntiParallel,
+                    op.v_write - step,
+                    op.pulse_ns,
+                );
+                for (i, &zv) in z.iter().enumerate() {
+                    let p = if zv >= ext { p_hi } else { p_lo };
+                    map.bits[i] =
+                        self.sweep_vote(frame.seq, i as u32, p, op, &mut stats);
+                }
+            }
+            CaptureMode::PhysicalMtj => {
+                for o in 0..self.weights.c_out {
+                    let sub = self.channel_subtractor(o, ext, op.v_write);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let i = (o * oh + oy) * ow + ox;
+                            let v_drive = self.drive_voltage(
+                                &sub, o, z[i], op.v_write, &mut stats,
+                            );
+                            let p = self.model.switching_probability(
+                                MtjState::AntiParallel,
+                                v_drive,
+                                op.pulse_ns,
+                            );
+                            map.bits[i] = self.sweep_vote(
+                                frame.seq, i as u32, p, op, &mut stats,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        stats.ones = map.bits.iter().filter(|&&b| b).count() as u64;
+        (map, stats)
+    }
+
+    /// Majority vote of one n-device neuron at base switching probability
+    /// `p_base` per healthy device, with stuck-at devices pinned and
+    /// optional Gaussian P_sw variability.  The Bernoulli draws reuse the
+    /// calibrated capture's `(seed, element, device)` streams; the
+    /// Box-Muller draws live on disjoint high streams so σ > 0 perturbs
+    /// the per-device probability without re-rolling the switching draws.
+    fn sweep_vote(
+        &self,
+        seed: u32,
+        index: u32,
+        p_base: f64,
+        op: &OperatingPoint,
+        stats: &mut CaptureStats,
+    ) -> bool {
+        const SIGMA_U1: u32 = 0x4000_0000;
+        const SIGMA_U2: u32 = 0x5000_0000;
+        let healthy = op.n - op.faults.total().min(op.n);
+        let mut fired_healthy = 0usize;
+        for m in 0..healthy {
+            let p_dev = if op.sigma_psw > 0.0 {
+                // Static fabrication spread: seeded by `op.sigma_seed`
+                // (campaign-level), NOT the per-frame `seed` — a weak
+                // device must stay weak on every capture.
+                let g = rng::normal(
+                    op.sigma_seed,
+                    index,
+                    SIGMA_U1 + m as u32,
+                    SIGMA_U2 + m as u32,
+                );
+                (p_base + op.sigma_psw * g).clamp(0.0, 1.0)
+            } else {
+                p_base
+            };
+            let u = rng::uniform(seed, index, m as u32) as f64;
+            fired_healthy += usize::from(u < p_dev);
+        }
+        // Every device is pulsed and sensed; stuck devices just don't
+        // respond.  Only fired healthy devices need a reset (a stuck-P
+        // device cannot be reset — that is what "stuck" means).
+        stats.mtj_writes += op.n as u64;
+        stats.mtj_reads += op.n as u64;
+        stats.comparator_evals += op.n as u64;
+        stats.mtj_resets += fired_healthy as u64;
+        fired_healthy + op.faults.stuck_p >= op.k
+    }
+
+    /// Threshold-matched subtractor for output channel `o`, centred on
+    /// the switching voltage `v_sw`.  Per-channel algorithmic threshold
+    /// in MAC units: z ≥ ext ⟺ u + shift ≥ ext·v_th ⟺ (f(mp)−f(mn)) ≥ θ_o.
+    fn channel_subtractor(
+        &self,
+        o: usize,
+        ext: f32,
+        v_sw: f64,
+    ) -> AnalogSubtractor {
+        let theta = (ext * self.weights.v_th - self.weights.shift[o]) as f64;
+        AnalogSubtractor::with_threshold_matching(
+            &self.cfg.circuit,
+            v_sw,
+            threshold_to_volts(theta, &self.cfg.circuit),
+        )
+    }
+
+    /// Drive-stage voltage for the plane value `zv` in channel `o`: the
+    /// subtractor output passed through the gain stage around `v_sw`
+    /// (compresses the device's ~100 mV transition band — see
+    /// `CircuitConfig::drive_gain`), clamped to the rails.  Shared by
+    /// the serving physical capture and the sweep's physical mode so the
+    /// two can never diverge.
+    fn drive_voltage(
+        &self,
+        sub: &AnalogSubtractor,
+        o: usize,
+        zv: f32,
+        v_sw: f64,
+        stats: &mut CaptureStats,
+    ) -> f64 {
+        // Recover the MAC difference from z (u = z·v_th − B).
+        let u = zv * self.weights.v_th - self.weights.shift[o];
+        let out = sub.subtract(0.0, u as f64);
+        stats.saturations += out.saturated as u64;
+        (v_sw + self.cfg.circuit.drive_gain * (out.v_conv - v_sw))
+            .clamp(0.0, crate::circuit::subtractor::V_RAIL_MAX)
+    }
+
     /// Full circuit + device composition (slow path).
     fn capture_physical(
         &self,
@@ -247,34 +492,18 @@ impl PixelArraySim {
         map: &mut ActivationMap,
         stats: &mut CaptureStats,
     ) {
-        let ccfg = &self.cfg.circuit;
         let v_sw = self.cfg.mtj.sw_calib_voltages[1]; // 0.8 V operating point
-        let reader = BurstReader::new(&self.model, ccfg);
+        let reader = BurstReader::new(&self.model, &self.cfg.circuit);
         let k = self.cfg.mtj.majority_k;
         let (oh, ow) = (map.height, map.width);
 
         for o in 0..self.weights.c_out {
-            // Per-channel algorithmic threshold in MAC units:
-            // z ≥ ext ⟺ u + shift ≥ ext·v_th ⟺ (f(mp)−f(mn)) ≥ θ_o.
-            let theta =
-                (ext * self.weights.v_th - self.weights.shift[o]) as f64;
-            let sub = AnalogSubtractor::with_threshold_matching(
-                ccfg,
-                v_sw,
-                threshold_to_volts(theta, ccfg),
-            );
+            let sub = self.channel_subtractor(o, ext, v_sw);
             for oy in 0..oh {
                 for ox in 0..ow {
                     let i = (o * oh + oy) * ow + ox;
-                    // Recover the MAC difference from z (u = z·v_th − B).
-                    let u = z[i] * self.weights.v_th - self.weights.shift[o];
-                    let out = sub.subtract(0.0, u as f64);
-                    stats.saturations += out.saturated as u64;
-                    // Drive stage: gain around V_SW compresses the device's
-                    // ~100 mV transition band (see CircuitConfig::drive_gain).
-                    let v_drive = (v_sw
-                        + ccfg.drive_gain * (out.v_conv - v_sw))
-                        .clamp(0.0, crate::circuit::subtractor::V_RAIL_MAX);
+                    let v_drive =
+                        self.drive_voltage(&sub, o, z[i], v_sw, stats);
                     let mut neuron =
                         MultiMtjNeuron::new(self.cfg.mtj.n_mtj_per_neuron);
                     let switched =
@@ -423,6 +652,128 @@ mod tests {
         let (a, _) = s.capture(&f1, CaptureMode::CalibratedMtj);
         let (b, _) = s.capture(&f2, CaptureMode::CalibratedMtj);
         assert_ne!(a.bits, b.bits);
+    }
+
+    fn paper_op() -> OperatingPoint {
+        OperatingPoint::from_cfg(&HwConfig::default().mtj)
+    }
+
+    #[test]
+    fn capture_at_defaults_track_calibrated_mode() {
+        // At the paper's operating point with no faults/variability the
+        // override path must agree with the stock calibrated capture up
+        // to the f32/f64 probability representation (i.e. near-exactly).
+        let s = sim();
+        let f = test_frame(32, 32, 21);
+        let (stock, st_stock) = s.capture(&f, CaptureMode::CalibratedMtj);
+        let (swept, st_swept) =
+            s.capture_at(&f, &paper_op(), CaptureMode::CalibratedMtj);
+        let flips = stock
+            .bits
+            .iter()
+            .zip(swept.bits.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            flips as f64 / stock.bits.len() as f64 < 1e-3,
+            "override path diverged from stock calibrated capture: {flips}"
+        );
+        assert_eq!(st_swept.mtj_writes, st_stock.mtj_writes);
+        assert_eq!(st_swept.elements, st_stock.elements);
+    }
+
+    #[test]
+    fn capture_at_is_deterministic() {
+        let s = sim();
+        let f = test_frame(24, 24, 33);
+        let op = OperatingPoint { sigma_psw: 0.05, ..paper_op() };
+        for mode in [CaptureMode::CalibratedMtj, CaptureMode::PhysicalMtj] {
+            let (a, sa) = s.capture_at(&f, &op, mode);
+            let (b, sb) = s.capture_at(&f, &op, mode);
+            assert_eq!(a.bits, b.bits, "{mode:?}");
+            assert_eq!(sa, sb, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn capture_at_physical_matches_device_level_path_bit_for_bit() {
+        // With no faults/σ the sweep's physical mode (probability vote
+        // over the shared drive chain) must reproduce the device-object
+        // write + burst-read serving path exactly: identical RNG
+        // coordinates and drive voltages, and the comparator's spike is
+        // deterministic (spike ⟺ parallel, sense margin > 0).
+        let s = sim();
+        let f = test_frame(20, 20, 5);
+        let (serve, _) = s.capture(&f, CaptureMode::PhysicalMtj);
+        let (swept, _) = s.capture_at(&f, &paper_op(), CaptureMode::PhysicalMtj);
+        assert_eq!(serve.bits, swept.bits);
+    }
+
+    #[test]
+    fn capture_at_five_dead_devices_never_fire() {
+        // healthy = 3 < k = 4 and no stuck-P help ⇒ all zeros.
+        let s = sim();
+        let f = test_frame(24, 24, 8);
+        let op = OperatingPoint {
+            faults: crate::device::StuckFaults { stuck_ap: 5, stuck_p: 0 },
+            ..paper_op()
+        };
+        let (map, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
+        assert!(map.bits.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn capture_at_four_stuck_p_always_fires() {
+        let s = sim();
+        let f = test_frame(24, 24, 8);
+        let op = OperatingPoint {
+            faults: crate::device::StuckFaults { stuck_ap: 0, stuck_p: 4 },
+            ..paper_op()
+        };
+        let (map, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
+        assert!(map.bits.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn capture_at_sigma_perturbs_but_small_sigma_is_absorbed() {
+        let s = sim();
+        let f = test_frame(32, 32, 17);
+        let (clean, _) =
+            s.capture_at(&f, &paper_op(), CaptureMode::CalibratedMtj);
+        let op = OperatingPoint { sigma_psw: 0.3, ..paper_op() };
+        let (noisy, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
+        assert_ne!(clean.bits, noisy.bits, "σ=0.3 must move some bits");
+        // Majority voting absorbs modest variability (paper Fig. 5 logic).
+        let op_small = OperatingPoint { sigma_psw: 0.05, ..paper_op() };
+        let (small, _) = s.capture_at(&f, &op_small, CaptureMode::CalibratedMtj);
+        let flips = clean
+            .bits
+            .iter()
+            .zip(small.bits.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            (flips as f64) < 0.02 * clean.bits.len() as f64,
+            "σ=0.05 flipped {flips} of {}",
+            clean.bits.len()
+        );
+    }
+
+    #[test]
+    fn capture_at_ideal_matches_capture_ideal() {
+        let s = sim();
+        let f = test_frame(32, 32, 4);
+        let (a, _) = s.capture(&f, CaptureMode::Ideal);
+        let (b, _) = s.capture_at(&f, &paper_op(), CaptureMode::Ideal);
+        assert_eq!(a.bits, b.bits);
+    }
+
+    #[test]
+    fn capture_mode_parse_and_name_roundtrip() {
+        for m in ["ideal", "calibrated", "physical"] {
+            assert_eq!(CaptureMode::parse(m).unwrap().name(), m);
+        }
+        assert!(CaptureMode::parse("quantum").is_err());
     }
 
     #[test]

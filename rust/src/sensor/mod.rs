@@ -14,7 +14,7 @@ pub mod scene;
 pub mod shutter;
 pub mod weights;
 
-pub use array::{CaptureMode, CaptureStats, PixelArraySim};
+pub use array::{CaptureMode, CaptureStats, OperatingPoint, PixelArraySim};
 pub use frame::{ActivationMap, Frame};
 pub use shutter::{motion_skew_rms_px, FrameTiming, GlobalShutter, RollingShutter};
 pub use weights::FirstLayerWeights;

@@ -1,0 +1,391 @@
+//! Multi-threaded Monte-Carlo campaign runner.
+//!
+//! Cells shard across a bounded-channel worker pool (the `stream.rs`
+//! threading idiom: std threads + `mpsc::sync_channel`, no external
+//! runtime).  Each worker pulls `(index, cell)` jobs, scores the cell
+//! sequentially over the campaign's trial frames, and sends the result
+//! back tagged with its index; the collector reassembles by index.
+//!
+//! **Determinism:** every stochastic draw inside a cell derives from
+//! counter-RNG coordinates `(campaign seed, trial, element, stream)` —
+//! see [`trial_seed`] and `PixelArraySim::capture_at` — and per-cell
+//! aggregation runs in fixed trial order.  Nothing observes thread
+//! identity, scheduling, or time, so the summary is bit-identical for
+//! any worker count (`tests/sweep.rs` pins this against a golden).
+//!
+//! All cells score the *same* frame set (the trial seed ignores the cell
+//! index): a paired design, so cross-cell differences reflect the
+//! operating point rather than scene sampling noise.
+
+use anyhow::{ensure, Context, Result};
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::backend::{InferenceBackend, NativeBackend};
+use crate::config::{HwConfig, SweepConfig};
+use crate::coordinator::stream::argmax;
+use crate::device::rng;
+use crate::energy::{frontend_ours, Geometry};
+use crate::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+};
+use crate::sweep::grid::{SweepCell, SweepGrid};
+
+/// Aggregated reliability metrics for one operating-space cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    /// Trials (frames) evaluated.
+    pub trials: u32,
+    /// Activation elements per frame.
+    pub elements_per_frame: u64,
+    /// Per-cell bit-error rate: flipped bits / total bits vs the ideal
+    /// comparator path.
+    pub ber: f64,
+    /// 1→0 flip rate (ideal fires, swept capture does not).
+    pub e10: f64,
+    /// 0→1 flip rate (spurious activation).
+    pub e01: f64,
+    /// End-to-end classification agreement vs the ideal path.
+    pub agreement: f64,
+    /// Mean output sparsity of the swept capture.
+    pub mean_sparsity: f64,
+    /// Mean front-end energy per frame (pJ) from the event-driven model.
+    pub energy_pj_per_frame: f64,
+}
+
+/// One campaign's results.  `threads_used` / `wall_secs` are run facts,
+/// not results: the report writer excludes them so the JSON payload is
+/// byte-identical across thread counts.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub grid: String,
+    pub trials: u32,
+    pub seed: u32,
+    pub sensor_height: usize,
+    pub sensor_width: usize,
+    pub cells: Vec<CellResult>,
+    pub threads_used: usize,
+    pub wall_secs: f64,
+}
+
+/// Deterministic per-trial frame seed, shared by every cell (paired
+/// sampling) and derived only from the campaign seed and trial index —
+/// never from scheduling.
+pub fn trial_seed(seed: u32, trial: u32) -> u32 {
+    rng::fmix32(seed ^ trial.wrapping_mul(0x9E37_79B9))
+}
+
+/// One precomputed trial: the frame plus its ideal-path reference.
+/// Built once per campaign — every cell scores the same trials (paired
+/// design), so the cell-independent work (scene synthesis, ideal
+/// capture, ideal classification) runs once instead of once per cell.
+struct Trial {
+    frame: Frame,
+    ideal_bits: Vec<bool>,
+    label_ideal: usize,
+}
+
+/// Shared read-only state for cell evaluation.
+struct CellCtx<'a> {
+    sim: &'a PixelArraySim,
+    backend: &'a NativeBackend,
+    trials: &'a [Trial],
+    geom: Geometry,
+    seed: u32,
+}
+
+fn classify(
+    backend: &NativeBackend,
+    acts: &mut [f32],
+    bits: &[bool],
+) -> Result<usize> {
+    for (a, &b) in acts.iter_mut().zip(bits) {
+        *a = b as u8 as f32;
+    }
+    let logits = backend.run_backend(acts, 1)?;
+    Ok(argmax(&logits))
+}
+
+/// Score one cell over the campaign's precomputed trials (sequential:
+/// the parallelism lives across cells).
+fn eval_cell(ctx: &CellCtx<'_>, cell: &SweepCell) -> Result<CellResult> {
+    let elems = ctx.backend.act_elems();
+    let mut acts = vec![0.0f32; elems];
+    let (mut flips10, mut flips01) = (0u64, 0u64);
+    let (mut ones_ideal, mut elements) = (0u64, 0u64);
+    let mut agree = 0u32;
+    let (mut energy_sum, mut sparsity_sum) = (0.0f64, 0.0f64);
+
+    // Static device-to-device offsets derive from the campaign seed, not
+    // the per-frame seq: a weak device stays weak across every trial.
+    let mut op = cell.op;
+    op.sigma_seed = ctx.seed;
+
+    for trial in ctx.trials {
+        let (swept, st) = ctx.sim.capture_at(&trial.frame, &op, cell.mode);
+        ensure!(
+            swept.bits.len() == elems,
+            "sweep frame maps to {} activations; backend expects {elems}",
+            swept.bits.len()
+        );
+        for (&a, &b) in trial.ideal_bits.iter().zip(swept.bits.iter()) {
+            ones_ideal += u64::from(a);
+            flips10 += u64::from(a && !b);
+            flips01 += u64::from(!a && b);
+        }
+        elements += elems as u64;
+        let label_swept = classify(ctx.backend, &mut acts, &swept.bits)?;
+        agree += u32::from(label_swept == trial.label_ideal);
+        energy_sum += frontend_ours(&ctx.geom, &st).total_pj();
+        sparsity_sum += swept.sparsity();
+    }
+
+    let n_trials = ctx.trials.len() as u32;
+    let zeros_ideal = elements - ones_ideal;
+    Ok(CellResult {
+        cell: *cell,
+        trials: n_trials,
+        elements_per_frame: elems as u64,
+        ber: (flips10 + flips01) as f64 / elements.max(1) as f64,
+        e10: flips10 as f64 / ones_ideal.max(1) as f64,
+        e01: flips01 as f64 / zeros_ideal.max(1) as f64,
+        agreement: agree as f64 / n_trials.max(1) as f64,
+        mean_sparsity: sparsity_sum / n_trials.max(1) as f64,
+        energy_pj_per_frame: energy_sum / n_trials.max(1) as f64,
+    })
+}
+
+/// Run the campaign described by `cfg`: expand the grid, shard the cells
+/// across a worker pool, and return per-cell aggregates in grid order.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
+    let grid = SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
+    let cells = grid.cells().context("expanding sweep grid")?;
+    ensure!(!cells.is_empty(), "sweep grid expands to zero cells");
+    ensure!(cfg.trials > 0, "sweep needs at least one trial per cell");
+    ensure!(
+        cfg.sensor_height >= 8 && cfg.sensor_width >= 8,
+        "sweep frames must be at least 8×8 (got {}×{})",
+        cfg.sensor_height,
+        cfg.sensor_width
+    );
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let threads = threads.clamp(1, cells.len());
+
+    // One shared sensor sim + backend: capture_at takes the operating
+    // point explicitly, so per-cell HwConfig clones are unnecessary.
+    // The backend runs batch-1 per frame, so its internal batch pool is
+    // pinned to one worker — the sweep pool is the only parallelism.
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(
+        hw.network.first_channels,
+        hw.network.in_channels,
+        hw.network.kernel_size,
+        1,
+    );
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let backend = NativeBackend::new(
+        hw,
+        weights,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        1,
+    );
+    let gen = SceneGen::new(
+        sim.cfg.network.in_channels,
+        cfg.sensor_height,
+        cfg.sensor_width,
+    );
+    let geom =
+        Geometry::from_cfg(&sim.cfg, cfg.sensor_height, cfg.sensor_width);
+
+    // Precompute the shared, cell-independent half of every trial once:
+    // frames, ideal-comparator bits, and ideal-path labels (every cell
+    // scores the same trials — the paired design).
+    let mut acts = vec![0.0f32; backend.act_elems()];
+    let trials = (0..cfg.trials)
+        .map(|t| -> Result<Trial> {
+            let frame = gen.textured(trial_seed(cfg.seed, t));
+            let (ideal, _) = sim.capture(&frame, CaptureMode::Ideal);
+            ensure!(
+                ideal.bits.len() == acts.len(),
+                "sweep frame maps to {} activations; backend expects {}",
+                ideal.bits.len(),
+                acts.len()
+            );
+            let label_ideal = classify(&backend, &mut acts, &ideal.bits)?;
+            Ok(Trial { frame, ideal_bits: ideal.bits, label_ideal })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let ctx = CellCtx {
+        sim: &sim,
+        backend: &backend,
+        trials: &trials,
+        geom,
+        seed: cfg.seed,
+    };
+
+    let t0 = Instant::now();
+    let (job_tx, job_rx) = sync_channel::<(usize, SweepCell)>(threads * 2);
+    let job_rx = Mutex::new(job_rx);
+    let (res_tx, res_rx) = channel::<(usize, Result<CellResult>)>();
+    let mut slots: Vec<Option<Result<CellResult>>> =
+        (0..cells.len()).map(|_| None).collect();
+
+    std::thread::scope(|s| {
+        // Move the job sender into the scope body so it is closed before
+        // the scope joins — a worker blocked on recv() would otherwise
+        // never exit.
+        let job_tx = job_tx;
+        for _ in 0..threads {
+            let res_tx = res_tx.clone();
+            let job_rx = &job_rx;
+            let ctx = &ctx;
+            s.spawn(move || loop {
+                let job = job_rx.lock().expect("sweep job lock").recv();
+                let Ok((idx, cell)) = job else { break };
+                let out = eval_cell(ctx, &cell);
+                if res_tx.send((idx, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+        for (idx, cell) in cells.iter().enumerate() {
+            job_tx
+                .send((idx, *cell))
+                .expect("sweep workers exited before taking all cells");
+        }
+        drop(job_tx);
+        for _ in 0..cells.len() {
+            let (idx, out) =
+                res_rx.recv().expect("sweep worker pool hung up early");
+            slots[idx] = Some(out);
+        }
+    });
+
+    // Propagate the first failure in cell order (deterministic even if
+    // several cells failed on different workers).
+    let mut results = Vec::with_capacity(cells.len());
+    for (idx, slot) in slots.into_iter().enumerate() {
+        let out = slot
+            .unwrap_or_else(|| panic!("sweep cell {idx} produced no result"));
+        results.push(out.with_context(|| format!("sweep cell {idx}"))?);
+    }
+
+    Ok(SweepSummary {
+        grid: cfg.grid.clone(),
+        trials: cfg.trials,
+        seed: cfg.seed,
+        sensor_height: cfg.sensor_height,
+        sensor_width: cfg.sensor_width,
+        cells: results,
+        threads_used: threads,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(grid: &str, threads: usize) -> SweepConfig {
+        SweepConfig {
+            grid: grid.to_string(),
+            trials: 3,
+            threads,
+            seed: 7,
+            sensor_height: 16,
+            sensor_width: 16,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn trial_seed_is_stable_and_spread() {
+        assert_eq!(trial_seed(1, 0), trial_seed(1, 0));
+        assert_ne!(trial_seed(1, 0), trial_seed(1, 1));
+        assert_ne!(trial_seed(1, 0), trial_seed(2, 0));
+    }
+
+    #[test]
+    fn higher_voltage_reduces_fail_to_fire() {
+        let s = run_sweep(&SweepConfig {
+            trials: 8,
+            ..quick_cfg("v=0.7,0.9", 2)
+        })
+        .unwrap();
+        assert_eq!(s.cells.len(), 2);
+        let (lo, hi) = (&s.cells[0], &s.cells[1]);
+        assert!(
+            lo.e10 > hi.e10,
+            "0.7 V e10 {} must exceed 0.9 V e10 {}",
+            lo.e10,
+            hi.e10
+        );
+        // At 0.7 V a driven device fires with only 6.2 % probability —
+        // the neuron essentially never reaches majority.
+        assert!(lo.e10 > 0.9, "0.7 V e10 {}", lo.e10);
+        assert!(hi.e10 < 0.05, "0.9 V e10 {}", hi.e10);
+    }
+
+    #[test]
+    fn stuck_faults_and_variability_hurt_monotonically() {
+        // At the paper's 0.8 V operating point (quiet level 0.7 V) both
+        // injections must raise the aggregate bit-error rate; cells are
+        // [ap=0 σ=0, ap=0 σ=0.3, ap=3 σ=0, ap=3 σ=0.3] in grid order.
+        let s = run_sweep(&SweepConfig {
+            trials: 6,
+            ..quick_cfg("v=0.8;ap=0,3;sigma=0,0.3", 2)
+        })
+        .unwrap();
+        let ber: Vec<f64> = s.cells.iter().map(|c| c.ber).collect();
+        assert!(ber[2] > ber[0], "3 dead devices must raise ber: {ber:?}");
+        assert!(ber[1] > ber[0], "σ=0.3 must raise ber: {ber:?}");
+    }
+
+    #[test]
+    fn ideal_mode_cell_is_error_free() {
+        let s = run_sweep(&quick_cfg("mode=ideal", 1)).unwrap();
+        let c = &s.cells[0];
+        assert_eq!(c.ber, 0.0);
+        assert_eq!(c.agreement, 1.0);
+        assert!(c.energy_pj_per_frame > 0.0);
+    }
+
+    #[test]
+    fn physical_mode_runs_and_agrees_off_threshold() {
+        let s = run_sweep(&quick_cfg("mode=physical", 2)).unwrap();
+        let c = &s.cells[0];
+        // Untrained synthetic weights cluster near threshold, so only
+        // coarse agreement is guaranteed (see the array.rs physical test).
+        assert!(c.ber < 0.5, "physical ber {}", c.ber);
+        assert!(c.energy_pj_per_frame > 0.0);
+    }
+
+    #[test]
+    fn invalid_grid_is_rejected() {
+        assert!(run_sweep(&quick_cfg("k=9", 1)).is_err());
+        assert!(
+            run_sweep(&SweepConfig {
+                trials: 0,
+                ..quick_cfg("v=0.8", 1)
+            })
+            .is_err()
+        );
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let grid = "v=0.8,0.9;k=4,5;sigma=0,0.1";
+        let a = run_sweep(&quick_cfg(grid, 1)).unwrap();
+        let b = run_sweep(&quick_cfg(grid, 5)).unwrap();
+        assert_eq!(a.cells, b.cells);
+    }
+}

@@ -1,0 +1,283 @@
+//! Sweep grid: the Cartesian operating-space specification.
+//!
+//! Grammar (CLI `--grid`, `SweepConfig::grid`):
+//! `key=v1,v2,...[;key=...]` with keys
+//!
+//! | key     | axis                                    | default        |
+//! |---------|-----------------------------------------|----------------|
+//! | `v`     | write voltage (V)                       | `0.8`          |
+//! | `pulse` | write pulse width (ns)                  | `0.7`          |
+//! | `n`     | devices per neuron                      | `8`            |
+//! | `k`     | majority threshold                      | `4`            |
+//! | `ap`    | stuck-AP devices per neuron             | `0`            |
+//! | `p`     | stuck-P devices per neuron              | `0`            |
+//! | `sigma` | device-to-device σ on P_sw              | `0`            |
+//! | `mode`  | `ideal` \| `calibrated` \| `physical`   | `calibrated`   |
+//!
+//! Omitted keys default to the paper's calibrated operating point.
+//! Cells expand in fixed nested order (`v` outermost, `mode` innermost),
+//! so cell indices — and therefore reports and goldens — are stable for
+//! a given spec.  Invalid cross-axis combinations (`k > n`,
+//! `ap + p > n`) are a hard error, not a silent skip.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::MtjConfig;
+use crate::device::fault::StuckFaults;
+use crate::sensor::array::{CaptureMode, OperatingPoint};
+
+/// The Cartesian grid over the joint operating space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    pub voltages: Vec<f64>,
+    pub pulses_ns: Vec<f64>,
+    pub n_devices: Vec<usize>,
+    pub k_majority: Vec<usize>,
+    pub stuck_ap: Vec<usize>,
+    pub stuck_p: Vec<usize>,
+    pub sigmas: Vec<f64>,
+    pub modes: Vec<CaptureMode>,
+}
+
+impl Default for SweepGrid {
+    /// A single cell at the paper's calibrated operating point.
+    fn default() -> Self {
+        let mtj = MtjConfig::default();
+        Self {
+            voltages: vec![mtj.sw_calib_voltages[1]],
+            pulses_ns: vec![mtj.write_pulse_ns],
+            n_devices: vec![mtj.n_mtj_per_neuron],
+            k_majority: vec![mtj.majority_k],
+            stuck_ap: vec![0],
+            stuck_p: vec![0],
+            sigmas: vec![0.0],
+            modes: vec![CaptureMode::CalibratedMtj],
+        }
+    }
+}
+
+/// One operating-space cell: an [`OperatingPoint`] plus the capture
+/// fidelity it is evaluated under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCell {
+    pub op: OperatingPoint,
+    pub mode: CaptureMode,
+}
+
+fn parse_f64s(key: &str, items: &[&str]) -> Result<Vec<f64>> {
+    items
+        .iter()
+        .map(|s| {
+            s.parse()
+                .map_err(|_| anyhow!("grid key '{key}': '{s}' is not a number"))
+        })
+        .collect()
+}
+
+fn parse_usizes(key: &str, items: &[&str]) -> Result<Vec<usize>> {
+    items
+        .iter()
+        .map(|s| {
+            s.parse().map_err(|_| {
+                anyhow!("grid key '{key}': '{s}' is not a non-negative integer")
+            })
+        })
+        .collect()
+}
+
+impl SweepGrid {
+    /// Parse a `key=v1,v2;key=...` spec; unknown or duplicate keys and
+    /// empty value lists fail loudly (the util::cli philosophy).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut grid = Self::default();
+        let mut seen: Vec<String> = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, vals) = part.split_once('=').ok_or_else(|| {
+                anyhow!("grid term '{part}' is not of the form key=v1,v2,...")
+            })?;
+            let key = key.trim();
+            ensure!(
+                !seen.iter().any(|k| k == key),
+                "duplicate grid key '{key}'"
+            );
+            seen.push(key.to_string());
+            let items: Vec<&str> = vals
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            ensure!(!items.is_empty(), "grid key '{key}' has no values");
+            match key {
+                "v" => grid.voltages = parse_f64s(key, &items)?,
+                "pulse" => grid.pulses_ns = parse_f64s(key, &items)?,
+                "n" => grid.n_devices = parse_usizes(key, &items)?,
+                "k" => grid.k_majority = parse_usizes(key, &items)?,
+                "ap" => grid.stuck_ap = parse_usizes(key, &items)?,
+                "p" => grid.stuck_p = parse_usizes(key, &items)?,
+                "sigma" => grid.sigmas = parse_f64s(key, &items)?,
+                "mode" => {
+                    grid.modes = items
+                        .iter()
+                        .map(|s| CaptureMode::parse(s))
+                        .collect::<Result<_>>()?
+                }
+                other => bail!(
+                    "unknown grid key '{other}' \
+                     (expected v, pulse, n, k, ap, p, sigma, mode)"
+                ),
+            }
+        }
+        Ok(grid)
+    }
+
+    /// Number of cells the grid expands to.
+    pub fn len(&self) -> usize {
+        self.voltages.len()
+            * self.pulses_ns.len()
+            * self.n_devices.len()
+            * self.k_majority.len()
+            * self.stuck_ap.len()
+            * self.stuck_p.len()
+            * self.sigmas.len()
+            * self.modes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to cells in deterministic nested order, validating every
+    /// axis value and cross-axis combination.
+    pub fn cells(&self) -> Result<Vec<SweepCell>> {
+        for &v in &self.voltages {
+            ensure!(
+                v > 0.0 && v <= 1.5,
+                "write voltage {v} outside (0, 1.5] V"
+            );
+        }
+        for &t in &self.pulses_ns {
+            ensure!(t > 0.0 && t <= 100.0, "pulse width {t} outside (0, 100] ns");
+        }
+        for &n in &self.n_devices {
+            ensure!((1..=64).contains(&n), "n={n} outside 1..=64");
+        }
+        for &s in &self.sigmas {
+            ensure!((0.0..=0.5).contains(&s), "sigma={s} outside [0, 0.5]");
+        }
+        let mut out = Vec::with_capacity(self.len());
+        for &v in &self.voltages {
+            for &pulse in &self.pulses_ns {
+                for &n in &self.n_devices {
+                    for &k in &self.k_majority {
+                        ensure!(
+                            (1..=n).contains(&k),
+                            "majority k={k} outside 1..=n (n={n})"
+                        );
+                        for &ap in &self.stuck_ap {
+                            for &p in &self.stuck_p {
+                                ensure!(
+                                    ap + p <= n,
+                                    "stuck faults ap={ap} + p={p} exceed n={n}"
+                                );
+                                for &sigma in &self.sigmas {
+                                    for &mode in &self.modes {
+                                        out.push(SweepCell {
+                                            op: OperatingPoint {
+                                                v_write: v,
+                                                pulse_ns: pulse,
+                                                n,
+                                                k,
+                                                faults: StuckFaults::new(
+                                                    ap, p,
+                                                ),
+                                                sigma_psw: sigma,
+                                                // Stamped with the campaign
+                                                // seed by the engine.
+                                                sigma_seed: 0,
+                                            },
+                                            mode,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_is_the_paper_operating_point() {
+        let cells = SweepGrid::default().cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = cells[0];
+        assert_eq!(c.op.v_write, 0.8);
+        assert_eq!(c.op.pulse_ns, 0.7);
+        assert_eq!((c.op.n, c.op.k), (8, 4));
+        assert_eq!(c.mode, CaptureMode::CalibratedMtj);
+    }
+
+    #[test]
+    fn parse_expands_cartesian_in_stable_order() {
+        let g = SweepGrid::parse("v=0.7,0.8,0.9; k=4,5; sigma=0,0.05")
+            .unwrap();
+        assert_eq!(g.len(), 12);
+        let cells = g.cells().unwrap();
+        assert_eq!(cells.len(), 12);
+        // v is the outermost axis, sigma inner.
+        assert_eq!(cells[0].op.v_write, 0.7);
+        assert_eq!(cells[0].op.k, 4);
+        assert_eq!(cells[0].op.sigma_psw, 0.0);
+        assert_eq!(cells[1].op.sigma_psw, 0.05);
+        assert_eq!(cells[2].op.k, 5);
+        assert_eq!(cells[4].op.v_write, 0.8);
+        assert_eq!(cells[11].op.v_write, 0.9);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_duplicate_and_empty_keys() {
+        assert!(SweepGrid::parse("volts=0.8").is_err());
+        assert!(SweepGrid::parse("v=0.8;v=0.9").is_err());
+        assert!(SweepGrid::parse("v=").is_err());
+        assert!(SweepGrid::parse("v 0.8").is_err());
+        assert!(SweepGrid::parse("v=abc").is_err());
+        assert!(SweepGrid::parse("mode=quantum").is_err());
+    }
+
+    #[test]
+    fn cells_reject_invalid_combinations() {
+        assert!(SweepGrid::parse("k=9").unwrap().cells().is_err(), "k > n");
+        assert!(
+            SweepGrid::parse("ap=5;p=4").unwrap().cells().is_err(),
+            "ap + p > n"
+        );
+        assert!(SweepGrid::parse("v=0").unwrap().cells().is_err());
+        assert!(SweepGrid::parse("sigma=0.9").unwrap().cells().is_err());
+        assert!(SweepGrid::parse("pulse=0").unwrap().cells().is_err());
+        assert!(SweepGrid::parse("n=0").unwrap().cells().is_err());
+    }
+
+    #[test]
+    fn modes_parse_all_three_fidelities() {
+        let g = SweepGrid::parse("mode=ideal,calibrated,physical").unwrap();
+        assert_eq!(
+            g.modes,
+            vec![
+                CaptureMode::Ideal,
+                CaptureMode::CalibratedMtj,
+                CaptureMode::PhysicalMtj
+            ]
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Parallel Monte-Carlo reliability sweep engine: the campaign-scale
+//! workload over the paper's joint operating space.
+//!
+//! The paper's reliability claim — majority voting over 8 stochastic
+//! VC-MTJs yields near-ideal binary activations at the calibrated
+//! operating point (Figs. 2, 5) — is only as strong as the neighbourhood
+//! around that point.  This module sweeps the joint space (write
+//! voltage × pulse width × devices-per-neuron × majority threshold ×
+//! stuck-at faults × P_sw variability × capture fidelity) through the
+//! real sensor capture path and the native XNOR classifier, producing
+//! per-cell bit-error rates, directional flip rates, end-to-end
+//! classification agreement vs the ideal path, output sparsity, and
+//! front-end energy per frame.
+//!
+//! * [`SweepGrid`] — parses a `v=0.7,0.8;k=4,5;...` spec and expands it
+//!   to Cartesian [`SweepCell`]s in a stable order;
+//! * [`run_sweep`] — shards cells across a bounded-channel worker pool
+//!   (see `engine` for the threading layout) and reassembles results by
+//!   cell index;
+//! * `reports::sweep_report` — renders the summary as an aligned table
+//!   and a deterministic JSON payload.
+//!
+//! **Determinism contract:** every stochastic draw derives from counter
+//! RNG coordinates `(campaign seed, trial, element, stream)`, and
+//! nothing observes thread identity or time — so the summary (and the
+//! saved JSON) is bit-identical for any `--threads` value.
+//! `tests/sweep.rs` pins this against a committed golden at the paper's
+//! calibrated operating points.
+
+pub mod engine;
+pub mod grid;
+
+pub use engine::{run_sweep, trial_seed, CellResult, SweepSummary};
+pub use grid::{SweepCell, SweepGrid};

@@ -177,4 +177,45 @@ mod tests {
         let a = parse("report fig5 fig6");
         assert_eq!(a.positional, vec!["fig5", "fig6"]);
     }
+
+    // -- sweep-subcommand hardening (the PR 2 rules applied to the new
+    //    flags: attached values, valueless options, and grid flags
+    //    outside `sweep` must all fail loudly) -------------------------
+
+    #[test]
+    fn sweep_attached_value_is_rejected() {
+        // `--threads8` (missing space) must not silently act as either
+        // `--threads 8` or a no-op.
+        let a = parse("sweep --threads8 --grid v=0.8");
+        assert_eq!(a.usize_or("threads", 0).unwrap(), 0, "not consumed");
+        let _ = a.opt_str("grid");
+        let _ = a.u32_or("trials", 4);
+        let err = a.finish().unwrap_err();
+        assert!(format!("{err}").contains("threads8"), "{err}");
+    }
+
+    #[test]
+    fn sweep_option_missing_value_is_rejected() {
+        // `--grid` swallowed by the next flag must not silently fall
+        // back to the default grid.
+        let a = parse("sweep --grid --trials 4");
+        assert!(a.opt_str("grid").is_none());
+        assert_eq!(a.u32_or("trials", 1).unwrap(), 4);
+        let err = a.finish().unwrap_err();
+        assert!(format!("{err}").contains("--grid expects a value"), "{err}");
+    }
+
+    #[test]
+    fn sweep_grid_flags_rejected_outside_sweep_subcommand() {
+        // serve never consumes the sweep options, so finish() must flag
+        // them as unknown instead of quietly ignoring a requested sweep.
+        let a = parse("serve --grid v=0.8 --frames 2");
+        let _ = a.usize_or("frames", 1);
+        let err = a.finish().unwrap_err();
+        assert!(format!("{err}").contains("--grid"), "{err}");
+
+        let b = parse("report fig5 --trials 8");
+        let _ = b.str_or("out", "reports");
+        assert!(b.finish().is_err(), "--trials is sweep-only");
+    }
 }

@@ -11,7 +11,7 @@ use pixelmtj::coordinator::sparse::{decode, encode};
 use pixelmtj::coordinator::Batcher;
 use pixelmtj::device::interp::MonotoneCubic;
 use pixelmtj::device::mtj::{MtjModel, MtjState};
-use pixelmtj::device::neuron_error_rates;
+use pixelmtj::device::{faulty_neuron_error_rates, neuron_error_rates, StuckFaults};
 use pixelmtj::sensor::{ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim};
 use pixelmtj::util::prop::{check, Gen};
 
@@ -168,6 +168,106 @@ fn prop_majority_error_decreases_with_devices() {
         let (e8, _) = neuron_error_rates(p_fire, 0.0, 8, 4);
         if e8 > e1 + 1e-12 {
             return Err(format!("8-device error {e8} > single {e1}"));
+        }
+        Ok(())
+    });
+}
+
+/// Random `(p_fire, p_err, n, k)` with `k ≤ n` — the healthy-neuron part
+/// of a fault-model case.
+fn arbitrary_neuron(g: &mut Gen) -> (f64, f64, usize, usize) {
+    let n = g.usize_in(1, 12);
+    let k = g.usize_in(1, n);
+    (g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0), n, k)
+}
+
+#[test]
+fn prop_faulty_rates_reduce_to_healthy_at_zero_faults() {
+    check("fault model reduction", 250, |g| {
+        let (p_fire, p_err, n, k) = arbitrary_neuron(g);
+        let (a10, a01) = faulty_neuron_error_rates(
+            p_fire,
+            p_err,
+            n,
+            k,
+            StuckFaults::default(),
+        );
+        let (b10, b01) = neuron_error_rates(p_fire, p_err, n, k);
+        if (a10 - b10).abs() > 1e-12 || (a01 - b01).abs() > 1e-12 {
+            return Err(format!(
+                "zero-fault mismatch at (p_fire={p_fire}, p_err={p_err}, \
+                 n={n}, k={k}): ({a10}, {a01}) vs ({b10}, {b01})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faulty_rates_monotone_in_stuck_faults() {
+    // One more dead device can only raise the fail-to-fire rate; one
+    // more stuck-P device can only raise the spurious-fire rate.
+    check("fault model monotone", 250, |g| {
+        let (p_fire, p_err, n, k) = arbitrary_neuron(g);
+        let ap = g.usize_in(0, n.saturating_sub(1));
+        let p = g.usize_in(0, n - 1 - ap.min(n - 1));
+        if ap + p >= n {
+            return Ok(()); // no headroom to add a fault
+        }
+        let base = StuckFaults::new(ap, p);
+        let (e10, e01) = faulty_neuron_error_rates(p_fire, p_err, n, k, base);
+        let (e10_dead, _) = faulty_neuron_error_rates(
+            p_fire,
+            p_err,
+            n,
+            k,
+            StuckFaults::new(ap + 1, p),
+        );
+        if e10_dead < e10 - 1e-12 {
+            return Err(format!(
+                "stuck-AP {ap}→{} lowered e10 {e10}→{e10_dead} \
+                 (p_fire={p_fire}, n={n}, k={k}, p={p})",
+                ap + 1
+            ));
+        }
+        let (_, e01_stuck) = faulty_neuron_error_rates(
+            p_fire,
+            p_err,
+            n,
+            k,
+            StuckFaults::new(ap, p + 1),
+        );
+        if e01_stuck < e01 - 1e-12 {
+            return Err(format!(
+                "stuck-P {p}→{} lowered e01 {e01}→{e01_stuck} \
+                 (p_err={p_err}, n={n}, k={k}, ap={ap})",
+                p + 1
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faulty_rates_stay_probabilities() {
+    check("fault model bounds", 400, |g| {
+        let (p_fire, p_err, n, k) = arbitrary_neuron(g);
+        let ap = g.usize_in(0, n);
+        let p = g.usize_in(0, n - ap);
+        let (e10, e01) = faulty_neuron_error_rates(
+            p_fire,
+            p_err,
+            n,
+            k,
+            StuckFaults::new(ap, p),
+        );
+        for (name, e) in [("e10", e10), ("e01", e01)] {
+            if !(0.0..=1.0).contains(&e) || !e.is_finite() {
+                return Err(format!(
+                    "{name}={e} outside [0,1] at (p_fire={p_fire}, \
+                     p_err={p_err}, n={n}, k={k}, ap={ap}, p={p})"
+                ));
+            }
         }
         Ok(())
     });
