@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy bench-backend bench-stream bench-sweep sweep artifacts
+.PHONY: check build test fmt clippy bench-backend bench-stream bench-sweep bench-pack sweep artifacts
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -31,6 +31,11 @@ bench-stream:
 # Sweep scaling: cells/sec vs worker count → rust/BENCH_sweep.json
 bench-sweep:
 	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench sweep
+
+# Packed vs legacy representation path (32×32 + 224×224 ImageNet head)
+# → rust/BENCH_pack.json
+bench-pack:
+	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench pack
 
 # Default reliability campaign (paper's calibrated points) → rust/reports/
 sweep:

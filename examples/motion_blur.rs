@@ -57,16 +57,12 @@ fn main() -> anyhow::Result<()> {
             sim.out_hw(h, w).0,
             speed,
         );
-        // Effect on the binary feature map the backend actually consumes.
+        // Effect on the binary feature map the backend actually consumes
+        // (one XOR+popcount pass over the packed planes).
         let (a, _) = sim.capture(&global, CaptureMode::Ideal);
         let (b, _) = sim.capture(&rolling, CaptureMode::Ideal);
-        let flips = a
-            .bits
-            .iter()
-            .zip(b.bits.iter())
-            .filter(|(x, y)| x != y)
-            .count() as f64
-            / a.bits.len() as f64;
+        let (f10, f01) = a.flips(&b);
+        let flips = (f10 + f01) as f64 / a.len() as f64;
         println!(
             "{speed:>12.0} {img_skew:>14.2} {model_skew:>14.2} {:>15.2}%",
             flips * 100.0

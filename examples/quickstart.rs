@@ -37,9 +37,11 @@ fn main() -> anyhow::Result<()> {
         stats.mtj_writes, stats.mtj_reads, stats.mtj_resets
     );
 
-    // 3. Classify through the best-available backend (no Python).
+    // 3. Classify through the best-available backend (no Python).  The
+    //    packed BitPlane words feed the backend directly — the native
+    //    engine's XNOR kernel consumes them with no widening or re-pack.
     let be = backend::auto(artifacts, &hw, 32, 32, 1, weights)?;
-    let logits = be.run_backend(&activations.to_f32(), 1)?;
+    let logits = be.run_backend_packed(activations.words(), 1)?;
     let label = logits
         .iter()
         .enumerate()

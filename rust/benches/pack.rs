@@ -1,0 +1,269 @@
+//! Packed-representation benches → `BENCH_pack.json`: the BitPlane frame
+//! path (capture writes packed words → word-level link codec → XNOR
+//! backend consumes words zero-copy) against the pre-refactor legacy
+//! path (bool capture → per-element dense codec → widen to f32 →
+//! f32-entry backend, which re-packs per frame), at the CIFAR-scale
+//! 32×32 and the paper's ImageNet/VGG16 224×224 geometries.
+//!
+//! Three views per geometry:
+//! * **repr** — binarize→link→infer from a precomputed analog plane:
+//!   isolates exactly what the representation change touches (the analog
+//!   MAC/tanh stage is identical in both arms and excluded);
+//! * **e2e** — full capture→infer frames/sec (analog stage included in
+//!   both arms, so the ratio is diluted by the shared physics);
+//! * **sweep** — Monte-Carlo cells/sec through the real engine vs an
+//!   emulation of the pre-refactor engine (which recomputed the analog
+//!   plane in every cell and scored flips with per-element bool loops).
+//!
+//! `PIXELMTJ_BENCH_FAST=1` shrinks trial counts for the CI smoke run.
+
+use std::time::Instant;
+
+use pixelmtj::backend::{InferenceBackend, NativeBackend};
+use pixelmtj::config::{HwConfig, SparseCoding, SweepConfig};
+use pixelmtj::coordinator::sparse;
+use pixelmtj::sensor::{
+    scene::SceneGen, CaptureMode, FirstLayerWeights, OperatingPoint,
+    PixelArraySim,
+};
+use pixelmtj::sweep::run_sweep;
+use pixelmtj::util::bench::{bb, Bencher};
+use pixelmtj::util::json::Value;
+
+/// Label from a logit vector (same tie-breaking as the serving path).
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Legacy link emulation: the old dense codec packed bools to words and
+/// unpacked back to bools, one element at a time, then widened to f32.
+fn legacy_link_and_widen(bits: &[bool]) -> Vec<f32> {
+    let mut words = vec![0u64; bits.len().div_ceil(64)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            words[i / 64] |= 1 << (i % 64);
+        }
+    }
+    let mut decoded = vec![false; bits.len()];
+    for (i, d) in decoded.iter_mut().enumerate() {
+        *d = (words[i / 64] >> (i % 64)) & 1 == 1;
+    }
+    decoded.iter().map(|&b| b as u8 as f32).collect()
+}
+
+struct GeomReport {
+    name: &'static str,
+    side: usize,
+    elems: usize,
+    repr_speedup: f64,
+    e2e_packed_fps: f64,
+    e2e_legacy_fps: f64,
+    e2e_speedup: f64,
+    sweep_packed_cps: f64,
+    sweep_legacy_cps: f64,
+    sweep_speedup: f64,
+}
+
+fn bench_geometry(
+    b: &mut Bencher,
+    name: &'static str,
+    side: usize,
+    sweep_trials: u32,
+) -> GeomReport {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let backend = NativeBackend::new(hw.clone(), weights.clone(), side, side, 1);
+    let gen = SceneGen::new(3, side, side);
+    let frame = gen.textured(5);
+    let (oh, ow) = sim.out_hw(side, side);
+    let op = OperatingPoint::from_cfg(&hw.mtj);
+    let elems = backend.act_elems();
+
+    // ── repr: binarize → link → infer from a shared analog plane ──
+    let (plane, _) = sim.analog_plane(&frame);
+    let s_repr_packed = b
+        .bench(&format!("repr_packed_{name}"), || {
+            let (map, _) = sim.binarize_at(
+                bb(&plane),
+                oh,
+                ow,
+                frame.seq,
+                &op,
+                CaptureMode::Ideal,
+            );
+            let enc = sparse::encode(&map, SparseCoding::Dense);
+            let dec = sparse::decode(&enc).unwrap();
+            bb(backend.run_backend_packed(dec.words(), 1).unwrap());
+        })
+        .clone();
+    let s_repr_legacy = b
+        .bench(&format!("repr_legacy_{name}"), || {
+            let (bits, _) = sim.binarize_at_ref(
+                bb(&plane),
+                frame.seq,
+                &op,
+                CaptureMode::Ideal,
+            );
+            let acts = legacy_link_and_widen(&bits);
+            bb(backend.run_backend(&acts, 1).unwrap());
+        })
+        .clone();
+    let repr_speedup = s_repr_legacy.mean_ns / s_repr_packed.mean_ns;
+
+    // ── e2e: full capture → infer (shared analog stage included) ──
+    let s_e2e_packed = b
+        .bench(&format!("e2e_packed_{name}"), || {
+            let (map, _) = sim.capture(bb(&frame), CaptureMode::Ideal);
+            bb(backend.run_backend_packed(map.words(), 1).unwrap());
+        })
+        .clone();
+    let s_e2e_legacy = b
+        .bench(&format!("e2e_legacy_{name}"), || {
+            let (bits, _) = sim.capture_ref(bb(&frame), CaptureMode::Ideal);
+            let acts: Vec<f32> = bits.iter().map(|&x| x as u8 as f32).collect();
+            bb(backend.run_backend(&acts, 1).unwrap());
+        })
+        .clone();
+
+    // ── sweep: real engine (plane reuse + XOR scoring + packed classify)
+    //    vs an emulation of the pre-refactor per-cell loop ──
+    // Both sweep arms run single-threaded so the ratio isolates the
+    // representation + per-campaign plane reuse, not worker count.
+    let grid = "v=0.8,0.9;k=4,5";
+    let cfg = SweepConfig {
+        grid: grid.to_string(),
+        trials: sweep_trials,
+        threads: 1,
+        seed: 9,
+        sensor_height: side,
+        sensor_width: side,
+        ..SweepConfig::default()
+    };
+    let t0 = Instant::now();
+    let summary = run_sweep(&cfg).expect("pack bench sweep failed");
+    let n_cells = summary.cells.len();
+    let sweep_packed_cps = n_cells as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Legacy emulation: ideal references once per campaign (as the old
+    // engine did), then per (cell, trial): full capture_at_ref — analog
+    // recomputed every time — bool flip loop, widen, f32 classify.
+    let cells: Vec<OperatingPoint> = [0.8, 0.9]
+        .iter()
+        .flat_map(|&v| {
+            [4usize, 5].map(|k| OperatingPoint { v_write: v, k, ..op })
+        })
+        .collect();
+    let trial_frames: Vec<_> = (0..sweep_trials)
+        .map(|t| gen.textured(pixelmtj::sweep::trial_seed(9, t)))
+        .collect();
+    let refs: Vec<(Vec<bool>, usize)> = trial_frames
+        .iter()
+        .map(|f| {
+            let (bits, _) = sim.capture_ref(f, CaptureMode::Ideal);
+            let acts: Vec<f32> = bits.iter().map(|&x| x as u8 as f32).collect();
+            let label = argmax(&backend.run_backend(&acts, 1).unwrap());
+            (bits, label)
+        })
+        .collect();
+    let t0 = Instant::now();
+    for cell_op in &cells {
+        let mut agree = 0u32;
+        let mut flips = 0u64;
+        for (f, (ideal, label)) in trial_frames.iter().zip(refs.iter()) {
+            let (bits, _) =
+                sim.capture_at_ref(f, cell_op, CaptureMode::CalibratedMtj);
+            for (&a, &b) in ideal.iter().zip(bits.iter()) {
+                flips += u64::from(a != b);
+            }
+            let acts: Vec<f32> = bits.iter().map(|&x| x as u8 as f32).collect();
+            agree +=
+                u32::from(argmax(&backend.run_backend(&acts, 1).unwrap()) == *label);
+        }
+        bb((agree, flips));
+    }
+    let sweep_legacy_cps =
+        cells.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    GeomReport {
+        name,
+        side,
+        elems,
+        repr_speedup,
+        e2e_packed_fps: 1e9 / s_e2e_packed.mean_ns,
+        e2e_legacy_fps: 1e9 / s_e2e_legacy.mean_ns,
+        e2e_speedup: s_e2e_legacy.mean_ns / s_e2e_packed.mean_ns,
+        sweep_packed_cps,
+        sweep_legacy_cps,
+        sweep_speedup: sweep_packed_cps / sweep_legacy_cps.max(1e-9),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+    let mut b = Bencher::new("pack");
+    let reports = vec![
+        bench_geometry(&mut b, "32x32", 32, if fast { 4 } else { 16 }),
+        bench_geometry(&mut b, "224x224", 224, if fast { 1 } else { 2 }),
+    ];
+
+    println!();
+    for r in &reports {
+        println!(
+            "{:>9} ({:>6} elems): repr {:>5.1}× | e2e {:>7.1} vs {:>7.1} fps \
+             ({:.2}×) | sweep {:>6.2} vs {:>6.2} cells/s ({:.1}×)",
+            r.name,
+            r.elems,
+            r.repr_speedup,
+            r.e2e_packed_fps,
+            r.e2e_legacy_fps,
+            r.e2e_speedup,
+            r.sweep_packed_cps,
+            r.sweep_legacy_cps,
+            r.sweep_speedup,
+        );
+    }
+    let r224 = &reports[1];
+    if r224.repr_speedup < 2.0 {
+        eprintln!(
+            "warning: packed repr path {:.2}× at 224×224, below the 2× target",
+            r224.repr_speedup
+        );
+    }
+
+    let geom_objs: Vec<Value> = reports
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("geometry", Value::Str(r.name.into())),
+                ("side", Value::Num(r.side as f64)),
+                ("act_elems", Value::Num(r.elems as f64)),
+                ("repr_speedup", Value::Num(r.repr_speedup)),
+                ("e2e_packed_fps", Value::Num(r.e2e_packed_fps)),
+                ("e2e_legacy_fps", Value::Num(r.e2e_legacy_fps)),
+                ("e2e_speedup", Value::Num(r.e2e_speedup)),
+                ("sweep_packed_cells_per_sec", Value::Num(r.sweep_packed_cps)),
+                ("sweep_legacy_cells_per_sec", Value::Num(r.sweep_legacy_cps)),
+                ("sweep_speedup", Value::Num(r.sweep_speedup)),
+            ])
+        })
+        .collect();
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("pack".into())),
+        ("repr_speedup_224", Value::Num(r224.repr_speedup)),
+        ("e2e_speedup_224", Value::Num(r224.e2e_speedup)),
+        ("sweep_speedup_224", Value::Num(r224.sweep_speedup)),
+        ("geometries", Value::Arr(geom_objs)),
+    ]);
+    let path = "BENCH_pack.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    b.finish();
+}

@@ -6,16 +6,14 @@
 use pixelmtj::config::SparseCoding;
 use pixelmtj::coordinator::sparse::{decode, encode};
 use pixelmtj::device::rng::CounterRng;
-use pixelmtj::sensor::ActivationMap;
+use pixelmtj::sensor::BitPlane;
 use pixelmtj::util::bench::{bb, Bencher};
 
-fn random_map(p_one: f32, seed: u32) -> ActivationMap {
+fn random_map(p_one: f32, seed: u32) -> BitPlane {
     let mut rng = CounterRng::new(seed, 31);
-    let mut m = ActivationMap::new(32, 15, 15, seed);
-    for b in m.bits.iter_mut() {
-        *b = rng.next_uniform() < p_one;
-    }
-    m
+    let bools: Vec<bool> =
+        (0..32 * 15 * 15).map(|_| rng.next_uniform() < p_one).collect();
+    BitPlane::from_bools(32, 15, 15, &bools, seed).unwrap()
 }
 
 fn main() {
@@ -30,7 +28,7 @@ fn main() {
                 "payload {label} {:?}: {} bits ({:.3} b/elem)",
                 coding,
                 enc.payload_bits,
-                enc.payload_bits as f64 / map.bits.len() as f64
+                enc.payload_bits as f64 / map.len() as f64
             );
             b.bench(&format!("encode_{label}_{}", coding.name()), || {
                 bb(encode(bb(&map), coding));

@@ -25,20 +25,24 @@ pub use native::{NativeBackend, NativeModel, NativePath};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::{BackendKind, HwConfig, PipelineConfig};
-use crate::sensor::{ActivationMap, FirstLayerWeights, Frame};
+use crate::sensor::{
+    unpack_f32, words_for, BitPlane, FirstLayerWeights, Frame,
+};
 
 /// A classifier backend for the serving pipeline.
 ///
-/// The pipeline's sensor workers produce dense `{0,1}` activation buffers
-/// (the sensor→backend link payload after decode); `run_backend` turns a
-/// batch of them into logits.  `run_frontend` exposes the backend's own
-/// first-layer path (ideal comparator) for validation and full-model
-/// flows that bypass the sensor simulator.
+/// The pipeline's sensor workers produce packed [`BitPlane`] activations
+/// (the sensor→backend link payload after decode); `run_backend_packed`
+/// turns a batch of their words into logits — the native engine consumes
+/// them zero-copy with its XNOR kernel, while f32-native runtimes (PJRT)
+/// inherit the default widening shim over `run_backend`.  `run_frontend`
+/// exposes the backend's own first-layer path (ideal comparator) for
+/// validation and full-model flows that bypass the sensor simulator.
 pub trait InferenceBackend: Send + Sync {
     /// Short identifier ("native", "pjrt", ...).
     fn name(&self) -> &'static str;
@@ -64,12 +68,39 @@ pub trait InferenceBackend: Send + Sync {
     fn preload(&self, batches: &[usize]) -> Result<()>;
 
     /// First layer on a raw frame with the ideal comparator.
-    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap>;
+    fn run_frontend(&self, frame: &Frame) -> Result<BitPlane>;
 
     /// Classify `batch` frames of dense `{0,1}` activations laid out
     /// contiguously (`batch × act_elems`); returns `batch × num_classes`
-    /// logits in the same order.
+    /// logits in the same order.  f32 compat entry — the frame path goes
+    /// through [`Self::run_backend_packed`].
     fn run_backend(&self, acts: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Classify `batch` frames of bit-packed activations: each frame
+    /// occupies `words_for(act_elems())` contiguous `u64` words in
+    /// [`BitPlane`] layout (CHW bit order, zero padding lanes); returns
+    /// `batch × num_classes` logits in order.
+    ///
+    /// The default implementation is the widening shim for f32-native
+    /// runtimes (PJRT): unpack each frame to dense `{0,1}` f32 and
+    /// delegate to [`Self::run_backend`].  The native engine overrides
+    /// it to feed the words straight into its XNOR-popcount kernel.
+    fn run_backend_packed(&self, words: &[u64], batch: usize) -> Result<Vec<f32>> {
+        let elems = self.act_elems();
+        let wpf = words_for(elems);
+        ensure!(
+            words.len() == batch * wpf,
+            "packed buffer has {} words, want batch {batch} × {wpf}",
+            words.len()
+        );
+        let mut dense = vec![0.0f32; batch * elems];
+        for (frame_words, frame_dense) in
+            words.chunks(wpf.max(1)).zip(dense.chunks_mut(elems.max(1)))
+        {
+            unpack_f32(frame_words, elems, frame_dense);
+        }
+        self.run_backend(&dense, batch)
+    }
 }
 
 /// First-layer weights for backend construction: the AOT golden export

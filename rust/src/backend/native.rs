@@ -28,7 +28,8 @@ use anyhow::{ensure, Result};
 use crate::config::HwConfig;
 use crate::device::rng::CounterRng;
 use crate::sensor::{
-    ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+    pack_f32, unpack_f32, words_for, BitPlane, CaptureMode, FirstLayerWeights,
+    Frame, PixelArraySim,
 };
 
 use super::InferenceBackend;
@@ -40,25 +41,6 @@ pub enum NativePath {
     Packed,
     /// Dense ±1.0 f32 matmuls over the same weights (parity reference).
     DenseRef,
-}
-
-/// `⌈bits / 64⌉`: `u64` words needed for a packed row of `bits` lanes.
-#[inline]
-fn words_for(bits: usize) -> usize {
-    bits / 64 + usize::from(bits % 64 != 0)
-}
-
-/// Pack `{0,1}` activations (as f32) into `u64` lanes, bit = 1 ⇔ +1.
-/// Padding bits stay zero, matching the zero padding in weight rows so
-/// the XOR contributes nothing there.
-fn pack_f32(xs: &[f32]) -> Vec<u64> {
-    let mut out = vec![0u64; words_for(xs.len())];
-    for (i, &x) in xs.iter().enumerate() {
-        if x > 0.5 {
-            out[i / 64] |= 1u64 << (i % 64);
-        }
-    }
-    out
 }
 
 /// One binary dense layer: `out_features × in_features` sign weights
@@ -172,23 +154,34 @@ impl NativeModel {
         self.head.out_features
     }
 
-    /// XNOR-popcount inference of one frame's `{0,1}` activations.
-    pub fn infer_packed(&self, act: &[f32], logits: &mut [f32]) {
-        let mut cur = pack_f32(act);
+    /// XNOR-popcount inference of one frame straight from its packed
+    /// [`BitPlane`] words (`words_for(act_elems)` of them, zero padding
+    /// lanes) — no per-frame re-pack anywhere on this path.
+    pub fn infer_words(&self, words: &[u64], logits: &mut [f32]) {
+        debug_assert_eq!(words.len(), words_for(self.act_elems()));
+        let mut storage: Option<Vec<u64>> = None;
         for layer in &self.hidden {
+            let cur: &[u64] = storage.as_deref().unwrap_or(words);
             let mut next = vec![0u64; words_for(layer.out_features)];
             for o in 0..layer.out_features {
-                if layer.preact_packed(o, &cur) >= layer.thresh[o] {
+                if layer.preact_packed(o, cur) >= layer.thresh[o] {
                     next[o / 64] |= 1u64 << (o % 64);
                 }
             }
-            cur = next;
+            storage = Some(next);
         }
+        let cur: &[u64] = storage.as_deref().unwrap_or(words);
         for o in 0..self.head.out_features {
-            logits[o] = self.head.preact_packed(o, &cur) as f32
+            logits[o] = self.head.preact_packed(o, cur) as f32
                 * self.head_scale[o]
                 + self.head_bias[o];
         }
+    }
+
+    /// XNOR-popcount inference of one frame's `{0,1}` f32 activations
+    /// (compat shim: packs once, then runs [`Self::infer_words`]).
+    pub fn infer_packed(&self, act: &[f32], logits: &mut [f32]) {
+        self.infer_words(&pack_f32(act), logits);
     }
 
     /// Dense ±1.0 f32 reference over the same weights (bit-identical to
@@ -287,6 +280,20 @@ impl NativeBackend {
             NativePath::DenseRef => self.model.infer_dense(act, logits),
         }
     }
+
+    /// One frame from packed words: zero-copy into the XNOR kernel on the
+    /// fast path; the dense reference widens per frame (parity checks).
+    #[inline]
+    fn infer_one_words(&self, words: &[u64], logits: &mut [f32]) {
+        match self.path {
+            NativePath::Packed => self.model.infer_words(words, logits),
+            NativePath::DenseRef => {
+                let mut dense = vec![0.0f32; self.model.act_elems()];
+                unpack_f32(words, dense.len(), &mut dense);
+                self.model.infer_dense(&dense, logits);
+            }
+        }
+    }
 }
 
 impl InferenceBackend for NativeBackend {
@@ -319,7 +326,7 @@ impl InferenceBackend for NativeBackend {
         Ok(()) // nothing to compile: weights are resident
     }
 
-    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap> {
+    fn run_frontend(&self, frame: &Frame) -> Result<BitPlane> {
         let (oh, ow) = self.sim.out_hw(frame.height, frame.width);
         let [_, mh, mw] = self.model.act_shape;
         ensure!(
@@ -347,7 +354,7 @@ impl InferenceBackend for NativeBackend {
             }
             return Ok(out);
         }
-        let per = batch.div_euclid(workers) + usize::from(batch % workers != 0);
+        let per = batch.div_ceil(workers);
         std::thread::scope(|s| {
             for (in_chunk, out_chunk) in
                 acts.chunks(per * elems).zip(out.chunks_mut(per * nc))
@@ -364,23 +371,45 @@ impl InferenceBackend for NativeBackend {
         });
         Ok(out)
     }
+
+    fn run_backend_packed(&self, words: &[u64], batch: usize) -> Result<Vec<f32>> {
+        let elems = self.model.act_elems();
+        let wpf = words_for(elems);
+        ensure!(
+            words.len() == batch * wpf,
+            "packed buffer has {} words, want batch {batch} × {wpf}",
+            words.len()
+        );
+        let nc = self.model.num_classes();
+        let mut out = vec![0.0f32; batch * nc];
+        let workers = self.workers.min(batch.max(1));
+        if workers <= 1 || batch <= 1 {
+            for (item, logits) in words.chunks(wpf).zip(out.chunks_mut(nc)) {
+                self.infer_one_words(item, logits);
+            }
+            return Ok(out);
+        }
+        let per = batch.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (in_chunk, out_chunk) in
+                words.chunks(per * wpf).zip(out.chunks_mut(per * nc))
+            {
+                let _worker = s.spawn(move || {
+                    for (item, logits) in
+                        in_chunk.chunks(wpf).zip(out_chunk.chunks_mut(nc))
+                    {
+                        self.infer_one_words(item, logits);
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn pack_sets_expected_bits() {
-        let mut xs = vec![0.0f32; 70];
-        xs[0] = 1.0;
-        xs[63] = 1.0;
-        xs[64] = 1.0;
-        let packed = pack_f32(&xs);
-        assert_eq!(packed.len(), 2);
-        assert_eq!(packed[0], (1u64 << 63) | 1);
-        assert_eq!(packed[1], 1);
-    }
 
     #[test]
     fn xnor_popcount_matches_naive_dot() {
@@ -416,10 +445,42 @@ mod tests {
                 .collect();
             let mut a = vec![0.0f32; 10];
             let mut b = vec![0.0f32; 10];
+            let mut c = vec![0.0f32; 10];
             model.infer_packed(&act, &mut a);
             model.infer_dense(&act, &mut b);
+            model.infer_words(&pack_f32(&act), &mut c);
             assert_eq!(a, b, "trial {trial}");
+            assert_eq!(a, c, "trial {trial} (words entry)");
         }
+    }
+
+    #[test]
+    fn run_backend_packed_matches_f32_entry_across_workers() {
+        let hw = HwConfig::default();
+        let w = FirstLayerWeights::synthetic(16, 3, 3, 5);
+        let b1 = NativeBackend::new(hw.clone(), w.clone(), 20, 20, 1);
+        let b4 = NativeBackend::new(hw.clone(), w.clone(), 20, 20, 4);
+        let dense_ref = NativeBackend::new(hw, w, 20, 20, 2)
+            .with_path(NativePath::DenseRef);
+        let elems = b1.act_elems();
+        let wpf = words_for(elems);
+        let batch = 5usize;
+        let mut rng = CounterRng::new(17, 9);
+        let acts: Vec<f32> = (0..batch * elems)
+            .map(|_| if rng.next_uniform() < 0.2 { 1.0 } else { 0.0 })
+            .collect();
+        let mut packed = Vec::with_capacity(batch * wpf);
+        for frame in acts.chunks(elems) {
+            packed.extend(pack_f32(frame));
+        }
+        let via_f32 = b1.run_backend(&acts, batch).unwrap();
+        let via_words_seq = b1.run_backend_packed(&packed, batch).unwrap();
+        let via_words_par = b4.run_backend_packed(&packed, batch).unwrap();
+        let via_dense = dense_ref.run_backend_packed(&packed, batch).unwrap();
+        assert_eq!(via_f32, via_words_seq);
+        assert_eq!(via_f32, via_words_par);
+        assert_eq!(via_f32, via_dense, "dense-ref packed entry must agree");
+        assert!(b1.run_backend_packed(&packed[1..], batch).is_err());
     }
 
     #[test]

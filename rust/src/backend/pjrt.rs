@@ -2,6 +2,11 @@
 //! original `runtime::Runtime` serving path refactored behind the trait.
 //! Executes the AOT artifacts (`artifacts/*.hlo.txt`) on the PJRT CPU
 //! client; requires `meta.json` for shapes and batch inventory.
+//!
+//! The AOT executables take dense f32 activations, so this backend keeps
+//! the trait's default `run_backend_packed` widening shim: packed
+//! `BitPlane` words from the frame path are unpacked to `{0,1}` f32 once
+//! at dispatch and handed to `run_backend`.
 
 use anyhow::{anyhow, ensure, Context, Result};
 use std::path::Path;
@@ -9,7 +14,7 @@ use std::sync::Arc;
 
 use crate::config::ArtifactMeta;
 use crate::runtime::Runtime;
-use crate::sensor::{ActivationMap, Frame};
+use crate::sensor::{BitPlane, Frame};
 
 use super::InferenceBackend;
 
@@ -68,7 +73,7 @@ impl InferenceBackend for PjrtBackend {
             .context("preloading AOT executables")
     }
 
-    fn run_frontend(&self, frame: &Frame) -> Result<ActivationMap> {
+    fn run_frontend(&self, frame: &Frame) -> Result<BitPlane> {
         ensure!(
             [frame.channels, frame.height, frame.width]
                 == [
@@ -94,8 +99,8 @@ impl InferenceBackend for PjrtBackend {
             out[0].len(),
             c * h * w
         );
-        let bits = out[0].iter().map(|&x| x > 0.5).collect();
-        Ok(ActivationMap { channels: c, height: h, width: w, bits, seq: frame.seq })
+        let bits: Vec<bool> = out[0].iter().map(|&x| x > 0.5).collect();
+        BitPlane::from_bools(c, h, w, &bits, frame.seq)
     }
 
     fn run_backend(&self, acts: &[f32], batch: usize) -> Result<Vec<f32>> {

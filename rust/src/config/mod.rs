@@ -257,6 +257,47 @@ impl BackendKind {
     }
 }
 
+/// Sensor-geometry presets for the paper's two workloads: the CIFAR-scale
+/// 32×32 development geometry and the ImageNet/VGG16 224×224 first-layer
+/// geometry of Table 1 / Fig. 9 (`energy::Geometry::imagenet_vgg16`).
+/// Threaded through `SweepConfig`/`PipelineConfig` and the `sweep`/`serve`
+/// CLIs (`--geometry`), so campaigns and streaming can both run the
+/// paper's full-scale workload without hand-spelling the dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeometryPreset {
+    /// 32×32 (CIFAR-scale; the default development geometry).
+    Cifar,
+    /// 224×224 (ImageNet VGG16 head — paper Table 1 / Fig. 9 / Eq. 3).
+    ImagenetVgg16,
+}
+
+impl GeometryPreset {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cifar" => Ok(Self::Cifar),
+            "imagenet" => Ok(Self::ImagenetVgg16),
+            other => anyhow::bail!(
+                "unknown geometry '{other}' (expected 'cifar' or 'imagenet')"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cifar => "cifar",
+            Self::ImagenetVgg16 => "imagenet",
+        }
+    }
+
+    /// Sensor `(height, width)` for the preset.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Self::Cifar => (32, 32),
+            Self::ImagenetVgg16 => (224, 224),
+        }
+    }
+}
+
 /// Sensor→backend link encoding (paper §3.2 discusses CSR-style schemes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparseCoding {
@@ -332,6 +373,10 @@ pub struct PipelineConfig {
     pub sensor_height: usize,
     /// Sensor cols (image width).
     pub sensor_width: usize,
+    /// Geometry preset the dimensions came from, when one was named
+    /// (`"geometry"` config key / `--geometry` flag).  Explicit
+    /// height/width keys still win over the preset's dimensions.
+    pub geometry: Option<GeometryPreset>,
     /// Batch sizes for which backend executables exist.
     pub batch_sizes: Vec<usize>,
     /// Max frames queued before backpressure stalls the source.
@@ -362,6 +407,7 @@ impl Default for PipelineConfig {
             artifacts_dir: "artifacts".to_string(),
             sensor_height: 32,
             sensor_width: 32,
+            geometry: None,
             batch_sizes: vec![1, 8],
             queue_depth: 64,
             batch_timeout_us: 8_000,
@@ -395,14 +441,23 @@ impl PipelineConfig {
                 Err(_) => Ok(dv),
             }
         };
+        // A named geometry preset supplies the height/width *defaults*;
+        // explicit sensor_height / sensor_width keys still override it.
+        let geometry = match v.get("geometry") {
+            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
+            Err(_) => None,
+        };
+        let (gh, gw) = geometry
+            .map(|g| g.dims())
+            .unwrap_or((d.sensor_height, d.sensor_width));
         Ok(Self {
             artifacts_dir: v
                 .get("artifacts_dir")
                 .and_then(|x| Ok(x.as_str()?.to_string()))
                 .unwrap_or(d.artifacts_dir),
-            sensor_height: getf("sensor_height", d.sensor_height as f64)?
-                as usize,
-            sensor_width: getf("sensor_width", d.sensor_width as f64)? as usize,
+            sensor_height: getf("sensor_height", gh as f64)? as usize,
+            sensor_width: getf("sensor_width", gw as f64)? as usize,
+            geometry,
             batch_sizes: v
                 .get("batch_sizes")
                 .and_then(|x| x.as_usize_vec())
@@ -456,6 +511,11 @@ pub struct SweepConfig {
     pub sensor_height: usize,
     /// Frame width fed to the sensor sim.
     pub sensor_width: usize,
+    /// Geometry preset the dimensions came from, when one was named
+    /// (`"geometry"` config key / `--geometry` flag); explicit
+    /// height/width still win.  `imagenet` runs the campaign on the
+    /// paper's 224×224 Table 1 workload.
+    pub geometry: Option<GeometryPreset>,
     /// Directory the JSON report is written to.
     pub out_dir: String,
 }
@@ -471,6 +531,7 @@ impl Default for SweepConfig {
             seed: 1,
             sensor_height: 32,
             sensor_width: 32,
+            geometry: None,
             out_dir: "reports".to_string(),
         }
     }
@@ -493,15 +554,23 @@ impl SweepConfig {
                 Err(_) => Ok(dv),
             }
         };
+        // Same precedence as PipelineConfig: a named preset provides the
+        // height/width defaults, explicit keys override.
+        let geometry = match v.get("geometry") {
+            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
+            Err(_) => None,
+        };
+        let (gh, gw) = geometry
+            .map(|g| g.dims())
+            .unwrap_or((d.sensor_height, d.sensor_width));
         Ok(Self {
             grid: gets("grid", d.grid)?,
             trials: getf("trials", d.trials as f64)? as u32,
             threads: getf("threads", d.threads as f64)? as usize,
             seed: getf("seed", d.seed as f64)? as u32,
-            sensor_height: getf("sensor_height", d.sensor_height as f64)?
-                as usize,
-            sensor_width: getf("sensor_width", d.sensor_width as f64)?
-                as usize,
+            sensor_height: getf("sensor_height", gh as f64)? as usize,
+            sensor_width: getf("sensor_width", gw as f64)? as usize,
+            geometry,
             out_dir: gets("out_dir", d.out_dir)?,
         })
     }
@@ -659,6 +728,42 @@ mod tests {
         assert_eq!(cfg.threads, 2);
         assert_eq!(cfg.seed, d.seed);
         assert_eq!(cfg.out_dir, d.out_dir);
+    }
+
+    #[test]
+    fn geometry_preset_parse_dims_and_precedence() {
+        for (s, dims) in [("cifar", (32, 32)), ("imagenet", (224, 224))] {
+            let g = GeometryPreset::parse(s).unwrap();
+            assert_eq!(g.name(), s);
+            assert_eq!(g.dims(), dims);
+        }
+        assert!(GeometryPreset::parse("cifar100").is_err());
+
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_geometry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.json");
+        // Preset alone sets both dimensions …
+        std::fs::write(&p, r#"{"geometry": "imagenet"}"#).unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
+        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
+        // … but explicit keys still win over it.
+        std::fs::write(
+            &p,
+            r#"{"geometry": "imagenet", "sensor_height": 64}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (64, 224));
+        // Invalid preset names fail loudly, like every other enum key.
+        std::fs::write(&p, r#"{"geometry": "mnist"}"#).unwrap();
+        assert!(SweepConfig::from_json_file(&p).is_err());
+
+        let pp = dir.join("pipe.json");
+        std::fs::write(&pp, r#"{"geometry": "imagenet"}"#).unwrap();
+        let cfg = PipelineConfig::from_json_file(&pp).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
+        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
     }
 
     #[test]

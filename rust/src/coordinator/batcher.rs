@@ -3,8 +3,10 @@
 //! The AOT backend exists at fixed batch sizes (default {1, 8}); the
 //! batcher greedily forms the largest available executable batch and
 //! falls back to singles once a frame has waited `timeout`.  Pure data
-//! structure (no threads) so the policy is unit-testable; the pipeline
-//! drives it from its dispatch loop.
+//! structure (no threads), generic over the queued item — the streaming
+//! server queues packed `BitPlane` activations through it unchanged, so
+//! batching never touches (or widens) the payload.  The policy is
+//! unit-testable; the pipeline drives it from its dispatch loop.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

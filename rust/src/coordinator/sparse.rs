@@ -1,4 +1,4 @@
-//! Sparse coding of binary activation maps for the sensor→backend link
+//! Sparse coding of binary activation planes for the sensor→backend link
 //! (paper §3.2: "further reduce the bandwidth … via effective sparse
 //! coding schemes, such as compressed sparse row/column").
 //!
@@ -10,13 +10,16 @@
 //!   Bernoulli entropy bound at the ≥75 % sparsities the trained BNN
 //!   produces (this is what makes the paper's "up to 8.5×" comm figure).
 //!
+//! All codecs operate on the packed [`BitPlane`] words natively: Dense is
+//! a word copy, CSR and RLE walk set bits with popcount/trailing-zeros
+//! scans (`BitPlane::for_each_one`) instead of testing every element.
 //! All codecs round-trip losslessly; `payload_bits` is what the energy
 //! model charges to the LVDS link.
 
 use anyhow::{bail, Result};
 
 use crate::config::SparseCoding;
-use crate::sensor::frame::ActivationMap;
+use crate::sensor::frame::BitPlane;
 
 /// An encoded activation payload.
 #[derive(Debug, Clone)]
@@ -39,7 +42,7 @@ enum EncodedData {
 }
 
 /// Encode with the requested codec.
-pub fn encode(map: &ActivationMap, coding: SparseCoding) -> Encoded {
+pub fn encode(map: &BitPlane, coding: SparseCoding) -> Encoded {
     match coding {
         SparseCoding::Dense => encode_dense(map),
         SparseCoding::Csr => encode_csr(map),
@@ -47,17 +50,20 @@ pub fn encode(map: &ActivationMap, coding: SparseCoding) -> Encoded {
     }
 }
 
-/// Decode back to an activation map (lossless inverse of [`encode`]).
-pub fn decode(enc: &Encoded) -> Result<ActivationMap> {
-    let mut map =
-        ActivationMap::new(enc.channels, enc.height, enc.width, enc.seq);
+/// Decode back to a packed activation plane (lossless inverse of
+/// [`encode`]).
+pub fn decode(enc: &Encoded) -> Result<BitPlane> {
     match &enc.data {
-        EncodedData::Dense(words) => {
-            for (i, bit) in map.bits.iter_mut().enumerate() {
-                *bit = (words[i / 64] >> (i % 64)) & 1 == 1;
-            }
-        }
+        EncodedData::Dense(words) => BitPlane::from_words(
+            enc.channels,
+            enc.height,
+            enc.width,
+            words.clone(),
+            enc.seq,
+        ),
         EncodedData::Csr { row_ptr, cols } => {
+            let mut map =
+                BitPlane::new(enc.channels, enc.height, enc.width, enc.seq);
             let rows = enc.channels * enc.height;
             if row_ptr.len() != rows + 1 {
                 bail!("CSR row_ptr length mismatch");
@@ -67,58 +73,63 @@ pub fn decode(enc: &Encoded) -> Result<ActivationMap> {
                     if c as usize >= enc.width {
                         bail!("CSR column {} out of range", c);
                     }
-                    map.bits[r * enc.width + c as usize] = true;
+                    map.set(r * enc.width + c as usize, true);
                 }
             }
+            Ok(map)
         }
         EncodedData::Rle { k, words, bit_len } => {
+            let mut map =
+                BitPlane::new(enc.channels, enc.height, enc.width, enc.seq);
             let mut reader = BitReader { words, pos: 0, len: *bit_len };
-            let n = map.bits.len();
+            let n = map.len();
             let mut i = 0usize;
             while i < n {
                 let run = reader.read_golomb(*k)? as usize;
                 i += run; // `run` zeros...
                 if i < n {
-                    map.bits[i] = true; // ...then a one
+                    map.set(i, true); // ...then a one
                     i += 1;
                 }
             }
+            Ok(map)
         }
     }
-    Ok(map)
 }
 
-fn encode_dense(map: &ActivationMap) -> Encoded {
-    let n = map.bits.len();
-    let mut words = vec![0u64; n.div_ceil(64)];
-    for (i, &b) in map.bits.iter().enumerate() {
-        if b {
-            words[i / 64] |= 1 << (i % 64);
-        }
-    }
+fn encode_dense(map: &BitPlane) -> Encoded {
     Encoded {
         coding: SparseCoding::Dense,
         channels: map.channels,
         height: map.height,
         width: map.width,
         seq: map.seq,
-        payload_bits: n as u64,
-        data: EncodedData::Dense(words),
+        payload_bits: map.len() as u64,
+        data: EncodedData::Dense(map.words().to_vec()),
     }
 }
 
-fn encode_csr(map: &ActivationMap) -> Encoded {
+fn encode_csr(map: &BitPlane) -> Encoded {
     let rows = map.channels * map.height;
+    let width = map.width;
     let mut row_ptr = Vec::with_capacity(rows + 1);
     let mut cols: Vec<u16> = Vec::new();
     row_ptr.push(0u32);
-    for r in 0..rows {
-        for c in 0..map.width {
-            if map.bits[r * map.width + c] {
-                cols.push(c as u16);
-            }
+    // Set bits arrive in ascending flat order from the word scan, so rows
+    // close in order: emit each row's end pointer when the first one of a
+    // later row appears, then close the tail.
+    let mut closed = 0usize;
+    map.for_each_one(|i| {
+        let r = i / width;
+        while closed < r {
+            row_ptr.push(cols.len() as u32);
+            closed += 1;
         }
+        cols.push((i % width) as u16);
+    });
+    while closed < rows {
         row_ptr.push(cols.len() as u32);
+        closed += 1;
     }
     // Link cost: ⌈log2(w+1)⌉ bits per column index + ⌈log2(nnz+1)⌉ per row
     // pointer (the physical format packs exactly these field widths).
@@ -137,24 +148,24 @@ fn encode_csr(map: &ActivationMap) -> Encoded {
     }
 }
 
-fn encode_rle(map: &ActivationMap) -> Encoded {
+fn encode_rle(map: &BitPlane) -> Encoded {
     // Optimal Rice parameter for geometric run lengths: k ≈ log2(mean run).
-    let ones = map.bits.iter().filter(|&&b| b).count().max(1);
-    let mean_run = map.bits.len() as f64 / ones as f64;
+    let ones = map.count_ones().max(1);
+    let mean_run = map.len() as f64 / ones as f64;
     let k = mean_run.log2().floor().max(0.0) as u32;
 
     let mut writer = BitWriter::default();
-    let mut run = 0u64;
-    for &b in &map.bits {
-        if b {
-            writer.write_golomb(run, k);
-            run = 0;
-        } else {
-            run += 1;
-        }
-    }
-    if run > 0 {
-        writer.write_golomb(run, k); // trailing zero-run
+    // Zero-run before each one, from the gap between consecutive set
+    // bits, then the trailing zero-run (n when the plane is all zeros).
+    let mut prev: Option<usize> = None;
+    map.for_each_one(|i| {
+        let run = i - prev.map_or(0, |p| p + 1);
+        writer.write_golomb(run as u64, k);
+        prev = Some(i);
+    });
+    let tail = map.len() - prev.map_or(0, |p| p + 1);
+    if tail > 0 {
+        writer.write_golomb(tail as u64, k);
     }
     let bit_len = writer.len;
     Encoded {
@@ -253,13 +264,11 @@ mod tests {
     use crate::device::rng::CounterRng;
     use crate::energy::bandwidth::entropy_bits_per_element;
 
-    fn random_map(c: usize, h: usize, w: usize, p_one: f32, seed: u32) -> ActivationMap {
+    fn random_map(c: usize, h: usize, w: usize, p_one: f32, seed: u32) -> BitPlane {
         let mut rng = CounterRng::new(seed, 31);
-        let mut m = ActivationMap::new(c, h, w, seed);
-        for b in m.bits.iter_mut() {
-            *b = rng.next_uniform() < p_one;
-        }
-        m
+        let bools: Vec<bool> =
+            (0..c * h * w).map(|_| rng.next_uniform() < p_one).collect();
+        BitPlane::from_bools(c, h, w, &bools, seed).unwrap()
     }
 
     #[test]
@@ -269,7 +278,7 @@ mod tests {
                 let m = random_map(32, 15, 15, p, 7);
                 let enc = encode(&m, coding);
                 let dec = decode(&enc).unwrap();
-                assert_eq!(m.bits, dec.bits, "{coding:?} p={p}");
+                assert_eq!(m, dec, "{coding:?} p={p}");
             }
         }
     }
@@ -292,7 +301,7 @@ mod tests {
     #[test]
     fn rle_within_25pct_of_entropy_bound() {
         let m = random_map(32, 30, 30, 0.21, 5);
-        let n = m.bits.len() as f64;
+        let n = m.len() as f64;
         let bound = n * entropy_bits_per_element(0.21);
         let rle = encode(&m, SparseCoding::Rle).payload_bits as f64;
         assert!(
@@ -320,8 +329,30 @@ mod tests {
         for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
             let empty = random_map(2, 3, 4, 0.0, 1);
             let full = random_map(2, 3, 4, 1.0, 1);
-            assert_eq!(decode(&encode(&empty, coding)).unwrap().bits, empty.bits);
-            assert_eq!(decode(&encode(&full, coding)).unwrap().bits, full.bits);
+            assert_eq!(decode(&encode(&empty, coding)).unwrap(), empty);
+            assert_eq!(decode(&encode(&full, coding)).unwrap(), full);
+        }
+    }
+
+    #[test]
+    fn word_scan_csr_matches_per_element_reference() {
+        // The trailing-zeros row closer must produce exactly the row_ptr /
+        // cols a per-element scan would — including empty leading rows,
+        // empty trailing rows, and runs inside one word.
+        for (p, seed) in [(0.0f32, 2), (0.03, 4), (0.3, 8), (1.0, 16)] {
+            let m = random_map(3, 7, 11, p, seed);
+            let enc = encode(&m, SparseCoding::Csr);
+            let dec = decode(&enc).unwrap();
+            assert_eq!(m, dec, "p={p}");
+            // Reference payload from the bool representation.
+            let bits = m.to_bools();
+            let mut cols = 0u64;
+            for &b in &bits {
+                cols += u64::from(b);
+            }
+            let want = cols * bits_for(m.width as u64)
+                + (m.channels * m.height + 1) as u64 * bits_for(cols);
+            assert_eq!(enc.payload_bits, want, "p={p}");
         }
     }
 

@@ -44,7 +44,9 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::pipeline::{Classification, RunReport};
 use crate::coordinator::sparse;
 use crate::metrics::PipelineMetrics;
-use crate::sensor::{scene::SceneGen, CaptureMode, Frame, PixelArraySim};
+use crate::sensor::{
+    scene::SceneGen, words_for, BitPlane, CaptureMode, Frame, PixelArraySim,
+};
 
 /// A frame in the source queue, stamped at submission for e2e latency.
 struct Submitted {
@@ -52,10 +54,13 @@ struct Submitted {
     t_submit: Instant,
 }
 
-/// A decoded activation waiting for batched dispatch.
+/// A decoded activation waiting for batched dispatch: the packed
+/// [`BitPlane`] straight from the link decode — the words travel through
+/// the queue and the batcher unchanged and land in the backend's packed
+/// entry point with no widening.
 struct Activation {
     seq: u32,
-    dense: Vec<f32>,
+    plane: BitPlane,
     sparsity: f64,
     link_bits: u64,
     t_submit: Instant,
@@ -425,12 +430,24 @@ fn worker_loop(
         let decoded = sparse::decode(&enc).context("link decode (codec bug)")?;
         metrics.encode_latency.record(t_enc);
         metrics.link_bits.add(enc.payload_bits);
-        debug_assert_eq!(decoded.bits, map.bits);
+        // Release-mode link verification (formerly a debug_assert that
+        // release builds silently skipped): one word-level compare per
+        // frame — `len/64` u64 equality checks, cheap even at ImageNet
+        // geometry.  A mismatch is a codec bug: count it for the metrics
+        // report and fail the stream loudly.
+        if decoded.words() != map.words() {
+            metrics.link_decode_mismatch.inc();
+            anyhow::bail!(
+                "link decode mismatch on frame {} ({} coding)",
+                sub.frame.seq,
+                coding.name()
+            );
+        }
 
         let act = Activation {
             seq: sub.frame.seq,
-            dense: decoded.to_f32(),
             sparsity: map.sparsity(),
+            plane: decoded,
             link_bits: enc.payload_bits,
             t_submit: sub.t_submit,
             t_act: Instant::now(),
@@ -487,16 +504,17 @@ fn execute_batch(
 ) -> Result<()> {
     let b = batch.len();
     let act_elems = backend.act_elems();
-    let mut input = Vec::with_capacity(b * act_elems);
+    let wpf = words_for(act_elems);
+    let mut input = Vec::with_capacity(b * wpf);
     for act in &batch {
-        debug_assert_eq!(act.dense.len(), act_elems);
+        debug_assert_eq!(act.plane.len(), act_elems);
         // Residency ends here, at dispatch — not after the backend run.
         metrics.batch_wait.record(act.t_act);
-        input.extend_from_slice(&act.dense);
+        input.extend_from_slice(act.plane.words());
     }
 
     let t_exec = Instant::now();
-    let logits_all = backend.run_backend(&input, b)?;
+    let logits_all = backend.run_backend_packed(&input, b)?;
     metrics.backend_latency.record(t_exec);
     metrics.batches.inc();
     metrics.batch_occupancy_sum.add(b as u64);

@@ -47,6 +47,17 @@ impl Geometry {
     pub fn imagenet_vgg16(cfg: &HwConfig) -> Self {
         Self::from_cfg(cfg, 224, 224)
     }
+
+    /// Geometry for a named config preset (`--geometry cifar|imagenet`) —
+    /// the same dimensions the sweep/serve paths run, so energy numbers
+    /// and campaign workloads can never disagree about the frame size.
+    pub fn from_preset(
+        cfg: &HwConfig,
+        preset: crate::config::GeometryPreset,
+    ) -> Self {
+        let (h, w) = preset.dims();
+        Self::from_cfg(cfg, h, w)
+    }
 }
 
 /// Per-frame front-end energy breakdown (pJ).
@@ -179,6 +190,17 @@ mod tests {
         let (_, g) = setup();
         assert_eq!((g.h_out, g.w_out, g.c_out), (111, 111, 32));
         assert_eq!(g.in_elems(), 224 * 224 * 3);
+    }
+
+    #[test]
+    fn preset_geometry_matches_named_constructors() {
+        use crate::config::GeometryPreset;
+        let cfg = HwConfig::default();
+        let img = Geometry::from_preset(&cfg, GeometryPreset::ImagenetVgg16);
+        let want = Geometry::imagenet_vgg16(&cfg);
+        assert_eq!((img.h_in, img.w_in, img.h_out), (want.h_in, want.w_in, want.h_out));
+        let cif = Geometry::from_preset(&cfg, GeometryPreset::Cifar);
+        assert_eq!((cif.h_in, cif.w_in), (32, 32));
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //! * [`device`] — VC-MTJ physics: R(V), TMR droop, precessional switching
 //!   probability, multi-device majority neurons, endurance tracking
 //! * [`circuit`] — behavioural pixel/subtractor/readout circuit simulation
-//! * [`sensor`] — pixel array, kernel tiling, global vs rolling shutter
+//! * [`sensor`] — pixel array, kernel tiling, global vs rolling shutter,
+//!   and the packed `BitPlane` activation representation carried from
+//!   capture through the link and batcher to backend dispatch
 //! * [`coordinator`] — concurrent streaming frame server (bounded queues,
 //!   backpressure, dynamic batching, drain/shutdown), the one-shot
 //!   pipeline facade, sparse link codecs, synthetic workload generators

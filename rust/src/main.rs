@@ -17,7 +17,8 @@ use std::path::PathBuf;
 
 use pixelmtj::backend::{self, InferenceBackend as _};
 use pixelmtj::config::{
-    BackendKind, HwConfig, PipelineConfig, SparseCoding, SweepConfig, Workload,
+    BackendKind, GeometryPreset, HwConfig, PipelineConfig, SparseCoding,
+    SweepConfig, Workload,
 };
 use pixelmtj::coordinator::{stream, FrameSource as _, Pipeline};
 use pixelmtj::reports::{self, sweep_report, ReportCtx};
@@ -30,17 +31,20 @@ pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel
 USAGE:
   pixelmtj serve    [--frames N] [--workers N] [--coding dense|csr|rle]
                     [--backend native|pjrt] [--no-mtj-noise]
+                    [--geometry cifar|imagenet]
                     [--artifacts DIR] [--config FILE]
                     [--stream] [--workload steady|bursty|motion]
                     [--queue-depth N] [--burst-len N] [--burst-gap-us N]
   pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
   pixelmtj sweep    [--grid SPEC] [--trials N] [--threads N] [--seed N]
-                    [--height N] [--width N] [--out DIR] [--config FILE]
+                    [--geometry cifar|imagenet] [--height N] [--width N]
+                    [--out DIR] [--config FILE]
   pixelmtj validate [--artifacts DIR]
   pixelmtj info     [--artifacts DIR]
 
 Reports: fig1b fig2 fig4a fig4b fig5 fig6 fig8 fig9 bandwidth latency table1
-Sweep grid keys: v pulse n k ap p sigma mode (see rust/README.md)";
+Sweep grid keys: v pulse n k ap p sigma mode (see rust/README.md)
+--geometry imagenet runs the paper's 224x224 VGG16-head workload";
 
 fn main() {
     if let Err(e) = run() {
@@ -99,6 +103,10 @@ fn serve(args: &Args) -> Result<()> {
     };
     let no_noise = args.flag("no-mtj-noise")?;
     let streaming = args.flag("stream")?;
+    let geometry = match args.opt_str("geometry") {
+        Some(s) => Some(GeometryPreset::parse(&s)?),
+        None => None,
+    };
     let workload = match args.opt_str("workload") {
         Some(s) => Some(Workload::parse(&s)?),
         None => None,
@@ -126,6 +134,12 @@ fn serve(args: &Args) -> Result<()> {
         args.usize_or("burst-gap-us", cfg.burst_gap_us as usize)? as u64;
     args.finish()?;
     cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    if let Some(g) = geometry {
+        // CLI preset overrides whatever the config file said, dimensions
+        // included (the config-file preset already resolved at load).
+        cfg.geometry = Some(g);
+        (cfg.sensor_height, cfg.sensor_width) = g.dims();
+    }
     if let Some(coding) = coding {
         cfg.sparse_coding = coding;
     }
@@ -158,13 +172,20 @@ fn serve(args: &Args) -> Result<()> {
     let be = backend::create(cfg.backend, &hw, &cfg, weights)
         .context("constructing inference backend")?;
     println!(
-        "backend={} arch={} frames={} workers={} coding={} mode={}",
+        "backend={} arch={} frames={} workers={} coding={} mode={} \
+         sensor={}x{}{}",
         be.name(),
         be.arch(),
         frames_n,
         cfg.sensor_workers,
         cfg.sparse_coding.name(),
         if streaming { "stream" } else { "oneshot" },
+        cfg.sensor_height,
+        cfg.sensor_width,
+        match cfg.geometry {
+            Some(g) => format!(" geometry={}", g.name()),
+            None => String::new(),
+        },
     );
 
     let channels = hw.network.in_channels;
@@ -246,13 +267,36 @@ fn sweep(args: &Args) -> Result<()> {
     cfg.trials = args.u32_or("trials", cfg.trials)?;
     cfg.threads = args.usize_or("threads", cfg.threads)?;
     cfg.seed = args.u32_or("seed", cfg.seed)?;
+    // Geometry preset first (sets both dimensions), explicit flags win.
+    if let Some(s) = args.opt_str("geometry") {
+        let g = GeometryPreset::parse(&s)?;
+        cfg.geometry = Some(g);
+        (cfg.sensor_height, cfg.sensor_width) = g.dims();
+    }
     cfg.sensor_height = args.usize_or("height", cfg.sensor_height)?;
     cfg.sensor_width = args.usize_or("width", cfg.sensor_width)?;
     cfg.out_dir = args.str_or("out", &cfg.out_dir);
     args.finish()?;
 
-    let summary = pixelmtj::sweep::run_sweep(&cfg)?;
-    sweep_report::print_table(&summary);
+    println!(
+        "sweep: grid \"{}\" × {} trials at {}×{}{} (seed {})",
+        cfg.grid,
+        cfg.trials,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        match cfg.geometry {
+            Some(g) => format!(" [{}]", g.name()),
+            None => String::new(),
+        },
+        cfg.seed
+    );
+    // Rows stream to the table as cells complete (the `cell` column is
+    // the grid index — completion order is scheduling-dependent, the
+    // saved JSON is not).
+    sweep_report::print_header();
+    let summary = pixelmtj::sweep::run_sweep_with(&cfg, |idx, cell| {
+        sweep_report::print_row(idx, cell);
+    })?;
     println!(
         "\n{} cells × {} trials in {:.2} s on {} threads → {:.1} cells/s",
         summary.cells.len(),

@@ -129,6 +129,10 @@ pub struct PipelineMetrics {
     pub frames_dropped: Counter,
     /// Non-blocking submits rejected because the frame queue was full.
     pub submit_rejected: Counter,
+    /// Link decode/encode disagreements caught by the release-mode
+    /// verification in the sensor workers (a codec bug; always 0 on a
+    /// healthy stream — the worker also fails the frame loudly).
+    pub link_decode_mismatch: Counter,
     pub batches: Counter,
     pub batch_occupancy_sum: Counter,
     pub link_bits: Counter,
@@ -168,6 +172,10 @@ impl PipelineMetrics {
             ("frames_out", Value::Num(self.frames_out.get() as f64)),
             ("frames_dropped", Value::Num(self.frames_dropped.get() as f64)),
             ("submit_rejected", Value::Num(self.submit_rejected.get() as f64)),
+            (
+                "link_decode_mismatch",
+                Value::Num(self.link_decode_mismatch.get() as f64),
+            ),
             ("batches", Value::Num(self.batches.get() as f64)),
             ("mean_batch_occupancy", Value::Num(self.mean_batch_occupancy())),
             ("link_bits", Value::Num(self.link_bits.get() as f64)),

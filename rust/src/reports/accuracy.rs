@@ -14,7 +14,7 @@ use crate::config::HwConfig;
 use crate::device::rng;
 use crate::reports::ReportCtx;
 use crate::sensor::{
-    ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+    words_for, BitPlane, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
 };
 use crate::util::json::Value;
 
@@ -45,23 +45,25 @@ impl EvalSet {
     }
 }
 
-/// Classify activation maps through the backend in batches of 8 (the
-/// batch shapes every backend serves).
+/// Classify packed activation planes through the backend in batches of 8
+/// (the batch shapes every backend serves).  The words go straight to the
+/// packed entry point — native consumes them zero-copy, PJRT widens once
+/// through the trait shim.
 fn classify(
     backend: &dyn InferenceBackend,
-    maps: &[ActivationMap],
+    maps: &[BitPlane],
 ) -> Result<Vec<usize>> {
-    let act_elems = backend.act_elems();
+    let wpf = words_for(backend.act_elems());
     let nc = backend.num_classes();
     let mut out = Vec::with_capacity(maps.len());
     let mut i = 0;
     while i < maps.len() {
         let b = if maps.len() - i >= 8 { 8 } else { 1 };
-        let mut input = Vec::with_capacity(b * act_elems);
+        let mut input = Vec::with_capacity(b * wpf);
         for m in &maps[i..i + b] {
-            input.extend(m.to_f32());
+            input.extend_from_slice(m.words());
         }
-        let logits = backend.run_backend(&input, b)?;
+        let logits = backend.run_backend_packed(&input, b)?;
         for j in 0..b {
             let row = &logits[j * nc..(j + 1) * nc];
             let label = row
@@ -79,14 +81,15 @@ fn classify(
 
 /// Flip activation bits with asymmetric error rates (Fig. 8's model):
 /// 1→0 with `p10` ("neuron fails to activate"), 0→1 with `p01`.
-fn inject_errors(map: &ActivationMap, p10: f64, p01: f64, seed: u32) -> ActivationMap {
+fn inject_errors(map: &BitPlane, p10: f64, p01: f64, seed: u32) -> BitPlane {
     let mut out = map.clone();
-    for (i, b) in out.bits.iter_mut().enumerate() {
+    for i in 0..out.len() {
         let u = rng::uniform(seed ^ 0xE44, i as u32, 200) as f64;
-        if *b && u < p10 {
-            *b = false;
-        } else if !*b && u < p01 {
-            *b = true;
+        let b = out.get(i);
+        if b && u < p10 {
+            out.set(i, false);
+        } else if !b && u < p01 {
+            out.set(i, true);
         }
     }
     out

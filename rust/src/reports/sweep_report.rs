@@ -45,11 +45,12 @@ pub fn to_json(s: &SweepSummary) -> Value {
     ])
 }
 
-/// Print the campaign as an aligned table (one row per cell).
-pub fn print_table(s: &SweepSummary) {
+/// Print the table header (pair with [`print_row`] for live streaming).
+pub fn print_header() {
     println!(
-        "{:>5} {:>6} {:>3} {:>3} {:>3} {:>3} {:>6} {:>10} | {:>9} {:>9} \
-         {:>9} {:>7} {:>8} {:>10}",
+        "{:>5} {:>5} {:>6} {:>3} {:>3} {:>3} {:>3} {:>6} {:>10} | {:>9} \
+         {:>9} {:>9} {:>7} {:>8} {:>10}",
+        "cell",
         "V",
         "t(ns)",
         "n",
@@ -65,25 +66,40 @@ pub fn print_table(s: &SweepSummary) {
         "sparsity",
         "pJ/frame"
     );
-    for c in &s.cells {
-        println!(
-            "{:>5.2} {:>6.2} {:>3} {:>3} {:>3} {:>3} {:>6.3} {:>10} | \
-             {:>9.3e} {:>9.3e} {:>9.3e} {:>7.3} {:>8.3} {:>10.1}",
-            c.cell.op.v_write,
-            c.cell.op.pulse_ns,
-            c.cell.op.n,
-            c.cell.op.k,
-            c.cell.op.faults.stuck_ap,
-            c.cell.op.faults.stuck_p,
-            c.cell.op.sigma_psw,
-            c.cell.mode.name(),
-            c.ber,
-            c.e10,
-            c.e01,
-            c.agreement,
-            c.mean_sparsity,
-            c.energy_pj_per_frame
-        );
+}
+
+/// Print one cell as a table row, tagged with its grid index.  The sweep
+/// engine streams `(index, result)` pairs to this as cells complete, so
+/// campaign progress is visible live; rows may appear out of grid order
+/// (the index column says which cell each row is), while the saved JSON
+/// stays in deterministic grid order.
+pub fn print_row(idx: usize, c: &CellResult) {
+    println!(
+        "{:>5} {:>5.2} {:>6.2} {:>3} {:>3} {:>3} {:>3} {:>6.3} {:>10} | \
+         {:>9.3e} {:>9.3e} {:>9.3e} {:>7.3} {:>8.3} {:>10.1}",
+        idx,
+        c.cell.op.v_write,
+        c.cell.op.pulse_ns,
+        c.cell.op.n,
+        c.cell.op.k,
+        c.cell.op.faults.stuck_ap,
+        c.cell.op.faults.stuck_p,
+        c.cell.op.sigma_psw,
+        c.cell.mode.name(),
+        c.ber,
+        c.e10,
+        c.e01,
+        c.agreement,
+        c.mean_sparsity,
+        c.energy_pj_per_frame
+    );
+}
+
+/// Print the campaign as an aligned table (one row per cell, grid order).
+pub fn print_table(s: &SweepSummary) {
+    print_header();
+    for (idx, c) in s.cells.iter().enumerate() {
+        print_row(idx, c);
     }
 }
 

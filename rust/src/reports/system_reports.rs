@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::config::{HwConfig, SparseCoding};
+use crate::config::{GeometryPreset, HwConfig, SparseCoding};
 use crate::coordinator::sparse;
 use crate::energy;
 use crate::energy::model::Geometry;
@@ -55,7 +55,9 @@ fn measured_link_profile(ctx: &ReportCtx, hw: &HwConfig) -> (f64, f64) {
 /// Fig. 9: normalized front-end + communication energy, three systems.
 pub fn fig9(ctx: &ReportCtx) -> Result<()> {
     let hw = cfg(ctx);
-    let geom = Geometry::imagenet_vgg16(&hw);
+    // Same preset the sweep/serve CLIs run, so the Fig. 9 energy figure
+    // and the `--geometry imagenet` workloads can never disagree on dims.
+    let geom = Geometry::from_preset(&hw, GeometryPreset::ImagenetVgg16);
     let (ones_rate, coded_bits_eval) = measured_link_profile(ctx, &hw);
 
     let fe_ours = energy::frontend_ours_analytic(&geom, &hw, ones_rate).total_pj();

@@ -13,6 +13,16 @@
 //!   per-channel threshold-matched subtractor voltages drive `MtjModel`
 //!   switching, then the burst reader majority-votes; used for the
 //!   circuit-level figures and ablations.
+//!
+//! Capture is split into the analog half ([`PixelArraySim::analog_plane`]
+//! → [`AnalogPlane`]) and the device half ([`PixelArraySim::binarize_at`]),
+//! which writes the activation bits **directly into packed
+//! [`BitPlane`] words** — no per-pixel `Vec<bool>` intermediate on the
+//! frame path.  The pre-refactor bool representation survives only as the
+//! [`BitSink`] reference sinks behind [`PixelArraySim::capture_ref`] /
+//! [`PixelArraySim::capture_at_ref`]: identical decision logic, bool
+//! storage — what the representation-equivalence tests and the legacy arm
+//! of `benches/pack.rs` compare against.
 
 use anyhow::Result;
 
@@ -23,7 +33,7 @@ use crate::device::fault::StuckFaults;
 use crate::device::mtj::{MtjModel, MtjState};
 use crate::device::neuron::MultiMtjNeuron;
 use crate::device::rng;
-use crate::sensor::frame::{ActivationMap, Frame};
+use crate::sensor::frame::{BitPlane, Frame};
 use crate::sensor::weights::FirstLayerWeights;
 
 /// Fidelity of the capture simulation.
@@ -130,6 +140,64 @@ impl CaptureStats {
     pub fn sparsity(&self) -> f64 {
         1.0 - self.ones as f64 / self.elements.max(1) as f64
     }
+
+    /// Field-wise sum — recombines the analog-stage and device-stage
+    /// halves split across [`PixelArraySim::analog_plane`] and
+    /// [`PixelArraySim::binarize_at`] into exactly the counters a fused
+    /// `capture_at` produces.
+    pub fn absorb(&mut self, o: &CaptureStats) {
+        self.integration_phases += o.integration_phases;
+        self.mac_ops += o.mac_ops;
+        self.mtj_writes += o.mtj_writes;
+        self.mtj_reads += o.mtj_reads;
+        self.mtj_resets += o.mtj_resets;
+        self.comparator_evals += o.comparator_evals;
+        self.saturations += o.saturations;
+        self.ones += o.ones;
+        self.elements += o.elements;
+    }
+}
+
+/// Pre-threshold analog plane: z values (normalized by v_th) for every
+/// (channel, y', x') in CHW order, plus the frame's Hoyer extremum —
+/// everything the device stage needs, detached from the frame so the
+/// sweep engine can compute it once per trial and binarize per cell.
+#[derive(Debug, Clone)]
+pub struct AnalogPlane {
+    pub z: Vec<f32>,
+    pub ext: f32,
+}
+
+/// Destination for capture bits: the packed [`BitPlane`] on the frame
+/// path, a plain `Vec<bool>` for the pre-refactor reference used by the
+/// representation-equivalence tests.  Decision logic is shared; only the
+/// storage differs, so the two can never diverge on *what* fires — the
+/// tests pin that the packed storage preserves it bit for bit.
+pub trait BitSink {
+    fn set_bit(&mut self, i: usize, b: bool);
+    fn count_set(&self) -> u64;
+}
+
+impl BitSink for BitPlane {
+    #[inline]
+    fn set_bit(&mut self, i: usize, b: bool) {
+        self.set(i, b);
+    }
+
+    fn count_set(&self) -> u64 {
+        self.count_ones()
+    }
+}
+
+impl BitSink for Vec<bool> {
+    #[inline]
+    fn set_bit(&mut self, i: usize, b: bool) {
+        self[i] = b;
+    }
+
+    fn count_set(&self) -> u64 {
+        self.iter().filter(|&&b| b).count() as u64
+    }
 }
 
 /// The in-pixel compute array for one sensor.
@@ -193,7 +261,7 @@ impl PixelArraySim {
     /// This is the two-phase MAC through the Fig. 4(a) curve with the BN
     /// shift folded into the comparator (paper §2.4.1), identical math to
     /// `kernels/ref.py::frontend_ref`.
-    pub fn analog_plane(&self, frame: &Frame) -> (Vec<f32>, f32, CaptureStats) {
+    pub fn analog_plane(&self, frame: &Frame) -> (AnalogPlane, CaptureStats) {
         let w = &self.weights;
         let (oh, ow) = self.out_hw(frame.height, frame.width);
         let k = w.k;
@@ -267,35 +335,60 @@ impl PixelArraySim {
             s1 += c;
         }
         let ext = (s2 / (s1 + 1e-9)) as f32;
-        (z, ext, stats)
+        (AnalogPlane { z, ext }, stats)
     }
 
-    /// Capture one frame into a binary activation map.
-    pub fn capture(&self, frame: &Frame, mode: CaptureMode) -> (ActivationMap, CaptureStats) {
-        let (z, ext, mut stats) = self.analog_plane(frame);
+    /// Capture one frame into a packed binary activation plane.
+    pub fn capture(&self, frame: &Frame, mode: CaptureMode) -> (BitPlane, CaptureStats) {
         let (oh, ow) = self.out_hw(frame.height, frame.width);
-        let mut map = ActivationMap::new(self.weights.c_out, oh, ow, frame.seq);
+        let mut map = BitPlane::new(self.weights.c_out, oh, ow, frame.seq);
+        let stats = self.capture_into(frame, mode, &mut map);
+        (map, stats)
+    }
+
+    /// Pre-refactor bool reference of [`Self::capture`]: same decision
+    /// logic through a `Vec<bool>` sink.  Kept for the representation-
+    /// equivalence tests and the legacy arm of `benches/pack.rs`; the
+    /// serving path never calls this.
+    pub fn capture_ref(
+        &self,
+        frame: &Frame,
+        mode: CaptureMode,
+    ) -> (Vec<bool>, CaptureStats) {
+        let (oh, ow) = self.out_hw(frame.height, frame.width);
+        let mut bits = vec![false; self.weights.c_out * oh * ow];
+        let stats = self.capture_into(frame, mode, &mut bits);
+        (bits, stats)
+    }
+
+    fn capture_into<S: BitSink>(
+        &self,
+        frame: &Frame,
+        mode: CaptureMode,
+        sink: &mut S,
+    ) -> CaptureStats {
+        let (plane, mut stats) = self.analog_plane(frame);
 
         match mode {
             CaptureMode::Ideal => {
-                for (i, &zv) in z.iter().enumerate() {
-                    map.bits[i] = zv >= ext;
+                for (i, &zv) in plane.z.iter().enumerate() {
+                    sink.set_bit(i, zv >= plane.ext);
                 }
                 // The comparator still evaluates every neuron once.
-                stats.comparator_evals += z.len() as u64;
+                stats.comparator_evals += plane.z.len() as u64;
             }
             CaptureMode::CalibratedMtj => {
                 let n = self.cfg.mtj.n_mtj_per_neuron;
                 let kk = self.cfg.mtj.majority_k;
-                for (i, &zv) in z.iter().enumerate() {
-                    let ideal = zv >= ext;
+                for (i, &zv) in plane.z.iter().enumerate() {
+                    let ideal = zv >= plane.ext;
                     let p = if ideal { self.p_hi } else { self.p_lo } as f32;
                     let mut count = 0usize;
                     for m in 0..n {
                         let u = rng::uniform(frame.seq, i as u32, m as u32);
                         count += (u < p) as usize;
                     }
-                    map.bits[i] = count >= kk;
+                    sink.set_bit(i, count >= kk);
                     stats.mtj_writes += n as u64;
                     stats.mtj_reads += n as u64;
                     stats.comparator_evals += n as u64;
@@ -303,11 +396,11 @@ impl PixelArraySim {
                 }
             }
             CaptureMode::PhysicalMtj => {
-                self.capture_physical(&z, ext, frame.seq, &mut map, &mut stats);
+                self.capture_physical(&plane, frame.seq, sink, &mut stats);
             }
         }
-        stats.ones = map.bits.iter().filter(|&&b| b).count() as u64;
-        (map, stats)
+        stats.ones = sink.count_set();
+        stats
     }
 
     /// Capture one frame at an explicit [`OperatingPoint`] — the sweep
@@ -340,15 +433,87 @@ impl PixelArraySim {
         frame: &Frame,
         op: &OperatingPoint,
         mode: CaptureMode,
-    ) -> (ActivationMap, CaptureStats) {
-        let (z, ext, mut stats) = self.analog_plane(frame);
+    ) -> (BitPlane, CaptureStats) {
+        let (plane, astats) = self.analog_plane(frame);
         let (oh, ow) = self.out_hw(frame.height, frame.width);
-        let mut map = ActivationMap::new(self.weights.c_out, oh, ow, frame.seq);
+        let (map, mut stats) =
+            self.binarize_at(&plane, oh, ow, frame.seq, op, mode);
+        stats.absorb(&astats);
+        (map, stats)
+    }
 
+    /// Pre-refactor bool reference of [`Self::capture_at`] (see
+    /// [`Self::capture_ref`]).
+    pub fn capture_at_ref(
+        &self,
+        frame: &Frame,
+        op: &OperatingPoint,
+        mode: CaptureMode,
+    ) -> (Vec<bool>, CaptureStats) {
+        let (plane, astats) = self.analog_plane(frame);
+        let (oh, ow) = self.out_hw(frame.height, frame.width);
+        let mut bits = vec![false; self.weights.c_out * oh * ow];
+        let mut stats = CaptureStats::default();
+        self.binarize_into(&plane, frame.seq, op, mode, &mut bits, &mut stats);
+        stats.absorb(&astats);
+        (bits, stats)
+    }
+
+    /// Device-stage binarization of a precomputed [`AnalogPlane`] at an
+    /// explicit operating point: everything [`Self::capture_at`] does
+    /// after the analog MAC, writing packed words directly.  The returned
+    /// stats cover only the device stage (no integration/MAC/element
+    /// counters) — `capture_at` [`CaptureStats::absorb`]s the analog
+    /// stats on top.  The sweep engine calls this once per (trial, cell)
+    /// against per-trial planes computed once per campaign, which removes
+    /// the dominant analog MAC + tanh recompute from every cell.
+    pub fn binarize_at(
+        &self,
+        plane: &AnalogPlane,
+        oh: usize,
+        ow: usize,
+        seq: u32,
+        op: &OperatingPoint,
+        mode: CaptureMode,
+    ) -> (BitPlane, CaptureStats) {
+        let mut map = BitPlane::new(self.weights.c_out, oh, ow, seq);
+        let mut stats = CaptureStats::default();
+        self.binarize_into(plane, seq, op, mode, &mut map, &mut stats);
+        (map, stats)
+    }
+
+    /// Pre-refactor bool reference of [`Self::binarize_at`] (see
+    /// [`Self::capture_ref`]): same device-stage decisions into a
+    /// `Vec<bool>` sink, for the equivalence tests and the legacy arm of
+    /// `benches/pack.rs`.
+    pub fn binarize_at_ref(
+        &self,
+        plane: &AnalogPlane,
+        seq: u32,
+        op: &OperatingPoint,
+        mode: CaptureMode,
+    ) -> (Vec<bool>, CaptureStats) {
+        let mut bits = vec![false; plane.z.len()];
+        let mut stats = CaptureStats::default();
+        self.binarize_into(plane, seq, op, mode, &mut bits, &mut stats);
+        (bits, stats)
+    }
+
+    fn binarize_into<S: BitSink>(
+        &self,
+        plane: &AnalogPlane,
+        seq: u32,
+        op: &OperatingPoint,
+        mode: CaptureMode,
+        sink: &mut S,
+        stats: &mut CaptureStats,
+    ) {
+        let z = &plane.z;
+        let ext = plane.ext;
         match mode {
             CaptureMode::Ideal => {
                 for (i, &zv) in z.iter().enumerate() {
-                    map.bits[i] = zv >= ext;
+                    sink.set_bit(i, zv >= ext);
                 }
                 stats.comparator_evals += z.len() as u64;
             }
@@ -368,34 +533,32 @@ impl PixelArraySim {
                 );
                 for (i, &zv) in z.iter().enumerate() {
                     let p = if zv >= ext { p_hi } else { p_lo };
-                    map.bits[i] =
-                        self.sweep_vote(frame.seq, i as u32, p, op, &mut stats);
+                    let bit = self.sweep_vote(seq, i as u32, p, op, stats);
+                    sink.set_bit(i, bit);
                 }
             }
             CaptureMode::PhysicalMtj => {
+                let n_pos = z.len() / self.weights.c_out.max(1);
                 for o in 0..self.weights.c_out {
                     let sub = self.channel_subtractor(o, ext, op.v_write);
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            let i = (o * oh + oy) * ow + ox;
-                            let v_drive = self.drive_voltage(
-                                &sub, o, z[i], op.v_write, &mut stats,
-                            );
-                            let p = self.model.switching_probability(
-                                MtjState::AntiParallel,
-                                v_drive,
-                                op.pulse_ns,
-                            );
-                            map.bits[i] = self.sweep_vote(
-                                frame.seq, i as u32, p, op, &mut stats,
-                            );
-                        }
+                    for p in 0..n_pos {
+                        let i = o * n_pos + p;
+                        let v_drive = self.drive_voltage(
+                            &sub, o, z[i], op.v_write, stats,
+                        );
+                        let p_sw = self.model.switching_probability(
+                            MtjState::AntiParallel,
+                            v_drive,
+                            op.pulse_ns,
+                        );
+                        let bit =
+                            self.sweep_vote(seq, i as u32, p_sw, op, stats);
+                        sink.set_bit(i, bit);
                     }
                 }
             }
         }
-        stats.ones = map.bits.iter().filter(|&&b| b).count() as u64;
-        (map, stats)
+        stats.ones = sink.count_set();
     }
 
     /// Majority vote of one n-device neuron at base switching probability
@@ -484,39 +647,36 @@ impl PixelArraySim {
     }
 
     /// Full circuit + device composition (slow path).
-    fn capture_physical(
+    fn capture_physical<S: BitSink>(
         &self,
-        z: &[f32],
-        ext: f32,
+        plane: &AnalogPlane,
         seed: u32,
-        map: &mut ActivationMap,
+        sink: &mut S,
         stats: &mut CaptureStats,
     ) {
         let v_sw = self.cfg.mtj.sw_calib_voltages[1]; // 0.8 V operating point
         let reader = BurstReader::new(&self.model, &self.cfg.circuit);
         let k = self.cfg.mtj.majority_k;
-        let (oh, ow) = (map.height, map.width);
+        let n_pos = plane.z.len() / self.weights.c_out.max(1);
 
         for o in 0..self.weights.c_out {
-            let sub = self.channel_subtractor(o, ext, v_sw);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let i = (o * oh + oy) * ow + ox;
-                    let v_drive =
-                        self.drive_voltage(&sub, o, z[i], v_sw, stats);
-                    let mut neuron =
-                        MultiMtjNeuron::new(self.cfg.mtj.n_mtj_per_neuron);
-                    let switched =
-                        neuron.write_analog(&self.model, v_drive, seed, i as u32);
-                    stats.mtj_writes += neuron.n() as u64;
-                    let res =
-                        reader.read_and_reset(&self.model, &mut neuron, seed, i as u32);
-                    stats.mtj_reads += neuron.n() as u64;
-                    stats.comparator_evals += neuron.n() as u64;
-                    stats.mtj_resets += res.reset_pulses as u64;
-                    let _ = switched;
-                    map.bits[i] = res.steps.iter().filter(|s| s.spike).count() >= k;
-                }
+            let sub = self.channel_subtractor(o, plane.ext, v_sw);
+            for p in 0..n_pos {
+                let i = o * n_pos + p;
+                let v_drive =
+                    self.drive_voltage(&sub, o, plane.z[i], v_sw, stats);
+                let mut neuron =
+                    MultiMtjNeuron::new(self.cfg.mtj.n_mtj_per_neuron);
+                let switched =
+                    neuron.write_analog(&self.model, v_drive, seed, i as u32);
+                stats.mtj_writes += neuron.n() as u64;
+                let res =
+                    reader.read_and_reset(&self.model, &mut neuron, seed, i as u32);
+                stats.mtj_reads += neuron.n() as u64;
+                stats.comparator_evals += neuron.n() as u64;
+                stats.mtj_resets += res.reset_pulses as u64;
+                let _ = switched;
+                sink.set_bit(i, res.steps.iter().filter(|s| s.spike).count() >= k);
             }
         }
     }
@@ -556,7 +716,7 @@ mod tests {
         let f = test_frame(32, 32, 3);
         let (a, st) = s.capture(&f, CaptureMode::Ideal);
         let (b, _) = s.capture(&f, CaptureMode::Ideal);
-        assert_eq!(a.bits, b.bits);
+        assert_eq!(a, b);
         assert_eq!(st.elements, 32 * 15 * 15);
         assert_eq!(st.integration_phases, 2);
         assert!(st.mtj_writes == 0, "ideal mode has no device writes");
@@ -578,14 +738,9 @@ mod tests {
         let (ideal, _) = s.capture(&f, CaptureMode::Ideal);
         let (noisy, st) = s.capture(&f, CaptureMode::CalibratedMtj);
         let (noisy2, _) = s.capture(&f, CaptureMode::CalibratedMtj);
-        assert_eq!(noisy.bits, noisy2.bits, "same seed ⇒ same draws");
-        let flips = ideal
-            .bits
-            .iter()
-            .zip(noisy.bits.iter())
-            .filter(|(a, b)| a != b)
-            .count();
-        let rate = flips as f64 / ideal.bits.len() as f64;
+        assert_eq!(noisy, noisy2, "same seed ⇒ same draws");
+        let (f10, f01) = ideal.flips(&noisy);
+        let rate = (f10 + f01) as f64 / ideal.len() as f64;
         assert!(rate < 0.02, "neuron error rate {rate} too high");
         assert_eq!(st.mtj_writes, (32 * 15 * 15 * 8) as u64);
     }
@@ -596,15 +751,15 @@ mod tests {
         // Pallas kernel uses.
         let s = sim();
         let f = test_frame(32, 32, 42);
-        let (z, ext, _) = s.analog_plane(&f);
+        let (ap, _) = s.analog_plane(&f);
         let (noisy, _) = s.capture(&f, CaptureMode::CalibratedMtj);
-        for i in (0..z.len()).step_by(97) {
-            let ideal = z[i] >= ext;
+        for i in (0..ap.z.len()).step_by(97) {
+            let ideal = ap.z[i] >= ap.ext;
             let p = if ideal { 0.924f32 } else { 0.062f32 };
             let count = (0..8)
                 .filter(|&m| rng::uniform(42, i as u32, m) < p)
                 .count();
-            assert_eq!(noisy.bits[i], count >= 4, "element {i}");
+            assert_eq!(noisy.get(i), count >= 4, "element {i}");
         }
     }
 
@@ -620,22 +775,22 @@ mod tests {
         // agreement well above chance.
         let s = sim();
         let f = test_frame(20, 20, 5);
-        let (z, ext, _) = s.analog_plane(&f);
+        let (ap, _) = s.analog_plane(&f);
         let (ideal, _) = s.capture(&f, CaptureMode::Ideal);
         let (phys, st) = s.capture(&f, CaptureMode::PhysicalMtj);
         let mut sep_total = 0usize;
         let mut sep_agree = 0usize;
         let mut all_agree = 0usize;
-        for i in 0..z.len() {
-            let agree = ideal.bits[i] == phys.bits[i];
+        for i in 0..ap.z.len() {
+            let agree = ideal.get(i) == phys.get(i);
             all_agree += agree as usize;
-            if (z[i] - ext).abs() > 0.5 {
+            if (ap.z[i] - ap.ext).abs() > 0.5 {
                 sep_total += 1;
                 sep_agree += agree as usize;
             }
         }
         let sep_rate = sep_agree as f64 / sep_total.max(1) as f64;
-        let all_rate = all_agree as f64 / z.len() as f64;
+        let all_rate = all_agree as f64 / ap.z.len() as f64;
         assert!(sep_total > 50, "test frame too degenerate");
         assert!(sep_rate > 0.99, "off-threshold agreement {sep_rate}");
         assert!(all_rate > 0.75, "overall agreement {all_rate}");
@@ -651,7 +806,7 @@ mod tests {
         f2.seq = 101;
         let (a, _) = s.capture(&f1, CaptureMode::CalibratedMtj);
         let (b, _) = s.capture(&f2, CaptureMode::CalibratedMtj);
-        assert_ne!(a.bits, b.bits);
+        assert_ne!(a.to_bools(), b.to_bools());
     }
 
     fn paper_op() -> OperatingPoint {
@@ -668,14 +823,10 @@ mod tests {
         let (stock, st_stock) = s.capture(&f, CaptureMode::CalibratedMtj);
         let (swept, st_swept) =
             s.capture_at(&f, &paper_op(), CaptureMode::CalibratedMtj);
-        let flips = stock
-            .bits
-            .iter()
-            .zip(swept.bits.iter())
-            .filter(|(a, b)| a != b)
-            .count();
+        let (f10, f01) = stock.flips(&swept);
+        let flips = f10 + f01;
         assert!(
-            flips as f64 / stock.bits.len() as f64 < 1e-3,
+            flips as f64 / stock.len() as f64 < 1e-3,
             "override path diverged from stock calibrated capture: {flips}"
         );
         assert_eq!(st_swept.mtj_writes, st_stock.mtj_writes);
@@ -690,7 +841,7 @@ mod tests {
         for mode in [CaptureMode::CalibratedMtj, CaptureMode::PhysicalMtj] {
             let (a, sa) = s.capture_at(&f, &op, mode);
             let (b, sb) = s.capture_at(&f, &op, mode);
-            assert_eq!(a.bits, b.bits, "{mode:?}");
+            assert_eq!(a, b, "{mode:?}");
             assert_eq!(sa, sb, "{mode:?}");
         }
     }
@@ -706,7 +857,7 @@ mod tests {
         let f = test_frame(20, 20, 5);
         let (serve, _) = s.capture(&f, CaptureMode::PhysicalMtj);
         let (swept, _) = s.capture_at(&f, &paper_op(), CaptureMode::PhysicalMtj);
-        assert_eq!(serve.bits, swept.bits);
+        assert_eq!(serve, swept);
     }
 
     #[test]
@@ -719,7 +870,7 @@ mod tests {
             ..paper_op()
         };
         let (map, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
-        assert!(map.bits.iter().all(|&b| !b));
+        assert_eq!(map.count_ones(), 0);
     }
 
     #[test]
@@ -731,7 +882,7 @@ mod tests {
             ..paper_op()
         };
         let (map, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
-        assert!(map.bits.iter().all(|&b| b));
+        assert_eq!(map.count_ones() as usize, map.len());
     }
 
     #[test]
@@ -742,20 +893,16 @@ mod tests {
             s.capture_at(&f, &paper_op(), CaptureMode::CalibratedMtj);
         let op = OperatingPoint { sigma_psw: 0.3, ..paper_op() };
         let (noisy, _) = s.capture_at(&f, &op, CaptureMode::CalibratedMtj);
-        assert_ne!(clean.bits, noisy.bits, "σ=0.3 must move some bits");
+        assert_ne!(clean, noisy, "σ=0.3 must move some bits");
         // Majority voting absorbs modest variability (paper Fig. 5 logic).
         let op_small = OperatingPoint { sigma_psw: 0.05, ..paper_op() };
         let (small, _) = s.capture_at(&f, &op_small, CaptureMode::CalibratedMtj);
-        let flips = clean
-            .bits
-            .iter()
-            .zip(small.bits.iter())
-            .filter(|(a, b)| a != b)
-            .count();
+        let (f10, f01) = clean.flips(&small);
+        let flips = f10 + f01;
         assert!(
-            (flips as f64) < 0.02 * clean.bits.len() as f64,
+            (flips as f64) < 0.02 * clean.len() as f64,
             "σ=0.05 flipped {flips} of {}",
-            clean.bits.len()
+            clean.len()
         );
     }
 
@@ -765,7 +912,7 @@ mod tests {
         let f = test_frame(32, 32, 4);
         let (a, _) = s.capture(&f, CaptureMode::Ideal);
         let (b, _) = s.capture_at(&f, &paper_op(), CaptureMode::Ideal);
-        assert_eq!(a.bits, b.bits);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -781,11 +928,62 @@ mod tests {
         let s = sim();
         let f = test_frame(32, 32, 9);
         let (map, st) = s.capture(&f, CaptureMode::CalibratedMtj);
-        assert_eq!(st.elements as usize, map.bits.len());
-        assert_eq!(
-            st.ones as usize,
-            map.bits.iter().filter(|&&b| b).count()
-        );
+        assert_eq!(st.elements as usize, map.len());
+        assert_eq!(st.ones, map.count_ones());
         assert!((st.sparsity() - map.sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn packed_capture_equals_bool_reference_all_modes() {
+        // The representation-equivalence pin: the packed sink and the
+        // pre-refactor bool sink must agree bit for bit (and stat for
+        // stat) in every capture mode, including at nonzero faults/σ.
+        let s = sim();
+        let f = test_frame(20, 20, 13);
+        for mode in [
+            CaptureMode::Ideal,
+            CaptureMode::CalibratedMtj,
+            CaptureMode::PhysicalMtj,
+        ] {
+            let (plane, sa) = s.capture(&f, mode);
+            let (bits, sb) = s.capture_ref(&f, mode);
+            assert_eq!(plane.to_bools(), bits, "capture {mode:?}");
+            assert_eq!(sa, sb, "capture stats {mode:?}");
+
+            let op = OperatingPoint {
+                sigma_psw: 0.15,
+                faults: crate::device::StuckFaults { stuck_ap: 1, stuck_p: 1 },
+                sigma_seed: 77,
+                ..paper_op()
+            };
+            let (plane, sa) = s.capture_at(&f, &op, mode);
+            let (bits, sb) = s.capture_at_ref(&f, &op, mode);
+            assert_eq!(plane.to_bools(), bits, "capture_at {mode:?}");
+            assert_eq!(sa, sb, "capture_at stats {mode:?}");
+        }
+    }
+
+    #[test]
+    fn binarize_at_composes_to_capture_at() {
+        // analog_plane + binarize_at (+ stat absorb) must be exactly
+        // capture_at — the decomposition the sweep engine exploits to
+        // reuse per-trial planes across cells.
+        let s = sim();
+        let f = test_frame(24, 24, 19);
+        let op = OperatingPoint { sigma_psw: 0.1, ..paper_op() };
+        for mode in [
+            CaptureMode::Ideal,
+            CaptureMode::CalibratedMtj,
+            CaptureMode::PhysicalMtj,
+        ] {
+            let (fused, sf) = s.capture_at(&f, &op, mode);
+            let (plane, astats) = s.analog_plane(&f);
+            let (oh, ow) = s.out_hw(f.height, f.width);
+            let (split, mut ss) =
+                s.binarize_at(&plane, oh, ow, f.seq, &op, mode);
+            ss.absorb(&astats);
+            assert_eq!(fused, split, "{mode:?}");
+            assert_eq!(sf, ss, "{mode:?} stats");
+        }
     }
 }

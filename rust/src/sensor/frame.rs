@@ -1,4 +1,18 @@
-//! Frame and activation-map containers for the sensor pipeline.
+//! Frame and activation-plane containers for the sensor pipeline.
+//!
+//! [`BitPlane`] is the canonical binary-activation type: CHW bits packed
+//! into `u64` words, carried unchanged from the pixel-array capture
+//! through the link codecs and the batcher to the XNOR classifier head.
+//! The packing helpers here ([`words_for`], [`pack_f32`], [`unpack_f32`])
+//! are the single shared definition used by the sensor, the sparse link
+//! codecs, the native backend, and the sweep scorer — no second copy.
+//!
+//! Layout invariants (everything downstream relies on these):
+//! * bit `i` of the plane (CHW flat index `i = (c·H + y)·W + x`) lives at
+//!   word `i / 64`, lane `i % 64`;
+//! * padding bits past `len()` in the last word are **zero** — so weight
+//!   rows padded with zeros XOR to nothing, `count_ones` is exact, and
+//!   word-level comparison/XOR scoring never sees garbage lanes.
 
 use anyhow::{bail, Result};
 
@@ -55,46 +69,193 @@ impl Frame {
     }
 }
 
-/// Binary activation map produced by the in-pixel layer: CHW bits.
-#[derive(Debug, Clone)]
-pub struct ActivationMap {
+/// `⌈bits / 64⌉`: `u64` words needed for a packed row of `bits` lanes.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// Pack `{0,1}` activations (as f32) into `u64` lanes, bit = 1 ⇔ +1.
+/// Padding bits stay zero, matching the zero padding in weight rows so
+/// the XOR contributes nothing there.  Compat shim for f32-shaped
+/// callers; the frame path carries [`BitPlane`] words and never packs.
+pub fn pack_f32(xs: &[f32]) -> Vec<u64> {
+    let mut out = vec![0u64; words_for(xs.len())];
+    for (i, &x) in xs.iter().enumerate() {
+        if x > 0.5 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// Widen `len` packed lanes back to dense `{0,1}` f32 — the inverse of
+/// [`pack_f32`], used by the widening shim that adapts f32-native
+/// backends (PJRT) to the packed entry point.
+pub fn unpack_f32(words: &[u64], len: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= len && words.len() >= words_for(len));
+    for (i, slot) in out.iter_mut().enumerate().take(len) {
+        *slot = ((words[i / 64] >> (i % 64)) & 1) as f32;
+    }
+}
+
+/// Binary activation plane produced by the in-pixel layer: CHW bits
+/// packed into `u64` words (see the module docs for the layout
+/// invariants).  This is the one representation carried from capture to
+/// link codec to backend dispatch to sweep scoring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitPlane {
     pub channels: usize,
     pub height: usize,
     pub width: usize,
-    pub bits: Vec<bool>,
     pub seq: u32,
+    len: usize,
+    words: Vec<u64>,
 }
 
-impl ActivationMap {
+impl BitPlane {
     pub fn new(channels: usize, height: usize, width: usize, seq: u32) -> Self {
-        Self {
-            channels,
-            height,
-            width,
-            bits: vec![false; channels * height * width],
-            seq,
+        let len = channels * height * width;
+        Self { channels, height, width, seq, len, words: vec![0u64; words_for(len)] }
+    }
+
+    /// Rebuild a plane from raw packed words (link decode, artifact
+    /// import).  Fails loudly on a word-count mismatch or nonzero
+    /// padding bits — accepting garbage lanes would silently corrupt
+    /// every popcount downstream.
+    pub fn from_words(
+        channels: usize,
+        height: usize,
+        width: usize,
+        words: Vec<u64>,
+        seq: u32,
+    ) -> Result<Self> {
+        let len = channels * height * width;
+        if words.len() != words_for(len) {
+            bail!(
+                "packed plane has {} words; {}x{}x{} bits need {}",
+                words.len(),
+                channels,
+                height,
+                width,
+                words_for(len)
+            );
+        }
+        let pad = len % 64;
+        if pad != 0 && words.last().is_some_and(|&w| w & !((1u64 << pad) - 1) != 0) {
+            bail!("packed plane has nonzero padding bits past element {len}");
+        }
+        Ok(Self { channels, height, width, seq, len, words })
+    }
+
+    /// Pack a dense bool plane (the pre-BitPlane representation).
+    pub fn from_bools(
+        channels: usize,
+        height: usize,
+        width: usize,
+        bits: &[bool],
+        seq: u32,
+    ) -> Result<Self> {
+        if bits.len() != channels * height * width {
+            bail!(
+                "bool plane length {} != {}x{}x{}",
+                bits.len(),
+                channels,
+                height,
+                width
+            );
+        }
+        let mut plane = Self::new(channels, height, width, seq);
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                plane.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        Ok(plane)
+    }
+
+    /// Total elements (`channels × height × width`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed words (`words_for(len())` of them, padding bits zero).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i % 64);
+        if b {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
         }
     }
 
-    #[inline]
-    pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
-        (c * self.height + y) * self.width + x
-    }
-
-    #[inline]
-    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
-        self.bits[self.idx(c, y, x)]
+    /// Set ones (popcount over the packed words; padding bits are zero
+    /// by invariant, so no per-element iteration is ever needed).
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| u64::from(w.count_ones())).sum()
     }
 
     /// Fraction of zeros (paper §3.2 reports ≥ 75 % for trained BNNs).
     pub fn sparsity(&self) -> f64 {
-        let ones = self.bits.iter().filter(|&&b| b).count();
-        1.0 - ones as f64 / self.bits.len() as f64
+        1.0 - self.count_ones() as f64 / self.len.max(1) as f64
     }
 
-    /// Flatten to f32 {0,1} in CHW order (backend input layout).
+    /// Visit the flat index of every set bit in ascending order
+    /// (trailing-zeros word scan — the link codecs build CSR/RLE from
+    /// this instead of testing each element).
+    pub fn for_each_one(&self, mut f: impl FnMut(usize)) {
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                f(wi * 64 + w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+    }
+
+    /// Directional disagreement vs this plane as the reference:
+    /// `(1→0 flips, 0→1 flips)` — set here but not in `other`, and set
+    /// in `other` but not here.  One XOR-style pass over the words; the
+    /// zero-padding invariant keeps the tail lanes silent.
+    pub fn flips(&self, other: &Self) -> (u64, u64) {
+        debug_assert_eq!(self.len, other.len);
+        let (mut f10, mut f01) = (0u64, 0u64);
+        for (&a, &b) in self.words.iter().zip(other.words.iter()) {
+            f10 += u64::from((a & !b).count_ones());
+            f01 += u64::from((!a & b).count_ones());
+        }
+        (f10, f01)
+    }
+
+    /// Widen to f32 {0,1} in CHW order (f32-shaped backend input).
     pub fn to_f32(&self) -> Vec<f32> {
-        self.bits.iter().map(|&b| b as u8 as f32).collect()
+        let mut out = vec![0.0f32; self.len];
+        unpack_f32(&self.words, self.len, &mut out);
+        out
+    }
+
+    /// Unpack to the dense bool representation (tests, references).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
     }
 }
 
@@ -117,10 +278,73 @@ mod tests {
     }
 
     #[test]
-    fn activation_sparsity() {
-        let mut a = ActivationMap::new(1, 2, 2, 0);
-        a.bits[0] = true;
-        assert_eq!(a.sparsity(), 0.75);
-        assert_eq!(a.to_f32(), vec![1.0, 0.0, 0.0, 0.0]);
+    fn words_for_rounds_up() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(7200), 113);
+    }
+
+    #[test]
+    fn pack_sets_expected_bits() {
+        let mut xs = vec![0.0f32; 70];
+        xs[0] = 1.0;
+        xs[63] = 1.0;
+        xs[64] = 1.0;
+        let packed = pack_f32(&xs);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed[0], (1u64 << 63) | 1);
+        assert_eq!(packed[1], 1);
+        let mut back = vec![0.0f32; 70];
+        unpack_f32(&packed, 70, &mut back);
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn plane_set_get_and_counts() {
+        let mut p = BitPlane::new(1, 2, 2, 0);
+        p.set(0, true);
+        assert!(p.get(0) && !p.get(1));
+        assert_eq!(p.count_ones(), 1);
+        assert_eq!(p.sparsity(), 0.75);
+        assert_eq!(p.to_f32(), vec![1.0, 0.0, 0.0, 0.0]);
+        p.set(0, false);
+        assert_eq!(p.count_ones(), 0);
+    }
+
+    #[test]
+    fn plane_bool_roundtrip_across_word_boundary() {
+        // 1×10×13 = 130 bits: spans three words with 62 padding lanes.
+        let bits: Vec<bool> = (0..130).map(|i| i % 7 == 0).collect();
+        let p = BitPlane::from_bools(1, 10, 13, &bits, 9).unwrap();
+        assert_eq!(p.to_bools(), bits);
+        assert_eq!(
+            p.count_ones() as usize,
+            bits.iter().filter(|&&b| b).count()
+        );
+        let mut seen = Vec::new();
+        p.for_each_one(|i| seen.push(i));
+        let want: Vec<usize> = (0..130).filter(|i| i % 7 == 0).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn from_words_rejects_bad_length_and_dirty_padding() {
+        assert!(BitPlane::from_words(1, 2, 2, vec![0, 0], 0).is_err());
+        // 4 bits in one word: any bit past lane 3 violates the invariant.
+        assert!(BitPlane::from_words(1, 2, 2, vec![1 << 4], 0).is_err());
+        let p = BitPlane::from_words(1, 2, 2, vec![0b1011], 0).unwrap();
+        assert_eq!(p.to_bools(), vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn flips_are_directional() {
+        let a = BitPlane::from_bools(1, 1, 4, &[true, true, false, false], 0)
+            .unwrap();
+        let b = BitPlane::from_bools(1, 1, 4, &[true, false, true, false], 0)
+            .unwrap();
+        assert_eq!(a.flips(&b), (1, 1));
+        assert_eq!(a.flips(&a), (0, 0));
     }
 }

@@ -1,8 +1,10 @@
 //! Sensor layer: the pixel array and its shutter controllers.
 //!
-//! * [`frame`] — frame / binary-activation containers
+//! * [`frame`] — frame container + the packed [`BitPlane`] activation
+//!   representation (and the shared `words_for`/`pack_f32` helpers)
 //! * [`weights`] — first-layer weights loaded from the AOT golden export
-//! * [`array`] — the in-pixel compute array (three fidelity modes)
+//! * [`array`] — the in-pixel compute array (three fidelity modes),
+//!   writing packed words directly
 //! * [`shutter`] — global-shutter timing vs rolling-shutter baseline,
 //!   motion-skew metrics
 //! * [`scene`] — synthetic scene generation (static + moving) for the
@@ -14,7 +16,10 @@ pub mod scene;
 pub mod shutter;
 pub mod weights;
 
-pub use array::{CaptureMode, CaptureStats, OperatingPoint, PixelArraySim};
-pub use frame::{ActivationMap, Frame};
+pub use array::{
+    AnalogPlane, BitSink, CaptureMode, CaptureStats, OperatingPoint,
+    PixelArraySim,
+};
+pub use frame::{pack_f32, unpack_f32, words_for, BitPlane, Frame};
 pub use shutter::{motion_skew_rms_px, FrameTiming, GlobalShutter, RollingShutter};
 pub use weights::FirstLayerWeights;

@@ -3,15 +3,32 @@
 //! Cells shard across a bounded-channel worker pool (the `stream.rs`
 //! threading idiom: std threads + `mpsc::sync_channel`, no external
 //! runtime).  Each worker pulls `(index, cell)` jobs, scores the cell
-//! sequentially over the campaign's trial frames, and sends the result
-//! back tagged with its index; the collector reassembles by index.
+//! sequentially over the campaign's trial planes, and sends the result
+//! back tagged with its index; the collector forwards each result to the
+//! caller's sink as it completes (streamed reporting) while reassembling
+//! the summary by index.
+//!
+//! **Per-trial plane reuse:** the analog half of capture (im2col MAC +
+//! tanh transfer curve + Hoyer extremum) depends only on the frame, never
+//! on the operating point — so it is computed **once per trial per
+//! campaign** ([`PixelArraySim::analog_plane`]) and every cell binarizes
+//! the shared plane ([`PixelArraySim::binarize_at`]).  At ImageNet
+//! geometry (224×224 → 394k activations) this removes the dominant
+//! per-cell cost, which is what makes Table 1-scale campaigns tractable.
+//!
+//! **Packed scoring:** trial references and swept captures are packed
+//! [`BitPlane`]s; ber/e10/e01 reduce to one XOR+popcount pass per frame
+//! ([`BitPlane::flips`]) and classification feeds the words zero-copy
+//! into the backend's packed entry point.
 //!
 //! **Determinism:** every stochastic draw inside a cell derives from
 //! counter-RNG coordinates `(campaign seed, trial, element, stream)` —
-//! see [`trial_seed`] and `PixelArraySim::capture_at` — and per-cell
+//! see [`trial_seed`] and `PixelArraySim::binarize_at` — and per-cell
 //! aggregation runs in fixed trial order.  Nothing observes thread
 //! identity, scheduling, or time, so the summary is bit-identical for
-//! any worker count (`tests/sweep.rs` pins this against a golden).
+//! any worker count (`tests/sweep.rs` pins this against a golden).  The
+//! sink's *completion order* is scheduling-dependent (it is progress
+//! reporting); the summary and saved JSON are not.
 //!
 //! All cells score the *same* frame set (the trial seed ignores the cell
 //! index): a paired design, so cross-cell differences reflect the
@@ -28,7 +45,8 @@ use crate::coordinator::stream::argmax;
 use crate::device::rng;
 use crate::energy::{frontend_ours, Geometry};
 use crate::sensor::{
-    scene::SceneGen, CaptureMode, FirstLayerWeights, Frame, PixelArraySim,
+    scene::SceneGen, AnalogPlane, BitPlane, CaptureMode, CaptureStats,
+    FirstLayerWeights, OperatingPoint, PixelArraySim,
 };
 use crate::sweep::grid::{SweepCell, SweepGrid};
 
@@ -77,13 +95,22 @@ pub fn trial_seed(seed: u32, trial: u32) -> u32 {
     rng::fmix32(seed ^ trial.wrapping_mul(0x9E37_79B9))
 }
 
-/// One precomputed trial: the frame plus its ideal-path reference.
-/// Built once per campaign — every cell scores the same trials (paired
-/// design), so the cell-independent work (scene synthesis, ideal
-/// capture, ideal classification) runs once instead of once per cell.
+/// One precomputed trial: the frame's analog plane plus its ideal-path
+/// reference.  Built once per campaign — every cell scores the same
+/// trials (paired design), so the cell-independent work (scene synthesis,
+/// the analog MAC/tanh plane, ideal capture, ideal classification) runs
+/// once instead of once per cell.  The frame itself is not retained: the
+/// plane is all any cell needs.
 struct Trial {
-    frame: Frame,
-    ideal_bits: Vec<bool>,
+    /// Frame sequence number (drives every per-frame stochastic draw).
+    seq: u32,
+    plane: AnalogPlane,
+    /// Analog-stage capture counters (integration/MAC/elements), absorbed
+    /// into every cell's device-stage stats so energy accounting matches
+    /// a fused `capture_at` exactly.
+    astats: CaptureStats,
+    ideal: BitPlane,
+    ideal_ones: u64,
     label_ideal: usize,
 }
 
@@ -94,25 +121,14 @@ struct CellCtx<'a> {
     trials: &'a [Trial],
     geom: Geometry,
     seed: u32,
-}
-
-fn classify(
-    backend: &NativeBackend,
-    acts: &mut [f32],
-    bits: &[bool],
-) -> Result<usize> {
-    for (a, &b) in acts.iter_mut().zip(bits) {
-        *a = b as u8 as f32;
-    }
-    let logits = backend.run_backend(acts, 1)?;
-    Ok(argmax(&logits))
+    oh: usize,
+    ow: usize,
 }
 
 /// Score one cell over the campaign's precomputed trials (sequential:
 /// the parallelism lives across cells).
 fn eval_cell(ctx: &CellCtx<'_>, cell: &SweepCell) -> Result<CellResult> {
     let elems = ctx.backend.act_elems();
-    let mut acts = vec![0.0f32; elems];
     let (mut flips10, mut flips01) = (0u64, 0u64);
     let (mut ones_ideal, mut elements) = (0u64, 0u64);
     let mut agree = 0u32;
@@ -124,20 +140,27 @@ fn eval_cell(ctx: &CellCtx<'_>, cell: &SweepCell) -> Result<CellResult> {
     op.sigma_seed = ctx.seed;
 
     for trial in ctx.trials {
-        let (swept, st) = ctx.sim.capture_at(&trial.frame, &op, cell.mode);
-        ensure!(
-            swept.bits.len() == elems,
-            "sweep frame maps to {} activations; backend expects {elems}",
-            swept.bits.len()
+        let (swept, mut st) = ctx.sim.binarize_at(
+            &trial.plane,
+            ctx.oh,
+            ctx.ow,
+            trial.seq,
+            &op,
+            cell.mode,
         );
-        for (&a, &b) in trial.ideal_bits.iter().zip(swept.bits.iter()) {
-            ones_ideal += u64::from(a);
-            flips10 += u64::from(a && !b);
-            flips01 += u64::from(!a && b);
-        }
+        st.absorb(&trial.astats);
+        ensure!(
+            swept.len() == elems,
+            "sweep frame maps to {} activations; backend expects {elems}",
+            swept.len()
+        );
+        let (f10, f01) = trial.ideal.flips(&swept);
+        flips10 += f10;
+        flips01 += f01;
+        ones_ideal += trial.ideal_ones;
         elements += elems as u64;
-        let label_swept = classify(ctx.backend, &mut acts, &swept.bits)?;
-        agree += u32::from(label_swept == trial.label_ideal);
+        let logits = ctx.backend.run_backend_packed(swept.words(), 1)?;
+        agree += u32::from(argmax(&logits) == trial.label_ideal);
         energy_sum += frontend_ours(&ctx.geom, &st).total_pj();
         sparsity_sum += swept.sparsity();
     }
@@ -159,7 +182,15 @@ fn eval_cell(ctx: &CellCtx<'_>, cell: &SweepCell) -> Result<CellResult> {
 
 /// Run the campaign described by `cfg`: expand the grid, shard the cells
 /// across a worker pool, and return per-cell aggregates in grid order.
-pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
+/// `on_cell` is the streaming report sink: it receives `(grid index,
+/// result)` for every cell **as it completes** (completion order is
+/// scheduling-dependent), so campaign-scale runs surface progress instead
+/// of collecting silently.  The returned summary is always in grid order
+/// and bit-identical for any thread count.
+pub fn run_sweep_with(
+    cfg: &SweepConfig,
+    mut on_cell: impl FnMut(usize, &CellResult),
+) -> Result<SweepSummary> {
     let grid = SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
     let cells = grid.cells().context("expanding sweep grid")?;
     ensure!(!cells.is_empty(), "sweep grid expands to zero cells");
@@ -177,7 +208,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
     };
     let threads = threads.clamp(1, cells.len());
 
-    // One shared sensor sim + backend: capture_at takes the operating
+    // One shared sensor sim + backend: binarize_at takes the operating
     // point explicitly, so per-cell HwConfig clones are unnecessary.
     // The backend runs batch-1 per frame, so its internal batch pool is
     // pinned to one worker — the sweep pool is the only parallelism.
@@ -203,23 +234,30 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
     );
     let geom =
         Geometry::from_cfg(&sim.cfg, cfg.sensor_height, cfg.sensor_width);
+    let (oh, ow) = sim.out_hw(cfg.sensor_height, cfg.sensor_width);
+    let elems = backend.act_elems();
+    let ideal_op = OperatingPoint::from_cfg(&sim.cfg.mtj);
 
     // Precompute the shared, cell-independent half of every trial once:
-    // frames, ideal-comparator bits, and ideal-path labels (every cell
-    // scores the same trials — the paired design).
-    let mut acts = vec![0.0f32; backend.act_elems()];
+    // analog planes, ideal-comparator bits (packed), and ideal-path
+    // labels (every cell scores the same trials — the paired design).
     let trials = (0..cfg.trials)
         .map(|t| -> Result<Trial> {
-            let frame = gen.textured(trial_seed(cfg.seed, t));
-            let (ideal, _) = sim.capture(&frame, CaptureMode::Ideal);
+            let seq = trial_seed(cfg.seed, t);
+            let frame = gen.textured(seq);
+            let (plane, astats) = sim.analog_plane(&frame);
+            let (ideal, _) =
+                sim.binarize_at(&plane, oh, ow, seq, &ideal_op, CaptureMode::Ideal);
             ensure!(
-                ideal.bits.len() == acts.len(),
+                ideal.len() == elems,
                 "sweep frame maps to {} activations; backend expects {}",
-                ideal.bits.len(),
-                acts.len()
+                ideal.len(),
+                elems
             );
-            let label_ideal = classify(&backend, &mut acts, &ideal.bits)?;
-            Ok(Trial { frame, ideal_bits: ideal.bits, label_ideal })
+            let logits = backend.run_backend_packed(ideal.words(), 1)?;
+            let label_ideal = argmax(&logits);
+            let ideal_ones = ideal.count_ones();
+            Ok(Trial { seq, plane, astats, ideal, ideal_ones, label_ideal })
         })
         .collect::<Result<Vec<_>>>()?;
 
@@ -229,6 +267,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
         trials: &trials,
         geom,
         seed: cfg.seed,
+        oh,
+        ow,
     };
 
     let t0 = Instant::now();
@@ -263,9 +303,15 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
                 .expect("sweep workers exited before taking all cells");
         }
         drop(job_tx);
+        // Stream each completed cell to the report sink immediately —
+        // campaign progress is visible while later cells still run —
+        // then slot it for the deterministic grid-order summary.
         for _ in 0..cells.len() {
             let (idx, out) =
                 res_rx.recv().expect("sweep worker pool hung up early");
+            if let Ok(ref cell_result) = out {
+                on_cell(idx, cell_result);
+            }
             slots[idx] = Some(out);
         }
     });
@@ -289,6 +335,11 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
         threads_used: threads,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
+}
+
+/// [`run_sweep_with`] without a report sink (collected results only).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepSummary> {
+    run_sweep_with(cfg, |_, _| {})
 }
 
 #[cfg(test)]
@@ -387,5 +438,22 @@ mod tests {
         let a = run_sweep(&quick_cfg(grid, 1)).unwrap();
         let b = run_sweep(&quick_cfg(grid, 5)).unwrap();
         assert_eq!(a.cells, b.cells);
+    }
+
+    #[test]
+    fn sink_sees_every_cell_exactly_once_and_matches_summary() {
+        let grid = "v=0.8,0.9;k=4,5";
+        let mut streamed: Vec<(usize, CellResult)> = Vec::new();
+        let s = run_sweep_with(&quick_cfg(grid, 3), |i, c| {
+            streamed.push((i, c.clone()));
+        })
+        .unwrap();
+        assert_eq!(streamed.len(), s.cells.len());
+        let mut seen = vec![0u32; s.cells.len()];
+        for (i, c) in &streamed {
+            assert_eq!(c, &s.cells[*i], "streamed cell {i} != collected");
+            seen[*i] += 1;
+        }
+        assert!(seen.iter().all(|&n| n == 1), "duplicate/missing: {seen:?}");
     }
 }

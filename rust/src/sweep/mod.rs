@@ -14,11 +14,12 @@
 //!
 //! * [`SweepGrid`] — parses a `v=0.7,0.8;k=4,5;...` spec and expands it
 //!   to Cartesian [`SweepCell`]s in a stable order;
-//! * [`run_sweep`] — shards cells across a bounded-channel worker pool
-//!   (see `engine` for the threading layout) and reassembles results by
-//!   cell index;
-//! * `reports::sweep_report` — renders the summary as an aligned table
-//!   and a deterministic JSON payload.
+//! * [`run_sweep`] / [`run_sweep_with`] — shard cells across a
+//!   bounded-channel worker pool (see `engine` for the threading layout),
+//!   stream each completed cell to the caller's report sink, and
+//!   reassemble the summary by cell index;
+//! * `reports::sweep_report` — renders cells as aligned table rows (live,
+//!   as they complete) and the summary as a deterministic JSON payload.
 //!
 //! **Determinism contract:** every stochastic draw derives from counter
 //! RNG coordinates `(campaign seed, trial, element, stream)`, and
@@ -30,5 +31,7 @@
 pub mod engine;
 pub mod grid;
 
-pub use engine::{run_sweep, trial_seed, CellResult, SweepSummary};
+pub use engine::{
+    run_sweep, run_sweep_with, trial_seed, CellResult, SweepSummary,
+};
 pub use grid::{SweepCell, SweepGrid};

@@ -96,8 +96,8 @@ fn native_checks(artifacts_dir: &Path) -> Result<Vec<Check>> {
         mtj_seed,
     )?;
     let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
-    let agree = map
-        .bits
+    let bools = map.to_bools();
+    let agree = bools
         .iter()
         .zip(want_front.iter())
         .filter(|(&b, &w)| (b as u8 as f32) == w)
@@ -114,10 +114,10 @@ fn native_checks(artifacts_dir: &Path) -> Result<Vec<Check>> {
     let (map_mtj, _) = sim.capture(&frame, CaptureMode::CalibratedMtj);
     let mut mismatched_draws = 0usize;
     let mut comparable = 0usize;
-    for i in 0..map.bits.len() {
-        if (map.bits[i] as u8 as f32) == want_front[i] {
+    for (i, &b) in bools.iter().enumerate() {
+        if (b as u8 as f32) == want_front[i] {
             comparable += 1;
-            if (map_mtj.bits[i] as u8 as f32) != want_mtj[i] {
+            if (map_mtj.get(i) as u8 as f32) != want_mtj[i] {
                 mismatched_draws += 1;
             }
         }

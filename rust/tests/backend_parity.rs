@@ -42,7 +42,13 @@ fn packed_equals_dense_across_seeds_and_shapes() {
                 let act = map.to_f32();
                 let a = packed.run_backend(&act, 1).unwrap();
                 let b = dense.run_backend(&act, 1).unwrap();
+                // The packed entry point (BitPlane words, no widening)
+                // must agree with both f32 entries bit for bit.
+                let c = packed.run_backend_packed(map.words(), 1).unwrap();
+                let d = dense.run_backend_packed(map.words(), 1).unwrap();
                 assert_eq!(a, b, "h{h} w{w} seed{seed} frame{f}");
+                assert_eq!(a, c, "packed entry h{h} w{w} seed{seed} frame{f}");
+                assert_eq!(a, d, "dense packed entry h{h} w{w} seed{seed}");
                 assert_eq!(a.len(), packed.num_classes());
                 assert!(a.iter().all(|x| x.is_finite()));
                 // Logits must actually discriminate (not all equal).
@@ -65,7 +71,7 @@ fn frontend_matches_sensor_sim_comparator() {
             let (map, _) = sim.capture(&frame, CaptureMode::Ideal);
             let via_backend = backend.run_frontend(&frame).unwrap();
             assert_eq!(
-                map.bits, via_backend.bits,
+                map, via_backend,
                 "seed {seed} frame {f}: frontend disagrees with sensor sim"
             );
         }

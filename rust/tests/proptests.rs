@@ -12,18 +12,61 @@ use pixelmtj::coordinator::Batcher;
 use pixelmtj::device::interp::MonotoneCubic;
 use pixelmtj::device::mtj::{MtjModel, MtjState};
 use pixelmtj::device::{faulty_neuron_error_rates, neuron_error_rates, StuckFaults};
-use pixelmtj::sensor::{ActivationMap, CaptureMode, FirstLayerWeights, Frame, PixelArraySim};
+use pixelmtj::sensor::{
+    BitPlane, CaptureMode, FirstLayerWeights, Frame, OperatingPoint,
+    PixelArraySim,
+};
 use pixelmtj::util::prop::{check, Gen};
 
-fn arbitrary_map(g: &mut Gen) -> ActivationMap {
+fn arbitrary_map(g: &mut Gen) -> BitPlane {
     let c = g.usize_in(1, 8);
     let h = g.usize_in(1, 20);
     let w = g.usize_in(1, 20);
     let p = g.f64_in(0.0, 1.0);
-    let mut m = ActivationMap::new(c, h, w, g.u32());
     let bools = g.vec_bool(c * h * w, p);
-    m.bits.copy_from_slice(&bools);
-    m
+    BitPlane::from_bools(c, h, w, &bools, g.u32()).unwrap()
+}
+
+#[test]
+fn prop_bitplane_pack_roundtrip_and_counts() {
+    // The packed representation is lossless vs the bool one, and every
+    // word-level aggregate (count_ones, sparsity, flips) matches a
+    // per-element reference computed from the bools.
+    check("bitplane pack roundtrip", 200, |g| {
+        let c = g.usize_in(1, 8);
+        let h = g.usize_in(1, 20);
+        let w = g.usize_in(1, 20);
+        let p_one = g.f64_in(0.0, 1.0);
+        let bools = g.vec_bool(c * h * w, p_one);
+        let m = BitPlane::from_bools(c, h, w, &bools, g.u32())
+            .map_err(|e| e.to_string())?;
+        if m.to_bools() != bools {
+            return Err("to_bools != source bools".into());
+        }
+        let ones = bools.iter().filter(|&&b| b).count() as u64;
+        if m.count_ones() != ones {
+            return Err(format!("count_ones {} != {ones}", m.count_ones()));
+        }
+        let want_sparsity = 1.0 - ones as f64 / bools.len() as f64;
+        if (m.sparsity() - want_sparsity).abs() > 1e-12 {
+            return Err("sparsity mismatch".into());
+        }
+        // Directional flips vs a second random plane, word-level XOR
+        // against the element-level reference.
+        let p_other = g.f64_in(0.0, 1.0);
+        let other_bools = g.vec_bool(c * h * w, p_other);
+        let other =
+            BitPlane::from_bools(c, h, w, &other_bools, 0).unwrap();
+        let (mut r10, mut r01) = (0u64, 0u64);
+        for (&a, &b) in bools.iter().zip(other_bools.iter()) {
+            r10 += u64::from(a && !b);
+            r01 += u64::from(!a && b);
+        }
+        if m.flips(&other) != (r10, r01) {
+            return Err("flips mismatch vs element reference".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]
@@ -33,10 +76,10 @@ fn prop_codec_roundtrip_all_codings() {
         for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
             let enc = encode(&m, coding);
             let dec = decode(&enc).map_err(|e| format!("{coding:?}: {e}"))?;
-            if dec.bits != m.bits {
+            if dec != m {
                 return Err(format!("{coding:?} roundtrip mismatch"));
             }
-            if enc.payload_bits == 0 && !m.bits.is_empty() {
+            if enc.payload_bits == 0 && !m.is_empty() {
                 return Err("zero payload for nonempty map".into());
             }
         }
@@ -49,12 +92,8 @@ fn prop_dense_payload_is_exactly_one_bit_per_element() {
     check("dense payload", 50, |g| {
         let m = arbitrary_map(g);
         let enc = encode(&m, SparseCoding::Dense);
-        if enc.payload_bits != m.bits.len() as u64 {
-            return Err(format!(
-                "{} != {}",
-                enc.payload_bits,
-                m.bits.len()
-            ));
+        if enc.payload_bits != m.len() as u64 {
+            return Err(format!("{} != {}", enc.payload_bits, m.len()));
         }
         Ok(())
     });
@@ -290,14 +329,68 @@ fn prop_capture_deterministic_and_stats_consistent() {
         }
         let (a, sa) = sim.capture(&frame, CaptureMode::CalibratedMtj);
         let (b, sb) = sim.capture(&frame, CaptureMode::CalibratedMtj);
-        if a.bits != b.bits || sa != sb {
+        if a != b || sa != sb {
             return Err("capture not deterministic".into());
         }
-        if sa.ones as usize != a.bits.iter().filter(|&&x| x).count() {
+        if sa.ones != a.count_ones() {
             return Err("stats.ones inconsistent".into());
         }
-        if sa.elements as usize != a.bits.len() {
+        if sa.elements as usize != a.len() {
             return Err("stats.elements inconsistent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_capture_equals_bool_reference() {
+    // THE representation-equivalence property (the refactor's contract):
+    // packed capture is bit-identical to the pre-refactor bool path in
+    // every capture mode, at arbitrary operating points including
+    // nonzero stuck-at faults and P_sw variability.
+    let sim = PixelArraySim::new(
+        HwConfig::default(),
+        FirstLayerWeights::synthetic(8, 3, 3, 2),
+    );
+    check("packed capture = bool reference", 10, |g| {
+        let h = g.usize_in(8, 18);
+        let w = g.usize_in(8, 18);
+        let mut frame = Frame::new(3, h, w, g.u32());
+        let data = g.vec_f64(3 * h * w, 0.0, 1.0);
+        for (d, s) in frame.data.iter_mut().zip(data.iter()) {
+            *d = *s as f32;
+        }
+        let n = g.usize_in(1, 8);
+        let k = g.usize_in(1, n);
+        let ap = g.usize_in(0, n);
+        let p = g.usize_in(0, n - ap);
+        let op = OperatingPoint {
+            v_write: g.f64_in(0.65, 0.95),
+            pulse_ns: 0.7,
+            n,
+            k,
+            faults: StuckFaults::new(ap, p),
+            sigma_psw: g.f64_in(0.0, 0.3),
+            sigma_seed: g.u32(),
+        };
+        for mode in [
+            CaptureMode::Ideal,
+            CaptureMode::CalibratedMtj,
+            CaptureMode::PhysicalMtj,
+        ] {
+            let (plane, sa) = sim.capture_at(&frame, &op, mode);
+            let (bits, sb) = sim.capture_at_ref(&frame, &op, mode);
+            if plane.to_bools() != bits {
+                return Err(format!("{mode:?}: packed bits != bool bits"));
+            }
+            if sa != sb {
+                return Err(format!("{mode:?}: stats diverged"));
+            }
+            let (dplane, da) = sim.capture(&frame, mode);
+            let (dbits, db) = sim.capture_ref(&frame, mode);
+            if dplane.to_bools() != dbits || da != db {
+                return Err(format!("{mode:?}: default capture diverged"));
+            }
         }
         Ok(())
     });

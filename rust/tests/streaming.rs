@@ -3,7 +3,7 @@
 //! open, and stream-vs-oneshot classification parity.  All on the native
 //! backend so nothing skips.
 
-use pixelmtj::config::PipelineConfig;
+use pixelmtj::config::{PipelineConfig, SparseCoding};
 use pixelmtj::sensor::{scene::SceneGen, Frame};
 
 mod common;
@@ -139,6 +139,33 @@ fn drain_keeps_stream_open_for_more_frames() {
     let seqs: Vec<u32> = second.iter().map(|r| r.seq).collect();
     assert_eq!(seqs, vec![8, 9, 10, 11]);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn link_verification_is_clean_across_codings() {
+    // The release-mode encode/decode parity check in the sensor workers
+    // (the promoted debug_assert): a healthy codec must never trip the
+    // mismatch counter, for every coding, while results stay identical
+    // across codings (the link is lossless by contract).
+    let mut labels_by_coding = Vec::new();
+    for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+        let cfg = PipelineConfig {
+            sparse_coding: coding,
+            ..PipelineConfig::default()
+        };
+        let pipeline = native_pipeline(cfg);
+        let report = pipeline.serve(textured_frames(12)).unwrap();
+        assert_eq!(report.results.len(), 12, "{coding:?}");
+        assert_eq!(
+            report.metrics.link_decode_mismatch.get(),
+            0,
+            "{coding:?}: link verification tripped on a healthy codec"
+        );
+        labels_by_coding
+            .push(report.results.iter().map(|r| r.label).collect::<Vec<_>>());
+    }
+    assert_eq!(labels_by_coding[0], labels_by_coding[1]);
+    assert_eq!(labels_by_coding[0], labels_by_coding[2]);
 }
 
 #[test]

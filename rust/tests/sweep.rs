@@ -20,7 +20,7 @@ use std::path::PathBuf;
 
 use pixelmtj::config::SweepConfig;
 use pixelmtj::reports::sweep_report;
-use pixelmtj::sweep::run_sweep;
+use pixelmtj::sweep::{run_sweep, run_sweep_with};
 use pixelmtj::util::json::Value;
 
 /// The golden campaign: the paper's three calibrated voltages at 700 ps
@@ -34,7 +34,7 @@ fn golden_cfg(threads: usize) -> SweepConfig {
         seed: 42,
         sensor_height: 24,
         sensor_width: 24,
-        out_dir: "reports".to_string(),
+        ..SweepConfig::default()
     }
 }
 
@@ -81,6 +81,32 @@ fn sweep_matches_committed_golden() {
          ({}); if the device/capture model changed intentionally, delete \
          the file and re-run to re-bless",
         path.display()
+    );
+}
+
+#[test]
+fn streamed_sink_matches_collected_summary_and_json() {
+    // The streamed report sink is progress plumbing only: every cell is
+    // delivered exactly once, each streamed result equals its slot in
+    // the collected grid-order summary, and the JSON payload is
+    // unchanged vs a sink-less run (the golden-test contract).
+    let mut streamed = Vec::new();
+    let with_sink = run_sweep_with(&golden_cfg(4), |idx, cell| {
+        streamed.push((idx, cell.clone()));
+    })
+    .unwrap();
+    let without_sink = run_sweep(&golden_cfg(2)).unwrap();
+    assert_eq!(streamed.len(), with_sink.cells.len());
+    let mut seen = vec![0u32; with_sink.cells.len()];
+    for (idx, cell) in &streamed {
+        assert_eq!(cell, &with_sink.cells[*idx], "cell {idx}");
+        seen[*idx] += 1;
+    }
+    assert!(seen.iter().all(|&n| n == 1), "delivery counts {seen:?}");
+    assert_eq!(
+        sweep_report::to_json(&with_sink).to_string_pretty(),
+        sweep_report::to_json(&without_sink).to_string_pretty(),
+        "sink must not perturb the deterministic JSON payload"
     );
 }
 
