@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy bench-backend bench-stream bench-sweep bench-pack sweep artifacts
+.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -18,7 +18,12 @@ fmt:
 clippy:
 	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
 
-check: fmt clippy build test
+# Public-API docs with warnings (broken intra-doc links, missing code
+# fences) promoted to errors — the facade's doc surface is part of CI.
+doc:
+	cd $(RUST_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+check: fmt clippy build test doc
 
 # Perf trajectory: native XNOR vs dense reference → rust/BENCH_backend.json
 bench-backend:

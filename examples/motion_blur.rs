@@ -10,24 +10,23 @@
 //! make artifacts && cargo run --release --example motion_blur
 //! ```
 
-use pixelmtj::config::HwConfig;
 use pixelmtj::sensor::{
     motion_skew_rms_px,
     scene::{row_centroid_skew, SceneGen},
-    CaptureMode, FirstLayerWeights, GlobalShutter, PixelArraySim,
-    RollingShutter,
+    CaptureMode, GlobalShutter, RollingShutter,
 };
+use pixelmtj::system::System;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::Path::new("artifacts");
-    let hw = HwConfig::load_or_default(artifacts);
-    let weights = FirstLayerWeights::from_golden(artifacts.join("golden.json"))
-        .unwrap_or_else(|_| FirstLayerWeights::synthetic(32, 3, 3, 1));
-    let sim = PixelArraySim::new(hw.clone(), weights);
+    // The facade supplies hw config (hwcfg.json layer when present),
+    // weights, and the sensor sim — the shutter models share its hw block.
+    let mut sys = System::builder().artifacts_dir("artifacts").build();
+    let hw = sys.spec().hw.clone();
+    let sim = sys.sim()?;
     let (h, w) = (32usize, 32usize);
 
     let gs = GlobalShutter::new(hw.clone());
-    let rs = RollingShutter::new(hw.clone());
+    let rs = RollingShutter::new(hw);
     let row_time_us = rs.row_skew_us(h, w) / sim.out_hw(h, w).0 as f64;
 
     println!(

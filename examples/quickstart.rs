@@ -1,25 +1,25 @@
 //! Quickstart: capture one synthetic scene with the in-pixel sensor
 //! simulator and classify it through the inference backend — the minimal
-//! end-to-end path.  Runs anywhere: with AOT artifacts (and the `pjrt`
-//! feature) it uses the exported network, otherwise the native XNOR
-//! backend with synthetic weights.
+//! end-to-end path, built entirely through the [`System`] facade.  Runs
+//! anywhere: with AOT artifacts (and the `pjrt` feature) it uses the
+//! exported network, otherwise the native XNOR backend with synthetic
+//! weights.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use pixelmtj::backend::{self, InferenceBackend as _};
-use pixelmtj::config::HwConfig;
-use pixelmtj::sensor::{scene::SceneGen, CaptureMode, PixelArraySim};
+use pixelmtj::backend::InferenceBackend as _;
+use pixelmtj::sensor::{scene::SceneGen, CaptureMode};
+use pixelmtj::system::System;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::Path::new("artifacts");
-
-    // 1. Load the hardware config + first-layer weights (the trained
-    //    golden export when present, deterministic synthetic otherwise).
-    let hw = HwConfig::load_or_default(artifacts);
-    let weights = backend::load_weights(artifacts, &hw)?;
-    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    // 1. One front door: hardware config (artifacts/hwcfg.json layer when
+    //    present), first-layer weights (trained golden export or
+    //    deterministic synthetic), and the sensor simulator all come from
+    //    the builder — no hand-assembly.
+    let mut sys = System::builder().artifacts_dir("artifacts").build();
+    let sim = sys.sim()?;
 
     // 2. Generate a synthetic scene and run the in-pixel first layer with
     //    stochastic 8-MTJ majority neurons.
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     // 3. Classify through the best-available backend (no Python).  The
     //    packed BitPlane words feed the backend directly — the native
     //    engine's XNOR kernel consumes them with no widening or re-pack.
-    let be = backend::auto(artifacts, &hw, 32, 32, 1, weights)?;
+    let be = sys.auto_backend()?;
     let logits = be.run_backend_packed(activations.words(), 1)?;
     let label = logits
         .iter()

@@ -3,7 +3,7 @@
 //! stress (50 %).  The encode path sits on the sensor workers' critical
 //! path, so ns/frame here bounds pipeline throughput.
 
-use pixelmtj::config::SparseCoding;
+use pixelmtj::config::{KeyedEnum, SparseCoding};
 use pixelmtj::coordinator::sparse::{decode, encode};
 use pixelmtj::device::rng::CounterRng;
 use pixelmtj::sensor::BitPlane;

@@ -1,0 +1,66 @@
+//! Pixel + subtractor circuit constants (paper §2.2, GF 22 nm FDX).
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// Pixel + subtractor circuit constants (paper §2.2, GF 22 nm FDX).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitConfig {
+    pub vdd: f64,
+    /// Transfer-curve compression factor (Fig. 4a fit).
+    pub nl_alpha: f64,
+    /// Transfer-curve saturation knee (normalized units).
+    pub nl_sat: f64,
+    /// Normalized W·I range mapped to the rails ([-3, 3] in the paper).
+    pub mac_range: f64,
+    /// kTC-equivalent analog noise σ (normalized units).
+    pub analog_noise_sigma: f64,
+    /// Hold capacitor (fF).
+    pub c_hold_ff: f64,
+    /// Sampling-switch on-resistance (Ω).
+    pub switch_r_on_ohm: f64,
+    /// Comparator threshold as a fraction of the P↔AP divider swing.
+    pub comparator_vref_frac: f64,
+    /// Photodiode integration time per phase (µs); two phases per frame.
+    pub integration_time_us: f64,
+    /// Gain of the drive stage between subtractor and VC-MTJs (physical
+    /// capture mode).  Compresses the device's ~100 mV switching-
+    /// transition band (Fig. 2) so near-threshold neurons land at the
+    /// calibrated operating points — see DESIGN.md §Findings.
+    pub drive_gain: f64,
+}
+
+impl Default for CircuitConfig {
+    fn default() -> Self {
+        Self {
+            vdd: 0.8,
+            nl_alpha: 0.35,
+            nl_sat: 3.0,
+            mac_range: 3.0,
+            analog_noise_sigma: 0.01,
+            c_hold_ff: 20.0,
+            switch_r_on_ohm: 2_000.0,
+            comparator_vref_frac: 0.5,
+            integration_time_us: 5.0,
+            drive_gain: 6.0,
+        }
+    }
+}
+
+impl CircuitConfig {
+    pub(crate) fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            vdd: v.get("vdd")?.as_f64()?,
+            nl_alpha: v.get("nl_alpha")?.as_f64()?,
+            nl_sat: v.get("nl_sat")?.as_f64()?,
+            mac_range: v.get("mac_range")?.as_f64()?,
+            analog_noise_sigma: v.get("analog_noise_sigma")?.as_f64()?,
+            c_hold_ff: v.get("c_hold_ff")?.as_f64()?,
+            switch_r_on_ohm: v.get("switch_r_on_ohm")?.as_f64()?,
+            comparator_vref_frac: v.get("comparator_vref_frac")?.as_f64()?,
+            integration_time_us: v.get("integration_time_us")?.as_f64()?,
+            drive_gain: v.get("drive_gain")?.as_f64()?,
+        })
+    }
+}

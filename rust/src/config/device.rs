@@ -1,0 +1,86 @@
+//! VC-MTJ device constants (paper §2.1, Figs. 1-2).
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// VC-MTJ device constants (paper §2.1, Figs. 1-2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MtjConfig {
+    /// Parallel-state resistance of the 70 nm pillar (Ω).
+    pub r_p_ohm: f64,
+    /// TMR = (R_AP − R_P)/R_P at near-zero bias; paper: > 150 %.
+    pub tmr_zero_bias: f64,
+    /// Voltage at which the TMR droops to half its zero-bias value (V).
+    pub tmr_half_voltage: f64,
+    /// Calibration voltages for AP→P switching probability (V).
+    pub sw_calib_voltages: Vec<f64>,
+    /// Measured AP→P switching probabilities at 700 ps (paper Fig. 2b).
+    pub sw_calib_prob_ap_to_p: Vec<f64>,
+    /// Full precession period (ns); switching lobes peak at odd half-periods.
+    pub precession_period_ns: f64,
+    /// Voltage of 50 % switching at the optimal pulse width (V).
+    pub v_c50: f64,
+    /// Width of the sigmoidal P_sw(V) ramp (V).
+    pub v_sigma: f64,
+    /// Reset (P→AP) pulse amplitude (V) — paper: 0.9 V.
+    pub reset_voltage: f64,
+    /// Reset pulse width (ns) — paper: 500 ps.
+    pub reset_pulse_ns: f64,
+    /// Write pulse width (ns) — paper: 700 ps.
+    pub write_pulse_ns: f64,
+    /// Read voltage (V), opposite polarity ⇒ disturb-free (VCMA).
+    pub read_voltage: f64,
+    /// Read pulse width (ns).
+    pub read_pulse_ns: f64,
+    /// Devices per neuron (paper: 8).
+    pub n_mtj_per_neuron: usize,
+    /// Majority threshold: ≥ k of n switched ⇒ activation 1 (paper: 4).
+    pub majority_k: usize,
+}
+
+impl Default for MtjConfig {
+    fn default() -> Self {
+        Self {
+            r_p_ohm: 10_000.0,
+            tmr_zero_bias: 1.55,
+            tmr_half_voltage: 0.55,
+            sw_calib_voltages: vec![0.70, 0.80, 0.90],
+            sw_calib_prob_ap_to_p: vec![0.062, 0.924, 0.9717],
+            precession_period_ns: 1.4,
+            v_c50: 0.762,
+            v_sigma: 0.040,
+            reset_voltage: 0.9,
+            reset_pulse_ns: 0.5,
+            write_pulse_ns: 0.7,
+            read_voltage: 0.10,
+            read_pulse_ns: 0.5,
+            n_mtj_per_neuron: 8,
+            majority_k: 4,
+        }
+    }
+}
+
+impl MtjConfig {
+    pub(crate) fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            r_p_ohm: v.get("r_p_ohm")?.as_f64()?,
+            tmr_zero_bias: v.get("tmr_zero_bias")?.as_f64()?,
+            tmr_half_voltage: v.get("tmr_half_voltage")?.as_f64()?,
+            sw_calib_voltages: v.get("sw_calib_voltages")?.as_f64_vec()?,
+            sw_calib_prob_ap_to_p: v
+                .get("sw_calib_prob_ap_to_p")?
+                .as_f64_vec()?,
+            precession_period_ns: v.get("precession_period_ns")?.as_f64()?,
+            v_c50: v.get("v_c50")?.as_f64()?,
+            v_sigma: v.get("v_sigma")?.as_f64()?,
+            reset_voltage: v.get("reset_voltage")?.as_f64()?,
+            reset_pulse_ns: v.get("reset_pulse_ns")?.as_f64()?,
+            write_pulse_ns: v.get("write_pulse_ns")?.as_f64()?,
+            read_voltage: v.get("read_voltage")?.as_f64()?,
+            read_pulse_ns: v.get("read_pulse_ns")?.as_f64()?,
+            n_mtj_per_neuron: v.get("n_mtj_per_neuron")?.as_usize()?,
+            majority_k: v.get("majority_k")?.as_usize()?,
+        })
+    }
+}

@@ -1,0 +1,229 @@
+//! [`KeyedEnum`]: the one string↔enum mechanism for every keyed
+//! configuration value in the stack.
+//!
+//! Before this module each keyed enum ([`BackendKind`], [`GeometryPreset`],
+//! [`SparseCoding`], [`Workload`], `sensor::CaptureMode`, and the CLI's
+//! subcommand set) carried its own copy-pasted `parse`/`name` pair, each
+//! with a slightly different error phrasing.  They now share a single
+//! implementation: an enum declares its variant table (`VARIANTS`) and the
+//! noun used in error messages (`WHAT`); parsing, naming, the `a|b|c`
+//! value hint for usage text, and the rejection message all derive from
+//! that table.  The CLI layer, the JSON config loaders, the env-var
+//! layer, and the sweep-grid parser therefore accept exactly the same
+//! spellings and reject unknown values with exactly the same message.
+
+use anyhow::Result;
+
+/// A config enum keyed by a canonical lowercase string.
+///
+/// Implementors provide only [`KeyedEnum::WHAT`] and
+/// [`KeyedEnum::VARIANTS`]; `parse`, `name`, and the usage-text helpers
+/// are shared.  The trait must be in scope to call `parse`/`name` — the
+/// per-enum inherent copies are gone.
+pub trait KeyedEnum: Copy + PartialEq + Sized + 'static {
+    /// Noun for error messages ("backend", "geometry", ...).
+    const WHAT: &'static str;
+
+    /// Canonical `(key, variant)` table, in display order.
+    const VARIANTS: &'static [(&'static str, Self)];
+
+    /// Parse the canonical spelling; unknown values are rejected with the
+    /// shared `unknown <WHAT> '<value>' (expected 'a', 'b' or 'c')`
+    /// message used by the CLI, env, JSON, and sweep-grid layers alike.
+    fn parse(s: &str) -> Result<Self> {
+        Self::VARIANTS
+            .iter()
+            .find(|(k, _)| *k == s)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown {} '{s}' (expected {})",
+                    Self::WHAT,
+                    expected_list(Self::VARIANTS.iter().map(|(k, _)| *k))
+                )
+            })
+    }
+
+    /// The canonical spelling of this variant.
+    fn name(&self) -> &'static str {
+        Self::VARIANTS
+            .iter()
+            .find(|(_, v)| v == self)
+            .map(|(k, _)| *k)
+            .expect("KeyedEnum variant missing from VARIANTS table")
+    }
+
+    /// `a|b|c` — the value hint used in generated usage text.
+    fn keys_pipe() -> String {
+        Self::VARIANTS
+            .iter()
+            .map(|(k, _)| *k)
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// `'a', 'b' or 'c'` — the expected-values clause of the rejection
+/// message (single-variant tables degrade to `'a'`).
+fn expected_list<'a>(keys: impl Iterator<Item = &'a str>) -> String {
+    let keys: Vec<_> = keys.map(|k| format!("'{k}'")).collect();
+    match keys.len() {
+        0 => String::new(),
+        1 => keys[0].clone(),
+        n => format!("{} or {}", keys[..n - 1].join(", "), keys[n - 1]),
+    }
+}
+
+/// Which inference backend serves the classifier head (see
+/// `crate::backend`): the native bit-packed XNOR engine (default, no
+/// artifacts or XLA needed) or the PJRT runtime over the AOT artifacts
+/// (requires the `pjrt` cargo feature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl KeyedEnum for BackendKind {
+    const WHAT: &'static str = "backend";
+    const VARIANTS: &'static [(&'static str, Self)] =
+        &[("native", Self::Native), ("pjrt", Self::Pjrt)];
+}
+
+/// Sensor-geometry presets for the paper's two workloads: the CIFAR-scale
+/// 32×32 development geometry and the ImageNet/VGG16 224×224 first-layer
+/// geometry of Table 1 / Fig. 9 (`energy::Geometry::imagenet_vgg16`).
+/// Threaded through `SweepConfig`/`PipelineConfig` and the `sweep`/`serve`
+/// CLIs (`--geometry`), so campaigns and streaming can both run the
+/// paper's full-scale workload without hand-spelling the dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeometryPreset {
+    /// 32×32 (CIFAR-scale; the default development geometry).
+    Cifar,
+    /// 224×224 (ImageNet VGG16 head — paper Table 1 / Fig. 9 / Eq. 3).
+    ImagenetVgg16,
+}
+
+impl KeyedEnum for GeometryPreset {
+    const WHAT: &'static str = "geometry";
+    const VARIANTS: &'static [(&'static str, Self)] =
+        &[("cifar", Self::Cifar), ("imagenet", Self::ImagenetVgg16)];
+}
+
+impl GeometryPreset {
+    /// Sensor `(height, width)` for the preset.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Self::Cifar => (32, 32),
+            Self::ImagenetVgg16 => (224, 224),
+        }
+    }
+}
+
+/// Sensor→backend link encoding (paper §3.2 discusses CSR-style schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseCoding {
+    /// Raw bit-packed binary activations (1 bit per value).
+    Dense,
+    /// Compressed sparse row over the channel-major bitmap.
+    Csr,
+    /// Run-length encoding of the zero runs.
+    Rle,
+}
+
+impl KeyedEnum for SparseCoding {
+    const WHAT: &'static str = "sparse coding";
+    const VARIANTS: &'static [(&'static str, Self)] =
+        &[("dense", Self::Dense), ("csr", Self::Csr), ("rle", Self::Rle)];
+}
+
+/// Synthetic streaming workload shape (see `coordinator::stream` for the
+/// generators).  The paper's global-shutter burst read motivates serving
+/// continuous frame streams, so scenario diversity lives here rather than
+/// in ad-hoc bench loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Textured scenes arriving as fast as backpressure allows.
+    Steady,
+    /// Bursts of frames separated by idle gaps (event-driven capture).
+    Bursty,
+    /// A bright bar sweeping across the array at varying speeds — the
+    /// motion-blur scene family from the shutter-skew experiment.
+    MotionSweep,
+}
+
+impl KeyedEnum for Workload {
+    const WHAT: &'static str = "workload";
+    const VARIANTS: &'static [(&'static str, Self)] = &[
+        ("steady", Self::Steady),
+        ("bursty", Self::Bursty),
+        ("motion", Self::MotionSweep),
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_coding_parse_and_name() {
+        for s in ["dense", "csr", "rle"] {
+            assert_eq!(SparseCoding::parse(s).unwrap().name(), s);
+        }
+        assert!(SparseCoding::parse("zip").is_err());
+    }
+
+    #[test]
+    fn workload_parse_and_name() {
+        for s in ["steady", "bursty", "motion"] {
+            assert_eq!(Workload::parse(s).unwrap().name(), s);
+        }
+        assert!(Workload::parse("spiky").is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse_and_name() {
+        for s in ["native", "pjrt"] {
+            assert_eq!(BackendKind::parse(s).unwrap().name(), s);
+        }
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn geometry_preset_parse_name_and_dims() {
+        for (s, dims) in [("cifar", (32, 32)), ("imagenet", (224, 224))] {
+            let g = GeometryPreset::parse(s).unwrap();
+            assert_eq!(g.name(), s);
+            assert_eq!(g.dims(), dims);
+        }
+        assert!(GeometryPreset::parse("cifar100").is_err());
+    }
+
+    #[test]
+    fn rejection_message_is_the_shared_shape() {
+        let err = format!("{}", BackendKind::parse("tpu").unwrap_err());
+        assert_eq!(
+            err,
+            "unknown backend 'tpu' (expected 'native' or 'pjrt')"
+        );
+        let err = format!("{}", Workload::parse("spiky").unwrap_err());
+        assert_eq!(
+            err,
+            "unknown workload 'spiky' (expected 'steady', 'bursty' or \
+             'motion')"
+        );
+        let err = format!("{}", SparseCoding::parse("zip").unwrap_err());
+        assert_eq!(
+            err,
+            "unknown sparse coding 'zip' (expected 'dense', 'csr' or 'rle')"
+        );
+    }
+
+    #[test]
+    fn keys_pipe_matches_usage_hints() {
+        assert_eq!(SparseCoding::keys_pipe(), "dense|csr|rle");
+        assert_eq!(GeometryPreset::keys_pipe(), "cifar|imagenet");
+        assert_eq!(BackendKind::keys_pipe(), "native|pjrt");
+        assert_eq!(Workload::keys_pipe(), "steady|bursty|motion");
+    }
+}

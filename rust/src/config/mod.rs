@@ -1,202 +1,50 @@
 //! Typed configuration for the whole stack.
 //!
-//! [`HwConfig`] mirrors `python/compile/hwcfg.py` field-for-field and is
-//! normally deserialized from `artifacts/hwcfg.json` (written by
-//! `make artifacts`), guaranteeing that the rust circuit simulator and the
-//! AOT-compiled model agree on every device/circuit constant.  The
-//! `Default` impls duplicate the same values so unit tests run without
-//! artifacts; `tests/golden.rs` asserts the JSON and the defaults match.
+//! The module tree mirrors the paper's tri-design premise — device,
+//! circuit, and algorithm parameters are co-configured as one coherent
+//! operating point — and feeds the layered resolver behind
+//! [`crate::system::SystemSpec`]:
 //!
-//! [`PipelineConfig`] is the L3-only runtime configuration (queue depths,
-//! batching policy, sensor geometry), loaded from a JSON file (the offline
-//! registry has no toml crate; see rust/src/util/json.rs).
+//! * [`device`] / [`circuit`] / [`network`] — the [`HwConfig`] block,
+//!   mirroring `python/compile/hwcfg.py` field-for-field and normally
+//!   deserialized from `artifacts/hwcfg.json` (written by
+//!   `make artifacts`), guaranteeing that the rust circuit simulator and
+//!   the AOT-compiled model agree on every device/circuit constant.  The
+//!   `Default` impls duplicate the same values so unit tests run without
+//!   artifacts; `tests/golden.rs` asserts the JSON and the defaults match.
+//! * [`pipeline`] — [`PipelineConfig`], the L3-only runtime configuration
+//!   (queue depths, batching policy, sensor geometry), loaded from a JSON
+//!   file (the offline registry has no toml crate; see
+//!   rust/src/util/json.rs).
+//! * [`sweep`] — [`SweepConfig`], the Monte-Carlo campaign profile.
+//! * [`keyed`] — the [`KeyedEnum`] trait: one string↔enum mechanism for
+//!   every keyed value (backend, geometry, coding, workload, capture
+//!   mode, subcommand), shared by the CLI, env, and JSON layers.
+//! * [`resolve`] — the resolver vocabulary: [`Provenance`], the [`Cmd`]
+//!   subcommand set, and the [`EnvSource`] snapshot of `PIXELMTJ_*`.
+
+pub mod circuit;
+pub mod device;
+pub mod keyed;
+pub mod network;
+pub mod pipeline;
+pub mod resolve;
+pub mod sweep;
+
+pub use circuit::CircuitConfig;
+pub use device::MtjConfig;
+pub use keyed::{
+    BackendKind, GeometryPreset, KeyedEnum, SparseCoding, Workload,
+};
+pub use network::NetworkConfig;
+pub use pipeline::PipelineConfig;
+pub use resolve::{env_key, Cmd, EnvSource, Provenance};
+pub use sweep::SweepConfig;
 
 use anyhow::{Context, Result};
 use std::path::Path;
 
 use crate::util::json::Value;
-
-/// VC-MTJ device constants (paper §2.1, Figs. 1-2).
-#[derive(Debug, Clone, PartialEq)]
-pub struct MtjConfig {
-    /// Parallel-state resistance of the 70 nm pillar (Ω).
-    pub r_p_ohm: f64,
-    /// TMR = (R_AP − R_P)/R_P at near-zero bias; paper: > 150 %.
-    pub tmr_zero_bias: f64,
-    /// Voltage at which the TMR droops to half its zero-bias value (V).
-    pub tmr_half_voltage: f64,
-    /// Calibration voltages for AP→P switching probability (V).
-    pub sw_calib_voltages: Vec<f64>,
-    /// Measured AP→P switching probabilities at 700 ps (paper Fig. 2b).
-    pub sw_calib_prob_ap_to_p: Vec<f64>,
-    /// Full precession period (ns); switching lobes peak at odd half-periods.
-    pub precession_period_ns: f64,
-    /// Voltage of 50 % switching at the optimal pulse width (V).
-    pub v_c50: f64,
-    /// Width of the sigmoidal P_sw(V) ramp (V).
-    pub v_sigma: f64,
-    /// Reset (P→AP) pulse amplitude (V) — paper: 0.9 V.
-    pub reset_voltage: f64,
-    /// Reset pulse width (ns) — paper: 500 ps.
-    pub reset_pulse_ns: f64,
-    /// Write pulse width (ns) — paper: 700 ps.
-    pub write_pulse_ns: f64,
-    /// Read voltage (V), opposite polarity ⇒ disturb-free (VCMA).
-    pub read_voltage: f64,
-    /// Read pulse width (ns).
-    pub read_pulse_ns: f64,
-    /// Devices per neuron (paper: 8).
-    pub n_mtj_per_neuron: usize,
-    /// Majority threshold: ≥ k of n switched ⇒ activation 1 (paper: 4).
-    pub majority_k: usize,
-}
-
-impl Default for MtjConfig {
-    fn default() -> Self {
-        Self {
-            r_p_ohm: 10_000.0,
-            tmr_zero_bias: 1.55,
-            tmr_half_voltage: 0.55,
-            sw_calib_voltages: vec![0.70, 0.80, 0.90],
-            sw_calib_prob_ap_to_p: vec![0.062, 0.924, 0.9717],
-            precession_period_ns: 1.4,
-            v_c50: 0.762,
-            v_sigma: 0.040,
-            reset_voltage: 0.9,
-            reset_pulse_ns: 0.5,
-            write_pulse_ns: 0.7,
-            read_voltage: 0.10,
-            read_pulse_ns: 0.5,
-            n_mtj_per_neuron: 8,
-            majority_k: 4,
-        }
-    }
-}
-
-impl MtjConfig {
-    fn from_json(v: &Value) -> Result<Self> {
-        Ok(Self {
-            r_p_ohm: v.get("r_p_ohm")?.as_f64()?,
-            tmr_zero_bias: v.get("tmr_zero_bias")?.as_f64()?,
-            tmr_half_voltage: v.get("tmr_half_voltage")?.as_f64()?,
-            sw_calib_voltages: v.get("sw_calib_voltages")?.as_f64_vec()?,
-            sw_calib_prob_ap_to_p: v
-                .get("sw_calib_prob_ap_to_p")?
-                .as_f64_vec()?,
-            precession_period_ns: v.get("precession_period_ns")?.as_f64()?,
-            v_c50: v.get("v_c50")?.as_f64()?,
-            v_sigma: v.get("v_sigma")?.as_f64()?,
-            reset_voltage: v.get("reset_voltage")?.as_f64()?,
-            reset_pulse_ns: v.get("reset_pulse_ns")?.as_f64()?,
-            write_pulse_ns: v.get("write_pulse_ns")?.as_f64()?,
-            read_voltage: v.get("read_voltage")?.as_f64()?,
-            read_pulse_ns: v.get("read_pulse_ns")?.as_f64()?,
-            n_mtj_per_neuron: v.get("n_mtj_per_neuron")?.as_usize()?,
-            majority_k: v.get("majority_k")?.as_usize()?,
-        })
-    }
-}
-
-/// Pixel + subtractor circuit constants (paper §2.2, GF 22 nm FDX).
-#[derive(Debug, Clone, PartialEq)]
-pub struct CircuitConfig {
-    pub vdd: f64,
-    /// Transfer-curve compression factor (Fig. 4a fit).
-    pub nl_alpha: f64,
-    /// Transfer-curve saturation knee (normalized units).
-    pub nl_sat: f64,
-    /// Normalized W·I range mapped to the rails ([-3, 3] in the paper).
-    pub mac_range: f64,
-    /// kTC-equivalent analog noise σ (normalized units).
-    pub analog_noise_sigma: f64,
-    /// Hold capacitor (fF).
-    pub c_hold_ff: f64,
-    /// Sampling-switch on-resistance (Ω).
-    pub switch_r_on_ohm: f64,
-    /// Comparator threshold as a fraction of the P↔AP divider swing.
-    pub comparator_vref_frac: f64,
-    /// Photodiode integration time per phase (µs); two phases per frame.
-    pub integration_time_us: f64,
-    /// Gain of the drive stage between subtractor and VC-MTJs (physical
-    /// capture mode).  Compresses the device's ~100 mV switching-
-    /// transition band (Fig. 2) so near-threshold neurons land at the
-    /// calibrated operating points — see DESIGN.md §Findings.
-    pub drive_gain: f64,
-}
-
-impl Default for CircuitConfig {
-    fn default() -> Self {
-        Self {
-            vdd: 0.8,
-            nl_alpha: 0.35,
-            nl_sat: 3.0,
-            mac_range: 3.0,
-            analog_noise_sigma: 0.01,
-            c_hold_ff: 20.0,
-            switch_r_on_ohm: 2_000.0,
-            comparator_vref_frac: 0.5,
-            integration_time_us: 5.0,
-            drive_gain: 6.0,
-        }
-    }
-}
-
-impl CircuitConfig {
-    fn from_json(v: &Value) -> Result<Self> {
-        Ok(Self {
-            vdd: v.get("vdd")?.as_f64()?,
-            nl_alpha: v.get("nl_alpha")?.as_f64()?,
-            nl_sat: v.get("nl_sat")?.as_f64()?,
-            mac_range: v.get("mac_range")?.as_f64()?,
-            analog_noise_sigma: v.get("analog_noise_sigma")?.as_f64()?,
-            c_hold_ff: v.get("c_hold_ff")?.as_f64()?,
-            switch_r_on_ohm: v.get("switch_r_on_ohm")?.as_f64()?,
-            comparator_vref_frac: v.get("comparator_vref_frac")?.as_f64()?,
-            integration_time_us: v.get("integration_time_us")?.as_f64()?,
-            drive_gain: v.get("drive_gain")?.as_f64()?,
-        })
-    }
-}
-
-/// First-layer geometry and quantization (paper §2.4.4).
-#[derive(Debug, Clone, PartialEq)]
-pub struct NetworkConfig {
-    pub in_channels: usize,
-    pub first_channels: usize,
-    pub kernel_size: usize,
-    pub stride: usize,
-    pub weight_bits: u32,
-    pub input_bits: u32,
-    pub output_bits: u32,
-}
-
-impl Default for NetworkConfig {
-    fn default() -> Self {
-        Self {
-            in_channels: 3,
-            first_channels: 32,
-            kernel_size: 3,
-            stride: 2,
-            weight_bits: 4,
-            input_bits: 12,
-            output_bits: 1,
-        }
-    }
-}
-
-impl NetworkConfig {
-    fn from_json(v: &Value) -> Result<Self> {
-        Ok(Self {
-            in_channels: v.get("in_channels")?.as_usize()?,
-            first_channels: v.get("first_channels")?.as_usize()?,
-            kernel_size: v.get("kernel_size")?.as_usize()?,
-            stride: v.get("stride")?.as_usize()?,
-            weight_bits: v.get("weight_bits")?.as_u32()?,
-            input_bits: v.get("input_bits")?.as_u32()?,
-            output_bits: v.get("output_bits")?.as_u32()?,
-        })
-    }
-}
 
 /// Complete device/circuit/network configuration.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -225,354 +73,6 @@ impl HwConfig {
     pub fn load_or_default(artifacts_dir: &Path) -> Self {
         Self::from_json_file(artifacts_dir.join("hwcfg.json"))
             .unwrap_or_default()
-    }
-}
-
-/// Which inference backend serves the classifier head (see
-/// `crate::backend`): the native bit-packed XNOR engine (default, no
-/// artifacts or XLA needed) or the PJRT runtime over the AOT artifacts
-/// (requires the `pjrt` cargo feature).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum BackendKind {
-    Native,
-    Pjrt,
-}
-
-impl BackendKind {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "native" => Ok(Self::Native),
-            "pjrt" => Ok(Self::Pjrt),
-            other => anyhow::bail!(
-                "unknown backend '{other}' (expected 'native' or 'pjrt')"
-            ),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Native => "native",
-            Self::Pjrt => "pjrt",
-        }
-    }
-}
-
-/// Sensor-geometry presets for the paper's two workloads: the CIFAR-scale
-/// 32×32 development geometry and the ImageNet/VGG16 224×224 first-layer
-/// geometry of Table 1 / Fig. 9 (`energy::Geometry::imagenet_vgg16`).
-/// Threaded through `SweepConfig`/`PipelineConfig` and the `sweep`/`serve`
-/// CLIs (`--geometry`), so campaigns and streaming can both run the
-/// paper's full-scale workload without hand-spelling the dimensions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum GeometryPreset {
-    /// 32×32 (CIFAR-scale; the default development geometry).
-    Cifar,
-    /// 224×224 (ImageNet VGG16 head — paper Table 1 / Fig. 9 / Eq. 3).
-    ImagenetVgg16,
-}
-
-impl GeometryPreset {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "cifar" => Ok(Self::Cifar),
-            "imagenet" => Ok(Self::ImagenetVgg16),
-            other => anyhow::bail!(
-                "unknown geometry '{other}' (expected 'cifar' or 'imagenet')"
-            ),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Cifar => "cifar",
-            Self::ImagenetVgg16 => "imagenet",
-        }
-    }
-
-    /// Sensor `(height, width)` for the preset.
-    pub fn dims(&self) -> (usize, usize) {
-        match self {
-            Self::Cifar => (32, 32),
-            Self::ImagenetVgg16 => (224, 224),
-        }
-    }
-}
-
-/// Sensor→backend link encoding (paper §3.2 discusses CSR-style schemes).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SparseCoding {
-    /// Raw bit-packed binary activations (1 bit per value).
-    Dense,
-    /// Compressed sparse row over the channel-major bitmap.
-    Csr,
-    /// Run-length encoding of the zero runs.
-    Rle,
-}
-
-impl SparseCoding {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "dense" => Ok(Self::Dense),
-            "csr" => Ok(Self::Csr),
-            "rle" => Ok(Self::Rle),
-            other => anyhow::bail!("unknown sparse coding '{other}'"),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Dense => "dense",
-            Self::Csr => "csr",
-            Self::Rle => "rle",
-        }
-    }
-}
-
-/// Synthetic streaming workload shape (see `coordinator::stream` for the
-/// generators).  The paper's global-shutter burst read motivates serving
-/// continuous frame streams, so scenario diversity lives here rather than
-/// in ad-hoc bench loops.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Workload {
-    /// Textured scenes arriving as fast as backpressure allows.
-    Steady,
-    /// Bursts of frames separated by idle gaps (event-driven capture).
-    Bursty,
-    /// A bright bar sweeping across the array at varying speeds — the
-    /// motion-blur scene family from the shutter-skew experiment.
-    MotionSweep,
-}
-
-impl Workload {
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "steady" => Ok(Self::Steady),
-            "bursty" => Ok(Self::Bursty),
-            "motion" => Ok(Self::MotionSweep),
-            other => anyhow::bail!(
-                "unknown workload '{other}' (expected 'steady', 'bursty' or 'motion')"
-            ),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Steady => "steady",
-            Self::Bursty => "bursty",
-            Self::MotionSweep => "motion",
-        }
-    }
-}
-
-/// L3 pipeline configuration (not shared with Python).
-#[derive(Debug, Clone, PartialEq)]
-pub struct PipelineConfig {
-    /// Directory holding `*.hlo.txt` + `meta.json` + `hwcfg.json`.
-    pub artifacts_dir: String,
-    /// Sensor rows (image height).
-    pub sensor_height: usize,
-    /// Sensor cols (image width).
-    pub sensor_width: usize,
-    /// Geometry preset the dimensions came from, when one was named
-    /// (`"geometry"` config key / `--geometry` flag).  Explicit
-    /// height/width keys still win over the preset's dimensions.
-    pub geometry: Option<GeometryPreset>,
-    /// Batch sizes for which backend executables exist.
-    pub batch_sizes: Vec<usize>,
-    /// Max frames queued before backpressure stalls the source.
-    pub queue_depth: usize,
-    /// Maximum time a partially-filled batch waits before dispatch (µs).
-    pub batch_timeout_us: u64,
-    /// Worker threads in the sensor-simulation stage.
-    pub sensor_workers: usize,
-    /// Stochastic MTJ switching in the sensor sim (vs ideal comparator).
-    pub mtj_noise: bool,
-    /// Analog (kTC) noise injection in the pixel sim.
-    pub analog_noise: bool,
-    /// Sparse encoding for the sensor→backend link.
-    pub sparse_coding: SparseCoding,
-    /// Inference backend serving the classifier head.
-    pub backend: BackendKind,
-    /// Synthetic workload for `serve --stream` / benches.
-    pub workload: Workload,
-    /// Frames per burst for the bursty workload.
-    pub burst_len: usize,
-    /// Idle gap between bursts (µs) for the bursty workload.
-    pub burst_gap_us: u64,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        Self {
-            artifacts_dir: "artifacts".to_string(),
-            sensor_height: 32,
-            sensor_width: 32,
-            geometry: None,
-            batch_sizes: vec![1, 8],
-            queue_depth: 64,
-            batch_timeout_us: 8_000,
-            sensor_workers: 4,
-            mtj_noise: true,
-            analog_noise: false,
-            sparse_coding: SparseCoding::Csr,
-            backend: BackendKind::Native,
-            workload: Workload::Steady,
-            burst_len: 16,
-            burst_gap_us: 2_000,
-        }
-    }
-}
-
-impl PipelineConfig {
-    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let v = Value::from_file(path.as_ref())
-            .context("loading pipeline config")?;
-        let d = Self::default();
-        // Every field optional: the file overrides defaults.
-        let getf = |k: &str, dv: f64| -> Result<f64> {
-            match v.get(k) {
-                Ok(x) => x.as_f64(),
-                Err(_) => Ok(dv),
-            }
-        };
-        let getb = |k: &str, dv: bool| -> Result<bool> {
-            match v.get(k) {
-                Ok(x) => x.as_bool(),
-                Err(_) => Ok(dv),
-            }
-        };
-        // A named geometry preset supplies the height/width *defaults*;
-        // explicit sensor_height / sensor_width keys still override it.
-        let geometry = match v.get("geometry") {
-            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
-            Err(_) => None,
-        };
-        let (gh, gw) = geometry
-            .map(|g| g.dims())
-            .unwrap_or((d.sensor_height, d.sensor_width));
-        Ok(Self {
-            artifacts_dir: v
-                .get("artifacts_dir")
-                .and_then(|x| Ok(x.as_str()?.to_string()))
-                .unwrap_or(d.artifacts_dir),
-            sensor_height: getf("sensor_height", gh as f64)? as usize,
-            sensor_width: getf("sensor_width", gw as f64)? as usize,
-            geometry,
-            batch_sizes: v
-                .get("batch_sizes")
-                .and_then(|x| x.as_usize_vec())
-                .unwrap_or(d.batch_sizes),
-            queue_depth: getf("queue_depth", d.queue_depth as f64)? as usize,
-            batch_timeout_us: getf(
-                "batch_timeout_us",
-                d.batch_timeout_us as f64,
-            )? as u64,
-            sensor_workers: getf("sensor_workers", d.sensor_workers as f64)?
-                as usize,
-            mtj_noise: getb("mtj_noise", d.mtj_noise)?,
-            analog_noise: getb("analog_noise", d.analog_noise)?,
-            // Enum fields default when absent but reject invalid values —
-            // silently falling back would serve the wrong codec/backend.
-            sparse_coding: match v.get("sparse_coding") {
-                Ok(x) => SparseCoding::parse(x.as_str()?)?,
-                Err(_) => d.sparse_coding,
-            },
-            backend: match v.get("backend") {
-                Ok(x) => BackendKind::parse(x.as_str()?)?,
-                Err(_) => d.backend,
-            },
-            workload: match v.get("workload") {
-                Ok(x) => Workload::parse(x.as_str()?)?,
-                Err(_) => d.workload,
-            },
-            burst_len: getf("burst_len", d.burst_len as f64)? as usize,
-            burst_gap_us: getf("burst_gap_us", d.burst_gap_us as f64)? as u64,
-        })
-    }
-}
-
-/// Monte-Carlo reliability sweep campaign configuration (see
-/// [`crate::sweep`]).  The grid spec string is parsed by
-/// `sweep::SweepGrid::parse`; keeping it textual here keeps config free
-/// of a dependency on the sweep layer and makes the CLI, config file,
-/// and report echo share one canonical spelling.
-#[derive(Debug, Clone, PartialEq)]
-pub struct SweepConfig {
-    /// Cartesian grid spec (`v=0.7,0.8;k=4,5;...`).
-    pub grid: String,
-    /// Monte-Carlo trials (frames) per cell.
-    pub trials: u32,
-    /// Worker threads; 0 = one per available core.  Never affects
-    /// results — only wall-clock (the sweep determinism contract).
-    pub threads: usize,
-    /// Campaign seed for the counter RNG.
-    pub seed: u32,
-    /// Frame height fed to the sensor sim.
-    pub sensor_height: usize,
-    /// Frame width fed to the sensor sim.
-    pub sensor_width: usize,
-    /// Geometry preset the dimensions came from, when one was named
-    /// (`"geometry"` config key / `--geometry` flag); explicit
-    /// height/width still win.  `imagenet` runs the campaign on the
-    /// paper's 224×224 Table 1 workload.
-    pub geometry: Option<GeometryPreset>,
-    /// Directory the JSON report is written to.
-    pub out_dir: String,
-}
-
-impl Default for SweepConfig {
-    fn default() -> Self {
-        Self {
-            // The paper's three calibrated voltages; everything else at
-            // the Fig. 5 operating point (700 ps, n=8, k=4).
-            grid: "v=0.7,0.8,0.9".to_string(),
-            trials: 64,
-            threads: 0,
-            seed: 1,
-            sensor_height: 32,
-            sensor_width: 32,
-            geometry: None,
-            out_dir: "reports".to_string(),
-        }
-    }
-}
-
-impl SweepConfig {
-    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let v = Value::from_file(path.as_ref())
-            .context("loading sweep config")?;
-        let d = Self::default();
-        let getf = |k: &str, dv: f64| -> Result<f64> {
-            match v.get(k) {
-                Ok(x) => x.as_f64(),
-                Err(_) => Ok(dv),
-            }
-        };
-        let gets = |k: &str, dv: String| -> Result<String> {
-            match v.get(k) {
-                Ok(x) => Ok(x.as_str()?.to_string()),
-                Err(_) => Ok(dv),
-            }
-        };
-        // Same precedence as PipelineConfig: a named preset provides the
-        // height/width defaults, explicit keys override.
-        let geometry = match v.get("geometry") {
-            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
-            Err(_) => None,
-        };
-        let (gh, gw) = geometry
-            .map(|g| g.dims())
-            .unwrap_or((d.sensor_height, d.sensor_width));
-        Ok(Self {
-            grid: gets("grid", d.grid)?,
-            trials: getf("trials", d.trials as f64)? as u32,
-            threads: getf("threads", d.threads as f64)? as usize,
-            seed: getf("seed", d.seed as f64)? as u32,
-            sensor_height: getf("sensor_height", gh as f64)? as usize,
-            sensor_width: getf("sensor_width", gw as f64)? as usize,
-            geometry,
-            out_dir: gets("out_dir", d.out_dir)?,
-        })
     }
 }
 
@@ -651,139 +151,9 @@ mod tests {
     }
 
     #[test]
-    fn sparse_coding_parse_and_name() {
-        for s in ["dense", "csr", "rle"] {
-            assert_eq!(SparseCoding::parse(s).unwrap().name(), s);
-        }
-        assert!(SparseCoding::parse("zip").is_err());
-    }
-
-    #[test]
     fn missing_file_is_error_but_load_or_default_falls_back() {
         assert!(HwConfig::from_json_file("/nonexistent/x.json").is_err());
         let cfg = HwConfig::load_or_default(Path::new("/nonexistent"));
         assert_eq!(cfg, HwConfig::default());
-    }
-
-    #[test]
-    fn pipeline_config_partial_json_overrides() {
-        let dir = std::env::temp_dir().join("pixelmtj_cfg_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("pipe.json");
-        std::fs::write(
-            &p,
-            r#"{"sensor_height": 224, "sparse_coding": "rle", "backend": "pjrt"}"#,
-        )
-        .unwrap();
-        let cfg = PipelineConfig::from_json_file(&p).unwrap();
-        assert_eq!(cfg.sensor_height, 224);
-        assert_eq!(cfg.sparse_coding, SparseCoding::Rle);
-        assert_eq!(cfg.backend, BackendKind::Pjrt);
-        assert_eq!(cfg.queue_depth, PipelineConfig::default().queue_depth);
-    }
-
-    #[test]
-    fn workload_parse_and_name() {
-        for s in ["steady", "bursty", "motion"] {
-            assert_eq!(Workload::parse(s).unwrap().name(), s);
-        }
-        assert!(Workload::parse("spiky").is_err());
-        assert_eq!(PipelineConfig::default().workload, Workload::Steady);
-    }
-
-    #[test]
-    fn pipeline_config_stream_keys_parse() {
-        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_stream");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("pipe.json");
-        std::fs::write(
-            &p,
-            r#"{"workload": "bursty", "burst_len": 4, "burst_gap_us": 500}"#,
-        )
-        .unwrap();
-        let cfg = PipelineConfig::from_json_file(&p).unwrap();
-        assert_eq!(cfg.workload, Workload::Bursty);
-        assert_eq!(cfg.burst_len, 4);
-        assert_eq!(cfg.burst_gap_us, 500);
-        std::fs::write(&p, r#"{"workload": "spiky"}"#).unwrap();
-        assert!(PipelineConfig::from_json_file(&p).is_err());
-    }
-
-    #[test]
-    fn sweep_config_defaults_and_partial_json() {
-        let d = SweepConfig::default();
-        assert_eq!(d.grid, "v=0.7,0.8,0.9");
-        assert_eq!(d.threads, 0, "0 = auto");
-        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_sweep");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("sweep.json");
-        std::fs::write(
-            &p,
-            r#"{"grid": "v=0.9;k=5", "trials": 16, "threads": 2}"#,
-        )
-        .unwrap();
-        let cfg = SweepConfig::from_json_file(&p).unwrap();
-        assert_eq!(cfg.grid, "v=0.9;k=5");
-        assert_eq!(cfg.trials, 16);
-        assert_eq!(cfg.threads, 2);
-        assert_eq!(cfg.seed, d.seed);
-        assert_eq!(cfg.out_dir, d.out_dir);
-    }
-
-    #[test]
-    fn geometry_preset_parse_dims_and_precedence() {
-        for (s, dims) in [("cifar", (32, 32)), ("imagenet", (224, 224))] {
-            let g = GeometryPreset::parse(s).unwrap();
-            assert_eq!(g.name(), s);
-            assert_eq!(g.dims(), dims);
-        }
-        assert!(GeometryPreset::parse("cifar100").is_err());
-
-        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_geometry");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("sweep.json");
-        // Preset alone sets both dimensions …
-        std::fs::write(&p, r#"{"geometry": "imagenet"}"#).unwrap();
-        let cfg = SweepConfig::from_json_file(&p).unwrap();
-        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
-        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
-        // … but explicit keys still win over it.
-        std::fs::write(
-            &p,
-            r#"{"geometry": "imagenet", "sensor_height": 64}"#,
-        )
-        .unwrap();
-        let cfg = SweepConfig::from_json_file(&p).unwrap();
-        assert_eq!((cfg.sensor_height, cfg.sensor_width), (64, 224));
-        // Invalid preset names fail loudly, like every other enum key.
-        std::fs::write(&p, r#"{"geometry": "mnist"}"#).unwrap();
-        assert!(SweepConfig::from_json_file(&p).is_err());
-
-        let pp = dir.join("pipe.json");
-        std::fs::write(&pp, r#"{"geometry": "imagenet"}"#).unwrap();
-        let cfg = PipelineConfig::from_json_file(&pp).unwrap();
-        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
-        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
-    }
-
-    #[test]
-    fn backend_kind_parse_and_name() {
-        for s in ["native", "pjrt"] {
-            assert_eq!(BackendKind::parse(s).unwrap().name(), s);
-        }
-        assert!(BackendKind::parse("tpu").is_err());
-        assert_eq!(PipelineConfig::default().backend, BackendKind::Native);
-    }
-
-    #[test]
-    fn pipeline_config_rejects_invalid_backend_value() {
-        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_bad");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("pipe.json");
-        std::fs::write(&p, r#"{"backend": "Pjrt"}"#).unwrap();
-        assert!(
-            PipelineConfig::from_json_file(&p).is_err(),
-            "typo'd backend value must error, not silently default"
-        );
     }
 }

@@ -1,0 +1,45 @@
+//! First-layer geometry and quantization (paper §2.4.4).
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// First-layer geometry and quantization (paper §2.4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    pub in_channels: usize,
+    pub first_channels: usize,
+    pub kernel_size: usize,
+    pub stride: usize,
+    pub weight_bits: u32,
+    pub input_bits: u32,
+    pub output_bits: u32,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            in_channels: 3,
+            first_channels: 32,
+            kernel_size: 3,
+            stride: 2,
+            weight_bits: 4,
+            input_bits: 12,
+            output_bits: 1,
+        }
+    }
+}
+
+impl NetworkConfig {
+    pub(crate) fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            in_channels: v.get("in_channels")?.as_usize()?,
+            first_channels: v.get("first_channels")?.as_usize()?,
+            kernel_size: v.get("kernel_size")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            weight_bits: v.get("weight_bits")?.as_u32()?,
+            input_bits: v.get("input_bits")?.as_u32()?,
+            output_bits: v.get("output_bits")?.as_u32()?,
+        })
+    }
+}

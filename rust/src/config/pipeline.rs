@@ -1,0 +1,215 @@
+//! L3 pipeline configuration (queue depths, batching policy, sensor
+//! geometry, backend/codec/workload selection) — not shared with Python.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::config::keyed::{
+    BackendKind, GeometryPreset, KeyedEnum, SparseCoding, Workload,
+};
+use crate::util::json::Value;
+
+/// L3 pipeline configuration (not shared with Python).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Directory holding `*.hlo.txt` + `meta.json` + `hwcfg.json`.
+    pub artifacts_dir: String,
+    /// Sensor rows (image height).
+    pub sensor_height: usize,
+    /// Sensor cols (image width).
+    pub sensor_width: usize,
+    /// Geometry preset the dimensions came from, when one was named
+    /// (`"geometry"` config key / `--geometry` flag).  Explicit
+    /// height/width keys still win over the preset's dimensions.
+    pub geometry: Option<GeometryPreset>,
+    /// Batch sizes for which backend executables exist.
+    pub batch_sizes: Vec<usize>,
+    /// Max frames queued before backpressure stalls the source.
+    pub queue_depth: usize,
+    /// Maximum time a partially-filled batch waits before dispatch (µs).
+    pub batch_timeout_us: u64,
+    /// Worker threads in the sensor-simulation stage.
+    pub sensor_workers: usize,
+    /// Stochastic MTJ switching in the sensor sim (vs ideal comparator).
+    pub mtj_noise: bool,
+    /// Analog (kTC) noise injection in the pixel sim.
+    pub analog_noise: bool,
+    /// Sparse encoding for the sensor→backend link.
+    pub sparse_coding: SparseCoding,
+    /// Inference backend serving the classifier head.
+    pub backend: BackendKind,
+    /// Synthetic workload for `serve --stream` / benches.
+    pub workload: Workload,
+    /// Frames per burst for the bursty workload.
+    pub burst_len: usize,
+    /// Idle gap between bursts (µs) for the bursty workload.
+    pub burst_gap_us: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".to_string(),
+            sensor_height: 32,
+            sensor_width: 32,
+            geometry: None,
+            batch_sizes: vec![1, 8],
+            queue_depth: 64,
+            batch_timeout_us: 8_000,
+            sensor_workers: 4,
+            mtj_noise: true,
+            analog_noise: false,
+            sparse_coding: SparseCoding::Csr,
+            backend: BackendKind::Native,
+            workload: Workload::Steady,
+            burst_len: 16,
+            burst_gap_us: 2_000,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref())
+            .context("loading pipeline config")?;
+        Self::from_json(&v)
+    }
+
+    /// Defaults overridden by whichever keys the document carries (the
+    /// file layer of the resolver; unknown keys are ignored so one file
+    /// can configure pipeline and sweep together).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        // Every field optional: the file overrides defaults.
+        let getf = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Ok(x) => x.as_f64(),
+                Err(_) => Ok(dv),
+            }
+        };
+        let getb = |k: &str, dv: bool| -> Result<bool> {
+            match v.get(k) {
+                Ok(x) => x.as_bool(),
+                Err(_) => Ok(dv),
+            }
+        };
+        // A named geometry preset supplies the height/width *defaults*;
+        // explicit sensor_height / sensor_width keys still override it.
+        let geometry = match v.get("geometry") {
+            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
+            Err(_) => None,
+        };
+        let (gh, gw) = geometry
+            .map(|g| g.dims())
+            .unwrap_or((d.sensor_height, d.sensor_width));
+        Ok(Self {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(|x| Ok(x.as_str()?.to_string()))
+                .unwrap_or(d.artifacts_dir),
+            sensor_height: getf("sensor_height", gh as f64)? as usize,
+            sensor_width: getf("sensor_width", gw as f64)? as usize,
+            geometry,
+            batch_sizes: v
+                .get("batch_sizes")
+                .and_then(|x| x.as_usize_vec())
+                .unwrap_or(d.batch_sizes),
+            queue_depth: getf("queue_depth", d.queue_depth as f64)? as usize,
+            batch_timeout_us: getf(
+                "batch_timeout_us",
+                d.batch_timeout_us as f64,
+            )? as u64,
+            sensor_workers: getf("sensor_workers", d.sensor_workers as f64)?
+                as usize,
+            mtj_noise: getb("mtj_noise", d.mtj_noise)?,
+            analog_noise: getb("analog_noise", d.analog_noise)?,
+            // Enum fields default when absent but reject invalid values —
+            // silently falling back would serve the wrong codec/backend.
+            sparse_coding: match v.get("sparse_coding") {
+                Ok(x) => SparseCoding::parse(x.as_str()?)?,
+                Err(_) => d.sparse_coding,
+            },
+            backend: match v.get("backend") {
+                Ok(x) => BackendKind::parse(x.as_str()?)?,
+                Err(_) => d.backend,
+            },
+            workload: match v.get("workload") {
+                Ok(x) => Workload::parse(x.as_str()?)?,
+                Err(_) => d.workload,
+            },
+            burst_len: getf("burst_len", d.burst_len as f64)? as usize,
+            burst_gap_us: getf("burst_gap_us", d.burst_gap_us as f64)? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_config_partial_json_overrides() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(
+            &p,
+            r#"{"sensor_height": 224, "sparse_coding": "rle", "backend": "pjrt"}"#,
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.sensor_height, 224);
+        assert_eq!(cfg.sparse_coding, SparseCoding::Rle);
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert_eq!(cfg.queue_depth, PipelineConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn pipeline_config_stream_keys_parse() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(
+            &p,
+            r#"{"workload": "bursty", "burst_len": 4, "burst_gap_us": 500}"#,
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.workload, Workload::Bursty);
+        assert_eq!(cfg.burst_len, 4);
+        assert_eq!(cfg.burst_gap_us, 500);
+        std::fs::write(&p, r#"{"workload": "spiky"}"#).unwrap();
+        assert!(PipelineConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn pipeline_config_geometry_preset_and_precedence() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_geometry_p");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pp = dir.join("pipe.json");
+        std::fs::write(&pp, r#"{"geometry": "imagenet"}"#).unwrap();
+        let cfg = PipelineConfig::from_json_file(&pp).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
+        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
+    }
+
+    #[test]
+    fn pipeline_config_rejects_invalid_backend_value() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(&p, r#"{"backend": "Pjrt"}"#).unwrap();
+        assert!(
+            PipelineConfig::from_json_file(&p).is_err(),
+            "typo'd backend value must error, not silently default"
+        );
+    }
+
+    #[test]
+    fn default_enums_match_contract() {
+        let d = PipelineConfig::default();
+        assert_eq!(d.workload, Workload::Steady);
+        assert_eq!(d.backend, BackendKind::Native);
+        assert_eq!(d.sparse_coding, SparseCoding::Csr);
+    }
+}

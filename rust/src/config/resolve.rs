@@ -1,0 +1,154 @@
+//! Shared vocabulary of the layered configuration resolver (the registry
+//! itself and [`crate::system::SystemSpec`] live in [`crate::system`];
+//! this module holds the pieces the config layer owns).
+//!
+//! Every resolved field carries a [`Provenance`] recording which layer
+//! supplied its value.  The layer order, lowest to highest precedence:
+//!
+//! 1. `default` — the `Default` impls (paper constants / dev geometry)
+//! 2. `hwcfg`   — `artifacts/hwcfg.json` (device/circuit/network block)
+//! 3. `file`    — the `--config FILE` JSON profile
+//! 4. `env`     — `PIXELMTJ_*` environment variables
+//! 5. `cli`     — explicit command-line flags
+
+use crate::config::keyed::KeyedEnum;
+use std::collections::BTreeMap;
+
+/// Which layer supplied a resolved field's value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Provenance {
+    Default,
+    Hwcfg,
+    File,
+    Env,
+    Cli,
+}
+
+impl KeyedEnum for Provenance {
+    const WHAT: &'static str = "provenance";
+    const VARIANTS: &'static [(&'static str, Self)] = &[
+        ("default", Self::Default),
+        ("hwcfg", Self::Hwcfg),
+        ("file", Self::File),
+        ("env", Self::Env),
+        ("cli", Self::Cli),
+    ];
+}
+
+/// The CLI subcommand set — itself a keyed enum, so subcommand parsing
+/// shares the same mechanism (and rejection message shape) as every
+/// other keyed value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmd {
+    Serve,
+    Report,
+    Sweep,
+    Validate,
+    Info,
+    /// Print the fully resolved [`crate::system::SystemSpec`] with
+    /// per-field provenance (accepts every registry flag, so it can
+    /// preview exactly what any invocation would resolve to).
+    Config,
+}
+
+impl KeyedEnum for Cmd {
+    const WHAT: &'static str = "subcommand";
+    const VARIANTS: &'static [(&'static str, Self)] = &[
+        ("serve", Self::Serve),
+        ("report", Self::Report),
+        ("sweep", Self::Sweep),
+        ("validate", Self::Validate),
+        ("info", Self::Info),
+        ("config", Self::Config),
+    ];
+}
+
+/// An immutable snapshot of the `PIXELMTJ_*` environment, taken once at
+/// startup.  The resolver reads env through this snapshot instead of
+/// `std::env::var`, so tests can inject layers without mutating
+/// process-global state (which races under the parallel test harness).
+#[derive(Debug, Clone, Default)]
+pub struct EnvSource {
+    vars: BTreeMap<String, String>,
+}
+
+impl EnvSource {
+    /// Snapshot the real process environment (only `PIXELMTJ_*` keys).
+    pub fn process() -> Self {
+        Self {
+            vars: std::env::vars()
+                .filter(|(k, _)| k.starts_with("PIXELMTJ_"))
+                .collect(),
+        }
+    }
+
+    /// An empty environment (no env layer).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Build from explicit pairs (test injection).
+    pub fn from_pairs<I, K, V>(pairs: I) -> Self
+    where
+        I: IntoIterator<Item = (K, V)>,
+        K: Into<String>,
+        V: Into<String>,
+    {
+        Self {
+            vars: pairs
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.into()))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vars.get(key).map(String::as_str)
+    }
+
+    /// Every key in the snapshot (the resolver rejects unknown ones —
+    /// the env analogue of the CLI's unknown-option check).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.vars.keys().map(String::as_str)
+    }
+}
+
+/// `PIXELMTJ_QUEUE_DEPTH` for registry field `queue-depth`: the env-var
+/// spelling is derived from the flag name, so the two layers can never
+/// drift apart.
+pub fn env_key(field: &str) -> String {
+    format!(
+        "PIXELMTJ_{}",
+        field.to_ascii_uppercase().replace('-', "_")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmd_and_provenance_are_keyed_enums() {
+        for s in ["serve", "report", "sweep", "validate", "info", "config"] {
+            assert_eq!(Cmd::parse(s).unwrap().name(), s);
+        }
+        assert!(Cmd::parse("server").is_err());
+        assert_eq!(Provenance::Cli.name(), "cli");
+        assert_eq!(Provenance::Hwcfg.name(), "hwcfg");
+    }
+
+    #[test]
+    fn env_key_derivation() {
+        assert_eq!(env_key("queue-depth"), "PIXELMTJ_QUEUE_DEPTH");
+        assert_eq!(env_key("grid"), "PIXELMTJ_GRID");
+        assert_eq!(env_key("no-mtj-noise"), "PIXELMTJ_NO_MTJ_NOISE");
+    }
+
+    #[test]
+    fn env_source_snapshot_and_injection() {
+        let e = EnvSource::from_pairs([("PIXELMTJ_GRID", "v=0.8")]);
+        assert_eq!(e.get("PIXELMTJ_GRID"), Some("v=0.8"));
+        assert_eq!(e.get("PIXELMTJ_TRIALS"), None);
+        assert!(EnvSource::empty().get("PIXELMTJ_GRID").is_none());
+    }
+}

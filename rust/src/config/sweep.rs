@@ -1,0 +1,149 @@
+//! Monte-Carlo reliability sweep campaign configuration (see
+//! [`crate::sweep`]).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::config::keyed::{GeometryPreset, KeyedEnum};
+use crate::util::json::Value;
+
+/// Monte-Carlo reliability sweep campaign configuration (see
+/// [`crate::sweep`]).  The grid spec string is parsed by
+/// `sweep::SweepGrid::parse`; keeping it textual here keeps config free
+/// of a dependency on the sweep layer and makes the CLI, config file,
+/// and report echo share one canonical spelling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Cartesian grid spec (`v=0.7,0.8;k=4,5;...`).
+    pub grid: String,
+    /// Monte-Carlo trials (frames) per cell.
+    pub trials: u32,
+    /// Worker threads; 0 = one per available core.  Never affects
+    /// results — only wall-clock (the sweep determinism contract).
+    pub threads: usize,
+    /// Campaign seed for the counter RNG.
+    pub seed: u32,
+    /// Frame height fed to the sensor sim.
+    pub sensor_height: usize,
+    /// Frame width fed to the sensor sim.
+    pub sensor_width: usize,
+    /// Geometry preset the dimensions came from, when one was named
+    /// (`"geometry"` config key / `--geometry` flag); explicit
+    /// height/width still win.  `imagenet` runs the campaign on the
+    /// paper's 224×224 Table 1 workload.
+    pub geometry: Option<GeometryPreset>,
+    /// Directory the JSON report is written to.
+    pub out_dir: String,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            // The paper's three calibrated voltages; everything else at
+            // the Fig. 5 operating point (700 ps, n=8, k=4).
+            grid: "v=0.7,0.8,0.9".to_string(),
+            trials: 64,
+            threads: 0,
+            seed: 1,
+            sensor_height: 32,
+            sensor_width: 32,
+            geometry: None,
+            out_dir: "reports".to_string(),
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn from_json_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let v = Value::from_file(path.as_ref())
+            .context("loading sweep config")?;
+        Self::from_json(&v)
+    }
+
+    /// Defaults overridden by whichever keys the document carries (the
+    /// file layer of the resolver; unknown keys are ignored so one file
+    /// can configure pipeline and sweep together).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        let getf = |k: &str, dv: f64| -> Result<f64> {
+            match v.get(k) {
+                Ok(x) => x.as_f64(),
+                Err(_) => Ok(dv),
+            }
+        };
+        let gets = |k: &str, dv: String| -> Result<String> {
+            match v.get(k) {
+                Ok(x) => Ok(x.as_str()?.to_string()),
+                Err(_) => Ok(dv),
+            }
+        };
+        // Same precedence as PipelineConfig: a named preset provides the
+        // height/width defaults, explicit keys override.
+        let geometry = match v.get("geometry") {
+            Ok(x) => Some(GeometryPreset::parse(x.as_str()?)?),
+            Err(_) => None,
+        };
+        let (gh, gw) = geometry
+            .map(|g| g.dims())
+            .unwrap_or((d.sensor_height, d.sensor_width));
+        Ok(Self {
+            grid: gets("grid", d.grid)?,
+            trials: getf("trials", d.trials as f64)? as u32,
+            threads: getf("threads", d.threads as f64)? as usize,
+            seed: getf("seed", d.seed as f64)? as u32,
+            sensor_height: getf("sensor_height", gh as f64)? as usize,
+            sensor_width: getf("sensor_width", gw as f64)? as usize,
+            geometry,
+            out_dir: gets("out_dir", d.out_dir)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_config_defaults_and_partial_json() {
+        let d = SweepConfig::default();
+        assert_eq!(d.grid, "v=0.7,0.8,0.9");
+        assert_eq!(d.threads, 0, "0 = auto");
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.json");
+        std::fs::write(
+            &p,
+            r#"{"grid": "v=0.9;k=5", "trials": 16, "threads": 2}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.grid, "v=0.9;k=5");
+        assert_eq!(cfg.trials, 16);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.seed, d.seed);
+        assert_eq!(cfg.out_dir, d.out_dir);
+    }
+
+    #[test]
+    fn sweep_config_geometry_preset_and_precedence() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_geometry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.json");
+        // Preset alone sets both dimensions …
+        std::fs::write(&p, r#"{"geometry": "imagenet"}"#).unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
+        assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
+        // … but explicit keys still win over it.
+        std::fs::write(
+            &p,
+            r#"{"geometry": "imagenet", "sensor_height": 64}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json_file(&p).unwrap();
+        assert_eq!((cfg.sensor_height, cfg.sensor_width), (64, 224));
+        // Invalid preset names fail loudly, like every other enum key.
+        std::fs::write(&p, r#"{"geometry": "mnist"}"#).unwrap();
+        assert!(SweepConfig::from_json_file(&p).is_err());
+    }
+}

@@ -51,12 +51,24 @@ impl Pipeline {
         sim: PixelArraySim,
         backend: Arc<dyn InferenceBackend>,
     ) -> Result<Self> {
+        Self::with_shared_sim(cfg, Arc::new(sim), backend)
+    }
+
+    /// Like [`Pipeline::new`] but sharing an existing sensor simulator —
+    /// the [`crate::system::System`] facade hands the same `Arc` to
+    /// callers that capture frames directly (examples) and to the
+    /// pipeline, so both see identical device state.
+    pub fn with_shared_sim(
+        cfg: PipelineConfig,
+        sim: Arc<PixelArraySim>,
+        backend: Arc<dyn InferenceBackend>,
+    ) -> Result<Self> {
         backend
             .preload(&cfg.batch_sizes)
             .with_context(|| format!("preloading {} backend", backend.name()))?;
         Ok(Self {
             cfg,
-            sim: Arc::new(sim),
+            sim,
             backend,
             metrics: Arc::new(PipelineMetrics::default()),
         })
@@ -82,6 +94,11 @@ impl Pipeline {
 
     pub fn backend(&self) -> &Arc<dyn InferenceBackend> {
         &self.backend
+    }
+
+    /// The sensor simulator this pipeline's workers capture through.
+    pub fn sim(&self) -> Arc<PixelArraySim> {
+        self.sim.clone()
     }
 
     pub fn metrics(&self) -> Arc<PipelineMetrics> {

@@ -39,7 +39,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::backend::InferenceBackend;
-use crate::config::{PipelineConfig, SparseCoding, Workload};
+use crate::config::{KeyedEnum, PipelineConfig, SparseCoding, Workload};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::pipeline::{Classification, RunReport};
 use crate::coordinator::sparse;

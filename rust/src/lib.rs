@@ -15,9 +15,18 @@
 //! feature.  Python never runs on the request path.
 //!
 //! Module map (see DESIGN.md for the experiment index):
-//! * [`config`] — typed configuration, loaded from `artifacts/hwcfg.json`
-//!   (single source of truth shared with the Python build path), plus the
-//!   L3 pipeline/backend selection
+//! * [`system`] — the typed front door: `SystemSpec` (layered,
+//!   provenance-tracked configuration resolved from one declarative field
+//!   registry: defaults < hwcfg.json < --config file < `PIXELMTJ_*` env <
+//!   CLI flags) and the `System` builder facade
+//!   (`serve`/`stream`/`sweep`/`validate`/`report_ctx`) every entry point
+//!   shares
+//! * [`config`] — the configuration module tree
+//!   (`device`/`circuit`/`network`/`pipeline`/`sweep`), the shared
+//!   `KeyedEnum` string↔enum mechanism, and the resolver vocabulary
+//!   (`Provenance`, `Cmd`, `EnvSource`); `HwConfig` is loaded from
+//!   `artifacts/hwcfg.json` (single source of truth shared with the
+//!   Python build path)
 //! * [`device`] — VC-MTJ physics: R(V), TMR droop, precessional switching
 //!   probability, multi-device majority neurons, endurance tracking
 //! * [`circuit`] — behavioural pixel/subtractor/readout circuit simulation
@@ -49,6 +58,7 @@ pub mod reports;
 pub mod runtime;
 pub mod sensor;
 pub mod sweep;
+pub mod system;
 pub mod util;
 pub mod validate;
 

@@ -1,6 +1,8 @@
 //! pixelmtj — leader entrypoint for the VC-MTJ processing-in-pixel stack.
 //!
-//! Subcommands:
+//! Subcommands (all thin callers over [`pixelmtj::system::System`]; flags,
+//! env vars, and config-file keys resolve through the one registry-driven
+//! layered resolver — see `pixelmtj config`):
 //! * `serve`    — run the frame-serving pipeline on synthetic scenes and
 //!                print throughput/latency metrics (native backend by
 //!                default — no artifacts required)
@@ -11,40 +13,17 @@
 //! * `validate` — check the golden vectors against the rust stack (and
 //!                the AOT artifacts when built with `--features pjrt`)
 //! * `info`     — print configuration + backend/artifact inventory
+//! * `config`   — print the fully resolved configuration with per-field
+//!                provenance (default|hwcfg|file|env|cli)
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use std::path::PathBuf;
 
-use pixelmtj::backend::{self, InferenceBackend as _};
-use pixelmtj::config::{
-    BackendKind, GeometryPreset, HwConfig, PipelineConfig, SparseCoding,
-    SweepConfig, Workload,
-};
-use pixelmtj::coordinator::{stream, FrameSource as _, Pipeline};
-use pixelmtj::reports::{self, sweep_report, ReportCtx};
-use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
+use pixelmtj::backend::InferenceBackend as _;
+use pixelmtj::config::{Cmd, EnvSource, KeyedEnum, Workload};
+use pixelmtj::reports::{self, sweep_report};
+use pixelmtj::system::{self, System, SystemSpec};
 use pixelmtj::util::cli::Args;
-
-const USAGE: &str = "\
-pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel
-
-USAGE:
-  pixelmtj serve    [--frames N] [--workers N] [--coding dense|csr|rle]
-                    [--backend native|pjrt] [--no-mtj-noise]
-                    [--geometry cifar|imagenet]
-                    [--artifacts DIR] [--config FILE]
-                    [--stream] [--workload steady|bursty|motion]
-                    [--queue-depth N] [--burst-len N] [--burst-gap-us N]
-  pixelmtj report   <id|all> [--artifacts DIR] [--out DIR]
-  pixelmtj sweep    [--grid SPEC] [--trials N] [--threads N] [--seed N]
-                    [--geometry cifar|imagenet] [--height N] [--width N]
-                    [--out DIR] [--config FILE]
-  pixelmtj validate [--artifacts DIR]
-  pixelmtj info     [--artifacts DIR]
-
-Reports: fig1b fig2 fig4a fig4b fig5 fig6 fig8 fig9 bandwidth latency table1
-Sweep grid keys: v pulse n k ap p sigma mode (see rust/README.md)
---geometry imagenet runs the paper's 224x224 VGG16-head workload";
 
 fn main() {
     if let Err(e) = run() {
@@ -55,177 +34,68 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::parse_env()?;
-    match args.command.as_deref() {
-        Some("serve") => serve(&args),
-        Some("report") => report(&args),
-        Some("sweep") => sweep(&args),
-        Some("validate") => validate(&args),
-        Some("info") => info(&args),
+    // Unknown or absent subcommands print the registry-derived usage.
+    let cmd = match args.command.as_deref().map(Cmd::parse) {
+        Some(Ok(cmd)) => cmd,
         _ => {
-            println!("{USAGE}");
-            Ok(())
+            println!("{}", system::usage());
+            return Ok(());
         }
+    };
+    let spec = SystemSpec::resolve(cmd, &args, &EnvSource::process())?;
+    match cmd {
+        Cmd::Serve => serve(spec),
+        Cmd::Report => report(spec, &args),
+        Cmd::Sweep => sweep(spec),
+        Cmd::Validate => validate(spec),
+        Cmd::Info => info(spec),
+        Cmd::Config => config(spec),
     }
 }
 
-fn artifacts_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.str_or("artifacts", "artifacts"))
-}
-
-/// First-layer weights via `backend::load_weights` (golden export when
-/// present, synthetic when absent, hard error when corrupt), with a
-/// notice on fallback — the native backend serves either way.
-fn sensor_weights(
-    dir: &std::path::Path,
-    hw: &HwConfig,
-) -> Result<FirstLayerWeights> {
-    let golden = dir.join("golden.json");
-    if !golden.exists() {
-        eprintln!(
-            "note: {} missing — using synthetic first-layer weights",
-            golden.display()
-        );
-    }
-    backend::load_weights(dir, hw)
-}
-
-fn serve(args: &Args) -> Result<()> {
-    let frames_n = args.usize_or("frames", 256)?;
-    // Options override the config-file value only when actually given —
-    // otherwise the file's (or default's) setting stands.
-    let coding = match args.opt_str("coding") {
-        Some(s) => Some(SparseCoding::parse(&s)?),
-        None => None,
-    };
-    let kind = match args.opt_str("backend") {
-        Some(s) => Some(BackendKind::parse(&s)?),
-        None => None,
-    };
-    let no_noise = args.flag("no-mtj-noise")?;
-    let streaming = args.flag("stream")?;
-    let geometry = match args.opt_str("geometry") {
-        Some(s) => Some(GeometryPreset::parse(&s)?),
-        None => None,
-    };
-    let workload = match args.opt_str("workload") {
-        Some(s) => Some(Workload::parse(&s)?),
-        None => None,
-    };
-    // Workload-generator options only drive the synthetic stream source;
-    // oneshot mode serves caller-built frames, so accepting them there
-    // would silently measure the wrong scene (util/cli.rs: fail loudly).
-    if !streaming {
-        for name in ["workload", "burst-len", "burst-gap-us"] {
-            if args.opt_str(name).is_some() {
-                bail!("--{name} requires --stream");
-            }
-        }
-    }
-    let dir = artifacts_dir(args);
-    let mut cfg = match args.opt_str("config") {
-        Some(path) => PipelineConfig::from_json_file(path)?,
-        None => PipelineConfig::default(),
-    };
-    // CLI overrides config-file values, which override defaults.
-    cfg.sensor_workers = args.usize_or("workers", cfg.sensor_workers)?;
-    cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
-    cfg.burst_len = args.usize_or("burst-len", cfg.burst_len)?;
-    cfg.burst_gap_us =
-        args.usize_or("burst-gap-us", cfg.burst_gap_us as usize)? as u64;
-    args.finish()?;
-    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
-    if let Some(g) = geometry {
-        // CLI preset overrides whatever the config file said, dimensions
-        // included (the config-file preset already resolved at load).
-        cfg.geometry = Some(g);
-        (cfg.sensor_height, cfg.sensor_width) = g.dims();
-    }
-    if let Some(coding) = coding {
-        cfg.sparse_coding = coding;
-    }
-    if no_noise {
-        cfg.mtj_noise = false;
-    }
-    if let Some(kind) = kind {
-        cfg.backend = kind;
-    }
-    if let Some(w) = workload {
-        cfg.workload = w;
-    }
-    // Same fail-loudly rule within streaming mode: burst shaping only
-    // drives the bursty generator, so it must not silently no-op under
-    // another workload.
-    if streaming && cfg.workload != Workload::Bursty {
-        for name in ["burst-len", "burst-gap-us"] {
-            if args.opt_str(name).is_some() {
-                bail!(
-                    "--{name} requires --workload bursty (got {})",
-                    cfg.workload.name()
-                );
-            }
-        }
-    }
-
-    let hw = HwConfig::load_or_default(&dir);
-    let weights = sensor_weights(&dir, &hw)?;
-    let sim = PixelArraySim::new(hw.clone(), weights.clone());
-    let be = backend::create(cfg.backend, &hw, &cfg, weights)
-        .context("constructing inference backend")?;
+fn serve(spec: SystemSpec) -> Result<()> {
+    let mut sys = System::new(spec);
+    let be = sys.backend()?;
+    let spec = sys.spec();
     println!(
         "backend={} arch={} frames={} workers={} coding={} mode={} \
          sensor={}x{}{}",
         be.name(),
         be.arch(),
-        frames_n,
-        cfg.sensor_workers,
-        cfg.sparse_coding.name(),
-        if streaming { "stream" } else { "oneshot" },
-        cfg.sensor_height,
-        cfg.sensor_width,
-        match cfg.geometry {
+        spec.frames,
+        spec.pipeline.sensor_workers,
+        spec.pipeline.sparse_coding.name(),
+        if spec.streaming { "stream" } else { "oneshot" },
+        spec.pipeline.sensor_height,
+        spec.pipeline.sensor_width,
+        match spec.pipeline.geometry {
             Some(g) => format!(" geometry={}", g.name()),
             None => String::new(),
         },
     );
 
-    let channels = hw.network.in_channels;
-    let pipeline = Pipeline::new(cfg, sim, be)?;
-    let report = if streaming {
+    let report = if sys.spec().streaming {
         // Continuous serving: a workload generator feeds the stream server
         // through blocking submits (backpressure pacing), then a shutdown
         // finishes the in-flight tail.
-        let cfg = pipeline.config();
-        let mut source = stream::make_source(cfg, channels, frames_n as u32);
-        println!(
-            "workload={} queue_depth={} batch_timeout_us={}",
-            source.name(),
-            cfg.queue_depth,
-            cfg.batch_timeout_us
-        );
-        let server = pipeline.stream()?;
-        if let Err(feed_err) = stream::feed(&server, &mut *source) {
-            return Err(server.fail_shutdown(feed_err));
-        }
-        server.shutdown()?
+        sys.serve_stream(|source, cfg| {
+            println!(
+                "workload={} queue_depth={} batch_timeout_us={}",
+                source, cfg.queue_depth, cfg.batch_timeout_us
+            );
+        })?
     } else {
         // CLI workload options hard-error without --stream; a config
-        // file is an ambient profile, so its stream-only keys get a
-        // notice instead of a rejection.
-        if pipeline.config().workload != Workload::Steady {
+        // file (or env var) is an ambient profile, so its stream-only
+        // keys get a notice instead of a rejection.
+        if sys.spec().pipeline.workload != Workload::Steady {
             eprintln!(
                 "note: config workload={} is ignored in oneshot mode \
                  (pass --stream to use it)",
-                pipeline.config().workload.name()
+                sys.spec().pipeline.workload.name()
             );
         }
-        let gen = SceneGen::new(
-            channels,
-            pipeline.config().sensor_height,
-            pipeline.config().sensor_width,
-        );
-        let frames: Vec<_> =
-            (0..frames_n as u32).map(|i| gen.textured(i)).collect();
-        pipeline.serve(frames)?
+        sys.serve()?
     };
 
     println!(
@@ -238,46 +108,19 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn report(args: &Args) -> Result<()> {
+fn report(spec: SystemSpec, args: &Args) -> Result<()> {
     let id = args
         .positional
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
-    let dir = artifacts_dir(args);
-    let out = PathBuf::from(args.str_or("out", "reports"));
-    args.finish()?;
-    let ctx = ReportCtx::new(&dir, &out)?;
+    let ctx = System::new(spec).report_ctx()?;
     reports::run(&id, &ctx)
 }
 
-fn sweep(args: &Args) -> Result<()> {
-    // Same layering as serve: config file provides the ambient profile,
-    // explicit flags override it, and unknown/valueless/attached options
-    // are rejected by finish() (the PR 2 hardening rules — the sweep
-    // grid flags are equally rejected under every other subcommand
-    // because those handlers never consume them).
-    let mut cfg = match args.opt_str("config") {
-        Some(path) => SweepConfig::from_json_file(path)?,
-        None => SweepConfig::default(),
-    };
-    if let Some(grid) = args.opt_str("grid") {
-        cfg.grid = grid;
-    }
-    cfg.trials = args.u32_or("trials", cfg.trials)?;
-    cfg.threads = args.usize_or("threads", cfg.threads)?;
-    cfg.seed = args.u32_or("seed", cfg.seed)?;
-    // Geometry preset first (sets both dimensions), explicit flags win.
-    if let Some(s) = args.opt_str("geometry") {
-        let g = GeometryPreset::parse(&s)?;
-        cfg.geometry = Some(g);
-        (cfg.sensor_height, cfg.sensor_width) = g.dims();
-    }
-    cfg.sensor_height = args.usize_or("height", cfg.sensor_height)?;
-    cfg.sensor_width = args.usize_or("width", cfg.sensor_width)?;
-    cfg.out_dir = args.str_or("out", &cfg.out_dir);
-    args.finish()?;
-
+fn sweep(spec: SystemSpec) -> Result<()> {
+    let sys = System::new(spec);
+    let cfg = &sys.spec().sweep;
     println!(
         "sweep: grid \"{}\" × {} trials at {}×{}{} (seed {})",
         cfg.grid,
@@ -294,7 +137,7 @@ fn sweep(args: &Args) -> Result<()> {
     // the grid index — completion order is scheduling-dependent, the
     // saved JSON is not).
     sweep_report::print_header();
-    let summary = pixelmtj::sweep::run_sweep_with(&cfg, |idx, cell| {
+    let summary = sys.sweep_with(|idx, cell| {
         sweep_report::print_row(idx, cell);
     })?;
     println!(
@@ -305,50 +148,40 @@ fn sweep(args: &Args) -> Result<()> {
         summary.threads_used,
         summary.cells.len() as f64 / summary.wall_secs.max(1e-9)
     );
-    sweep_report::save(&PathBuf::from(&cfg.out_dir), &summary)?;
+    sweep_report::save(&PathBuf::from(&sys.spec().sweep.out_dir), &summary)?;
     Ok(())
 }
 
-fn validate(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    args.finish()?;
-    let report = pixelmtj::validate::run(&dir)?;
+fn validate(spec: SystemSpec) -> Result<()> {
+    let report = System::new(spec).validate()?;
     println!("{report}");
     Ok(())
 }
 
-fn info(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    args.finish()?;
-    let hw = HwConfig::load_or_default(&dir);
+fn info(spec: SystemSpec) -> Result<()> {
+    let mut sys = System::new(spec);
+    let spec = sys.spec();
+    let dir = spec.artifacts_path();
     println!("artifacts dir: {}", dir.display());
     println!(
         "device: R_P={:.0} Ω, TMR₀={:.0} %, {} MTJs/neuron (majority ≥{})",
-        hw.mtj.r_p_ohm,
-        hw.mtj.tmr_zero_bias * 100.0,
-        hw.mtj.n_mtj_per_neuron,
-        hw.mtj.majority_k
+        spec.hw.mtj.r_p_ohm,
+        spec.hw.mtj.tmr_zero_bias * 100.0,
+        spec.hw.mtj.n_mtj_per_neuron,
+        spec.hw.mtj.majority_k
     );
     println!(
         "first layer: {}→{} ch, k={}, stride={}, {}-bit weights",
-        hw.network.in_channels,
-        hw.network.first_channels,
-        hw.network.kernel_size,
-        hw.network.stride,
-        hw.network.weight_bits
+        spec.hw.network.in_channels,
+        spec.hw.network.first_channels,
+        spec.hw.network.kernel_size,
+        spec.hw.network.stride,
+        spec.hw.network.weight_bits
     );
-    let cfg = PipelineConfig::default();
-    // `auto` already constructs (and for pjrt, compiles) the backend; its
-    // arch string carries the platform, so nothing is built twice here.
-    let weights = sensor_weights(&dir, &hw)?;
-    let be = backend::auto(
-        &dir,
-        &hw,
-        cfg.sensor_height,
-        cfg.sensor_width,
-        1,
-        weights,
-    )?;
+    // `auto_backend` already constructs (and for pjrt, compiles) the
+    // backend; its arch string carries the platform, so nothing is built
+    // twice here.
+    let be = sys.auto_backend()?;
     println!(
         "backend: {} ({}) — act {:?}, {} classes",
         be.name(),
@@ -356,7 +189,8 @@ fn info(args: &Args) -> Result<()> {
         be.act_shape(),
         be.num_classes()
     );
-    match pixelmtj::config::ArtifactMeta::from_dir(&dir) {
+    match pixelmtj::config::ArtifactMeta::from_dir(&sys.spec().artifacts_path())
+    {
         Ok(m) => println!(
             "artifacts: arch={} img{:?} act{:?} batches{:?}",
             m.arch, m.img_shape, m.act_shape, m.batches
@@ -367,5 +201,41 @@ fn info(args: &Args) -> Result<()> {
     }
     #[cfg(not(feature = "pjrt"))]
     println!("PJRT: not compiled in (build with --features pjrt)");
+    println!();
+    print_resolved(sys.spec());
     Ok(())
+}
+
+fn config(spec: SystemSpec) -> Result<()> {
+    print_resolved(&spec);
+    Ok(())
+}
+
+/// The provenance table behind `pixelmtj config` / `pixelmtj info`:
+/// every registry field with its resolved value and the layer that
+/// supplied it, so misconfiguration is diagnosable at a glance.
+fn print_resolved(spec: &SystemSpec) {
+    println!(
+        "resolved configuration \
+         (defaults < hwcfg < --config file < PIXELMTJ_* env < flags):"
+    );
+    println!("  {:<14} {:<24} {}", "field", "value", "provenance");
+    println!(
+        "  {:<14} {:<24} {}",
+        "config",
+        spec.config_path.as_deref().unwrap_or("-"),
+        spec.provenance("config").name()
+    );
+    for (name, value, prov) in spec.resolved_rows() {
+        println!("  {name:<14} {value:<24} {}", prov.name());
+    }
+    println!(
+        "  {:<14} {:<24} {}",
+        "hw",
+        match spec.hw_provenance {
+            pixelmtj::config::Provenance::Hwcfg => "hwcfg.json",
+            _ => "paper defaults",
+        },
+        spec.hw_provenance.name()
+    );
 }

@@ -197,7 +197,7 @@ pub fn fig8(ctx: &ReportCtx) -> Result<()> {
 /// Ablation report: accuracy vs the drive-stage gain in physical capture
 /// mode (DESIGN.md §Findings 1) and vs the sparse coding choice.
 pub fn ablation(ctx: &ReportCtx) -> Result<()> {
-    use crate::config::SparseCoding;
+    use crate::config::{KeyedEnum, SparseCoding};
     use crate::coordinator::sparse;
 
     let (backend, _, eval) = setup(ctx)?;

@@ -8,6 +8,7 @@
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 
+use crate::config::KeyedEnum;
 use crate::sweep::{CellResult, SweepSummary};
 use crate::util::json::Value;
 

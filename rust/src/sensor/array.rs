@@ -24,11 +24,9 @@
 //! storage — what the representation-equivalence tests and the legacy arm
 //! of `benches/pack.rs` compare against.
 
-use anyhow::Result;
-
 use crate::circuit::readout::BurstReader;
 use crate::circuit::subtractor::{threshold_to_volts, AnalogSubtractor};
-use crate::config::{HwConfig, MtjConfig};
+use crate::config::{HwConfig, KeyedEnum, MtjConfig};
 use crate::device::fault::StuckFaults;
 use crate::device::mtj::{MtjModel, MtjState};
 use crate::device::neuron::MultiMtjNeuron;
@@ -44,27 +42,15 @@ pub enum CaptureMode {
     PhysicalMtj,
 }
 
-impl CaptureMode {
-    /// Parse the CLI / sweep-grid spelling of a capture mode.
-    pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "ideal" => Ok(Self::Ideal),
-            "calibrated" => Ok(Self::CalibratedMtj),
-            "physical" => Ok(Self::PhysicalMtj),
-            other => anyhow::bail!(
-                "unknown capture mode '{other}' (expected 'ideal', \
-                 'calibrated' or 'physical')"
-            ),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Ideal => "ideal",
-            Self::CalibratedMtj => "calibrated",
-            Self::PhysicalMtj => "physical",
-        }
-    }
+/// The CLI / sweep-grid spelling of a capture mode (`parse`/`name` come
+/// from the shared [`KeyedEnum`] mechanism).
+impl KeyedEnum for CaptureMode {
+    const WHAT: &'static str = "capture mode";
+    const VARIANTS: &'static [(&'static str, Self)] = &[
+        ("ideal", Self::Ideal),
+        ("calibrated", Self::CalibratedMtj),
+        ("physical", Self::PhysicalMtj),
+    ];
 }
 
 /// Operating point + reliability knobs for one sweep cell (see

@@ -22,7 +22,7 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::config::MtjConfig;
+use crate::config::{KeyedEnum, MtjConfig};
 use crate::device::fault::StuckFaults;
 use crate::sensor::array::{CaptureMode, OperatingPoint};
 

@@ -1,0 +1,425 @@
+//! The typed front door: one [`System`] facade over the whole stack.
+//!
+//! [`SystemSpec`] (see [`spec`]) is the fully resolved, provenance-
+//! tracked configuration; [`System`] turns a spec into running machinery
+//! — sensor simulator, inference backend, serving pipeline, streaming
+//! server, sweep campaigns, validation, reports — so CLI subcommands,
+//! examples, integration tests, and service embedders are all thin
+//! callers over the same construction path instead of hand-assembling
+//! `PixelArraySim` + weights + backend per call site.
+//!
+//! ```no_run
+//! use pixelmtj::system::System;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut sys = System::builder().frames(16).build();
+//! let report = sys.serve()?;
+//! println!("{:.1} fps", report.fps);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Construction is lazy: `validate`/`report_ctx` never build a backend,
+//! and the first-layer weights (golden export when present, synthetic
+//! otherwise) are loaded once and shared between the sensor simulator
+//! and the native backend, keeping the two in sync by construction.
+
+pub mod spec;
+
+pub use spec::{resolve_spec, usage, SystemSpec};
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::backend::{self, InferenceBackend};
+use crate::config::{
+    BackendKind, Cmd, GeometryPreset, KeyedEnum, Provenance, SparseCoding,
+    SweepConfig, Workload,
+};
+use crate::coordinator::stream::{self, FrameSource, StreamServer};
+use crate::coordinator::{Pipeline, RunReport};
+use crate::reports::ReportCtx;
+use crate::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
+use crate::sweep::{run_sweep_with, CellResult, SweepSummary};
+
+/// The system facade: a resolved [`SystemSpec`] plus lazily built
+/// machinery (weights → sensor sim → backend → pipeline, each cached).
+pub struct System {
+    spec: SystemSpec,
+    weights: Option<FirstLayerWeights>,
+    sim: Option<Arc<PixelArraySim>>,
+    pipeline: Option<Pipeline>,
+}
+
+impl System {
+    /// Programmatic entry for examples / tests / embedders: defaults +
+    /// `artifacts/hwcfg.json` + explicit setters (see [`SystemBuilder`]).
+    pub fn builder() -> SystemBuilder {
+        SystemBuilder::new()
+    }
+
+    /// Wrap an already resolved spec (the CLI path).
+    pub fn new(spec: SystemSpec) -> Self {
+        Self { spec, weights: None, sim: None, pipeline: None }
+    }
+
+    pub fn spec(&self) -> &SystemSpec {
+        &self.spec
+    }
+
+    /// First-layer weights: the AOT golden export when present,
+    /// deterministic synthetic weights otherwise (with a stderr notice on
+    /// fallback, loaded once — sensor sim and native backend stay in
+    /// sync by construction).
+    pub fn weights(&mut self) -> Result<FirstLayerWeights> {
+        if self.weights.is_none() {
+            let dir = self.spec.artifacts_path();
+            let golden = dir.join("golden.json");
+            if !golden.exists() {
+                eprintln!(
+                    "note: {} missing — using synthetic first-layer weights",
+                    golden.display()
+                );
+            }
+            self.weights = Some(backend::load_weights(&dir, &self.spec.hw)?);
+        }
+        Ok(self.weights.clone().unwrap())
+    }
+
+    /// The in-pixel sensor simulator over the spec's hw block + weights.
+    pub fn sim(&mut self) -> Result<Arc<PixelArraySim>> {
+        if self.sim.is_none() {
+            let weights = self.weights()?;
+            self.sim = Some(Arc::new(PixelArraySim::new(
+                self.spec.hw.clone(),
+                weights,
+            )));
+        }
+        Ok(self.sim.clone().unwrap())
+    }
+
+    fn ensure_pipeline(&mut self) -> Result<&Pipeline> {
+        if self.pipeline.is_none() {
+            let weights = self.weights()?;
+            let sim = self.sim()?;
+            let be = backend::create(
+                self.spec.pipeline.backend,
+                &self.spec.hw,
+                &self.spec.pipeline,
+                weights,
+            )
+            .context("constructing inference backend")?;
+            self.pipeline = Some(Pipeline::with_shared_sim(
+                self.spec.pipeline.clone(),
+                sim,
+                be,
+            )?);
+        }
+        Ok(self.pipeline.as_ref().unwrap())
+    }
+
+    /// The serving pipeline (constructed on first use).
+    pub fn pipeline(&mut self) -> Result<&Pipeline> {
+        self.ensure_pipeline()
+    }
+
+    /// The configured inference backend (`spec.pipeline.backend`).
+    pub fn backend(&mut self) -> Result<Arc<dyn InferenceBackend>> {
+        Ok(self.ensure_pipeline()?.backend().clone())
+    }
+
+    /// Best-available backend for the artifacts dir (PJRT when compiled
+    /// in and artifacts exist, native otherwise) — the `info` /
+    /// quickstart path, independent of the configured backend.
+    pub fn auto_backend(&mut self) -> Result<Arc<dyn InferenceBackend>> {
+        let weights = self.weights()?;
+        backend::auto(
+            &self.spec.artifacts_path(),
+            &self.spec.hw,
+            self.spec.pipeline.sensor_height,
+            self.spec.pipeline.sensor_width,
+            1,
+            weights,
+        )
+    }
+
+    /// Serve `spec.frames` synthetic textured frames through the oneshot
+    /// pipeline and return the run report.
+    pub fn serve(&mut self) -> Result<RunReport> {
+        let channels = self.spec.hw.network.in_channels;
+        let total = self.spec.frames as u32;
+        let pl = self.ensure_pipeline()?;
+        let gen = SceneGen::new(
+            channels,
+            pl.config().sensor_height,
+            pl.config().sensor_width,
+        );
+        let frames: Vec<_> = (0..total).map(|i| gen.textured(i)).collect();
+        pl.serve(frames)
+    }
+
+    /// Start a live streaming server sharing this system's sensor,
+    /// backend, and metrics.
+    pub fn stream(&mut self) -> Result<StreamServer> {
+        self.ensure_pipeline()?.stream()
+    }
+
+    /// Continuous serving: build the spec's workload generator over
+    /// `spec.frames` frames, feed it through blocking submits, and shut
+    /// down the in-flight tail.  `announce` sees the source name and the
+    /// effective pipeline config before serving starts (banner hook).
+    pub fn serve_stream(
+        &mut self,
+        announce: impl FnOnce(&str, &crate::config::PipelineConfig),
+    ) -> Result<RunReport> {
+        let channels = self.spec.hw.network.in_channels;
+        let total = self.spec.frames as u32;
+        let pl = self.ensure_pipeline()?;
+        let mut source = stream::make_source(pl.config(), channels, total);
+        announce(source.name(), pl.config());
+        let server = pl.stream()?;
+        if let Err(feed_err) = stream::feed(&server, &mut *source) {
+            return Err(server.fail_shutdown(feed_err));
+        }
+        server.shutdown()
+    }
+
+    /// Run the spec's Monte-Carlo sweep campaign (deterministic for any
+    /// thread count), streaming each cell to `on_cell` as it completes.
+    pub fn sweep_with(
+        &self,
+        on_cell: impl FnMut(usize, &CellResult),
+    ) -> Result<SweepSummary> {
+        run_sweep_with(&self.spec.sweep, on_cell)
+    }
+
+    /// Run the sweep without a streaming sink.
+    pub fn sweep(&self) -> Result<SweepSummary> {
+        self.sweep_with(|_, _| {})
+    }
+
+    /// Cross-language artifact validation (`pixelmtj validate`).
+    pub fn validate(&self) -> Result<String> {
+        crate::validate::run(&self.spec.artifacts_path())
+    }
+
+    /// Report-generator context over the spec's artifacts/output dirs.
+    pub fn report_ctx(&self) -> Result<ReportCtx> {
+        ReportCtx::new(
+            &self.spec.artifacts_path(),
+            std::path::Path::new(&self.spec.out_dir),
+        )
+    }
+}
+
+/// Builder facade for programmatic callers: starts from the spec
+/// defaults, loads the `hwcfg.json` layer from the artifacts dir at
+/// [`SystemBuilder::build`], and records every explicit setter with
+/// [`Provenance::Cli`] so `spec.provenance(..)` stays truthful for
+/// embedders too.  (File/env layers belong to the CLI resolver —
+/// [`resolve_spec`].)
+pub struct SystemBuilder {
+    spec: SystemSpec,
+}
+
+impl Default for SystemBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SystemBuilder {
+    pub fn new() -> Self {
+        Self { spec: SystemSpec::defaults(Cmd::Config) }
+    }
+
+    /// Route a value through the registry's own setter (same parse and
+    /// derived-provenance logic as the CLI layer — declared once, used
+    /// everywhere).  Builder setters pass registry-typed values, so a
+    /// parse failure is a programming error.
+    fn set_field(mut self, name: &'static str, raw: &str) -> Self {
+        spec::apply_field(&mut self.spec, name, raw, Provenance::Cli)
+            .expect("builder setters pass registry-typed values");
+        self
+    }
+
+    /// Bare-flag fields have one-directional registry setters, so the
+    /// boolean builder spellings write the spec directly (still marked).
+    fn set_flag(mut self, field: &'static str, f: impl FnOnce(&mut SystemSpec)) -> Self {
+        f(&mut self.spec);
+        self.spec.mark(field, Provenance::Cli);
+        self
+    }
+
+    /// Artifacts directory (hwcfg/golden/meta location).
+    pub fn artifacts_dir(self, dir: impl Into<String>) -> Self {
+        let dir = dir.into();
+        self.set_field("artifacts", &dir)
+    }
+
+    /// Geometry preset: sets sensor dimensions for serve and sweep.
+    pub fn geometry(self, g: GeometryPreset) -> Self {
+        self.set_field("geometry", g.name())
+    }
+
+    /// Explicit sensor dimensions (win over a preset, like the CLI).
+    pub fn dims(self, height: usize, width: usize) -> Self {
+        self.set_field("height", &height.to_string())
+            .set_field("width", &width.to_string())
+    }
+
+    pub fn backend(self, b: BackendKind) -> Self {
+        self.set_field("backend", b.name())
+    }
+
+    pub fn coding(self, c: SparseCoding) -> Self {
+        self.set_field("coding", c.name())
+    }
+
+    pub fn workload(self, w: Workload) -> Self {
+        self.set_field("workload", w.name())
+    }
+
+    /// Stochastic MTJ switching in the sensor sim (positive sense; the
+    /// CLI spells disabling it `--no-mtj-noise`).
+    pub fn mtj_noise(self, on: bool) -> Self {
+        self.set_flag("no-mtj-noise", |s| s.pipeline.mtj_noise = on)
+    }
+
+    pub fn frames(self, n: usize) -> Self {
+        self.set_field("frames", &n.to_string())
+    }
+
+    pub fn workers(self, n: usize) -> Self {
+        self.set_field("workers", &n.to_string())
+    }
+
+    pub fn queue_depth(self, n: usize) -> Self {
+        self.set_field("queue-depth", &n.to_string())
+    }
+
+    pub fn streaming(self, on: bool) -> Self {
+        self.set_flag("stream", |s| s.streaming = on)
+    }
+
+    /// Replace the whole sweep campaign profile: every sweep-scoped
+    /// registry field is marked as explicitly set (the list derives from
+    /// the registry, so new sweep fields can't drift) and the pipeline
+    /// sensor dims follow the campaign's — the same sync the
+    /// height/width/geometry fields keep.
+    pub fn sweep_config(mut self, sweep: SweepConfig) -> Self {
+        self.spec.pipeline.sensor_height = sweep.sensor_height;
+        self.spec.pipeline.sensor_width = sweep.sensor_width;
+        self.spec.pipeline.geometry = sweep.geometry;
+        self.spec.out_dir = sweep.out_dir.clone();
+        let has_geometry = sweep.geometry.is_some();
+        self.spec.sweep = sweep;
+        for field in spec::registry()
+            .iter()
+            .filter(|f| f.name != "config" && f.cmds.contains(&Cmd::Sweep))
+        {
+            if field.name == "geometry" && !has_geometry {
+                continue;
+            }
+            self.spec.mark(field.name, Provenance::Cli);
+        }
+        self
+    }
+
+    pub fn out_dir(self, dir: impl Into<String>) -> Self {
+        let dir = dir.into();
+        self.set_field("out", &dir)
+    }
+
+    /// Apply the `hwcfg.json` layer from the (possibly overridden)
+    /// artifacts dir and hand back the facade.
+    pub fn build(mut self) -> System {
+        let hwcfg = self.spec.artifacts_path().join("hwcfg.json");
+        if let Ok(hw) = crate::config::HwConfig::from_json_file(&hwcfg) {
+            self.spec.hw = hw;
+            self.spec.hw_provenance = Provenance::Hwcfg;
+        }
+        System::new(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_marks_explicit_setters() {
+        let sys = System::builder()
+            .frames(4)
+            .coding(SparseCoding::Dense)
+            .geometry(GeometryPreset::Cifar)
+            .build();
+        let spec = sys.spec();
+        assert_eq!(spec.frames, 4);
+        assert_eq!(spec.provenance("frames"), Provenance::Cli);
+        assert_eq!(spec.provenance("coding"), Provenance::Cli);
+        assert_eq!(spec.provenance("workers"), Provenance::Default);
+        assert_eq!(spec.pipeline.geometry.unwrap().name(), "cifar");
+    }
+
+    #[test]
+    fn sweep_config_marks_fields_and_syncs_pipeline_dims() {
+        let sys = System::builder()
+            .sweep_config(SweepConfig {
+                sensor_height: 224,
+                sensor_width: 224,
+                trials: 8,
+                ..SweepConfig::default()
+            })
+            .build();
+        let spec = sys.spec();
+        assert_eq!(spec.sweep.trials, 8);
+        assert_eq!(
+            (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+            (224, 224),
+            "pipeline dims follow the campaign's"
+        );
+        for field in ["grid", "trials", "threads", "seed", "height", "width"] {
+            assert_eq!(spec.provenance(field), Provenance::Cli, "{field}");
+        }
+    }
+
+    #[test]
+    fn builder_dims_win_over_preset_like_the_cli() {
+        let sys = System::builder()
+            .geometry(GeometryPreset::ImagenetVgg16)
+            .dims(64, 48)
+            .build();
+        let spec = sys.spec();
+        assert_eq!(
+            (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+            (64, 48)
+        );
+        assert_eq!(
+            (spec.sweep.sensor_height, spec.sweep.sensor_width),
+            (64, 48)
+        );
+    }
+
+    #[test]
+    fn facade_serves_end_to_end_on_the_native_backend() {
+        let mut sys = System::builder()
+            .artifacts_dir("/nonexistent")
+            .frames(3)
+            .workers(2)
+            .build();
+        let report = sys.serve().unwrap();
+        assert_eq!(report.results.len(), 3);
+        for (i, c) in report.results.iter().enumerate() {
+            assert_eq!(c.seq, i as u32);
+        }
+        // Same machinery again: the cached pipeline serves a stream too.
+        let report = sys
+            .serve_stream(|name, cfg| {
+                assert_eq!(name, "steady");
+                assert!(cfg.queue_depth > 0);
+            })
+            .unwrap();
+        assert_eq!(report.results.len(), 3);
+    }
+}

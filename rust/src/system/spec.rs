@@ -1,0 +1,815 @@
+//! [`SystemSpec`]: the fully resolved configuration of the whole stack,
+//! produced by one declarative field registry and one layered resolver.
+//!
+//! Every runtime-tunable field is declared exactly once in the crate-
+//! private field registry (`build_registry` below):
+//! its CLI flag, its JSON config key, its `PIXELMTJ_*` env var, which
+//! subcommands accept it, how it parses, and where it lands in the spec.
+//! The resolver applies the layers in precedence order
+//!
+//! ```text
+//! defaults < artifacts/hwcfg.json < --config FILE < PIXELMTJ_* env < CLI
+//! ```
+//!
+//! recording per-field [`Provenance`] as it goes, so `pixelmtj config`
+//! and `pixelmtj info` can show exactly where every value came from.
+//! The per-subcommand accepted-flag tables and the usage text are derived
+//! from the same registry, so unknown or misplaced flags (`--grid`
+//! outside `sweep`, `--workload` without `--stream`) are rejected by one
+//! mechanism instead of per-site checks.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use crate::config::{
+    env_key, BackendKind, Cmd, EnvSource, GeometryPreset, HwConfig,
+    KeyedEnum, PipelineConfig, Provenance, SparseCoding, SweepConfig,
+    Workload,
+};
+use crate::util::cli::Args;
+use crate::util::json::Value;
+
+/// The fully resolved, provenance-tracked configuration of the stack:
+/// the [`HwConfig`] block (device/circuit/network), the serving pipeline,
+/// the sweep campaign, and the serve-entry knobs that never lived in a
+/// config struct before (`frames`, `--stream`).
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    /// Subcommand this spec was resolved for (gates the CLI flag table).
+    pub cmd: Cmd,
+    /// Device/circuit/network block (`artifacts/hwcfg.json` layer).
+    pub hw: HwConfig,
+    /// Where the `hw` block came from (`default` or `hwcfg`).
+    pub hw_provenance: Provenance,
+    /// Serving-pipeline configuration (`serve`, examples, streaming).
+    pub pipeline: PipelineConfig,
+    /// Monte-Carlo campaign configuration (`sweep`).
+    pub sweep: SweepConfig,
+    /// Frames served by the oneshot/stream entry (`--frames`).
+    pub frames: usize,
+    /// `serve --stream`: continuous workload-generator serving.
+    pub streaming: bool,
+    /// Report output directory (`report --out`; `sweep` uses
+    /// [`SweepConfig::out_dir`], kept in sync by the shared `out` field).
+    pub out_dir: String,
+    /// The `--config` / `PIXELMTJ_CONFIG` profile path, when given.
+    pub config_path: Option<String>,
+    prov: BTreeMap<&'static str, Provenance>,
+}
+
+impl SystemSpec {
+    /// Pure defaults (no file, env, or CLI layer applied).
+    pub fn defaults(cmd: Cmd) -> Self {
+        Self {
+            cmd,
+            hw: HwConfig::default(),
+            hw_provenance: Provenance::Default,
+            pipeline: PipelineConfig::default(),
+            sweep: SweepConfig::default(),
+            frames: 256,
+            streaming: false,
+            out_dir: "reports".to_string(),
+            config_path: None,
+            prov: BTreeMap::new(),
+        }
+    }
+
+    /// Resolve the full layer stack for `cmd`: defaults, then the
+    /// `--config` JSON profile, then `PIXELMTJ_*` env vars, then CLI
+    /// flags, then the `hwcfg.json` block from the resolved artifacts
+    /// dir.  Rejects unknown/misplaced/valueless flags via
+    /// [`Args::finish`] and enforces the serve cross-flag rules.
+    pub fn resolve(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<Self> {
+        resolve_spec(cmd, args, env)
+    }
+
+    /// Which layer supplied `field` (registry name, e.g. `"coding"`).
+    pub fn provenance(&self, field: &str) -> Provenance {
+        self.prov.get(field).copied().unwrap_or(Provenance::Default)
+    }
+
+    pub(crate) fn mark(&mut self, field: &'static str, p: Provenance) {
+        self.prov.insert(field, p);
+    }
+
+    /// Resolved artifacts directory.
+    pub fn artifacts_path(&self) -> PathBuf {
+        PathBuf::from(&self.pipeline.artifacts_dir)
+    }
+
+    /// `(field, value, provenance)` for every registry field, in
+    /// registry order — the body of `pixelmtj config` / `pixelmtj info`.
+    pub fn resolved_rows(&self) -> Vec<(&'static str, String, Provenance)> {
+        registry()
+            .iter()
+            .filter(|f| f.name != "config")
+            .map(|f| (f.name, (f.get)(self), self.provenance(f.name)))
+            .collect()
+    }
+}
+
+/// How a registry field parses and where it lands in the spec.
+#[derive(Clone, Copy)]
+pub(crate) enum Kind {
+    USize(fn(&mut SystemSpec, usize)),
+    U32(fn(&mut SystemSpec, u32)),
+    U64(fn(&mut SystemSpec, u64)),
+    Str(fn(&mut SystemSpec, String)),
+    /// Keyed-enum field: the setter parses via [`KeyedEnum::parse`] so
+    /// the rejection message is the shared one.
+    Keyed(fn(&mut SystemSpec, &str) -> Result<()>),
+    /// Bare flag (`--stream`, `--no-mtj-noise`).
+    Flag(fn(&mut SystemSpec)),
+}
+
+/// One declarative field: CLI flag + JSON key + env var + accepted
+/// subcommands + parse/apply + display, all from one row.
+pub(crate) struct FieldDef {
+    /// CLI flag name (`--<name>`); env var is `PIXELMTJ_<NAME>`.
+    pub name: &'static str,
+    /// Value hint for usage text (`N`, `DIR`, `dense|csr|rle`).
+    pub hint: String,
+    /// JSON config-file key, when the field is file-settable.
+    pub json: Option<&'static str>,
+    /// Subcommands whose CLI accepts the flag ([`Cmd::Config`] accepts
+    /// everything; env + file layers are ambient and ungated).
+    pub cmds: &'static [Cmd],
+    pub kind: Kind,
+    /// Extra provenance marks for derived fields (a geometry preset also
+    /// determines the sensor dimensions).
+    pub also_marks: &'static [&'static str],
+    /// Render the resolved value for the provenance table.
+    pub get: fn(&SystemSpec) -> String,
+}
+
+const SERVE: &[Cmd] = &[Cmd::Serve, Cmd::Config];
+const SWEEP: &[Cmd] = &[Cmd::Sweep, Cmd::Config];
+const GEOM: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
+const DIRS: &[Cmd] = &[Cmd::Serve, Cmd::Report, Cmd::Validate, Cmd::Info, Cmd::Config];
+const FILES: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
+const OUT: &[Cmd] = &[Cmd::Report, Cmd::Sweep, Cmd::Config];
+
+/// One row per field; `FieldDef` literals keep every declaration in one
+/// place (flag + json key + subcommands + parse + display).
+fn build_registry() -> Vec<FieldDef> {
+    vec![
+        FieldDef {
+            name: "frames",
+            hint: "N".to_string(),
+            json: None,
+            cmds: SERVE,
+            kind: Kind::USize(|s, v| s.frames = v),
+            also_marks: &[],
+            get: |s| s.frames.to_string(),
+        },
+        FieldDef {
+            name: "workers",
+            hint: "N".to_string(),
+            json: Some("sensor_workers"),
+            cmds: SERVE,
+            kind: Kind::USize(|s, v| s.pipeline.sensor_workers = v),
+            also_marks: &[],
+            get: |s| s.pipeline.sensor_workers.to_string(),
+        },
+        FieldDef {
+            name: "coding",
+            hint: SparseCoding::keys_pipe(),
+            json: Some("sparse_coding"),
+            cmds: SERVE,
+            kind: Kind::Keyed(|s, v| {
+                s.pipeline.sparse_coding = SparseCoding::parse(v)?;
+                Ok(())
+            }),
+            also_marks: &[],
+            get: |s| s.pipeline.sparse_coding.name().to_string(),
+        },
+        FieldDef {
+            name: "backend",
+            hint: BackendKind::keys_pipe(),
+            json: Some("backend"),
+            cmds: SERVE,
+            kind: Kind::Keyed(|s, v| {
+                s.pipeline.backend = BackendKind::parse(v)?;
+                Ok(())
+            }),
+            also_marks: &[],
+            get: |s| s.pipeline.backend.name().to_string(),
+        },
+        FieldDef {
+            name: "no-mtj-noise",
+            hint: String::new(),
+            json: Some("mtj_noise"),
+            cmds: SERVE,
+            kind: Kind::Flag(|s| s.pipeline.mtj_noise = false),
+            also_marks: &[],
+            get: |s| (!s.pipeline.mtj_noise).to_string(),
+        },
+        FieldDef {
+            name: "geometry",
+            hint: GeometryPreset::keys_pipe(),
+            json: Some("geometry"),
+            cmds: GEOM,
+            kind: Kind::Keyed(|s, v| {
+                let g = GeometryPreset::parse(v)?;
+                s.pipeline.geometry = Some(g);
+                (s.pipeline.sensor_height, s.pipeline.sensor_width) =
+                    g.dims();
+                s.sweep.geometry = Some(g);
+                (s.sweep.sensor_height, s.sweep.sensor_width) = g.dims();
+                Ok(())
+            }),
+            also_marks: &["height", "width"],
+            get: |s| match s.pipeline.geometry {
+                Some(g) => g.name().to_string(),
+                None => "-".to_string(),
+            },
+        },
+        FieldDef {
+            name: "artifacts",
+            hint: "DIR".to_string(),
+            json: Some("artifacts_dir"),
+            cmds: DIRS,
+            kind: Kind::Str(|s, v| s.pipeline.artifacts_dir = v),
+            also_marks: &[],
+            get: |s| s.pipeline.artifacts_dir.clone(),
+        },
+        // The `config` field is consumed by the resolver itself (it names
+        // the file layer); the row exists for flag gating + usage text.
+        FieldDef {
+            name: "config",
+            hint: "FILE".to_string(),
+            json: None,
+            cmds: FILES,
+            kind: Kind::Str(|s, v| s.config_path = Some(v)),
+            also_marks: &[],
+            get: |s| {
+                s.config_path.clone().unwrap_or_else(|| "-".to_string())
+            },
+        },
+        FieldDef {
+            name: "stream",
+            hint: String::new(),
+            json: None,
+            cmds: SERVE,
+            kind: Kind::Flag(|s| s.streaming = true),
+            also_marks: &[],
+            get: |s| s.streaming.to_string(),
+        },
+        FieldDef {
+            name: "workload",
+            hint: Workload::keys_pipe(),
+            json: Some("workload"),
+            cmds: SERVE,
+            kind: Kind::Keyed(|s, v| {
+                s.pipeline.workload = Workload::parse(v)?;
+                Ok(())
+            }),
+            also_marks: &[],
+            get: |s| s.pipeline.workload.name().to_string(),
+        },
+        FieldDef {
+            name: "queue-depth",
+            hint: "N".to_string(),
+            json: Some("queue_depth"),
+            cmds: SERVE,
+            kind: Kind::USize(|s, v| s.pipeline.queue_depth = v),
+            also_marks: &[],
+            get: |s| s.pipeline.queue_depth.to_string(),
+        },
+        FieldDef {
+            name: "burst-len",
+            hint: "N".to_string(),
+            json: Some("burst_len"),
+            cmds: SERVE,
+            kind: Kind::USize(|s, v| s.pipeline.burst_len = v),
+            also_marks: &[],
+            get: |s| s.pipeline.burst_len.to_string(),
+        },
+        FieldDef {
+            name: "burst-gap-us",
+            hint: "N".to_string(),
+            json: Some("burst_gap_us"),
+            cmds: SERVE,
+            kind: Kind::U64(|s, v| s.pipeline.burst_gap_us = v),
+            also_marks: &[],
+            get: |s| s.pipeline.burst_gap_us.to_string(),
+        },
+        FieldDef {
+            name: "grid",
+            hint: "SPEC".to_string(),
+            json: Some("grid"),
+            cmds: SWEEP,
+            kind: Kind::Str(|s, v| s.sweep.grid = v),
+            also_marks: &[],
+            get: |s| s.sweep.grid.clone(),
+        },
+        FieldDef {
+            name: "trials",
+            hint: "N".to_string(),
+            json: Some("trials"),
+            cmds: SWEEP,
+            kind: Kind::U32(|s, v| s.sweep.trials = v),
+            also_marks: &[],
+            get: |s| s.sweep.trials.to_string(),
+        },
+        FieldDef {
+            name: "threads",
+            hint: "N".to_string(),
+            json: Some("threads"),
+            cmds: SWEEP,
+            kind: Kind::USize(|s, v| s.sweep.threads = v),
+            also_marks: &[],
+            get: |s| s.sweep.threads.to_string(),
+        },
+        FieldDef {
+            name: "seed",
+            hint: "N".to_string(),
+            json: Some("seed"),
+            cmds: SWEEP,
+            kind: Kind::U32(|s, v| s.sweep.seed = v),
+            also_marks: &[],
+            get: |s| s.sweep.seed.to_string(),
+        },
+        FieldDef {
+            name: "height",
+            hint: "N".to_string(),
+            json: Some("sensor_height"),
+            cmds: SWEEP,
+            kind: Kind::USize(|s, v| {
+                s.sweep.sensor_height = v;
+                s.pipeline.sensor_height = v;
+            }),
+            also_marks: &[],
+            get: |s| s.sweep.sensor_height.to_string(),
+        },
+        FieldDef {
+            name: "width",
+            hint: "N".to_string(),
+            json: Some("sensor_width"),
+            cmds: SWEEP,
+            kind: Kind::USize(|s, v| {
+                s.sweep.sensor_width = v;
+                s.pipeline.sensor_width = v;
+            }),
+            also_marks: &[],
+            get: |s| s.sweep.sensor_width.to_string(),
+        },
+        FieldDef {
+            name: "out",
+            hint: "DIR".to_string(),
+            json: Some("out_dir"),
+            cmds: OUT,
+            kind: Kind::Str(|s, v| {
+                s.sweep.out_dir = v.clone();
+                s.out_dir = v;
+            }),
+            also_marks: &[],
+            get: |s| s.sweep.out_dir.clone(),
+        },
+    ]
+}
+
+/// The declarative field registry (built once, immutable).
+pub(crate) fn registry() -> &'static [FieldDef] {
+    static REG: OnceLock<Vec<FieldDef>> = OnceLock::new();
+    REG.get_or_init(build_registry).as_slice()
+}
+
+fn parse_int<T: std::str::FromStr>(raw: &str, label: &str) -> Result<T> {
+    raw.parse()
+        .map_err(|_| anyhow!("{label} expects an integer, got {raw:?}"))
+}
+
+/// Apply one non-flag field value from any layer; `label` names the
+/// source for error messages (`--frames` vs `PIXELMTJ_FRAMES`).  Keyed
+/// rejections carry their own wording (parity-pinned for the CLI), so
+/// only non-CLI sources prefix it with the label.
+fn apply_value(
+    spec: &mut SystemSpec,
+    field: &FieldDef,
+    raw: &str,
+    label: &str,
+    label_keyed: bool,
+) -> Result<()> {
+    match field.kind {
+        Kind::USize(set) => set(spec, parse_int(raw, label)?),
+        Kind::U32(set) => set(spec, parse_int(raw, label)?),
+        Kind::U64(set) => set(spec, parse_int(raw, label)?),
+        Kind::Str(set) => set(spec, raw.to_string()),
+        Kind::Keyed(set) => set(spec, raw).map_err(|e| {
+            if label_keyed {
+                anyhow!("{label}: {e}")
+            } else {
+                e
+            }
+        })?,
+        Kind::Flag(_) => unreachable!("flags apply via their setter"),
+    }
+    Ok(())
+}
+
+/// Apply one registry field by name with `p` provenance (including the
+/// derived marks) — the [`crate::system::SystemBuilder`] entry point, so
+/// programmatic setters reuse the registry's setter logic instead of
+/// duplicating it.  Unknown names are a programming error.
+pub(crate) fn apply_field(
+    spec: &mut SystemSpec,
+    name: &str,
+    raw: &str,
+    p: Provenance,
+) -> Result<()> {
+    let field = registry()
+        .iter()
+        .find(|f| f.name == name)
+        .unwrap_or_else(|| panic!("unknown registry field '{name}'"));
+    apply_value(spec, field, raw, &format!("--{name}"), false)?;
+    mark_with_derived(spec, field, p);
+    Ok(())
+}
+
+fn mark_with_derived(spec: &mut SystemSpec, field: &FieldDef, p: Provenance) {
+    spec.mark(field.name, p);
+    for &m in field.also_marks {
+        spec.mark(m, p);
+    }
+}
+
+fn env_flag(key: &str, raw: &str) -> Result<bool> {
+    match raw {
+        "1" | "true" | "yes" | "on" => Ok(true),
+        "" | "0" | "false" | "no" | "off" => Ok(false),
+        other => bail!("{key} expects a boolean (1/0/true/false), got {other:?}"),
+    }
+}
+
+/// The layered resolver (see module docs for the precedence order).
+pub fn resolve_spec(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<SystemSpec> {
+    let mut spec = SystemSpec::defaults(cmd);
+
+    // -- file layer location: CLI --config > PIXELMTJ_CONFIG ------------
+    // The flag is gated to the subcommands that document it (reading it
+    // here also marks it consumed for `finish()`); the env spelling is
+    // ambient like every other PIXELMTJ_* variable and names the profile
+    // for any subcommand.
+    if FILES.contains(&cmd) {
+        if let Some(path) = args.opt_str("config") {
+            spec.config_path = Some(path);
+            spec.mark("config", Provenance::Cli);
+        }
+    }
+    if spec.config_path.is_none() {
+        if let Some(path) = env.get("PIXELMTJ_CONFIG") {
+            spec.config_path = Some(path.to_string());
+            spec.mark("config", Provenance::Env);
+        }
+    }
+
+    // -- file layer ------------------------------------------------------
+    if let Some(path) = spec.config_path.clone() {
+        let what = match cmd {
+            Cmd::Sweep => "loading sweep config",
+            _ => "loading pipeline config",
+        };
+        let v = Value::from_file(Path::new(&path))
+            .map_err(|e| anyhow!("{what}: {e}"))?;
+        // The existing loaders own the file semantics (defaults for
+        // absent keys, geometry preset supplying dimension defaults,
+        // fail-loud enum values); one document configures both halves.
+        spec.pipeline = PipelineConfig::from_json(&v)?;
+        spec.sweep = SweepConfig::from_json(&v)?;
+        // The `out` field keeps the report dir and the sweep dir in one
+        // place; sync the spec-level copy like the env/CLI setter does.
+        spec.out_dir = spec.sweep.out_dir.clone();
+        for field in registry() {
+            if let Some(key) = field.json {
+                if v.get(key).is_ok() {
+                    mark_with_derived(&mut spec, field, Provenance::File);
+                }
+            }
+        }
+    }
+
+    // -- env layer (ambient, like the file: every field, any command) ---
+    // A typo'd variable must not silently fall back to defaults — the
+    // env analogue of the unknown-option rejection below.
+    for key in env.keys() {
+        let known = key == "PIXELMTJ_CONFIG"
+            || key == "PIXELMTJ_BENCH_FAST"
+            || registry().iter().any(|f| env_key(f.name) == key);
+        if !known {
+            bail!(
+                "unknown environment variable {key} \
+                 (run `pixelmtj config` for the known PIXELMTJ_* set)"
+            );
+        }
+    }
+    for field in registry() {
+        if field.name == "config" {
+            continue;
+        }
+        let key = env_key(field.name);
+        if let Some(raw) = env.get(&key) {
+            match field.kind {
+                Kind::Flag(set) => {
+                    // A falsy value reads as unset: flags assert one
+                    // direction, like their CLI counterparts.
+                    if env_flag(&key, raw)? {
+                        set(&mut spec);
+                        mark_with_derived(&mut spec, field, Provenance::Env);
+                    }
+                }
+                _ => {
+                    apply_value(&mut spec, field, raw, &key, true)?;
+                    mark_with_derived(&mut spec, field, Provenance::Env);
+                }
+            }
+        }
+    }
+
+    // -- CLI layer (gated per subcommand by the same registry) -----------
+    for field in registry() {
+        if field.name == "config" || !field.cmds.contains(&cmd) {
+            continue;
+        }
+        match field.kind {
+            Kind::Flag(set) => {
+                if args.flag(field.name)? {
+                    set(&mut spec);
+                    mark_with_derived(&mut spec, field, Provenance::Cli);
+                }
+            }
+            _ => {
+                if let Some(raw) = args.opt_str(field.name) {
+                    let label = format!("--{}", field.name);
+                    apply_value(&mut spec, field, &raw, &label, false)?;
+                    mark_with_derived(&mut spec, field, Provenance::Cli);
+                }
+            }
+        }
+    }
+    // One rejection mechanism for unknown / misplaced / valueless flags:
+    // anything the registry didn't consume for this subcommand.
+    args.finish()?;
+
+    // -- serve cross-flag rules (explicit flags only: the file and env
+    //    layers are ambient profiles, so their stream-only settings get
+    //    the oneshot notice instead of a rejection) ----------------------
+    if cmd == Cmd::Serve {
+        if !spec.streaming {
+            for name in ["workload", "burst-len", "burst-gap-us"] {
+                if spec.provenance(name) == Provenance::Cli {
+                    bail!("--{name} requires --stream");
+                }
+            }
+        }
+        if spec.streaming && spec.pipeline.workload != Workload::Bursty {
+            for name in ["burst-len", "burst-gap-us"] {
+                if spec.provenance(name) == Provenance::Cli {
+                    bail!(
+                        "--{name} requires --workload bursty (got {})",
+                        spec.pipeline.workload.name()
+                    );
+                }
+            }
+        }
+    }
+
+    // -- hwcfg layer (needs the final artifacts dir) ---------------------
+    let hwcfg = spec.artifacts_path().join("hwcfg.json");
+    if let Ok(hw) = HwConfig::from_json_file(&hwcfg) {
+        spec.hw = hw;
+        spec.hw_provenance = Provenance::Hwcfg;
+    }
+
+    Ok(spec)
+}
+
+/// Usage text, derived from the registry so it can never drift from the
+/// accepted-flag tables.
+pub fn usage() -> String {
+    let mut out = String::from(
+        "pixelmtj — VC-MTJ ADC-less global-shutter processing-in-pixel\n\nUSAGE:\n",
+    );
+    for &(name, cmd) in Cmd::VARIANTS {
+        let head = format!("  pixelmtj {name:<8} ");
+        let indent = " ".repeat(head.len());
+        let mut tokens: Vec<String> = Vec::new();
+        if cmd == Cmd::Report {
+            tokens.push("<id|all>".to_string());
+        }
+        if cmd == Cmd::Config {
+            tokens.push("[any serve/sweep flag]".to_string());
+        } else {
+            for f in registry().iter().filter(|f| f.cmds.contains(&cmd)) {
+                tokens.push(if f.hint.is_empty() {
+                    format!("[--{}]", f.name)
+                } else {
+                    format!("[--{} {}]", f.name, f.hint)
+                });
+            }
+        }
+        let mut line = head;
+        for tok in tokens {
+            if line.len() + tok.len() > 78 && line.trim_end().len() > indent.len() {
+                out.push_str(line.trim_end());
+                out.push('\n');
+                line = indent.clone();
+            }
+            line.push_str(&tok);
+            line.push(' ');
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "\nReports: {}\n\
+         Sweep grid keys: v pulse n k ap p sigma mode (see rust/README.md)\n\
+         --geometry imagenet runs the paper's 224x224 VGG16-head workload\n\
+         Every value flag doubles as a PIXELMTJ_* env var (PIXELMTJ_BACKEND=pjrt);\n\
+         precedence: defaults < artifacts/hwcfg.json < --config file < env < flags\n\
+         `pixelmtj config` prints the resolved configuration with provenance\n",
+        crate::reports::ALL_REPORTS.join(" ")
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    fn resolve(s: &str) -> Result<SystemSpec> {
+        let a = args(s);
+        let cmd = Cmd::parse(a.command.as_deref().unwrap()).unwrap();
+        resolve_spec(cmd, &a, &EnvSource::empty())
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_json_keys_distinct() {
+        let mut names: Vec<_> = registry().iter().map(|f| f.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), registry().len(), "duplicate field name");
+        let mut json: Vec<_> =
+            registry().iter().filter_map(|f| f.json).collect();
+        json.sort_unstable();
+        json.dedup();
+        assert_eq!(
+            json.len(),
+            registry().iter().filter(|f| f.json.is_some()).count(),
+            "duplicate json key"
+        );
+    }
+
+    #[test]
+    fn defaults_resolve_with_default_provenance() {
+        let spec = resolve("serve").unwrap();
+        assert_eq!(spec.frames, 256);
+        assert!(!spec.streaming);
+        assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Csr);
+        for (name, _, prov) in spec.resolved_rows() {
+            assert_eq!(prov, Provenance::Default, "{name}");
+        }
+    }
+
+    #[test]
+    fn cli_layer_overrides_and_marks() {
+        let spec =
+            resolve("serve --frames 8 --coding rle --backend native").unwrap();
+        assert_eq!(spec.frames, 8);
+        assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Rle);
+        assert_eq!(spec.provenance("frames"), Provenance::Cli);
+        assert_eq!(spec.provenance("coding"), Provenance::Cli);
+        assert_eq!(spec.provenance("workers"), Provenance::Default);
+    }
+
+    #[test]
+    fn env_layer_sits_between_defaults_and_cli() {
+        let a = args("serve --coding dense");
+        let env = EnvSource::from_pairs([
+            ("PIXELMTJ_CODING", "rle"),
+            ("PIXELMTJ_WORKERS", "7"),
+        ]);
+        let spec = resolve_spec(Cmd::Serve, &a, &env).unwrap();
+        assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Dense);
+        assert_eq!(spec.provenance("coding"), Provenance::Cli);
+        assert_eq!(spec.pipeline.sensor_workers, 7);
+        assert_eq!(spec.provenance("workers"), Provenance::Env);
+    }
+
+    #[test]
+    fn env_rejects_invalid_values_loudly_and_names_the_source() {
+        let a = args("serve");
+        let env = EnvSource::from_pairs([("PIXELMTJ_CODING", "zip")]);
+        let err = resolve_spec(Cmd::Serve, &a, &env).unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "PIXELMTJ_CODING: unknown sparse coding 'zip' \
+             (expected 'dense', 'csr' or 'rle')"
+        );
+        let env = EnvSource::from_pairs([("PIXELMTJ_FRAMES", "abc")]);
+        let err = resolve_spec(Cmd::Serve, &a, &env).unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "PIXELMTJ_FRAMES expects an integer, got \"abc\""
+        );
+    }
+
+    #[test]
+    fn unknown_env_vars_are_rejected_like_unknown_flags() {
+        let a = args("sweep");
+        // Typo of PIXELMTJ_TRIALS: must not silently run the default.
+        let env = EnvSource::from_pairs([("PIXELMTJ_TRAILS", "4")]);
+        let err = resolve_spec(Cmd::Sweep, &a, &env).unwrap_err();
+        assert!(format!("{err}").contains("PIXELMTJ_TRAILS"), "{err}");
+        // The bench-harness knob and the config locator are allowlisted.
+        let env = EnvSource::from_pairs([("PIXELMTJ_BENCH_FAST", "1")]);
+        assert!(resolve_spec(Cmd::Sweep, &a, &env).is_ok());
+    }
+
+    #[test]
+    fn geometry_preset_sets_dims_in_both_halves() {
+        let spec = resolve("serve --geometry imagenet").unwrap();
+        assert_eq!(
+            (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+            (224, 224)
+        );
+        assert_eq!(
+            (spec.sweep.sensor_height, spec.sweep.sensor_width),
+            (224, 224)
+        );
+        assert_eq!(spec.provenance("geometry"), Provenance::Cli);
+        assert_eq!(spec.provenance("height"), Provenance::Cli, "derived mark");
+
+        let spec = resolve("sweep --geometry imagenet --height 64").unwrap();
+        assert_eq!(
+            (spec.sweep.sensor_height, spec.sweep.sensor_width),
+            (64, 224),
+            "explicit dims win over the preset"
+        );
+    }
+
+    #[test]
+    fn misplaced_and_malformed_flags_share_one_rejection_mechanism() {
+        let err = resolve("serve --grid v=0.8 --frames 2").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --grid");
+        let err = resolve("report fig5 --trials 8").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --trials");
+        // `--threads8` (attached value) parses as a bare flag, so the
+        // rejection names it a flag — same wording as before the registry.
+        let err = resolve("sweep --threads8 --grid v=0.8").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown flag --threads8");
+        let err = resolve("sweep --grid --trials 4").unwrap_err();
+        assert_eq!(format!("{err}"), "--grid expects a value");
+        let err = resolve("serve --stream 64").unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "--stream is a flag and takes no value (got \"64\")"
+        );
+        let err = resolve("sweep --artifacts x").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --artifacts");
+    }
+
+    #[test]
+    fn serve_cross_flag_rules_fire_on_cli_layer_only() {
+        let err = resolve("serve --workload motion").unwrap_err();
+        assert_eq!(format!("{err}"), "--workload requires --stream");
+        let err = resolve("serve --stream --burst-len 4").unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "--burst-len requires --workload bursty (got steady)"
+        );
+        // Ambient env workload is a profile, not an explicit request.
+        let a = args("serve");
+        let env = EnvSource::from_pairs([("PIXELMTJ_WORKLOAD", "motion")]);
+        let spec = resolve_spec(Cmd::Serve, &a, &env).unwrap();
+        assert_eq!(spec.pipeline.workload, Workload::MotionSweep);
+    }
+
+    #[test]
+    fn config_subcommand_accepts_the_union() {
+        let a = args("config --grid v=0.9 --frames 4 --coding dense");
+        let spec = resolve_spec(Cmd::Config, &a, &EnvSource::empty()).unwrap();
+        assert_eq!(spec.sweep.grid, "v=0.9");
+        assert_eq!(spec.frames, 4);
+        assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Dense);
+    }
+
+    #[test]
+    fn usage_lists_every_cmd_and_flag() {
+        let u = usage();
+        for &(name, _) in Cmd::VARIANTS {
+            assert!(u.contains(&format!("pixelmtj {name}")), "{name}");
+        }
+        for f in registry() {
+            assert!(u.contains(&format!("--{}", f.name)), "--{}", f.name);
+        }
+        assert!(u.contains("dense|csr|rle"));
+        assert!(u.contains("<id|all>"));
+    }
+}

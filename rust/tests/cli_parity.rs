@@ -1,0 +1,420 @@
+//! CLI golden-parity and precedence-matrix tests for the registry-driven
+//! resolver behind every subcommand (`system::resolve_spec`).
+//!
+//! Two contracts are pinned here:
+//!
+//! 1. **Golden parity** — every documented invocation from the USAGE text
+//!    (plus the hardening cases from `util/cli.rs`) parses to the same
+//!    resolved spec / the same rejection message as the pre-registry
+//!    per-subcommand merge code did.
+//! 2. **Precedence matrix** — per field and per subcommand, the layer
+//!    order is `default < --config file < PIXELMTJ_* env < CLI flag`
+//!    with one shared behavior (the serve/sweep drift the redesign
+//!    removed), and provenance reports the winning layer.
+//!
+//! Env layers are injected through `EnvSource::from_pairs` — never via
+//! `std::env::set_var` — so these tests stay safe under the parallel
+//! test harness.
+
+use pixelmtj::config::{
+    BackendKind, Cmd, EnvSource, GeometryPreset, KeyedEnum, Provenance,
+    SparseCoding, SweepConfig, Workload,
+};
+use pixelmtj::system::{resolve_spec, usage, SystemSpec};
+use pixelmtj::util::cli::Args;
+
+fn args(line: &str) -> (Cmd, Args) {
+    let a = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+    let cmd = Cmd::parse(a.command.as_deref().expect("subcommand")).unwrap();
+    (cmd, a)
+}
+
+fn resolve(line: &str) -> anyhow::Result<SystemSpec> {
+    let (cmd, a) = args(line);
+    resolve_spec(cmd, &a, &EnvSource::empty())
+}
+
+fn resolve_env(
+    line: &str,
+    env: &[(&str, &str)],
+) -> anyhow::Result<SystemSpec> {
+    let (cmd, a) = args(line);
+    resolve_spec(cmd, &a, &EnvSource::from_pairs(env.iter().copied()))
+}
+
+fn tmp_config(name: &str, body: &str) -> String {
+    let dir = std::env::temp_dir().join("pixelmtj_cli_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    std::fs::write(&p, body).unwrap();
+    p.to_string_lossy().into_owned()
+}
+
+// ---------------------------------------------------------------------
+// Golden parity: documented invocations resolve to the same spec the
+// per-subcommand merge code produced.
+// ---------------------------------------------------------------------
+
+#[test]
+fn bare_serve_resolves_the_documented_defaults() {
+    let spec = resolve("serve").unwrap();
+    assert_eq!(spec.frames, 256);
+    assert!(!spec.streaming);
+    assert_eq!(spec.pipeline.sensor_workers, 4);
+    assert_eq!(spec.pipeline.queue_depth, 64);
+    assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Csr);
+    assert_eq!(spec.pipeline.backend, BackendKind::Native);
+    assert_eq!(spec.pipeline.workload, Workload::Steady);
+    assert!(spec.pipeline.mtj_noise);
+    assert_eq!(spec.pipeline.artifacts_dir, "artifacts");
+    assert_eq!(
+        (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+        (32, 32)
+    );
+}
+
+#[test]
+fn documented_serve_flags_resolve_identically() {
+    let spec = resolve(
+        "serve --frames 2 --workers 2 --coding rle --backend native \
+         --no-mtj-noise --geometry imagenet --artifacts art",
+    )
+    .unwrap();
+    assert_eq!(spec.frames, 2);
+    assert_eq!(spec.pipeline.sensor_workers, 2);
+    assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Rle);
+    assert_eq!(spec.pipeline.backend, BackendKind::Native);
+    assert!(!spec.pipeline.mtj_noise);
+    assert_eq!(spec.pipeline.geometry, Some(GeometryPreset::ImagenetVgg16));
+    assert_eq!(
+        (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+        (224, 224)
+    );
+    assert_eq!(spec.pipeline.artifacts_dir, "art");
+}
+
+#[test]
+fn documented_stream_invocation_resolves_identically() {
+    let spec = resolve(
+        "serve --stream --workload bursty --queue-depth 8 --burst-len 4 \
+         --burst-gap-us 500",
+    )
+    .unwrap();
+    assert!(spec.streaming);
+    assert_eq!(spec.pipeline.workload, Workload::Bursty);
+    assert_eq!(spec.pipeline.queue_depth, 8);
+    assert_eq!(spec.pipeline.burst_len, 4);
+    assert_eq!(spec.pipeline.burst_gap_us, 500);
+}
+
+#[test]
+fn documented_sweep_invocations_resolve_identically() {
+    // The CI sweep smoke invocation.
+    let spec = resolve(
+        "sweep --grid v=0.8,0.9;k=4,5 --trials 4 --threads 2 --seed 7",
+    )
+    .unwrap();
+    assert_eq!(spec.sweep.grid, "v=0.8,0.9;k=4,5");
+    assert_eq!(spec.sweep.trials, 4);
+    assert_eq!(spec.sweep.threads, 2);
+    assert_eq!(spec.sweep.seed, 7);
+    assert_eq!(spec.sweep.out_dir, "reports");
+
+    // The CI imagenet smoke: preset sets dims, explicit flags win.
+    let spec =
+        resolve("sweep --geometry imagenet --grid v=0.8;k=4,5 --trials 1")
+            .unwrap();
+    assert_eq!(spec.sweep.geometry, Some(GeometryPreset::ImagenetVgg16));
+    assert_eq!(
+        (spec.sweep.sensor_height, spec.sweep.sensor_width),
+        (224, 224)
+    );
+    let spec =
+        resolve("sweep --geometry imagenet --height 64 --width 48").unwrap();
+    assert_eq!(
+        (spec.sweep.sensor_height, spec.sweep.sensor_width),
+        (64, 48)
+    );
+}
+
+#[test]
+fn documented_report_validate_info_invocations_resolve() {
+    let spec = resolve("report all --artifacts a --out o").unwrap();
+    assert_eq!(spec.pipeline.artifacts_dir, "a");
+    assert_eq!(spec.out_dir, "o");
+    let spec = resolve("validate --artifacts a").unwrap();
+    assert_eq!(spec.pipeline.artifacts_dir, "a");
+    let spec = resolve("info").unwrap();
+    assert_eq!(spec.pipeline.artifacts_dir, "artifacts");
+}
+
+#[test]
+fn config_file_invocations_resolve_identically() {
+    let p = tmp_config(
+        "serve.json",
+        r#"{"sparse_coding": "dense", "queue_depth": 16, "workload": "motion"}"#,
+    );
+    let spec = resolve(&format!("serve --config {p}")).unwrap();
+    assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Dense);
+    assert_eq!(spec.pipeline.queue_depth, 16);
+    // Ambient profile: stream-only keys are allowed without --stream
+    // (the oneshot path prints a notice instead of rejecting).
+    assert_eq!(spec.pipeline.workload, Workload::MotionSweep);
+
+    let p = tmp_config("sweep.json", r#"{"grid": "v=0.9;k=5", "trials": 16}"#);
+    let spec = resolve(&format!("sweep --config {p} --trials 8")).unwrap();
+    assert_eq!(spec.sweep.grid, "v=0.9;k=5", "file layer");
+    assert_eq!(spec.sweep.trials, 8, "flag beats file");
+}
+
+// ---------------------------------------------------------------------
+// Golden parity: rejection messages (the util/cli.rs hardening cases
+// plus the per-site bail!s the registry replaced).
+// ---------------------------------------------------------------------
+
+#[test]
+fn rejection_messages_match_the_pinned_wording() {
+    for (line, want) in [
+        ("serve --workload motion", "--workload requires --stream"),
+        ("serve --burst-len 4", "--burst-len requires --stream"),
+        ("serve --burst-gap-us 9", "--burst-gap-us requires --stream"),
+        (
+            "serve --stream --burst-len 4",
+            "--burst-len requires --workload bursty (got steady)",
+        ),
+        (
+            "serve --stream --workload motion --burst-gap-us 9",
+            "--burst-gap-us requires --workload bursty (got motion)",
+        ),
+        ("serve --grid v=0.8 --frames 2", "unknown option --grid"),
+        ("report fig5 --trials 8", "unknown option --trials"),
+        ("sweep --threads8 --grid v=0.8", "unknown flag --threads8"),
+        ("sweep --grid --trials 4", "--grid expects a value"),
+        (
+            "serve --stream 64",
+            "--stream is a flag and takes no value (got \"64\")",
+        ),
+        ("serve --frames abc", "--frames expects an integer, got \"abc\""),
+        (
+            "serve --coding zip",
+            "unknown sparse coding 'zip' (expected 'dense', 'csr' or 'rle')",
+        ),
+        (
+            "serve --backend tpu",
+            "unknown backend 'tpu' (expected 'native' or 'pjrt')",
+        ),
+        (
+            "sweep --geometry mnist",
+            "unknown geometry 'mnist' (expected 'cifar' or 'imagenet')",
+        ),
+        (
+            "serve --workload spiky",
+            "unknown workload 'spiky' (expected 'steady', 'bursty' or 'motion')",
+        ),
+        ("sweep --artifacts x", "unknown option --artifacts"),
+        ("validate --grid v=0.8", "unknown option --grid"),
+        ("info --config x.json", "unknown option --config"),
+    ] {
+        let err = resolve(line).unwrap_err();
+        assert_eq!(format!("{err}"), want, "{line}");
+    }
+}
+
+#[test]
+fn cross_flag_rules_do_not_fire_for_ambient_layers() {
+    // workload from env: allowed without --stream (ambient profile).
+    let spec =
+        resolve_env("serve", &[("PIXELMTJ_WORKLOAD", "motion")]).unwrap();
+    assert_eq!(spec.pipeline.workload, Workload::MotionSweep);
+    assert!(!spec.streaming);
+    // --workload with env-provided stream: the explicit flag is fine
+    // because streaming is on, wherever `stream` came from.
+    let spec = resolve_env(
+        "serve --workload motion",
+        &[("PIXELMTJ_STREAM", "1")],
+    )
+    .unwrap();
+    assert!(spec.streaming);
+    assert_eq!(spec.provenance("stream"), Provenance::Env);
+}
+
+// ---------------------------------------------------------------------
+// Precedence matrix: default vs file vs env vs flag, per field, per
+// subcommand — one shared behavior after the redesign.
+// ---------------------------------------------------------------------
+
+#[test]
+fn precedence_matrix_serve_fields() {
+    let file = tmp_config(
+        "prec_serve.json",
+        r#"{"sparse_coding": "dense", "backend": "pjrt",
+            "sensor_workers": 3, "geometry": "imagenet"}"#,
+    );
+    let with_file = format!("serve --config {file}");
+    let env = &[
+        ("PIXELMTJ_CODING", "rle"),
+        ("PIXELMTJ_BACKEND", "native"),
+        ("PIXELMTJ_WORKERS", "5"),
+        ("PIXELMTJ_GEOMETRY", "cifar"),
+    ][..];
+
+    // default
+    let s = resolve("serve").unwrap();
+    assert_eq!(s.pipeline.sparse_coding, SparseCoding::Csr);
+    assert_eq!(s.provenance("coding"), Provenance::Default);
+
+    // file beats default
+    let s = resolve(&with_file).unwrap();
+    assert_eq!(s.pipeline.sparse_coding, SparseCoding::Dense);
+    assert_eq!(s.pipeline.backend, BackendKind::Pjrt);
+    assert_eq!(s.pipeline.sensor_workers, 3);
+    assert_eq!(s.pipeline.geometry, Some(GeometryPreset::ImagenetVgg16));
+    assert_eq!(s.pipeline.sensor_height, 224);
+    for f in ["coding", "backend", "workers", "geometry", "height"] {
+        assert_eq!(s.provenance(f), Provenance::File, "{f}");
+    }
+
+    // env beats file
+    let s = resolve_env(&with_file, env).unwrap();
+    assert_eq!(s.pipeline.sparse_coding, SparseCoding::Rle);
+    assert_eq!(s.pipeline.backend, BackendKind::Native);
+    assert_eq!(s.pipeline.sensor_workers, 5);
+    assert_eq!(s.pipeline.geometry, Some(GeometryPreset::Cifar));
+    assert_eq!(s.pipeline.sensor_height, 32);
+    for f in ["coding", "backend", "workers", "geometry"] {
+        assert_eq!(s.provenance(f), Provenance::Env, "{f}");
+    }
+
+    // flag beats env beats file
+    let s = resolve_env(
+        &format!(
+            "{with_file} --coding dense --backend pjrt --workers 9 \
+             --geometry imagenet"
+        ),
+        env,
+    )
+    .unwrap();
+    assert_eq!(s.pipeline.sparse_coding, SparseCoding::Dense);
+    assert_eq!(s.pipeline.backend, BackendKind::Pjrt);
+    assert_eq!(s.pipeline.sensor_workers, 9);
+    assert_eq!(s.pipeline.geometry, Some(GeometryPreset::ImagenetVgg16));
+    assert_eq!(s.pipeline.sensor_height, 224);
+    for f in ["coding", "backend", "workers", "geometry"] {
+        assert_eq!(s.provenance(f), Provenance::Cli, "{f}");
+    }
+}
+
+#[test]
+fn precedence_matrix_sweep_fields_share_the_serve_behavior() {
+    let file = tmp_config(
+        "prec_sweep.json",
+        r#"{"grid": "v=0.9", "trials": 10, "threads": 3,
+            "geometry": "imagenet", "out_dir": "file_out"}"#,
+    );
+    let with_file = format!("sweep --config {file}");
+    let env = &[
+        ("PIXELMTJ_GRID", "v=0.7"),
+        ("PIXELMTJ_TRIALS", "20"),
+        ("PIXELMTJ_OUT", "env_out"),
+    ][..];
+
+    let s = resolve("sweep").unwrap();
+    assert_eq!(s.sweep.grid, SweepConfig::default().grid);
+    assert_eq!(s.provenance("grid"), Provenance::Default);
+
+    let s = resolve(&with_file).unwrap();
+    assert_eq!(s.sweep.grid, "v=0.9");
+    assert_eq!(s.sweep.trials, 10);
+    assert_eq!(s.sweep.out_dir, "file_out");
+    assert_eq!(s.sweep.sensor_height, 224);
+    assert_eq!(s.provenance("grid"), Provenance::File);
+
+    let s = resolve_env(&with_file, env).unwrap();
+    assert_eq!(s.sweep.grid, "v=0.7");
+    assert_eq!(s.sweep.trials, 20);
+    assert_eq!(s.sweep.out_dir, "env_out");
+    assert_eq!(s.provenance("out"), Provenance::Env);
+
+    let s = resolve_env(
+        &format!("{with_file} --grid v=0.8 --trials 5 --out cli_out"),
+        env,
+    )
+    .unwrap();
+    assert_eq!(s.sweep.grid, "v=0.8");
+    assert_eq!(s.sweep.trials, 5);
+    assert_eq!(s.sweep.out_dir, "cli_out");
+    assert_eq!(s.provenance("grid"), Provenance::Cli);
+    // Threads untouched by env/cli: file survives as the winner.
+    assert_eq!(s.sweep.threads, 3);
+    assert_eq!(s.provenance("threads"), Provenance::File);
+}
+
+#[test]
+fn one_config_file_serves_both_subcommands() {
+    // The unified file layer: pipeline and sweep keys in one profile,
+    // each subcommand picking up its half (unknown keys ignored).
+    let file = tmp_config(
+        "prec_both.json",
+        r#"{"sparse_coding": "dense", "grid": "v=0.9;k=5",
+            "sensor_height": 64}"#,
+    );
+    let s = resolve(&format!("serve --config {file}")).unwrap();
+    assert_eq!(s.pipeline.sparse_coding, SparseCoding::Dense);
+    assert_eq!(s.pipeline.sensor_height, 64);
+    let s = resolve(&format!("sweep --config {file}")).unwrap();
+    assert_eq!(s.sweep.grid, "v=0.9;k=5");
+    assert_eq!(s.sweep.sensor_height, 64);
+}
+
+#[test]
+fn env_config_names_the_file_layer() {
+    let file = tmp_config("env_named.json", r#"{"queue_depth": 5}"#);
+    let s = resolve_env("serve", &[("PIXELMTJ_CONFIG", file.as_str())])
+        .unwrap();
+    assert_eq!(s.pipeline.queue_depth, 5);
+    assert_eq!(s.provenance("config"), Provenance::Env);
+    assert_eq!(s.config_path.as_deref(), Some(file.as_str()));
+    // The env spelling is ambient: it names the profile even for
+    // subcommands whose CLI does not take --config.
+    let s = resolve_env("report all", &[("PIXELMTJ_CONFIG", file.as_str())])
+        .unwrap();
+    assert_eq!(s.pipeline.queue_depth, 5);
+}
+
+#[test]
+fn file_out_dir_reaches_both_report_and_sweep_sinks() {
+    let file = tmp_config("out_sync.json", r#"{"out_dir": "campaign_out"}"#);
+    let s = resolve(&format!("sweep --config {file}")).unwrap();
+    assert_eq!(s.sweep.out_dir, "campaign_out");
+    assert_eq!(s.out_dir, "campaign_out", "report sink follows the file");
+    assert_eq!(s.provenance("out"), Provenance::File);
+}
+
+#[test]
+fn missing_config_file_fails_with_the_documented_context() {
+    let err = resolve("serve --config /nonexistent/x.json").unwrap_err();
+    assert!(
+        format!("{err}").starts_with("loading pipeline config"),
+        "{err}"
+    );
+    let err = resolve("sweep --config /nonexistent/x.json").unwrap_err();
+    assert!(format!("{err}").starts_with("loading sweep config"), "{err}");
+}
+
+#[test]
+fn usage_documents_every_subcommand_and_flag() {
+    let u = usage();
+    for cmd in ["serve", "report", "sweep", "validate", "info", "config"] {
+        assert!(u.contains(&format!("pixelmtj {cmd}")), "{cmd}\n{u}");
+    }
+    for flag in [
+        "--frames", "--workers", "--coding", "--backend", "--no-mtj-noise",
+        "--geometry", "--artifacts", "--config", "--stream", "--workload",
+        "--queue-depth", "--burst-len", "--burst-gap-us", "--grid",
+        "--trials", "--threads", "--seed", "--height", "--width", "--out",
+    ] {
+        assert!(u.contains(flag), "{flag}\n{u}");
+    }
+    assert!(u.contains("<id|all>"));
+    assert!(u.contains("PIXELMTJ_"));
+}
