@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts
+.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts metrics-smoke
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -41,6 +41,11 @@ bench-sweep:
 # → rust/BENCH_pack.json
 bench-pack:
 	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench pack
+
+# End-to-end telemetry smoke: curl /metrics + /healthz + /readyz while
+# `serve --stream` runs, then verify the trace-log JSONL (mirrors CI).
+metrics-smoke:
+	$(RUST_DIR)/scripts/metrics_smoke.sh
 
 # Default reliability campaign (paper's calibrated points) → rust/reports/
 sweep:

@@ -1,8 +1,11 @@
 //! Streaming mode end to end: a bursty synthetic workload feeds the
 //! concurrent `StreamServer` through blocking submits, results are
 //! collected mid-flight with `drain()`, more frames follow, and a clean
-//! `shutdown()` finishes the in-flight tail.  Runs anywhere — the native
-//! XNOR backend needs no artifacts, no Python, no XLA.
+//! `shutdown()` finishes the in-flight tail.  The epilogue samples the
+//! same counters through the labeled metric registry and prints the
+//! Prometheus exposition text `--metrics-addr` would serve.  Runs
+//! anywhere — the native XNOR backend needs no artifacts, no Python, no
+//! XLA.
 //!
 //! ```sh
 //! cargo run --release --example streaming
@@ -10,12 +13,15 @@
 
 use std::time::Duration;
 
-use pixelmtj::config::{HwConfig, PipelineConfig};
+use pixelmtj::config::{HwConfig, KeyedEnum, PipelineConfig};
 use pixelmtj::coordinator::{feed, BurstySource, Pipeline};
+use pixelmtj::metrics::expo;
+use pixelmtj::metrics::registry::{register_up, Registry};
 use pixelmtj::sensor::scene::SceneGen;
 
 fn main() -> anyhow::Result<()> {
     let cfg = PipelineConfig::default();
+    let coding = cfg.sparse_coding.name();
     let channels = HwConfig::default().network.in_channels;
     let (height, width) = (cfg.sensor_height, cfg.sensor_width);
     let pipeline = Pipeline::synthetic_native(cfg)?;
@@ -94,5 +100,24 @@ fn main() -> anyhow::Result<()> {
         mid.len() + report.results.len() == 64,
         "expected all 64 frames classified"
     );
+
+    // The same counters, pull-sampled through the labeled registry —
+    // this text is exactly what `--metrics-addr` serves at /metrics.
+    let reg = Registry::new();
+    register_up(&reg)?;
+    metrics.register_into(&reg, &[("backend", "native"), ("coding", coding)])?;
+    let text = expo::encode(&reg.gather());
+    let families = text
+        .lines()
+        .filter(|l| l.starts_with("# TYPE"))
+        .count();
+    println!("\nexposition sample ({families} metric families):");
+    for line in text.lines().filter(|l| {
+        l.starts_with("pixelmtj_frames_")
+            || l.starts_with("pixelmtj_batches_total")
+            || l.starts_with("pixelmtj_link_bits_total")
+    }) {
+        println!("  {line}");
+    }
     Ok(())
 }

@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# End-to-end telemetry smoke (CI runs this via `make metrics-smoke`):
+# serve --stream with the exposition server on an ephemeral port, curl
+# /healthz + /readyz + /metrics while frames flow, check the required
+# metric families, then verify the per-frame trace-log JSONL.
+#
+# The bursty workload paces the stream (~250 bursts x 20 ms idle), so the
+# run lasts a few seconds on any machine — long enough to scrape mid-run
+# without depending on backend throughput.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TRACE=trace_smoke.jsonl
+LOG=$(mktemp)
+rm -f "$TRACE"
+
+cargo build --release
+cargo run --release -- serve --stream --workload bursty \
+  --frames 2000 --burst-len 8 --burst-gap-us 20000 --workers 2 \
+  --metrics-addr 127.0.0.1:0 --trace-log "$TRACE" >"$LOG" 2>&1 &
+PID=$!
+trap 'kill $PID 2>/dev/null || true' EXIT
+
+# The CLI prints the bound address (port 0 → ephemeral) before serving.
+ADDR=""
+for _ in $(seq 1 150); do
+  ADDR=$(sed -n 's|^telemetry: http://\([^/]*\)/metrics.*|\1|p' "$LOG" | head -n1)
+  [ -n "$ADDR" ] && break
+  sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+  echo "FAIL: no telemetry line in serve output:" >&2
+  cat "$LOG" >&2
+  exit 1
+fi
+echo "scraping http://$ADDR mid-run"
+
+curl -sf "http://$ADDR/healthz" | grep -q '^ok$'
+curl -sf "http://$ADDR/readyz" | grep -q '^ready$'
+METRICS=$(curl -sf "http://$ADDR/metrics")
+
+for fam in pixelmtj_up pixelmtj_frames_in_total pixelmtj_batches_total \
+  pixelmtj_link_bits_total pixelmtj_stage_latency_us \
+  pixelmtj_frame_queue_peak; do
+  if ! echo "$METRICS" | grep -q "$fam"; then
+    echo "FAIL: /metrics is missing family $fam" >&2
+    echo "$METRICS" >&2
+    exit 1
+  fi
+done
+FAMS=$(echo "$METRICS" | grep -c '^# TYPE')
+if [ "$FAMS" -lt 5 ]; then
+  echo "FAIL: only $FAMS metric families exposed" >&2
+  exit 1
+fi
+
+wait "$PID"
+trap - EXIT
+
+if ! [ -s "$TRACE" ]; then
+  echo "FAIL: trace log $TRACE is empty" >&2
+  exit 1
+fi
+head -n 1 "$TRACE" | grep -q '"trace_id"'
+SPANS=$(wc -l <"$TRACE")
+echo "metrics smoke OK: $FAMS families, $SPANS trace spans"

@@ -44,6 +44,11 @@ pub struct PipelineConfig {
     pub burst_len: usize,
     /// Idle gap between bursts (µs) for the bursty workload.
     pub burst_gap_us: u64,
+    /// Bind address for the Prometheus `/metrics` + `/healthz` server
+    /// (e.g. `127.0.0.1:9184`); `None` disables exposition.
+    pub metrics_addr: Option<String>,
+    /// JSONL sink for per-frame trace spans; `None` disables tracing.
+    pub trace_log: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -64,6 +69,8 @@ impl Default for PipelineConfig {
             workload: Workload::Steady,
             burst_len: 16,
             burst_gap_us: 2_000,
+            metrics_addr: None,
+            trace_log: None,
         }
     }
 }
@@ -139,6 +146,14 @@ impl PipelineConfig {
             },
             burst_len: getf("burst_len", d.burst_len as f64)? as usize,
             burst_gap_us: getf("burst_gap_us", d.burst_gap_us as f64)? as u64,
+            metrics_addr: match v.get("metrics_addr") {
+                Ok(x) => Some(x.as_str()?.to_string()),
+                Err(_) => d.metrics_addr,
+            },
+            trace_log: match v.get("trace_log") {
+                Ok(x) => Some(x.as_str()?.to_string()),
+                Err(_) => d.trace_log,
+            },
         })
     }
 }
@@ -178,6 +193,8 @@ mod tests {
         assert_eq!(cfg.workload, Workload::Bursty);
         assert_eq!(cfg.burst_len, 4);
         assert_eq!(cfg.burst_gap_us, 500);
+        assert_eq!(cfg.metrics_addr, None, "telemetry defaults to off");
+        assert_eq!(cfg.trace_log, None);
         std::fs::write(&p, r#"{"workload": "spiky"}"#).unwrap();
         assert!(PipelineConfig::from_json_file(&p).is_err());
     }
@@ -191,6 +208,21 @@ mod tests {
         let cfg = PipelineConfig::from_json_file(&pp).unwrap();
         assert_eq!((cfg.sensor_height, cfg.sensor_width), (224, 224));
         assert_eq!(cfg.geometry, Some(GeometryPreset::ImagenetVgg16));
+    }
+
+    #[test]
+    fn pipeline_config_telemetry_keys_parse() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_telemetry");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(
+            &p,
+            r#"{"metrics_addr": "127.0.0.1:9184", "trace_log": "t.jsonl"}"#,
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9184"));
+        assert_eq!(cfg.trace_log.as_deref(), Some("t.jsonl"));
     }
 
     #[test]

@@ -21,5 +21,5 @@ pub use pipeline::{Classification, Pipeline, RunReport};
 pub use sparse::{decode, encode, Encoded};
 pub use stream::{
     feed, make_source, BurstySource, FrameSource, MotionSweepSource,
-    SteadySource, StreamServer,
+    StageHealth, SteadySource, StreamObservers, StreamServer,
 };

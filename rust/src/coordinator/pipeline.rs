@@ -9,13 +9,14 @@
 //! threads, so stream and one-shot classifications agree frame for frame.
 
 use anyhow::{Context, Result};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::{InferenceBackend, NativeBackend};
 use crate::config::{HwConfig, PipelineConfig};
-use crate::coordinator::stream::StreamServer;
-use crate::metrics::PipelineMetrics;
+use crate::coordinator::stream::{StageHealth, StreamObservers, StreamServer};
+use crate::metrics::{PipelineMetrics, TraceLog};
 use crate::sensor::{FirstLayerWeights, Frame, PixelArraySim};
 
 /// One classified frame.
@@ -43,6 +44,8 @@ pub struct Pipeline {
     sim: Arc<PixelArraySim>,
     backend: Arc<dyn InferenceBackend>,
     metrics: Arc<PipelineMetrics>,
+    health: Arc<StageHealth>,
+    trace: Option<Arc<TraceLog>>,
 }
 
 impl Pipeline {
@@ -66,11 +69,17 @@ impl Pipeline {
         backend
             .preload(&cfg.batch_sizes)
             .with_context(|| format!("preloading {} backend", backend.name()))?;
+        let trace = match &cfg.trace_log {
+            Some(path) => Some(Arc::new(TraceLog::create(Path::new(path))?)),
+            None => None,
+        };
         Ok(Self {
             cfg,
             sim,
             backend,
             metrics: Arc::new(PipelineMetrics::default()),
+            health: Arc::new(StageHealth::default()),
+            trace,
         })
     }
 
@@ -109,15 +118,27 @@ impl Pipeline {
         &self.cfg
     }
 
+    /// Stage-health state fed by every stream this pipeline starts — the
+    /// `/readyz` probe reads it.
+    pub fn health(&self) -> Arc<StageHealth> {
+        self.health.clone()
+    }
+
     /// Start a live streaming server sharing this pipeline's sensor,
     /// backend, and metrics.  Multiple sequential servers are fine; their
-    /// counters all fold into the same [`PipelineMetrics`].
+    /// counters all fold into the same [`PipelineMetrics`].  Stage health
+    /// and the optional `trace_log` sink ride along as observers.
     pub fn stream(&self) -> Result<StreamServer> {
-        StreamServer::start(
+        let obs = StreamObservers {
+            health: Some(self.health.clone()),
+            trace: self.trace.clone(),
+        };
+        StreamServer::start_observed(
             &self.cfg,
             self.sim.clone(),
             self.backend.clone(),
             self.metrics.clone(),
+            obs,
         )
     }
 

@@ -43,21 +43,24 @@ use crate::config::{KeyedEnum, PipelineConfig, SparseCoding, Workload};
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::pipeline::{Classification, RunReport};
 use crate::coordinator::sparse;
-use crate::metrics::PipelineMetrics;
+use crate::metrics::{trace_id, FrameSpan, PipelineMetrics, TraceLog};
 use crate::sensor::{
     scene::SceneGen, words_for, BitPlane, CaptureMode, Frame, PixelArraySim,
 };
 
-/// A frame in the source queue, stamped at submission for e2e latency.
+/// A frame in the source queue, stamped at submission for e2e latency
+/// and tagged with the per-frame trace id.
 struct Submitted {
     frame: Frame,
     t_submit: Instant,
+    trace_id: u64,
 }
 
 /// A decoded activation waiting for batched dispatch: the packed
 /// [`BitPlane`] straight from the link decode — the words travel through
 /// the queue and the batcher unchanged and land in the backend's packed
-/// entry point with no widening.
+/// entry point with no widening.  Carries the upstream span timings so
+/// the dispatcher can emit one complete trace record per frame.
 struct Activation {
     seq: u32,
     plane: BitPlane,
@@ -65,6 +68,10 @@ struct Activation {
     link_bits: u64,
     t_submit: Instant,
     t_act: Instant,
+    trace_id: u64,
+    queue_wait_us: u64,
+    capture_us: u64,
+    encode_us: u64,
 }
 
 /// State shared between the caller-facing handle and the stage threads.
@@ -85,6 +92,11 @@ struct Shared {
     failed: AtomicBool,
     /// The dispatcher thread has returned (shutdown or failure).
     dispatcher_done: AtomicBool,
+    /// Per-server trace-id epoch (wall-clock nanos at start), mixed with
+    /// the submit ordinal below so trace ids are unique across restarts.
+    trace_epoch: AtomicU64,
+    /// Monotone submit ordinal feeding the trace-id mixer.
+    trace_seq: AtomicU64,
 }
 
 impl Shared {
@@ -124,6 +136,73 @@ impl Shared {
             .load(Ordering::SeqCst)
             .saturating_sub(self.completed.load(Ordering::SeqCst))
     }
+
+    /// Mint the next frame trace id.  Pure counter + mixer: stamping ids
+    /// never touches device RNG streams or capture determinism.
+    fn next_trace_id(&self) -> u64 {
+        let epoch = self.trace_epoch.load(Ordering::Relaxed);
+        let n = self.trace_seq.fetch_add(1, Ordering::Relaxed);
+        trace_id(epoch, n)
+    }
+}
+
+/// Liveness and root-cause state backing the `/readyz` probe: armed by
+/// `start`, failed by the first stage death (first failure wins — it is
+/// the root cause), stopped on graceful shutdown.
+#[derive(Debug, Default)]
+pub struct StageHealth {
+    ready: AtomicBool,
+    stopped: AtomicBool,
+    error: Mutex<Option<String>>,
+}
+
+impl StageHealth {
+    /// Arm (or re-arm, for a pipeline starting a successor stream) the
+    /// ready flag.  A recorded failure stays sticky — it outranks this.
+    pub fn set_ready(&self) {
+        self.stopped.store(false, Ordering::SeqCst);
+        self.ready.store(true, Ordering::SeqCst);
+    }
+
+    pub fn set_stopped(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+    }
+
+    /// Record a stage death.  The first recorded failure is kept — later
+    /// ones are cascade effects of the root cause.
+    pub fn record_failure(&self, stage: &str, err: &str) {
+        let mut slot = self.error.lock().expect("stage health lock");
+        if slot.is_none() {
+            *slot = Some(format!("stage failed: {stage}: {err}"));
+        }
+    }
+
+    /// `Ok(())` while every stage is alive; `Err(reason)` otherwise.
+    /// Failure outranks the started/stopped flags: a stream that died is
+    /// reported as dead even before anyone calls shutdown.
+    pub fn ready(&self) -> Result<(), String> {
+        let err = self.error.lock().expect("stage health lock").clone();
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if !self.ready.load(Ordering::SeqCst) {
+            return Err("stream not started".to_string());
+        }
+        if self.stopped.load(Ordering::SeqCst) {
+            return Err("stream stopped".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Optional observation hooks threaded through a stream's stage threads:
+/// stage health for the `/readyz` probe and a per-frame trace-span sink.
+/// Defaults to fully unobserved (zero overhead on the hot path beyond
+/// the span timestamps the metrics already take).
+#[derive(Clone, Default)]
+pub struct StreamObservers {
+    pub health: Option<Arc<StageHealth>>,
+    pub trace: Option<Arc<TraceLog>>,
 }
 
 /// Drops one reference on the `flush` refcount however `drain` exits.
@@ -156,6 +235,7 @@ impl Drop for DispatcherDoneGuard {
 pub struct StreamServer {
     shared: Arc<Shared>,
     metrics: Arc<PipelineMetrics>,
+    health: Option<Arc<StageHealth>>,
     frame_tx: Option<SyncSender<Submitted>>,
     workers: Vec<JoinHandle<Result<()>>>,
     dispatcher: Option<JoinHandle<Result<()>>>,
@@ -172,6 +252,20 @@ impl StreamServer {
         backend: Arc<dyn InferenceBackend>,
         metrics: Arc<PipelineMetrics>,
     ) -> Result<Self> {
+        let obs = StreamObservers::default();
+        Self::start_observed(cfg, sim, backend, metrics, obs)
+    }
+
+    /// [`start`](Self::start) with observation hooks: stage health wired
+    /// to every stage thread's exit, and an optional per-frame trace
+    /// sink written by the dispatcher on frame completion.
+    pub fn start_observed(
+        cfg: &PipelineConfig,
+        sim: Arc<PixelArraySim>,
+        backend: Arc<dyn InferenceBackend>,
+        metrics: Arc<PipelineMetrics>,
+        obs: StreamObservers,
+    ) -> Result<Self> {
         if cfg.batch_sizes.is_empty() || !cfg.batch_sizes.contains(&1) {
             bail!(
                 "batch_sizes must be non-empty and include 1 as the \
@@ -180,6 +274,11 @@ impl StreamServer {
             );
         }
         let shared = Arc::new(Shared::default());
+        let epoch = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        shared.trace_epoch.store(epoch, Ordering::Relaxed);
         let depth = cfg.queue_depth.max(1);
         let (frame_tx, frame_rx) = sync_channel::<Submitted>(depth);
         let (act_tx, act_rx) = sync_channel::<Activation>(depth);
@@ -197,6 +296,7 @@ impl StreamServer {
             let sim = sim.clone();
             let worker_metrics = metrics.clone();
             let worker_shared = shared.clone();
+            let worker_health = obs.health.clone();
             let coding = cfg.sparse_coding;
             workers.push(std::thread::spawn(move || -> Result<()> {
                 let out = worker_loop(
@@ -208,7 +308,10 @@ impl StreamServer {
                     mode,
                     coding,
                 );
-                if out.is_err() {
+                if let Err(e) = &out {
+                    if let Some(h) = &worker_health {
+                        h.record_failure("sensor worker", &format!("{e:#}"));
+                    }
                     worker_shared.fail();
                 }
                 out
@@ -225,6 +328,9 @@ impl StreamServer {
             let backend = backend.clone();
             let disp_metrics = metrics.clone();
             let disp_shared = shared.clone();
+            let disp_health = obs.health.clone();
+            let disp_trace = obs.trace.clone();
+            let coding_name = cfg.sparse_coding.name();
             std::thread::spawn(move || -> Result<()> {
                 let _done = DispatcherDoneGuard(disp_shared.clone());
                 let out = dispatch_loop(
@@ -234,17 +340,26 @@ impl StreamServer {
                     act_rx,
                     batcher,
                     recv_tick,
+                    disp_trace.as_deref(),
+                    coding_name,
                 );
-                if out.is_err() {
+                if let Err(e) = &out {
+                    if let Some(h) = &disp_health {
+                        h.record_failure("dispatcher", &format!("{e:#}"));
+                    }
                     disp_shared.fail();
                 }
                 out
             })
         };
 
+        if let Some(h) = &obs.health {
+            h.set_ready();
+        }
         Ok(Self {
             shared,
             metrics,
+            health: obs.health,
             frame_tx: Some(frame_tx),
             workers,
             dispatcher: Some(dispatcher),
@@ -273,14 +388,22 @@ impl StreamServer {
         }
         let depth = self.shared.begin_submit();
         self.metrics.frame_queue_peak.observe(depth);
-        self.metrics.frames_in.inc();
-        let sub = Submitted { frame, t_submit: Instant::now() };
+        let sub = Submitted {
+            frame,
+            t_submit: Instant::now(),
+            trace_id: self.shared.next_trace_id(),
+        };
         if tx.send(sub).is_err() {
+            // The frame never became visible to a worker: it was neither
+            // ingested (`frames_in`) nor lost after admission (`dropped`),
+            // matching the disconnected `try_submit` path.
             self.shared.rollback_submit();
-            self.metrics.frames_dropped.inc();
             bail!("stream workers stopped (frame queue closed)");
         }
         self.shared.commit_submit();
+        // Ingestion counts only after a successful enqueue, keeping
+        // `frames_in == frames_out + frames_dropped` an invariant.
+        self.metrics.frames_in.inc();
         Ok(())
     }
 
@@ -299,7 +422,11 @@ impl StreamServer {
             return Err(frame);
         }
         let depth = self.shared.begin_submit();
-        let sub = Submitted { frame, t_submit: Instant::now() };
+        let sub = Submitted {
+            frame,
+            t_submit: Instant::now(),
+            trace_id: self.shared.next_trace_id(),
+        };
         match tx.try_send(sub) {
             Ok(()) => {
                 self.shared.commit_submit();
@@ -384,6 +511,12 @@ impl StreamServer {
     /// classifications not yet collected by a `drain`, seq-sorted; the
     /// shared metrics cover the whole stream lifetime either way.
     pub fn shutdown(mut self) -> Result<RunReport> {
+        // Flip readiness first: a scrape racing the teardown sees "not
+        // ready" rather than a half-alive pipeline.  Stage failures
+        // recorded by the exiting threads still outrank this flag.
+        if let Some(h) = &self.health {
+            h.set_stopped();
+        }
         drop(self.frame_tx.take()); // workers drain the queue and exit
         for worker in self.workers.drain(..) {
             worker.join().map_err(|_| anyhow!("sensor worker panicked"))??;
@@ -416,10 +549,15 @@ fn worker_loop(
 ) -> Result<()> {
     while let Some(sub) = rx.recv() {
         shared.frame_depth.fetch_sub(1, Ordering::Relaxed);
-        metrics.frame_queue_wait.record(sub.t_submit);
+        // Span timings are computed once and shared between the stage
+        // histograms and the frame's trace record, so the two views of a
+        // frame's life can never disagree.
+        let queue_wait_us = sub.t_submit.elapsed().as_micros() as u64;
+        metrics.frame_queue_wait.record_us(queue_wait_us);
         let t_cap = Instant::now();
         let (map, stats) = sim.capture(&sub.frame, mode);
-        metrics.capture_latency.record(t_cap);
+        let capture_us = t_cap.elapsed().as_micros() as u64;
+        metrics.capture_latency.record_us(capture_us);
         metrics.mtj_writes.add(stats.mtj_writes);
         metrics.mtj_resets.add(stats.mtj_resets);
 
@@ -428,7 +566,8 @@ fn worker_loop(
         let t_enc = Instant::now();
         let enc = sparse::encode(&map, coding);
         let decoded = sparse::decode(&enc).context("link decode (codec bug)")?;
-        metrics.encode_latency.record(t_enc);
+        let encode_us = t_enc.elapsed().as_micros() as u64;
+        metrics.encode_latency.record_us(encode_us);
         metrics.link_bits.add(enc.payload_bits);
         // Release-mode link verification (formerly a debug_assert that
         // release builds silently skipped): one word-level compare per
@@ -451,6 +590,10 @@ fn worker_loop(
             link_bits: enc.payload_bits,
             t_submit: sub.t_submit,
             t_act: Instant::now(),
+            trace_id: sub.trace_id,
+            queue_wait_us,
+            capture_us,
+            encode_us,
         };
         let depth = shared.act_depth.fetch_add(1, Ordering::Relaxed) + 1;
         metrics.act_queue_peak.observe(depth);
@@ -463,6 +606,7 @@ fn worker_loop(
 }
 
 /// Dispatch stage: drive the dynamic batcher and the inference backend.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
     backend: &dyn InferenceBackend,
     metrics: &PipelineMetrics,
@@ -470,6 +614,8 @@ fn dispatch_loop(
     act_rx: Receiver<Activation>,
     mut batcher: Batcher<Activation>,
     recv_tick: Duration,
+    trace: Option<&TraceLog>,
+    coding: &'static str,
 ) -> Result<()> {
     let mut open = true;
     while open || !batcher.is_empty() {
@@ -490,7 +636,7 @@ fn dispatch_loop(
         }
         let flush = !open || shared.flush.load(Ordering::SeqCst) > 0;
         while let Some(batch) = batcher.poll(Instant::now(), flush) {
-            execute_batch(backend, metrics, shared, batch)?;
+            execute_batch(backend, metrics, shared, batch, trace, coding)?;
         }
     }
     Ok(())
@@ -501,32 +647,56 @@ fn execute_batch(
     metrics: &PipelineMetrics,
     shared: &Shared,
     batch: Vec<Activation>,
+    trace: Option<&TraceLog>,
+    coding: &'static str,
 ) -> Result<()> {
     let b = batch.len();
     let act_elems = backend.act_elems();
     let wpf = words_for(act_elems);
     let mut input = Vec::with_capacity(b * wpf);
+    let mut batch_waits = Vec::with_capacity(b);
     for act in &batch {
         debug_assert_eq!(act.plane.len(), act_elems);
         // Residency ends here, at dispatch — not after the backend run.
-        metrics.batch_wait.record(act.t_act);
+        let wait_us = act.t_act.elapsed().as_micros() as u64;
+        metrics.batch_wait.record_us(wait_us);
+        batch_waits.push(wait_us);
         input.extend_from_slice(act.plane.words());
     }
 
     let t_exec = Instant::now();
     let logits_all = backend.run_backend_packed(&input, b)?;
-    metrics.backend_latency.record(t_exec);
+    let infer_us = t_exec.elapsed().as_micros() as u64;
+    metrics.backend_latency.record_us(infer_us);
     metrics.batches.inc();
     metrics.batch_occupancy_sum.add(b as u64);
 
+    // Build the classifications (and trace records — file I/O) before
+    // taking the results lock, keeping the critical section tight.
     let nc = backend.num_classes();
-    let mut results = shared.results.lock().unwrap();
+    let mut out = Vec::with_capacity(b);
     for (i, act) in batch.into_iter().enumerate() {
         let logits = logits_all[i * nc..(i + 1) * nc].to_vec();
         let label = argmax(&logits);
-        metrics.e2e_latency.record(act.t_submit);
+        let e2e_us = act.t_submit.elapsed().as_micros() as u64;
+        metrics.e2e_latency.record_us(e2e_us);
         metrics.frames_out.inc();
-        results.push(Classification {
+        if let Some(t) = trace {
+            t.write(&FrameSpan {
+                trace_id: act.trace_id,
+                seq: act.seq,
+                queue_wait_us: act.queue_wait_us,
+                capture_us: act.capture_us,
+                encode_us: act.encode_us,
+                batch_wait_us: batch_waits[i],
+                infer_us,
+                e2e_us,
+                batch_size: b,
+                coding,
+                payload_bits: act.link_bits,
+            });
+        }
+        out.push(Classification {
             seq: act.seq,
             logits,
             label,
@@ -534,6 +704,8 @@ fn execute_batch(
             link_bits: act.link_bits,
         });
     }
+    let mut results = shared.results.lock().unwrap();
+    results.extend(out);
     // Bump + notify under the lock (like Shared::fail): a notify fired
     // between drain's stale read of `completed` and its wait would
     // otherwise be lost, stalling drain for its full fallback timeout.

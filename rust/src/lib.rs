@@ -44,7 +44,11 @@
 //! * [`energy`] — energy / bandwidth / latency accounting (paper §3.2-3.4)
 //! * [`runtime`] — PJRT client wrapper executing the AOT artifacts
 //!   (feature `pjrt`)
-//! * [`metrics`] — counters and run reports
+//! * [`metrics`] — telemetry: lock-free pipeline/sweep counters and
+//!   latency histograms, the labeled metric registry
+//!   (`metrics::registry`), Prometheus text exposition (`metrics::expo`),
+//!   the embedded `/metrics` + `/healthz` + `/readyz` HTTP server
+//!   (`metrics::http`), and per-frame trace spans with the JSONL sink
 
 pub mod backend;
 pub mod config;

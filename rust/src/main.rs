@@ -74,6 +74,17 @@ fn serve(spec: SystemSpec) -> Result<()> {
         },
     );
 
+    // The exposition server scrapes the pipeline's live metrics for the
+    // whole run; shut down after the final metrics JSON so a last scrape
+    // still sees the complete counters.
+    let mut telemetry = sys.serve_telemetry()?;
+    if let Some(server) = &telemetry {
+        println!(
+            "telemetry: http://{}/metrics (/healthz /readyz)",
+            server.local_addr()
+        );
+    }
+
     let report = if sys.spec().streaming {
         // Continuous serving: a workload generator feeds the stream server
         // through blocking submits (backpressure pacing), then a shutdown
@@ -105,6 +116,9 @@ fn serve(spec: SystemSpec) -> Result<()> {
         report.fps
     );
     println!("{}", report.metrics.to_json().to_string_pretty());
+    if let Some(server) = &mut telemetry {
+        server.shutdown();
+    }
     Ok(())
 }
 
@@ -133,13 +147,28 @@ fn sweep(spec: SystemSpec) -> Result<()> {
         },
         cfg.seed
     );
+    // Campaign progress telemetry: a live progress line on stderr (rows
+    // keep stdout parseable) and, with --metrics-addr, the same counters
+    // scrapeable at /metrics while the campaign runs.
+    let (sm, mut telemetry) = sys.sweep_telemetry()?;
+    if let Some(server) = &telemetry {
+        println!(
+            "telemetry: http://{}/metrics (/healthz /readyz)",
+            server.local_addr()
+        );
+    }
     // Rows stream to the table as cells complete (the `cell` column is
     // the grid index — completion order is scheduling-dependent, the
     // saved JSON is not).
     sweep_report::print_header();
-    let summary = sys.sweep_with(|idx, cell| {
+    let summary = sys.sweep_observed(&sm, |idx, cell| {
         sweep_report::print_row(idx, cell);
+        eprint!("\r{}", sm.progress_line());
     })?;
+    eprintln!();
+    if let Some(server) = &mut telemetry {
+        server.shutdown();
+    }
     println!(
         "\n{} cells × {} trials in {:.2} s on {} threads → {:.1} cells/s",
         summary.cells.len(),

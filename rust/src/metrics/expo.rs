@@ -1,0 +1,319 @@
+//! Prometheus text-format exposition (version 0.0.4), hand-rolled: no
+//! client library, just the `# HELP`/`# TYPE` + sample-line grammar over
+//! [`super::registry::FamilySnapshot`]s.  Histograms expose cumulative
+//! `_bucket{le=...}` series plus `_sum` and `_count`, per the format.
+
+use std::fmt::Write as _;
+
+use super::registry::{FamilySnapshot, SampleValue};
+
+/// MIME type a `/metrics` response must carry.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Encode a gathered registry snapshot as exposition text.  Families are
+/// emitted in slice order ([`super::registry::Registry::gather`] already
+/// sorts by name).
+pub fn encode(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for f in families {
+        let _ = writeln!(out, "# HELP {} {}", f.name, escape_help(&f.help));
+        let _ = writeln!(out, "# TYPE {} {}", f.name, f.ty.as_str());
+        for s in &f.samples {
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    let lb = render_labels(&s.labels, None);
+                    let _ = writeln!(out, "{}{} {}", f.name, lb, v);
+                }
+                SampleValue::Gauge(v) => {
+                    let lb = render_labels(&s.labels, None);
+                    let _ = writeln!(out, "{}{} {}", f.name, lb, fmt_num(*v));
+                }
+                SampleValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    let mut saw_inf = false;
+                    for &(le, n) in &h.buckets {
+                        cum += n;
+                        saw_inf = saw_inf || le.is_infinite();
+                        let extra = Some(("le", fmt_num(le)));
+                        let lb = render_labels(&s.labels, extra);
+                        let _ =
+                            writeln!(out, "{}_bucket{} {}", f.name, lb, cum);
+                    }
+                    if !saw_inf {
+                        let extra = Some(("le", "+Inf".to_string()));
+                        let lb = render_labels(&s.labels, extra);
+                        let _ =
+                            writeln!(out, "{}_bucket{} {}", f.name, lb, cum);
+                    }
+                    let lb = render_labels(&s.labels, None);
+                    let sum = fmt_num(h.sum);
+                    let _ = writeln!(out, "{}_sum{} {}", f.name, lb, sum);
+                    let _ = writeln!(out, "{}_count{} {}", f.name, lb, cum);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sample values: integral floats drop the fraction (`3` not `3.0`),
+/// infinities use the Prometheus spellings.
+fn fmt_num(x: f64) -> String {
+    if x.is_infinite() {
+        return if x > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// `{k="v",...}` block, or the empty string when there are no labels.
+fn render_labels(
+    labels: &[(String, String)],
+    extra: Option<(&str, String)>,
+) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(&v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Label values escape backslash, double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// HELP text escapes backslash and newline (quotes stay literal).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::registry::{
+        register_up, MetricType, Registry, Sample,
+    };
+    use crate::metrics::{HistogramSnapshot, PipelineMetrics, SweepMetrics};
+    use std::sync::Arc;
+
+    fn lbl(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn golden_exposition_text() {
+        // One counter (with an escape-worthy label value), one gauge
+        // (no labels), one histogram — pinned byte-for-byte.
+        let families = vec![
+            FamilySnapshot {
+                name: "pixelmtj_frames_in_total".to_string(),
+                help: "Frames admitted".to_string(),
+                ty: MetricType::Counter,
+                samples: vec![Sample::new(
+                    lbl(&[("backend", "native"), ("path", "a\"b\\c\n")]),
+                    SampleValue::Counter(42),
+                )],
+            },
+            FamilySnapshot {
+                name: "pixelmtj_frame_queue_peak".to_string(),
+                help: "High-water mark".to_string(),
+                ty: MetricType::Gauge,
+                samples: vec![Sample::new(
+                    Vec::new(),
+                    SampleValue::Gauge(7.5),
+                )],
+            },
+            FamilySnapshot {
+                name: "pixelmtj_stage_latency_us".to_string(),
+                help: "Stage latency".to_string(),
+                ty: MetricType::Histogram,
+                samples: vec![Sample::new(
+                    lbl(&[("stage", "capture")]),
+                    SampleValue::Histogram(HistogramSnapshot {
+                        buckets: vec![
+                            (1.0, 2),
+                            (2.5, 1),
+                            (f64::INFINITY, 1),
+                        ],
+                        sum: 5.5,
+                    }),
+                )],
+            },
+        ];
+        let text = encode(&families);
+        let expected = concat!(
+            "# HELP pixelmtj_frames_in_total Frames admitted\n",
+            "# TYPE pixelmtj_frames_in_total counter\n",
+            "pixelmtj_frames_in_total",
+            "{backend=\"native\",path=\"a\\\"b\\\\c\\n\"} 42\n",
+            "# HELP pixelmtj_frame_queue_peak High-water mark\n",
+            "# TYPE pixelmtj_frame_queue_peak gauge\n",
+            "pixelmtj_frame_queue_peak 7.5\n",
+            "# HELP pixelmtj_stage_latency_us Stage latency\n",
+            "# TYPE pixelmtj_stage_latency_us histogram\n",
+            "pixelmtj_stage_latency_us_bucket{stage=\"capture\",le=\"1\"} 2\n",
+            "pixelmtj_stage_latency_us_bucket{stage=\"capture\",le=\"2.5\"} 3\n",
+            "pixelmtj_stage_latency_us_bucket{stage=\"capture\",le=\"+Inf\"} 4\n",
+            "pixelmtj_stage_latency_us_sum{stage=\"capture\"} 5.5\n",
+            "pixelmtj_stage_latency_us_count{stage=\"capture\"} 4\n",
+        );
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn histogram_without_inf_bound_gets_synthetic_inf_bucket() {
+        let families = vec![FamilySnapshot {
+            name: "h".to_string(),
+            help: "h".to_string(),
+            ty: MetricType::Histogram,
+            samples: vec![Sample::new(
+                Vec::new(),
+                SampleValue::Histogram(HistogramSnapshot {
+                    buckets: vec![(1.0, 1), (2.0, 1)],
+                    sum: 2.5,
+                }),
+            )],
+        }];
+        let text = encode(&families);
+        assert!(text.contains("h_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("h_count 2\n"));
+    }
+
+    // -- text-format grammar sanity ------------------------------------
+
+    fn is_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().unwrap().is_ascii_alphabetic()
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    }
+
+    /// Consume a `k="v"` label pair starting at `s`; return the rest
+    /// after the closing quote, or None on malformed input.
+    fn eat_label(s: &str) -> Option<&str> {
+        let eq = s.find("=\"")?;
+        if !is_name(&s[..eq]) {
+            return None;
+        }
+        let mut rest = s[eq + 2..].chars();
+        loop {
+            match rest.next()? {
+                '\\' => {
+                    let c = rest.next()?;
+                    if !matches!(c, '\\' | '"' | 'n') {
+                        return None;
+                    }
+                }
+                '"' => return Some(rest.as_str()),
+                '\n' => return None,
+                _ => {}
+            }
+        }
+    }
+
+    /// One line of the 0.0.4 text format: a `# HELP`/`# TYPE` comment or
+    /// a `name[{labels}] value` sample.
+    fn line_is_valid(line: &str) -> bool {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let ty = it.next().unwrap_or("");
+            return is_name(name)
+                && matches!(ty, "counter" | "gauge" | "histogram");
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let mut it = rest.splitn(2, ' ');
+            return is_name(it.next().unwrap_or(""));
+        }
+        // Sample line: name, optional {labels}, single space, value.
+        let (name_end, rest) = match line.find('{') {
+            Some(i) => {
+                let mut r = &line[i + 1..];
+                loop {
+                    if let Some(after) = r.strip_prefix('}') {
+                        break (i, after);
+                    }
+                    let Some(after) = eat_label(r) else {
+                        return false;
+                    };
+                    r = match after.strip_prefix(',') {
+                        Some(next) => next,
+                        None => after,
+                    };
+                }
+            }
+            None => match line.find(' ') {
+                Some(i) => (i, &line[i..]),
+                None => return false,
+            },
+        };
+        if !is_name(&line[..name_end]) {
+            return false;
+        }
+        let Some(value) = rest.strip_prefix(' ') else {
+            return false;
+        };
+        matches!(value, "+Inf" | "-Inf" | "NaN")
+            || value.parse::<f64>().is_ok()
+    }
+
+    #[test]
+    fn full_registry_exposition_matches_grammar() {
+        let reg = Registry::new();
+        register_up(&reg).unwrap();
+        let pm = Arc::new(PipelineMetrics::default());
+        pm.register_into(&reg, &[("backend", "native"), ("coding", "rle")])
+            .unwrap();
+        let sm = Arc::new(SweepMetrics::default());
+        sm.register_into(&reg).unwrap();
+
+        pm.frames_in.add(9);
+        pm.e2e_latency.record_us(100);
+        sm.begin(12, 4);
+        sm.cell_done();
+
+        let text = encode(&reg.gather());
+        assert!(text.ends_with('\n'), "exposition ends with a newline");
+        for line in text.lines() {
+            assert!(line_is_valid(line), "bad exposition line: {line:?}");
+        }
+        for family in [
+            "pixelmtj_up",
+            "pixelmtj_frames_in_total",
+            "pixelmtj_stage_latency_us_bucket",
+            "pixelmtj_sweep_cells_completed_total",
+        ] {
+            assert!(text.contains(family), "missing family {family}");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Embedded blocking HTTP/1.1 exposition server: std `TcpListener`,
+//! thread-per-connection, graceful shutdown.  Serves `GET /metrics`
+//! (Prometheus text format), `GET /healthz` (process up) and
+//! `GET /readyz` (stage liveness via a caller-supplied probe).
+//!
+//! Deliberately minimal — no keep-alive, no TLS, no routing table — so
+//! the scrape path adds zero dependencies and stays auditable.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::expo;
+use super::registry::Registry;
+
+/// Readiness probe: `Ok(())` while the instrumented pipeline is live,
+/// `Err(reason)` otherwise (the reason becomes the 503 body).
+pub type Readiness = Arc<dyn Fn() -> Result<(), String> + Send + Sync>;
+
+/// A running exposition server.  Dropping it shuts it down.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks a free port — see [`Self::local_addr`])
+    /// and start serving in a background accept thread.
+    pub fn start(
+        addr: &str,
+        registry: Arc<Registry>,
+        ready: Readiness,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding metrics server on {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("pixelmtj-metrics-http".to_string())
+            .spawn(move || accept_loop(listener, registry, ready, stop2))?;
+        Ok(Self { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The actual bound address (resolves a `:0` port request).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread.  In-flight connection
+    /// handlers are detached and finish on their own.  Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocked accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    ready: Readiness,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let reg = Arc::clone(&registry);
+        let rdy = Arc::clone(&ready);
+        let _ = std::thread::Builder::new()
+            .name("pixelmtj-metrics-conn".to_string())
+            .spawn(move || handle_conn(stream, &reg, &rdy));
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, registry: &Registry, ready: &Readiness) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 4096];
+    let mut req = Vec::new();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                req.extend_from_slice(&buf[..n]);
+                let head_done = req.windows(4).any(|w| w == b"\r\n\r\n");
+                if head_done || req.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => return, // slow-loris or broken client: drop it
+        }
+    }
+    let head = String::from_utf8_lossy(&req);
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, ctype, body) = route(method, path, registry, ready);
+    respond(&mut stream, status, ctype, &body);
+}
+
+fn route(
+    method: &str,
+    path: &str,
+    registry: &Registry,
+    ready: &Readiness,
+) -> (u16, &'static str, String) {
+    if method != "GET" {
+        return (405, "text/plain", "method not allowed\n".to_string());
+    }
+    match path.split('?').next().unwrap_or(path) {
+        "/metrics" => {
+            (200, expo::CONTENT_TYPE, expo::encode(&registry.gather()))
+        }
+        "/healthz" => (200, "text/plain", "ok\n".to_string()),
+        "/readyz" => match (**ready)() {
+            Ok(()) => (200, "text/plain", "ready\n".to_string()),
+            Err(reason) => (503, "text/plain", format!("{reason}\n")),
+        },
+        _ => (404, "text/plain", "not found\n".to_string()),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::registry::register_up;
+
+    fn http_get(addr: SocketAddr, path: &str) -> (u16, String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        let req = format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n");
+        s.write_all(req.as_bytes()).expect("send request");
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("read response");
+        let status: u16 = raw
+            .split_whitespace()
+            .nth(1)
+            .expect("status code")
+            .parse()
+            .expect("numeric status");
+        let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, raw.clone(), body)
+    }
+
+    #[test]
+    fn serves_metrics_health_and_readiness() {
+        let reg = Arc::new(Registry::new());
+        register_up(&reg).unwrap();
+        let ok = Arc::new(AtomicBool::new(true));
+        let ok2 = Arc::clone(&ok);
+        let ready: Readiness = Arc::new(move || {
+            if ok2.load(Ordering::SeqCst) {
+                Ok(())
+            } else {
+                Err("stage failed: dispatcher: injected".to_string())
+            }
+        });
+        let mut srv =
+            MetricsServer::start("127.0.0.1:0", Arc::clone(&reg), ready)
+                .expect("bind on an ephemeral port");
+        let addr = srv.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 resolved to a real port");
+
+        let (code, raw, body) = http_get(addr, "/metrics");
+        assert_eq!(code, 200);
+        assert!(raw.contains("text/plain; version=0.0.4"), "raw: {raw}");
+        assert!(body.contains("pixelmtj_up 1"), "body: {body}");
+
+        let (code, _, body) = http_get(addr, "/healthz");
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+
+        let (code, _, body) = http_get(addr, "/readyz");
+        assert_eq!(code, 200);
+        assert_eq!(body, "ready\n");
+
+        ok.store(false, Ordering::SeqCst);
+        let (code, _, body) = http_get(addr, "/readyz");
+        assert_eq!(code, 503);
+        assert!(body.contains("dispatcher"), "503 names the stage: {body}");
+
+        let (code, _, _) = http_get(addr, "/nope");
+        assert_eq!(code, 404);
+
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n")
+            .expect("send request");
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("read response");
+        assert!(raw.starts_with("HTTP/1.1 405"), "raw: {raw}");
+
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "listener must be closed after shutdown"
+        );
+    }
+}

@@ -1,10 +1,23 @@
 //! Lightweight metrics: counters + log-bucketed latency histograms,
-//! aggregated into JSON run reports (consumed by EXPERIMENTS.md).
+//! aggregated into JSON run reports (consumed by EXPERIMENTS.md) and
+//! registered into the scrapeable [`registry::Registry`] for the
+//! Prometheus exposition endpoint ([`expo`], [`http`]).
 
+pub mod expo;
+pub mod http;
+pub mod registry;
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use anyhow::{anyhow, Result};
+
 use crate::util::json::Value;
+use registry::{MetricType, Registry, Sample, SampleValue};
 
 /// Monotone counter (lock-free).
 #[derive(Debug, Default)]
@@ -95,12 +108,16 @@ impl LatencyHistogram {
     }
 
     /// Approximate quantile from the log buckets (upper bucket bound).
+    ///
+    /// `q` is clamped into `[0, 1]`; an empty histogram reports 0 and the
+    /// result is monotone in `q` (cumulative bucket walk).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = (total as f64 * q).ceil() as u64;
+        let q = q.clamp(0.0, 1.0);
+        let target = ((total as f64 * q).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -111,6 +128,30 @@ impl LatencyHistogram {
         1u64 << self.buckets.len()
     }
 
+    /// Point-in-time snapshot in exposition form: per-bucket upper bounds
+    /// in microseconds (last bucket is `+Inf` — overflow lands there) with
+    /// non-cumulative counts, plus the exact running sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let n = self.buckets.len();
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let le = if i + 1 == n {
+                    f64::INFINITY
+                } else {
+                    (1u64 << (i + 1)) as f64
+                };
+                (le, b.load(Ordering::Relaxed))
+            })
+            .collect();
+        HistogramSnapshot {
+            buckets,
+            sum: self.total_us.load(Ordering::Relaxed) as f64,
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("count", Value::Num(self.count() as f64)),
@@ -118,6 +159,21 @@ impl LatencyHistogram {
             ("p50_us_le", Value::Num(self.quantile_us(0.5) as f64)),
             ("p99_us_le", Value::Num(self.quantile_us(0.99) as f64)),
         ])
+    }
+}
+
+/// Exposition-ready histogram state: `(upper_bound, count)` pairs with
+/// non-cumulative counts (the encoder cumulates) and the exact sum of
+/// observations.  Bounds are in the histogram's native unit (µs here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<(f64, u64)>,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|&(_, c)| c).sum()
     }
 }
 
@@ -166,30 +222,359 @@ impl PipelineMetrics {
         self.batch_occupancy_sum.get() as f64 / b as f64
     }
 
+    /// One row per counter: `(json_key, counter)`.  The single source of
+    /// truth for both the JSON report and the registry families.
+    pub fn counter_fields(&self) -> [(&'static str, &Counter); 10] {
+        [
+            ("frames_in", &self.frames_in),
+            ("frames_out", &self.frames_out),
+            ("frames_dropped", &self.frames_dropped),
+            ("submit_rejected", &self.submit_rejected),
+            ("link_decode_mismatch", &self.link_decode_mismatch),
+            ("batches", &self.batches),
+            ("batch_occupancy_sum", &self.batch_occupancy_sum),
+            ("link_bits", &self.link_bits),
+            ("mtj_writes", &self.mtj_writes),
+            ("mtj_resets", &self.mtj_resets),
+        ]
+    }
+
+    /// One row per gauge: `(json_key, gauge)`.
+    pub fn gauge_fields(&self) -> [(&'static str, &Gauge); 2] {
+        [
+            ("frame_queue_peak", &self.frame_queue_peak),
+            ("act_queue_peak", &self.act_queue_peak),
+        ]
+    }
+
+    /// One row per latency histogram: `(json_key, stage_label, histogram)`.
+    /// The stage label keys the shared `pixelmtj_stage_latency_us` family.
+    pub fn histogram_fields(
+        &self,
+    ) -> [(&'static str, &'static str, &LatencyHistogram); 6] {
+        [
+            ("frame_queue_wait", "frame_queue", &self.frame_queue_wait),
+            ("batch_wait", "batch_wait", &self.batch_wait),
+            ("capture_latency", "capture", &self.capture_latency),
+            ("encode_latency", "encode", &self.encode_latency),
+            ("backend_latency", "infer", &self.backend_latency),
+            ("e2e_latency", "e2e", &self.e2e_latency),
+        ]
+    }
+
+    fn help_for(key: &str) -> &'static str {
+        match key {
+            "frames_in" => "Frames admitted into the stream queue",
+            "frames_out" => "Frames classified and returned",
+            "frames_dropped" => "Frames lost after admission (stage failure)",
+            "submit_rejected" => {
+                "Non-blocking submits bounced off a full frame queue"
+            }
+            "link_decode_mismatch" => {
+                "Link encode/decode disagreements (codec bug; 0 when healthy)"
+            }
+            "batches" => "Batches dispatched to the inference backend",
+            "batch_occupancy_sum" => "Sum of frames over all dispatched batches",
+            "link_bits" => "Payload bits shipped over the pixel-to-host link",
+            "mtj_writes" => "VC-MTJ write pulses issued by the capture stage",
+            "mtj_resets" => "VC-MTJ global-shutter reset pulses",
+            "frame_queue_peak" => "High-water mark of the bounded frame queue",
+            "act_queue_peak" => "High-water mark of the activation queue",
+            _ => "Pipeline metric",
+        }
+    }
+
+    /// Register every pipeline family into `reg` under the `pixelmtj_`
+    /// namespace, stamped with the given static labels (e.g. `backend`,
+    /// `coding`).  Counters get the `_total` suffix (except running sums
+    /// already named `*_sum`); the six stage histograms fold into one
+    /// `pixelmtj_stage_latency_us` family keyed by a `stage` label.
+    pub fn register_into(
+        self: &Arc<Self>,
+        reg: &Registry,
+        labels: &[(&str, &str)],
+    ) -> Result<()> {
+        let base: Vec<(String, String)> = labels
+            .iter()
+            .map(|&(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        for (idx, (key, _)) in self.counter_fields().into_iter().enumerate() {
+            let name = if key.ends_with("_sum") {
+                format!("pixelmtj_{key}")
+            } else {
+                format!("pixelmtj_{key}_total")
+            };
+            let m = Arc::clone(self);
+            let lb = base.clone();
+            let collect = move || {
+                let v = m.counter_fields()[idx].1.get();
+                vec![Sample::new(lb.clone(), SampleValue::Counter(v))]
+            };
+            reg.register(&name, Self::help_for(key), MetricType::Counter, collect)?;
+        }
+        for (idx, (key, _)) in self.gauge_fields().into_iter().enumerate() {
+            let name = format!("pixelmtj_{key}");
+            let m = Arc::clone(self);
+            let lb = base.clone();
+            let collect = move || {
+                let v = m.gauge_fields()[idx].1.peak() as f64;
+                vec![Sample::new(lb.clone(), SampleValue::Gauge(v))]
+            };
+            reg.register(&name, Self::help_for(key), MetricType::Gauge, collect)?;
+        }
+        let m = Arc::clone(self);
+        let lb = base;
+        let collect = move || {
+            let mut out = Vec::new();
+            for (_, stage, h) in m.histogram_fields() {
+                let mut labels = lb.clone();
+                labels.push(("stage".to_string(), stage.to_string()));
+                out.push(Sample::new(labels, SampleValue::Histogram(h.snapshot())));
+            }
+            out
+        };
+        reg.register(
+            "pixelmtj_stage_latency_us",
+            "Per-stage latency distribution in microseconds",
+            MetricType::Histogram,
+            collect,
+        )?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = Vec::new();
+        for (key, c) in self.counter_fields() {
+            fields.push((key, Value::Num(c.get() as f64)));
+        }
+        fields.push((
+            "mean_batch_occupancy",
+            Value::Num(self.mean_batch_occupancy()),
+        ));
+        for (key, g) in self.gauge_fields() {
+            fields.push((key, Value::Num(g.peak() as f64)));
+        }
+        for (key, _, h) in self.histogram_fields() {
+            fields.push((key, h.to_json()));
+        }
+        Value::obj(fields)
+    }
+}
+
+/// Progress telemetry for a Monte-Carlo sweep campaign.
+///
+/// Observation-only by contract: nothing in here feeds back into cell
+/// evaluation, RNG streams, or scoring — the engine's determinism
+/// guarantee is identical with or without telemetry attached.
+#[derive(Debug, Default)]
+pub struct SweepMetrics {
+    cells_total: AtomicU64,
+    trials_per_cell: AtomicU64,
+    pub cells_completed: Counter,
+    workers_alive: AtomicU64,
+    started: Mutex<Option<Instant>>,
+}
+
+impl SweepMetrics {
+    /// Arm the campaign clock and record the planned workload size.
+    pub fn begin(&self, cells: usize, trials: usize) {
+        self.cells_total.store(cells as u64, Ordering::Relaxed);
+        self.trials_per_cell.store(trials as u64, Ordering::Relaxed);
+        let mut started = self.started.lock().expect("sweep telemetry lock");
+        *started = Some(Instant::now());
+    }
+
+    pub fn worker_started(&self) {
+        self.workers_alive.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_stopped(&self) {
+        self.workers_alive.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn cell_done(&self) {
+        self.cells_completed.inc();
+    }
+
+    pub fn cells_total(&self) -> u64 {
+        self.cells_total.load(Ordering::Relaxed)
+    }
+
+    pub fn trials_per_cell(&self) -> u64 {
+        self.trials_per_cell.load(Ordering::Relaxed)
+    }
+
+    pub fn workers_alive(&self) -> u64 {
+        self.workers_alive.load(Ordering::Relaxed)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        match *self.started.lock().expect("sweep telemetry lock") {
+            Some(t0) => t0.elapsed().as_secs_f64(),
+            None => 0.0,
+        }
+    }
+
+    pub fn cells_per_sec(&self) -> f64 {
+        let secs = self.elapsed_secs();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.cells_completed.get() as f64 / secs
+    }
+
+    /// Seconds left at the current completion rate (0 before any cell
+    /// finishes — no rate, no estimate).
+    pub fn eta_secs(&self) -> f64 {
+        let rate = self.cells_per_sec();
+        if rate <= 0.0 {
+            return 0.0;
+        }
+        let done = self.cells_completed.get();
+        let left = self.cells_total().saturating_sub(done);
+        left as f64 / rate
+    }
+
+    /// One-line human progress summary for the live CLI ticker.
+    pub fn progress_line(&self) -> String {
+        format!(
+            "cells {}/{} | {:.1} cells/s | eta {:.0}s | workers {}",
+            self.cells_completed.get(),
+            self.cells_total(),
+            self.cells_per_sec(),
+            self.eta_secs(),
+            self.workers_alive()
+        )
+    }
+
+    fn register_gauge(
+        self: &Arc<Self>,
+        reg: &Registry,
+        name: &str,
+        help: &str,
+        read: fn(&SweepMetrics) -> f64,
+    ) -> Result<()> {
+        let m = Arc::clone(self);
+        let collect = move || {
+            vec![Sample::new(Vec::new(), SampleValue::Gauge(read(&m)))]
+        };
+        reg.register(name, help, MetricType::Gauge, collect)
+    }
+
+    /// Register the sweep campaign families into `reg`.
+    pub fn register_into(self: &Arc<Self>, reg: &Registry) -> Result<()> {
+        self.register_gauge(
+            reg,
+            "pixelmtj_sweep_cells",
+            "Cells planned in the running sweep campaign",
+            |m| m.cells_total() as f64,
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_sweep_trials_per_cell",
+            "Monte-Carlo trials evaluated per sweep cell",
+            |m| m.trials_per_cell() as f64,
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_sweep_workers_alive",
+            "Sweep worker threads currently alive",
+            |m| m.workers_alive() as f64,
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_sweep_cells_per_sec",
+            "Sweep cell completion rate",
+            |m| m.cells_per_sec(),
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_sweep_eta_secs",
+            "Estimated seconds until the sweep campaign completes",
+            |m| m.eta_secs(),
+        )?;
+        let m = Arc::clone(self);
+        let collect = move || {
+            let v = m.cells_completed.get();
+            vec![Sample::new(Vec::new(), SampleValue::Counter(v))]
+        };
+        reg.register(
+            "pixelmtj_sweep_cells_completed_total",
+            "Cells completed so far in the sweep campaign",
+            MetricType::Counter,
+            collect,
+        )?;
+        Ok(())
+    }
+}
+
+/// SplitMix64-style finalizer: derives a well-mixed per-frame `trace_id`
+/// from a `(stream epoch, submit sequence)` pair without shared RNG
+/// state — stamping trace ids can never perturb device RNG streams.
+pub fn trace_id(epoch: u64, seq: u64) -> u64 {
+    let mut z = epoch ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One completed frame's span record for the `--trace-log` JSONL sink:
+/// per-stage microsecond timings plus the batch and link facts needed
+/// for offline p99 forensics.
+#[derive(Debug, Clone)]
+pub struct FrameSpan {
+    pub trace_id: u64,
+    pub seq: u32,
+    pub queue_wait_us: u64,
+    pub capture_us: u64,
+    pub encode_us: u64,
+    pub batch_wait_us: u64,
+    pub infer_us: u64,
+    pub e2e_us: u64,
+    pub batch_size: usize,
+    pub coding: &'static str,
+    pub payload_bits: u64,
+}
+
+impl FrameSpan {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
-            ("frames_in", Value::Num(self.frames_in.get() as f64)),
-            ("frames_out", Value::Num(self.frames_out.get() as f64)),
-            ("frames_dropped", Value::Num(self.frames_dropped.get() as f64)),
-            ("submit_rejected", Value::Num(self.submit_rejected.get() as f64)),
-            (
-                "link_decode_mismatch",
-                Value::Num(self.link_decode_mismatch.get() as f64),
-            ),
-            ("batches", Value::Num(self.batches.get() as f64)),
-            ("mean_batch_occupancy", Value::Num(self.mean_batch_occupancy())),
-            ("link_bits", Value::Num(self.link_bits.get() as f64)),
-            ("mtj_writes", Value::Num(self.mtj_writes.get() as f64)),
-            ("mtj_resets", Value::Num(self.mtj_resets.get() as f64)),
-            ("frame_queue_peak", Value::Num(self.frame_queue_peak.peak() as f64)),
-            ("act_queue_peak", Value::Num(self.act_queue_peak.peak() as f64)),
-            ("frame_queue_wait", self.frame_queue_wait.to_json()),
-            ("batch_wait", self.batch_wait.to_json()),
-            ("capture_latency", self.capture_latency.to_json()),
-            ("encode_latency", self.encode_latency.to_json()),
-            ("backend_latency", self.backend_latency.to_json()),
-            ("e2e_latency", self.e2e_latency.to_json()),
+            ("trace_id", Value::Str(format!("{:016x}", self.trace_id))),
+            ("seq", Value::Num(self.seq as f64)),
+            ("queue_wait_us", Value::Num(self.queue_wait_us as f64)),
+            ("capture_us", Value::Num(self.capture_us as f64)),
+            ("encode_us", Value::Num(self.encode_us as f64)),
+            ("batch_wait_us", Value::Num(self.batch_wait_us as f64)),
+            ("infer_us", Value::Num(self.infer_us as f64)),
+            ("e2e_us", Value::Num(self.e2e_us as f64)),
+            ("batch_size", Value::Num(self.batch_size as f64)),
+            ("coding", Value::Str(self.coding.to_string())),
+            ("payload_bits", Value::Num(self.payload_bits as f64)),
         ])
+    }
+}
+
+/// Append-only JSONL sink for [`FrameSpan`] records (`--trace-log PATH`).
+///
+/// Writes are best-effort: I/O errors after creation are swallowed so a
+/// full disk can degrade tracing, never the stream itself.
+#[derive(Debug)]
+pub struct TraceLog {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl TraceLog {
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path)
+            .map_err(|e| anyhow!("creating trace log {path:?}: {e}"))?;
+        Ok(Self { w: Mutex::new(BufWriter::new(f)) })
+    }
+
+    pub fn write(&self, span: &FrameSpan) {
+        let line = span.to_json().to_string_compact();
+        let mut w = self.w.lock().expect("trace log lock");
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
     }
 }
 
@@ -248,5 +633,90 @@ mod tests {
             j.get("mean_batch_occupancy").unwrap().as_f64().unwrap(),
             8.0
         );
+    }
+
+    #[test]
+    fn histogram_snapshot_has_inf_tail_and_exact_sum() {
+        let h = LatencyHistogram::new();
+        h.record_us(1);
+        h.record_us(3);
+        h.record_us(1u64 << 40); // past the last bound: lands in +Inf
+        let s = h.snapshot();
+        assert_eq!(s.buckets.len(), 25);
+        assert_eq!(s.buckets[0], (2.0, 1)); // 1 µs ≤ 2
+        assert_eq!(s.buckets[1], (4.0, 1)); // 3 µs ≤ 4
+        let (last_le, last_n) = s.buckets[24];
+        assert!(last_le.is_infinite());
+        assert_eq!(last_n, 1);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum, (4u64 + (1u64 << 40)) as f64);
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range_q() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 10, 100] {
+            h.record_us(us);
+        }
+        assert_eq!(h.quantile_us(-1.0), h.quantile_us(0.0));
+        assert_eq!(h.quantile_us(2.0), h.quantile_us(1.0));
+        assert!(h.quantile_us(0.0) > 0, "clamped q=0 still hits a bucket");
+    }
+
+    #[test]
+    fn sweep_metrics_progress_accounting() {
+        let m = SweepMetrics::default();
+        assert_eq!(m.cells_per_sec(), 0.0, "no clock before begin()");
+        m.begin(10, 6);
+        m.worker_started();
+        m.worker_started();
+        m.cell_done();
+        m.cell_done();
+        m.cell_done();
+        assert_eq!(m.cells_total(), 10);
+        assert_eq!(m.trials_per_cell(), 6);
+        assert_eq!(m.workers_alive(), 2);
+        assert_eq!(m.cells_completed.get(), 3);
+        let line = m.progress_line();
+        assert!(line.contains("cells 3/10"), "line: {line}");
+        assert!(line.contains("workers 2"), "line: {line}");
+        m.worker_stopped();
+        m.worker_stopped();
+        assert_eq!(m.workers_alive(), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_stable_and_distinct() {
+        let a = trace_id(7, 0);
+        let b = trace_id(7, 1);
+        let c = trace_id(8, 0);
+        assert_eq!(a, trace_id(7, 0), "pure function of (epoch, seq)");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn frame_span_json_line_is_compact_and_complete() {
+        let span = FrameSpan {
+            trace_id: 0xdead_beef,
+            seq: 42,
+            queue_wait_us: 5,
+            capture_us: 10,
+            encode_us: 3,
+            batch_wait_us: 7,
+            infer_us: 120,
+            e2e_us: 145,
+            batch_size: 4,
+            coding: "csr",
+            payload_bits: 2048,
+        };
+        let line = span.to_json().to_string_compact();
+        assert!(!line.contains('\n'), "JSONL record must be one line");
+        assert!(line.contains("\"trace_id\":\"00000000deadbeef\""));
+        assert!(line.contains("\"seq\":42"));
+        assert!(line.contains("\"coding\":\"csr\""));
+        assert!(line.contains("\"payload_bits\":2048"));
+        let parsed = Value::parse(&line).expect("trace line parses back");
+        assert_eq!(parsed.get("batch_size").unwrap().as_usize().unwrap(), 4);
     }
 }

@@ -1,0 +1,227 @@
+//! Pull-based metric registry: named, typed metric families with help
+//! text, each backed by a collect closure that samples the live atomics
+//! at scrape time.  [`Registry::gather`] produces the snapshot consumed
+//! by the Prometheus encoder in [`super::expo`].
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::HistogramSnapshot;
+
+/// Metric family type, mirroring the Prometheus exposition `# TYPE`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricType {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricType::Counter => "counter",
+            MetricType::Gauge => "gauge",
+            MetricType::Histogram => "histogram",
+        }
+    }
+}
+
+/// One sampled value of a family: label pairs plus the typed value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+impl Sample {
+    pub fn new(labels: Vec<(String, String)>, value: SampleValue) -> Self {
+        Self { labels, value }
+    }
+}
+
+/// Typed sample payload.  Counters stay integral (they come straight off
+/// `AtomicU64`s); gauges and histogram sums are `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// Point-in-time snapshot of one family, ready for encoding.
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub ty: MetricType,
+    pub samples: Vec<Sample>,
+}
+
+type Collect = Box<dyn Fn() -> Vec<Sample> + Send + Sync>;
+
+struct Family {
+    name: String,
+    help: String,
+    ty: MetricType,
+    collect: Collect,
+}
+
+/// The registry itself: a set of uniquely-named families.  Registration
+/// happens once at wiring time; `gather` may be called concurrently from
+/// any scrape handler thread.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a family.  Names must be unique across the registry — a
+    /// duplicate is a wiring bug and is rejected loudly.
+    pub fn register(
+        &self,
+        name: &str,
+        help: &str,
+        ty: MetricType,
+        collect: impl Fn() -> Vec<Sample> + Send + Sync + 'static,
+    ) -> Result<()> {
+        let mut families = self.families.lock().expect("registry lock");
+        if families.iter().any(|f| f.name == name) {
+            bail!("metric family '{name}' registered twice");
+        }
+        families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            ty,
+            collect: Box::new(collect),
+        });
+        Ok(())
+    }
+
+    /// Number of registered families.
+    pub fn len(&self) -> usize {
+        self.families.lock().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sample every family, sorted by name for a stable exposition order.
+    pub fn gather(&self) -> Vec<FamilySnapshot> {
+        let families = self.families.lock().expect("registry lock");
+        let mut out: Vec<FamilySnapshot> = families
+            .iter()
+            .map(|f| FamilySnapshot {
+                name: f.name.clone(),
+                help: f.help.clone(),
+                ty: f.ty,
+                samples: (f.collect)(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+/// Register the conventional `pixelmtj_up` gauge (constant 1 while the
+/// process is alive — the standard scrape-liveness family).
+pub fn register_up(reg: &Registry) -> Result<()> {
+    reg.register("pixelmtj_up", "Process is up", MetricType::Gauge, || {
+        vec![Sample::new(Vec::new(), SampleValue::Gauge(1.0))]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Counter, PipelineMetrics};
+    use std::sync::Arc;
+
+    #[test]
+    fn register_and_gather_sorted() {
+        let reg = Registry::new();
+        let c = Arc::new(Counter::default());
+        let cc = Arc::clone(&c);
+        reg.register("zzz_total", "last", MetricType::Counter, move || {
+            vec![Sample::new(Vec::new(), SampleValue::Counter(cc.get()))]
+        })
+        .unwrap();
+        register_up(&reg).unwrap();
+        c.add(3);
+
+        let fams = reg.gather();
+        assert_eq!(fams.len(), 2);
+        assert_eq!(fams[0].name, "pixelmtj_up", "sorted by name");
+        assert_eq!(fams[1].name, "zzz_total");
+        assert_eq!(fams[1].samples[0].value, SampleValue::Counter(3));
+
+        c.add(2); // pull-based: a fresh gather sees the new value
+        let fams = reg.gather();
+        assert_eq!(fams[1].samples[0].value, SampleValue::Counter(5));
+    }
+
+    #[test]
+    fn duplicate_names_are_rejected() {
+        let reg = Registry::new();
+        register_up(&reg).unwrap();
+        let err = register_up(&reg).unwrap_err();
+        assert!(format!("{err}").contains("registered twice"));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn pipeline_metrics_register_all_families() {
+        let m = Arc::new(PipelineMetrics::default());
+        let reg = Registry::new();
+        m.register_into(&reg, &[("backend", "native"), ("coding", "csr")])
+            .unwrap();
+        // 10 counters + 2 gauges + 1 shared stage-latency histogram.
+        assert_eq!(reg.len(), 13);
+
+        m.frames_in.add(7);
+        m.capture_latency.record_us(12);
+        let fams = reg.gather();
+        let frames_in = fams
+            .iter()
+            .find(|f| f.name == "pixelmtj_frames_in_total")
+            .expect("frames_in family");
+        assert_eq!(frames_in.ty, MetricType::Counter);
+        assert_eq!(frames_in.samples[0].value, SampleValue::Counter(7));
+        let lbl = &frames_in.samples[0].labels;
+        assert!(lbl.contains(&("backend".to_string(), "native".to_string())));
+        assert!(lbl.contains(&("coding".to_string(), "csr".to_string())));
+
+        let occ = fams
+            .iter()
+            .find(|f| f.name == "pixelmtj_batch_occupancy_sum")
+            .expect("running sums keep their _sum name, no _total");
+        assert_eq!(occ.ty, MetricType::Counter);
+
+        let hist = fams
+            .iter()
+            .find(|f| f.name == "pixelmtj_stage_latency_us")
+            .expect("stage latency family");
+        assert_eq!(hist.ty, MetricType::Histogram);
+        assert_eq!(hist.samples.len(), 6, "one sample per stage");
+        let capture = hist
+            .samples
+            .iter()
+            .find(|s| {
+                s.labels
+                    .contains(&("stage".to_string(), "capture".to_string()))
+            })
+            .expect("capture stage sample");
+        match &capture.value {
+            SampleValue::Histogram(snap) => assert_eq!(snap.count(), 1),
+            other => panic!("not a histogram sample: {other:?}"),
+        }
+
+        // Double registration of the same metrics object must fail.
+        assert!(m.register_into(&reg, &[]).is_err());
+    }
+}

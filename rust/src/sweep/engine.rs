@@ -44,6 +44,7 @@ use crate::config::{HwConfig, SweepConfig};
 use crate::coordinator::stream::argmax;
 use crate::device::rng;
 use crate::energy::{frontend_ours, Geometry};
+use crate::metrics::SweepMetrics;
 use crate::sensor::{
     scene::SceneGen, AnalogPlane, BitPlane, CaptureMode, CaptureStats,
     FirstLayerWeights, OperatingPoint, PixelArraySim,
@@ -189,6 +190,19 @@ fn eval_cell(ctx: &CellCtx<'_>, cell: &SweepCell) -> Result<CellResult> {
 /// and bit-identical for any thread count.
 pub fn run_sweep_with(
     cfg: &SweepConfig,
+    on_cell: impl FnMut(usize, &CellResult),
+) -> Result<SweepSummary> {
+    run_sweep_observed(cfg, None, on_cell)
+}
+
+/// [`run_sweep_with`] plus campaign progress telemetry.  `telemetry` is
+/// strictly observation-only — workers report liveness and the collector
+/// counts completed cells, but nothing flows back into cell evaluation,
+/// RNG coordinates, or scoring, so determinism (and the blessed golden)
+/// is untouched whether or not telemetry is attached.
+pub fn run_sweep_observed(
+    cfg: &SweepConfig,
+    telemetry: Option<&SweepMetrics>,
     mut on_cell: impl FnMut(usize, &CellResult),
 ) -> Result<SweepSummary> {
     let grid = SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
@@ -271,6 +285,9 @@ pub fn run_sweep_with(
         ow,
     };
 
+    if let Some(t) = telemetry {
+        t.begin(cells.len(), cfg.trials as usize);
+    }
     let t0 = Instant::now();
     let (job_tx, job_rx) = sync_channel::<(usize, SweepCell)>(threads * 2);
     let job_rx = Mutex::new(job_rx);
@@ -287,12 +304,20 @@ pub fn run_sweep_with(
             let res_tx = res_tx.clone();
             let job_rx = &job_rx;
             let ctx = &ctx;
-            s.spawn(move || loop {
-                let job = job_rx.lock().expect("sweep job lock").recv();
-                let Ok((idx, cell)) = job else { break };
-                let out = eval_cell(ctx, &cell);
-                if res_tx.send((idx, out)).is_err() {
-                    break;
+            s.spawn(move || {
+                if let Some(t) = telemetry {
+                    t.worker_started();
+                }
+                loop {
+                    let job = job_rx.lock().expect("sweep job lock").recv();
+                    let Ok((idx, cell)) = job else { break };
+                    let out = eval_cell(ctx, &cell);
+                    if res_tx.send((idx, out)).is_err() {
+                        break;
+                    }
+                }
+                if let Some(t) = telemetry {
+                    t.worker_stopped();
                 }
             });
         }
@@ -309,6 +334,11 @@ pub fn run_sweep_with(
         for _ in 0..cells.len() {
             let (idx, out) =
                 res_rx.recv().expect("sweep worker pool hung up early");
+            // Count before the sink runs so a progress line printed from
+            // `on_cell` already includes the cell it reports.
+            if let Some(t) = telemetry {
+                t.cell_done();
+            }
             if let Ok(ref cell_result) = out {
                 on_cell(idx, cell_result);
             }
@@ -438,6 +468,26 @@ mod tests {
         let a = run_sweep(&quick_cfg(grid, 1)).unwrap();
         let b = run_sweep(&quick_cfg(grid, 5)).unwrap();
         assert_eq!(a.cells, b.cells);
+    }
+
+    #[test]
+    fn telemetry_observes_without_changing_results() {
+        use crate::metrics::SweepMetrics;
+        let grid = "v=0.8,0.9;k=4,5";
+        let plain = run_sweep(&quick_cfg(grid, 3)).unwrap();
+        let tm = SweepMetrics::default();
+        let observed =
+            run_sweep_observed(&quick_cfg(grid, 3), Some(&tm), |_, _| {})
+                .unwrap();
+        assert_eq!(
+            plain.cells, observed.cells,
+            "telemetry must be observation-only"
+        );
+        assert_eq!(tm.cells_total() as usize, observed.cells.len());
+        assert_eq!(tm.cells_completed.get() as usize, observed.cells.len());
+        assert_eq!(tm.trials_per_cell(), 3);
+        assert_eq!(tm.workers_alive(), 0, "all workers reported stopped");
+        assert!(tm.cells_per_sec() >= 0.0);
     }
 
     #[test]

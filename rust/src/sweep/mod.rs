@@ -32,6 +32,7 @@ pub mod engine;
 pub mod grid;
 
 pub use engine::{
-    run_sweep, run_sweep_with, trial_seed, CellResult, SweepSummary,
+    run_sweep, run_sweep_observed, run_sweep_with, trial_seed, CellResult,
+    SweepSummary,
 };
 pub use grid::{SweepCell, SweepGrid};

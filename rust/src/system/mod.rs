@@ -38,9 +38,14 @@ use crate::config::{
 };
 use crate::coordinator::stream::{self, FrameSource, StreamServer};
 use crate::coordinator::{Pipeline, RunReport};
+use crate::metrics::http::{MetricsServer, Readiness};
+use crate::metrics::registry::{register_up, Registry};
+use crate::metrics::SweepMetrics;
 use crate::reports::ReportCtx;
 use crate::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
-use crate::sweep::{run_sweep_with, CellResult, SweepSummary};
+use crate::sweep::{
+    run_sweep_observed, run_sweep_with, CellResult, SweepSummary,
+};
 
 /// The system facade: a resolved [`SystemSpec`] plus lazily built
 /// machinery (weights → sensor sim → backend → pipeline, each cached).
@@ -184,6 +189,49 @@ impl System {
         server.shutdown()
     }
 
+    /// Start the Prometheus exposition server for the serve path when
+    /// `spec.pipeline.metrics_addr` is set (`None` otherwise).  The
+    /// registry samples the pipeline's live [`crate::metrics::
+    /// PipelineMetrics`] with `backend`/`coding` identity labels, and
+    /// `/readyz` reads the pipeline's [`crate::coordinator::StageHealth`]
+    /// so a dead stage flips it to 503 naming the failure.
+    pub fn serve_telemetry(&mut self) -> Result<Option<MetricsServer>> {
+        let Some(addr) = self.spec.pipeline.metrics_addr.clone() else {
+            return Ok(None);
+        };
+        let backend_name = self.spec.pipeline.backend.name();
+        let coding_name = self.spec.pipeline.sparse_coding.name();
+        let pl = self.ensure_pipeline()?;
+        let reg = Arc::new(Registry::new());
+        register_up(&reg)?;
+        pl.metrics().register_into(
+            &reg,
+            &[("backend", backend_name), ("coding", coding_name)],
+        )?;
+        let health = pl.health();
+        let ready: Readiness = Arc::new(move || health.ready());
+        Ok(Some(MetricsServer::start(&addr, reg, ready)?))
+    }
+
+    /// Campaign progress telemetry for the sweep path: a [`SweepMetrics`]
+    /// the caller threads into [`System::sweep_observed`], plus the
+    /// exposition server when `metrics_addr` is set.  Sweeps have no
+    /// stage threads, so `/readyz` is ready for the campaign's lifetime.
+    pub fn sweep_telemetry(
+        &self,
+    ) -> Result<(Arc<SweepMetrics>, Option<MetricsServer>)> {
+        let sm = Arc::new(SweepMetrics::default());
+        let Some(addr) = self.spec.pipeline.metrics_addr.clone() else {
+            return Ok((sm, None));
+        };
+        let reg = Arc::new(Registry::new());
+        register_up(&reg)?;
+        sm.register_into(&reg)?;
+        let ready: Readiness = Arc::new(|| Ok(()));
+        let server = MetricsServer::start(&addr, reg, ready)?;
+        Ok((sm, Some(server)))
+    }
+
     /// Run the spec's Monte-Carlo sweep campaign (deterministic for any
     /// thread count), streaming each cell to `on_cell` as it completes.
     pub fn sweep_with(
@@ -191,6 +239,16 @@ impl System {
         on_cell: impl FnMut(usize, &CellResult),
     ) -> Result<SweepSummary> {
         run_sweep_with(&self.spec.sweep, on_cell)
+    }
+
+    /// [`System::sweep_with`] plus campaign progress telemetry (strictly
+    /// observation-only — see [`run_sweep_observed`]).
+    pub fn sweep_observed(
+        &self,
+        telemetry: &SweepMetrics,
+        on_cell: impl FnMut(usize, &CellResult),
+    ) -> Result<SweepSummary> {
+        run_sweep_observed(&self.spec.sweep, Some(telemetry), on_cell)
     }
 
     /// Run the sweep without a streaming sink.
@@ -329,6 +387,19 @@ impl SystemBuilder {
     pub fn out_dir(self, dir: impl Into<String>) -> Self {
         let dir = dir.into();
         self.set_field("out", &dir)
+    }
+
+    /// Prometheus exposition bind address (`127.0.0.1:0` picks a free
+    /// port — read it back from the started server's `local_addr`).
+    pub fn metrics_addr(self, addr: impl Into<String>) -> Self {
+        let addr = addr.into();
+        self.set_field("metrics-addr", &addr)
+    }
+
+    /// JSONL sink for per-frame trace spans on the serve path.
+    pub fn trace_log(self, path: impl Into<String>) -> Self {
+        let path = path.into();
+        self.set_field("trace-log", &path)
     }
 
     /// Apply the `hwcfg.json` layer from the (possibly overridden)

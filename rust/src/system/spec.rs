@@ -368,6 +368,32 @@ fn build_registry() -> Vec<FieldDef> {
             also_marks: &[],
             get: |s| s.sweep.out_dir.clone(),
         },
+        // Telemetry: the Prometheus exposition server binds for serve and
+        // sweep alike; per-frame trace spans only exist on the serve path.
+        FieldDef {
+            name: "metrics-addr",
+            hint: "ADDR".to_string(),
+            json: Some("metrics_addr"),
+            cmds: GEOM,
+            kind: Kind::Str(|s, v| s.pipeline.metrics_addr = Some(v)),
+            also_marks: &[],
+            get: |s| match &s.pipeline.metrics_addr {
+                Some(a) => a.clone(),
+                None => "-".to_string(),
+            },
+        },
+        FieldDef {
+            name: "trace-log",
+            hint: "PATH".to_string(),
+            json: Some("trace_log"),
+            cmds: SERVE,
+            kind: Kind::Str(|s, v| s.pipeline.trace_log = Some(v)),
+            also_marks: &[],
+            get: |s| match &s.pipeline.trace_log {
+                Some(p) => p.clone(),
+                None => "-".to_string(),
+            },
+        },
     ]
 }
 
@@ -798,6 +824,42 @@ mod tests {
         assert_eq!(spec.sweep.grid, "v=0.9");
         assert_eq!(spec.frames, 4);
         assert_eq!(spec.pipeline.sparse_coding, SparseCoding::Dense);
+    }
+
+    #[test]
+    fn telemetry_fields_resolve_with_precedence_and_gating() {
+        // Defaults: telemetry off, rendered as "-" in the provenance table.
+        let spec = resolve("serve").unwrap();
+        assert_eq!(spec.pipeline.metrics_addr, None);
+        assert_eq!(spec.pipeline.trace_log, None);
+        let rows = spec.resolved_rows();
+        let row = rows.iter().find(|r| r.0 == "metrics-addr").unwrap();
+        assert_eq!(row.1, "-");
+
+        // Env layer applies; CLI wins over env; provenance tracks both.
+        let a = args("serve --metrics-addr 127.0.0.1:9999");
+        let env = EnvSource::from_pairs([
+            ("PIXELMTJ_METRICS_ADDR", "127.0.0.1:1111"),
+            ("PIXELMTJ_TRACE_LOG", "env_trace.jsonl"),
+        ]);
+        let spec = resolve_spec(Cmd::Serve, &a, &env).unwrap();
+        assert_eq!(
+            spec.pipeline.metrics_addr.as_deref(),
+            Some("127.0.0.1:9999")
+        );
+        assert_eq!(spec.provenance("metrics-addr"), Provenance::Cli);
+        assert_eq!(
+            spec.pipeline.trace_log.as_deref(),
+            Some("env_trace.jsonl")
+        );
+        assert_eq!(spec.provenance("trace-log"), Provenance::Env);
+
+        // `sweep` scrapes too, but has no per-frame spans to trace.
+        let spec =
+            resolve("sweep --grid v=0.8 --metrics-addr 127.0.0.1:0").unwrap();
+        assert_eq!(spec.pipeline.metrics_addr.as_deref(), Some("127.0.0.1:0"));
+        let err = resolve("sweep --grid v=0.8 --trace-log t.jsonl").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --trace-log");
     }
 
     #[test]

@@ -397,6 +397,83 @@ fn prop_packed_capture_equals_bool_reference() {
 }
 
 #[test]
+fn prop_latency_histogram_empty_is_zero_not_nan() {
+    use pixelmtj::metrics::LatencyHistogram;
+    // An empty histogram reports 0 for the mean and for every quantile —
+    // including out-of-range q — never NaN, never a panic.
+    check("empty histogram", 60, |g| {
+        let h = LatencyHistogram::default();
+        let q = g.f64_in(-3.0, 3.0);
+        if h.mean_us() != 0.0 {
+            return Err(format!("empty mean {}", h.mean_us()));
+        }
+        if h.quantile_us(q) != 0 {
+            return Err(format!("empty quantile({q}) != 0"));
+        }
+        if h.snapshot().count() != 0 {
+            return Err("empty snapshot count != 0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_histogram_quantiles_monotone_in_q() {
+    use pixelmtj::metrics::LatencyHistogram;
+    check("histogram quantile monotonicity", 120, |g| {
+        let h = LatencyHistogram::default();
+        let n = g.usize_in(1, 200);
+        for _ in 0..n {
+            h.record_us(g.usize_in(0, 5_000_000) as u64);
+        }
+        let mut q1 = g.f64_in(0.0, 1.0);
+        let mut q2 = g.f64_in(0.0, 1.0);
+        if q1 > q2 {
+            std::mem::swap(&mut q1, &mut q2);
+        }
+        let (v1, v2) = (h.quantile_us(q1), h.quantile_us(q2));
+        if v1 > v2 {
+            return Err(format!("q{q1}={v1} > q{q2}={v2}"));
+        }
+        // Out-of-range q clamps to the endpoints.
+        if h.quantile_us(-1.0) != h.quantile_us(0.0) {
+            return Err("q<0 must clamp to q=0".into());
+        }
+        if h.quantile_us(2.0) != h.quantile_us(1.0) {
+            return Err("q>1 must clamp to q=1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_histogram_overflow_lands_in_last_bucket() {
+    use pixelmtj::metrics::LatencyHistogram;
+    // Values beyond the top power-of-two bound (~17 s) land in the +Inf
+    // tail bucket, stay counted, and cap the quantile walk.
+    check("histogram overflow bucket", 60, |g| {
+        let h = LatencyHistogram::default();
+        let huge = (1u64 << 40) + g.u32() as u64;
+        h.record_us(huge);
+        let snap = h.snapshot();
+        let &(le, cnt) = snap.buckets.last().unwrap();
+        if !le.is_infinite() || cnt != 1 {
+            return Err(format!("tail bucket ({le}, {cnt})"));
+        }
+        if snap.count() != 1 || h.count() != 1 {
+            return Err("overflow observation lost".into());
+        }
+        if h.quantile_us(1.0) != 1u64 << 25 {
+            return Err(format!("overflow p100 {}", h.quantile_us(1.0)));
+        }
+        if h.mean_us() != huge as f64 {
+            return Err("overflow mean must use the exact sum".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_json_roundtrip_arbitrary_numeric_trees() {
     use pixelmtj::util::json::Value;
     check("json roundtrip", 100, |g| {

@@ -78,6 +78,42 @@ fn try_submit_rejects_at_capacity_then_recovers() {
 }
 
 #[test]
+fn frames_in_counts_only_ingested_frames_under_rejection() {
+    // `frames_in` is the ingestion counter: a rejected try_submit (or a
+    // failed blocking submit) must land in `submit_rejected` only, so
+    // `frames_in == frames_out + frames_dropped` holds at quiescence.
+    let cfg = PipelineConfig {
+        queue_depth: 1,
+        sensor_workers: 1,
+        ..PipelineConfig::default()
+    };
+    let pipeline = native_pipeline(cfg);
+    let server = pipeline.stream().unwrap();
+    let mut accepted = 0u64;
+    for frame in textured_frames(64) {
+        if server.try_submit(frame).is_ok() {
+            accepted += 1;
+        }
+    }
+    let results = server.drain().unwrap();
+    assert_eq!(results.len() as u64, accepted, "every ingested frame served");
+    server.shutdown().unwrap();
+
+    let m = pipeline.metrics();
+    assert_eq!(
+        m.frames_in.get(),
+        accepted,
+        "rejected submits must not count as ingested"
+    );
+    assert_eq!(m.submit_rejected.get(), 64 - accepted);
+    assert_eq!(
+        m.frames_in.get(),
+        m.frames_out.get() + m.frames_dropped.get(),
+        "conservation: frames_in == frames_out + frames_dropped"
+    );
+}
+
+#[test]
 fn blocking_submit_bounds_queue_depth() {
     let cfg = PipelineConfig {
         queue_depth: 2,

@@ -1,0 +1,234 @@
+//! Telemetry integration tests: the embedded Prometheus exposition
+//! server over a live pipeline (`/metrics`, `/healthz`, `/readyz`
+//! through the full stream lifecycle), the per-frame trace-span JSONL
+//! sink, and the readiness probe flipping to 503 naming the failed
+//! stage after an induced backend death.  All on the native backend so
+//! nothing skips.
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pixelmtj::backend::{InferenceBackend, NativeBackend};
+use pixelmtj::config::{HwConfig, PipelineConfig};
+use pixelmtj::coordinator::Pipeline;
+use pixelmtj::metrics::http::{MetricsServer, Readiness};
+use pixelmtj::metrics::registry::{register_up, Registry};
+use pixelmtj::sensor::{
+    scene::SceneGen, BitPlane, FirstLayerWeights, Frame, PixelArraySim,
+};
+use pixelmtj::system::System;
+use pixelmtj::util::json::Value;
+
+/// Minimal blocking HTTP GET against the exposition server; returns
+/// `(status code, body)`.
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to metrics server");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let code = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response: {raw:?}"));
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (code, body)
+}
+
+#[test]
+fn metrics_endpoints_track_the_full_stream_lifecycle() {
+    let trace_path =
+        std::env::temp_dir().join("pixelmtj_telemetry_trace.jsonl");
+    let _ = std::fs::remove_file(&trace_path);
+
+    let mut sys = System::builder()
+        .artifacts_dir("/nonexistent")
+        .workers(2)
+        .metrics_addr("127.0.0.1:0")
+        .trace_log(trace_path.to_str().unwrap())
+        .build();
+    let mut server = sys.serve_telemetry().unwrap().expect("addr was set");
+    let addr = server.local_addr();
+
+    // Liveness is unconditional; readiness requires a running stream.
+    let (code, body) = http_get(addr, "/healthz");
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+    let (code, body) = http_get(addr, "/readyz");
+    assert_eq!(code, 503, "no stream started yet");
+    assert!(body.contains("stream not started"), "{body:?}");
+
+    let stream = sys.stream().unwrap();
+    let (code, body) = http_get(addr, "/readyz");
+    assert_eq!((code, body.as_str()), (200, "ready\n"));
+
+    let gen = SceneGen::new(3, 32, 32);
+    for i in 0..12u32 {
+        stream.submit(gen.textured(i)).unwrap();
+    }
+    let results = stream.drain().unwrap();
+    assert_eq!(results.len(), 12);
+
+    let (code, text) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    for needle in [
+        "pixelmtj_up 1",
+        "pixelmtj_frames_in_total",
+        "pixelmtj_frames_out_total",
+        "pixelmtj_batches_total",
+        "pixelmtj_link_bits_total",
+        "pixelmtj_frame_queue_peak",
+        "pixelmtj_stage_latency_us_bucket",
+        "pixelmtj_stage_latency_us_count",
+        "stage=\"capture\"",
+        "stage=\"encode\"",
+        "stage=\"infer\"",
+        "# TYPE pixelmtj_stage_latency_us histogram",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    assert!(
+        text.contains(
+            "pixelmtj_frames_out_total{backend=\"native\",coding=\"csr\"} 12"
+        ),
+        "{text}"
+    );
+
+    let (code, _) = http_get(addr, "/nope");
+    assert_eq!(code, 404);
+
+    stream.shutdown().unwrap();
+    let (code, body) = http_get(addr, "/readyz");
+    assert_eq!(code, 503, "stopped stream is not ready");
+    assert!(body.contains("stream stopped"), "{body:?}");
+    server.shutdown();
+
+    // The trace sink got exactly one JSONL span per served frame, each
+    // carrying the full schema.
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    let lines: Vec<&str> = trace.lines().collect();
+    assert_eq!(lines.len(), 12, "one span per frame");
+    let mut seen_ids = std::collections::BTreeSet::new();
+    for line in &lines {
+        let v = Value::parse(line).unwrap();
+        let id = v.get("trace_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(id.len(), 16, "zero-padded hex trace id: {id:?}");
+        seen_ids.insert(id);
+        assert_eq!(v.get("coding").unwrap().as_str().unwrap(), "csr");
+        for key in [
+            "seq",
+            "queue_wait_us",
+            "capture_us",
+            "encode_us",
+            "batch_wait_us",
+            "infer_us",
+            "e2e_us",
+            "batch_size",
+            "payload_bits",
+        ] {
+            assert!(v.get(key).unwrap().as_f64().is_ok(), "{key} in {line}");
+        }
+        assert!(v.get("payload_bits").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert_eq!(seen_ids.len(), 12, "trace ids are distinct");
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// A backend whose inference path always errors: the frontend (capture
+/// shapes, preload) delegates to the real native engine so the stream
+/// starts cleanly, then the first dispatched batch kills the dispatcher.
+struct FailingBackend(NativeBackend);
+
+impl InferenceBackend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+    fn act_shape(&self) -> [usize; 3] {
+        self.0.act_shape()
+    }
+    fn num_classes(&self) -> usize {
+        self.0.num_classes()
+    }
+    fn preload(&self, batches: &[usize]) -> Result<()> {
+        self.0.preload(batches)
+    }
+    fn run_frontend(&self, frame: &Frame) -> Result<BitPlane> {
+        self.0.run_frontend(frame)
+    }
+    fn run_backend(&self, _acts: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        bail!("injected backend failure")
+    }
+    fn run_backend_packed(
+        &self,
+        _words: &[u64],
+        _batch: usize,
+    ) -> Result<Vec<f32>> {
+        bail!("injected backend failure")
+    }
+}
+
+#[test]
+fn readyz_flips_to_503_naming_the_dead_stage() {
+    let cfg = PipelineConfig {
+        sensor_workers: 1,
+        ..PipelineConfig::default()
+    };
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let native = NativeBackend::new(hw, weights, 32, 32, 1);
+    let pipeline =
+        Pipeline::new(cfg, sim, Arc::new(FailingBackend(native))).unwrap();
+
+    let reg = Arc::new(Registry::new());
+    register_up(&reg).unwrap();
+    pipeline
+        .metrics()
+        .register_into(&reg, &[("backend", "failing"), ("coding", "csr")])
+        .unwrap();
+    let health = pipeline.health();
+    let ready: Readiness = Arc::new(move || health.ready());
+    let mut server = MetricsServer::start("127.0.0.1:0", reg, ready).unwrap();
+    let addr = server.local_addr();
+
+    let stream = pipeline.stream().unwrap();
+    let (code, _) = http_get(addr, "/readyz");
+    assert_eq!(code, 200, "stages alive before the first batch");
+
+    // Keep feeding until the dispatcher hits the poisoned backend and
+    // records its death; readiness must flip to 503 naming the stage.
+    let gen = SceneGen::new(3, 32, 32);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut i = 0u32;
+    loop {
+        let _ = stream.try_submit(gen.textured(i));
+        i += 1;
+        let (code, body) = http_get(addr, "/readyz");
+        if code == 503 {
+            assert!(body.contains("stage failed: dispatcher"), "{body:?}");
+            assert!(body.contains("injected backend failure"), "{body:?}");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "dispatcher death never reached /readyz"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let err = stream
+        .shutdown()
+        .expect_err("shutdown must surface the stage error");
+    assert!(
+        format!("{err:#}").contains("injected backend failure"),
+        "{err:#}"
+    );
+    // The recorded failure is sticky: it outranks the stopped state.
+    let (code, body) = http_get(addr, "/readyz");
+    assert_eq!(code, 503);
+    assert!(body.contains("dispatcher"), "{body:?}");
+    server.shutdown();
+}
