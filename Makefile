@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts metrics-smoke
+.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts metrics-smoke wire-smoke
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -46,6 +46,12 @@ bench-pack:
 # `serve --stream` runs, then verify the trace-log JSONL (mirrors CI).
 metrics-smoke:
 	$(RUST_DIR)/scripts/metrics_smoke.sh
+
+# End-to-end wire-protocol smoke: serve --stream --listen, drive it with
+# `pixelmtj push` + a hostile probe, pin the pixelmtj_wire_* scrape
+# arithmetic (mirrors CI; transcript → rust/wire_smoke_transcript.txt).
+wire-smoke:
+	$(RUST_DIR)/scripts/wire_smoke.sh
 
 # Default reliability campaign (paper's calibrated points) → rust/reports/
 sweep:

@@ -1,0 +1,100 @@
+//! The wire front door end to end, in one process: start a listening
+//! server (`System::serve_wire`), connect a `WireClient` per frame
+//! coding, stream frames, and compare what each coding costs on the
+//! wire.  Finishes with a deliberately malformed probe to show the typed
+//! `ERROR` path from docs/PROTOCOL.md.  Runs anywhere — loopback TCP,
+//! native XNOR backend, no artifacts.
+//!
+//! ```sh
+//! cargo run --release --example wire_client
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use pixelmtj::config::{HwConfig, KeyedEnum, WireCoding};
+use pixelmtj::sensor::scene::SceneGen;
+use pixelmtj::system::System;
+use pixelmtj::wire::{self, StatusCode, WireClient};
+
+const FRAMES_PER_CODING: u32 = 6;
+
+fn main() -> anyhow::Result<()> {
+    // A listening system on an ephemeral loopback port.
+    let mut sys = System::builder()
+        .frames(0)
+        .workers(2)
+        .listen("127.0.0.1:0")
+        .build();
+    let channels = HwConfig::default().network.in_channels;
+    let (height, width) = (
+        sys.spec().pipeline.sensor_height,
+        sys.spec().pipeline.sensor_width,
+    );
+    let mut svc = sys.serve_wire()?;
+    let addr = svc.server.local_addr().to_string();
+    println!("wire server listening on {addr} ({channels}x{height}x{width})");
+
+    // One session per coding, same scenes each time (capture noise is
+    // seq-seeded, so the f32 session classifies the same planes the
+    // packed sessions pre-binarize client-side).
+    let gen = SceneGen::new(channels, height, width);
+    for coding in [
+        WireCoding::F32,
+        WireCoding::Dense,
+        WireCoding::Csr,
+        WireCoding::Rle,
+    ] {
+        let mut client =
+            WireClient::connect(&addr, coding, channels, height, width)?;
+        for seq in 0..FRAMES_PER_CODING {
+            client.send_frame(&gen.textured(seq))?;
+        }
+        let bytes = client.bytes_sent();
+        let results = client.finish()?;
+        let labels: Vec<u16> = results.iter().map(|r| r.label).collect();
+        println!(
+            "  {:>5}: {} frames → labels {:?}, {:>6} bytes sent \
+             ({:.0} B/frame)",
+            coding.name(),
+            results.len(),
+            labels,
+            bytes,
+            bytes as f64 / results.len().max(1) as f64
+        );
+        anyhow::ensure!(
+            results.len() == FRAMES_PER_CODING as usize,
+            "every frame gets a RESULT"
+        );
+    }
+
+    // A hostile probe: 9 bytes that are not "PXMJ..." — the server
+    // answers a typed ERROR and closes, and counts it under the
+    // bad_magic code of pixelmtj_wire_protocol_errors_total.
+    let mut probe = TcpStream::connect(&addr)?;
+    probe.write_all(b"GET / HTT")?;
+    let mut reply = Vec::new();
+    probe.read_to_end(&mut reply)?;
+    let (msg, _) = wire::proto::decode(&reply)
+        .map_err(|e| anyhow::anyhow!("expected an ERROR reply: {e}"))?;
+    match msg {
+        wire::Msg::Error { code, detail } => {
+            println!("malformed-magic probe: {} ({detail})", code.name());
+            anyhow::ensure!(code == StatusCode::BadMagic);
+        }
+        other => anyhow::bail!("expected ERROR, got {other:?}"),
+    }
+    anyhow::ensure!(
+        svc.metrics.protocol_error_count(StatusCode::BadMagic) == 1,
+        "probe counted under code=\"bad_magic\""
+    );
+
+    println!(
+        "server totals: {} sessions, {} frames in, {} results out",
+        svc.metrics.sessions_total.get(),
+        svc.metrics.frames_received.get(),
+        svc.metrics.results_sent.get()
+    );
+    svc.server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,29 @@
+# Shared helpers for the smoke scripts (sourced, not executed).
+
+# await_line REGEX LOG [PID]
+#
+# Poll LOG until a line matches REGEX (grep -E) and echo the first
+# match.  Fails fast if PID exits before the line appears, and after
+# ~30 s either way — dumping LOG to stderr so CI failures carry the
+# evidence.  Replaces ad-hoc sed retry loops: the one pattern every
+# smoke needs is "wait for the server to print its bound address".
+await_line() {
+  local regex=$1 log=$2 pid=${3:-}
+  local _i line
+  for _i in $(seq 1 300); do
+    line=$(grep -E -m1 -- "$regex" "$log" 2>/dev/null || true)
+    if [ -n "$line" ]; then
+      printf '%s\n' "$line"
+      return 0
+    fi
+    if [ -n "$pid" ] && ! kill -0 "$pid" 2>/dev/null; then
+      echo "FAIL: process $pid exited before printing /$regex/" >&2
+      cat "$log" >&2
+      return 1
+    fi
+    sleep 0.1
+  done
+  echo "FAIL: timed out waiting for /$regex/ in $log" >&2
+  cat "$log" >&2
+  return 1
+}

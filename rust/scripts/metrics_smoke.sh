@@ -9,6 +9,7 @@
 # without depending on backend throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+. scripts/lib.sh
 
 TRACE=trace_smoke.jsonl
 LOG=$(mktemp)
@@ -22,17 +23,9 @@ PID=$!
 trap 'kill $PID 2>/dev/null || true' EXIT
 
 # The CLI prints the bound address (port 0 → ephemeral) before serving.
-ADDR=""
-for _ in $(seq 1 150); do
-  ADDR=$(sed -n 's|^telemetry: http://\([^/]*\)/metrics.*|\1|p' "$LOG" | head -n1)
-  [ -n "$ADDR" ] && break
-  sleep 0.2
-done
-if [ -z "$ADDR" ]; then
-  echo "FAIL: no telemetry line in serve output:" >&2
-  cat "$LOG" >&2
-  exit 1
-fi
+LINE=$(await_line '^telemetry: http://' "$LOG" "$PID")
+ADDR=${LINE#telemetry: http://}
+ADDR=${ADDR%%/*}
 echo "scraping http://$ADDR mid-run"
 
 curl -sf "http://$ADDR/healthz" | grep -q '^ok$'

@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# End-to-end wire-protocol smoke (CI runs this via `make wire-smoke`):
+# `serve --stream --listen` on an ephemeral port, driven by the
+# `pixelmtj push` wire client in two sessions with a hostile non-PXMJ
+# probe in between, pinning the pixelmtj_wire_* metric families against
+# the exact frame arithmetic.  The full transcript lands in
+# wire_smoke_transcript.txt (uploaded as a CI artifact on every run).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+. scripts/lib.sh
+
+TRANSCRIPT=wire_smoke_transcript.txt
+exec > >(tee "$TRANSCRIPT") 2>&1
+
+LOG=$(mktemp)
+PROBE=$(mktemp)
+PUSH=$(mktemp)
+
+cargo build --release
+BIN=target/release/pixelmtj
+
+# Ingest budget 48: the server exits on its own once 48 frames arrived
+# and the last session drained — no kill/timeout choreography needed.
+"$BIN" serve --stream --listen 127.0.0.1:0 --metrics-addr 127.0.0.1:0 \
+  --frames 48 --workers 2 >"$LOG" 2>&1 &
+PID=$!
+trap 'kill $PID 2>/dev/null || true' EXIT
+
+LINE=$(await_line '^wire: listening on ' "$LOG" "$PID")
+ADDR=${LINE#wire: listening on }
+LINE=$(await_line '^telemetry: http://' "$LOG" "$PID")
+MADDR=${LINE#telemetry: http://}
+MADDR=${MADDR%%/*}
+echo "server up: wire=$ADDR metrics=$MADDR"
+
+# Session 1: 24 bursty frames, binarized client-side and shipped as CSR
+# (the paper's "ship binary activations, not pixels" link over TCP).
+"$BIN" push --connect "$ADDR" --wire-coding csr --frames 24 \
+  --workload bursty --burst-len 8 --burst-gap-us 5000 | tee "$PUSH"
+grep -q '^pushed 24 frames, received 24 results' "$PUSH"
+
+# Hostile probe: curl speaks HTTP at the wire port, and "GET / HTT" is
+# not a PXMJ envelope — the server must answer the typed ERROR from
+# docs/PROTOCOL.md and close.  (--http0.9 lets curl keep the raw reply;
+# if this curl lacks it, the metrics assertion below still gates.)
+curl -s --max-time 5 --http0.9 -o "$PROBE" "http://$ADDR/" || true
+if grep -aq 'PXMJ' "$PROBE"; then
+  echo "probe: typed ERROR envelope received"
+else
+  echo "probe: raw reply not captured; the bad_magic metric gates it"
+fi
+
+# Mid-run scrape: exact arithmetic.  RESULTs flush before the server's
+# closing GOODBYE, so after push exits these counters are settled.
+METRICS=$(curl -sf "http://$MADDR/metrics")
+for want in \
+  'pixelmtj_wire_sessions_total 1' \
+  'pixelmtj_wire_frames_received_total 24' \
+  'pixelmtj_wire_results_sent_total 24' \
+  'pixelmtj_wire_session_rejections_total 0' \
+  'pixelmtj_wire_protocol_errors_total{code="bad_magic"} 1' \
+  'pixelmtj_wire_protocol_errors_total{code="bad_frame"} 0'; do
+  if ! echo "$METRICS" | grep -qF -x -- "$want"; then
+    echo "FAIL: /metrics is missing exact sample: $want" >&2
+    echo "$METRICS" | grep pixelmtj_wire >&2 || echo "$METRICS" >&2
+    exit 1
+  fi
+done
+curl -sf "http://$MADDR/readyz" | grep -q '^ready$'
+echo "mid-run scrape OK"
+
+# Session 2 fills the ingest budget (dense coding for coverage).
+"$BIN" push --connect "$ADDR" --wire-coding dense --frames 24 | tee "$PUSH"
+grep -q '^pushed 24 frames, received 24 results' "$PUSH"
+
+wait "$PID"
+trap - EXIT
+cat "$LOG"
+grep -q '48 frames over 2 sessions' "$LOG"
+grep -q '48 results, 1 protocol errors' "$LOG"
+rm -f "$LOG" "$PROBE" "$PUSH"
+echo "wire smoke OK: 48 frames, 2 sessions, 1 typed protocol error"

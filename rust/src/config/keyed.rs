@@ -161,9 +161,72 @@ impl KeyedEnum for Workload {
     ];
 }
 
+/// Frame payload coding negotiated over the wire front door
+/// (`pixelmtj push --wire-coding`, docs/PROTOCOL.md `HELLO`): either the
+/// raw-pixel baseline or one of the [`SparseCoding`] activation codecs
+/// applied client-side, so the link carries binary activations instead
+/// of pixels (the paper's bandwidth argument, exercised end to end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCoding {
+    /// Raw little-endian f32 plane — the "ship pixels" baseline, and
+    /// the only coding whose results are bit-identical to an in-process
+    /// submit of the same frame.
+    F32,
+    /// Client binarizes at 0.5 and ships the packed dense bitmap.
+    Dense,
+    /// Client binarizes and ships the CSR encoding.
+    Csr,
+    /// Client binarizes and ships the Golomb-Rice RLE encoding.
+    Rle,
+}
+
+impl KeyedEnum for WireCoding {
+    const WHAT: &'static str = "wire coding";
+    const VARIANTS: &'static [(&'static str, Self)] = &[
+        ("f32", Self::F32),
+        ("dense", Self::Dense),
+        ("csr", Self::Csr),
+        ("rle", Self::Rle),
+    ];
+}
+
+impl WireCoding {
+    /// The link codec backing this wire coding (`None` for the raw f32
+    /// baseline, which bypasses the binary-activation codecs entirely).
+    pub fn sparse(&self) -> Option<SparseCoding> {
+        match self {
+            Self::F32 => None,
+            Self::Dense => Some(SparseCoding::Dense),
+            Self::Csr => Some(SparseCoding::Csr),
+            Self::Rle => Some(SparseCoding::Rle),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wire_coding_parse_name_and_sparse_mapping() {
+        for (s, sparse) in [
+            ("f32", None),
+            ("dense", Some(SparseCoding::Dense)),
+            ("csr", Some(SparseCoding::Csr)),
+            ("rle", Some(SparseCoding::Rle)),
+        ] {
+            let c = WireCoding::parse(s).unwrap();
+            assert_eq!(c.name(), s);
+            assert_eq!(c.sparse(), sparse);
+        }
+        let err = format!("{}", WireCoding::parse("f16").unwrap_err());
+        assert_eq!(
+            err,
+            "unknown wire coding 'f16' (expected 'f32', 'dense', 'csr' or \
+             'rle')"
+        );
+        assert_eq!(WireCoding::keys_pipe(), "f32|dense|csr|rle");
+    }
 
     #[test]
     fn sparse_coding_parse_and_name() {

@@ -34,7 +34,8 @@ pub mod sweep;
 pub use circuit::CircuitConfig;
 pub use device::MtjConfig;
 pub use keyed::{
-    BackendKind, GeometryPreset, KeyedEnum, SparseCoding, Workload,
+    BackendKind, GeometryPreset, KeyedEnum, SparseCoding, WireCoding,
+    Workload,
 };
 pub use network::NetworkConfig;
 pub use pipeline::PipelineConfig;

@@ -49,6 +49,9 @@ pub struct PipelineConfig {
     pub metrics_addr: Option<String>,
     /// JSONL sink for per-frame trace spans; `None` disables tracing.
     pub trace_log: Option<String>,
+    /// Bind address for the wire frame-ingest server (`serve --stream`
+    /// only; see docs/PROTOCOL.md); `None` keeps serving in-process.
+    pub listen: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -71,6 +74,7 @@ impl Default for PipelineConfig {
             burst_gap_us: 2_000,
             metrics_addr: None,
             trace_log: None,
+            listen: None,
         }
     }
 }
@@ -154,6 +158,10 @@ impl PipelineConfig {
                 Ok(x) => Some(x.as_str()?.to_string()),
                 Err(_) => d.trace_log,
             },
+            listen: match v.get("listen") {
+                Ok(x) => Some(x.as_str()?.to_string()),
+                Err(_) => d.listen,
+            },
         })
     }
 }
@@ -217,12 +225,19 @@ mod tests {
         let p = dir.join("pipe.json");
         std::fs::write(
             &p,
-            r#"{"metrics_addr": "127.0.0.1:9184", "trace_log": "t.jsonl"}"#,
+            r#"{"metrics_addr": "127.0.0.1:9184", "trace_log": "t.jsonl",
+                "listen": "127.0.0.1:9090"}"#,
         )
         .unwrap();
         let cfg = PipelineConfig::from_json_file(&p).unwrap();
         assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9184"));
         assert_eq!(cfg.trace_log.as_deref(), Some("t.jsonl"));
+        assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:9090"));
+        assert_eq!(
+            PipelineConfig::default().listen,
+            None,
+            "the wire front door defaults to off"
+        );
     }
 
     #[test]

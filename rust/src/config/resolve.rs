@@ -49,6 +49,9 @@ pub enum Cmd {
     /// per-field provenance (accepts every registry flag, so it can
     /// preview exactly what any invocation would resolve to).
     Config,
+    /// Wire client: push a synthetic frame stream to a `serve --stream
+    /// --listen` server over the docs/PROTOCOL.md protocol.
+    Push,
 }
 
 impl KeyedEnum for Cmd {
@@ -60,6 +63,7 @@ impl KeyedEnum for Cmd {
         ("validate", Self::Validate),
         ("info", Self::Info),
         ("config", Self::Config),
+        ("push", Self::Push),
     ];
 }
 
@@ -129,7 +133,9 @@ mod tests {
 
     #[test]
     fn cmd_and_provenance_are_keyed_enums() {
-        for s in ["serve", "report", "sweep", "validate", "info", "config"] {
+        for s in [
+            "serve", "report", "sweep", "validate", "info", "config", "push",
+        ] {
             assert_eq!(Cmd::parse(s).unwrap().name(), s);
         }
         assert!(Cmd::parse("server").is_err());

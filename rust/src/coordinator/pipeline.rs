@@ -27,6 +27,9 @@ pub struct Classification {
     pub label: usize,
     pub sparsity: f64,
     pub link_bits: u64,
+    /// Per-frame trace id (see [`crate::metrics::trace_id`]) — the same
+    /// id the trace log records and the wire `RESULT` message carries.
+    pub trace_id: u64,
 }
 
 /// Pipeline run summary.

@@ -97,6 +97,147 @@ pub fn decode(enc: &Encoded) -> Result<BitPlane> {
     }
 }
 
+impl Encoded {
+    /// Serialize the codec body for a wire `FRAME` message
+    /// (docs/PROTOCOL.md).  Geometry, coding and `seq` travel in the
+    /// message envelope, so the body is just the codec's own data,
+    /// little-endian:
+    ///
+    /// * dense — the packed `u64` words;
+    /// * csr — `u32` column count, then `rows+1` `u32` row pointers,
+    ///   then the `u16` column indices;
+    /// * rle — `u8` Rice parameter `k`, `u64` bit length, then the
+    ///   `u64` code words.
+    pub fn wire_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            EncodedData::Dense(words) => {
+                let mut out = Vec::with_capacity(words.len() * 8);
+                for w in words {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                out
+            }
+            EncodedData::Csr { row_ptr, cols } => {
+                let mut out = Vec::with_capacity(
+                    4 + row_ptr.len() * 4 + cols.len() * 2,
+                );
+                out.extend_from_slice(&(cols.len() as u32).to_le_bytes());
+                for p in row_ptr {
+                    out.extend_from_slice(&p.to_le_bytes());
+                }
+                for c in cols {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+                out
+            }
+            EncodedData::Rle { k, words, bit_len } => {
+                let mut out = Vec::with_capacity(9 + words.len() * 8);
+                out.push(*k as u8); // k ≤ log2(len) < 256 always
+                out.extend_from_slice(&bit_len.to_le_bytes());
+                for w in words {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    /// Rebuild an [`Encoded`] from a wire `FRAME` body (inverse of
+    /// [`Encoded::wire_bytes`], with the envelope's geometry/coding/seq
+    /// supplied).  Validates the layout; [`decode`] still enforces the
+    /// content invariants (row pointers, column range, RLE truncation)
+    /// and `BitPlane::from_words` the padding invariant, so a hostile
+    /// payload fails loudly instead of corrupting a plane.
+    pub fn from_wire_bytes(
+        coding: SparseCoding,
+        channels: usize,
+        height: usize,
+        width: usize,
+        seq: u32,
+        bytes: &[u8],
+    ) -> Result<Self> {
+        let (data, payload_bits) = match coding {
+            SparseCoding::Dense => {
+                if bytes.len() % 8 != 0 {
+                    bail!(
+                        "dense body length {} is not a whole number of words",
+                        bytes.len()
+                    );
+                }
+                let words: Vec<u64> = bytes
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let bits = (channels * height * width) as u64;
+                (EncodedData::Dense(words), bits)
+            }
+            SparseCoding::Csr => {
+                if bytes.len() < 4 {
+                    bail!("CSR body truncated before the column count");
+                }
+                let n_cols =
+                    u32::from_le_bytes(bytes[0..4].try_into().unwrap())
+                        as usize;
+                let rows = channels * height;
+                let want = 4 + (rows + 1) * 4 + n_cols * 2;
+                if bytes.len() != want {
+                    bail!(
+                        "CSR body length {} != {want} for {n_cols} columns",
+                        bytes.len()
+                    );
+                }
+                let mut off = 4;
+                let mut row_ptr = Vec::with_capacity(rows + 1);
+                for _ in 0..=rows {
+                    row_ptr.push(u32::from_le_bytes(
+                        bytes[off..off + 4].try_into().unwrap(),
+                    ));
+                    off += 4;
+                }
+                let mut cols = Vec::with_capacity(n_cols);
+                for _ in 0..n_cols {
+                    cols.push(u16::from_le_bytes(
+                        bytes[off..off + 2].try_into().unwrap(),
+                    ));
+                    off += 2;
+                }
+                // Same link accounting as encode_csr.
+                let bits = cols.len() as u64 * bits_for(width as u64)
+                    + row_ptr.len() as u64 * bits_for(cols.len() as u64);
+                (EncodedData::Csr { row_ptr, cols }, bits)
+            }
+            SparseCoding::Rle => {
+                if bytes.len() < 9 || (bytes.len() - 9) % 8 != 0 {
+                    bail!("RLE body length {} is malformed", bytes.len());
+                }
+                let k = bytes[0] as u32;
+                let bit_len =
+                    u64::from_le_bytes(bytes[1..9].try_into().unwrap());
+                let words: Vec<u64> = bytes[9..]
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                if bit_len > words.len() as u64 * 64 {
+                    bail!(
+                        "RLE bit length {bit_len} exceeds the {} code words",
+                        words.len()
+                    );
+                }
+                (EncodedData::Rle { k, words, bit_len }, bit_len + 5)
+            }
+        };
+        Ok(Encoded {
+            coding,
+            channels,
+            height,
+            width,
+            seq,
+            payload_bits,
+            data,
+        })
+    }
+}
+
 fn encode_dense(map: &BitPlane) -> Encoded {
     Encoded {
         coding: SparseCoding::Dense,
@@ -354,6 +495,63 @@ mod tests {
                 + (m.channels * m.height + 1) as u64 * bits_for(cols);
             assert_eq!(enc.payload_bits, want, "p={p}");
         }
+    }
+
+    #[test]
+    fn wire_bytes_roundtrip_every_codec() {
+        for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+            for p in [0.0f32, 0.05, 0.21, 0.5, 1.0] {
+                let m = random_map(3, 7, 11, p, 13);
+                let enc = encode(&m, coding);
+                let bytes = enc.wire_bytes();
+                let back = Encoded::from_wire_bytes(
+                    coding, 3, 7, 11, m.seq, &bytes,
+                )
+                .unwrap();
+                assert_eq!(
+                    back.payload_bits, enc.payload_bits,
+                    "{coding:?} p={p}: link accounting must survive the wire"
+                );
+                assert_eq!(decode(&back).unwrap(), m, "{coding:?} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_reject_malformed_bodies() {
+        // Dense: ragged word boundary.
+        assert!(Encoded::from_wire_bytes(
+            SparseCoding::Dense, 1, 2, 3, 0, &[1, 2, 3]
+        )
+        .is_err());
+        // CSR: column count promises more data than the body carries.
+        let mut csr = vec![0u8; 4];
+        csr[0] = 200;
+        assert!(Encoded::from_wire_bytes(
+            SparseCoding::Csr, 1, 2, 3, 0, &csr
+        )
+        .is_err());
+        // RLE: bit length beyond the supplied words.
+        let mut rle = vec![0u8; 9];
+        rle[1] = 0xff; // bit_len = 255 with zero code words
+        assert!(Encoded::from_wire_bytes(
+            SparseCoding::Rle, 1, 2, 3, 0, &rle
+        )
+        .is_err());
+        // A structurally valid but content-hostile CSR body still fails
+        // at decode (column out of range).
+        let rows = 2; // 1 channel x 2 rows of width 3
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&1u32.to_le_bytes()); // one column entry
+        for ptr in [0u32, 1, 1] {
+            bad.extend_from_slice(&ptr.to_le_bytes());
+        }
+        bad.extend_from_slice(&9u16.to_le_bytes()); // width is only 3
+        let enc =
+            Encoded::from_wire_bytes(SparseCoding::Csr, 1, 2, 3, 0, &bad)
+                .unwrap();
+        assert_eq!(enc.channels * enc.height, rows);
+        assert!(decode(&enc).is_err());
     }
 
     #[test]

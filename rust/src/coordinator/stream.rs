@@ -378,6 +378,21 @@ impl StreamServer {
 
     /// Feed one frame, blocking while the bounded frame queue is full —
     /// backpressure throttles the producer instead of dropping frames.
+    ///
+    /// ```
+    /// use pixelmtj::config::PipelineConfig;
+    /// use pixelmtj::coordinator::Pipeline;
+    /// use pixelmtj::sensor::Frame;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let pl = Pipeline::synthetic_native(PipelineConfig::default())?;
+    /// let server = pl.stream()?;
+    /// server.submit(Frame::new(3, 32, 32, 0))?;
+    /// let report = server.shutdown()?;
+    /// assert_eq!(report.results.len(), 1);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn submit(&self, frame: Frame) -> Result<()> {
         let tx = self
             .frame_tx
@@ -413,6 +428,23 @@ impl StreamServer {
     /// Only a full queue counts as `submit_rejected` — a dead stream hands
     /// the frame back without touching the load-shedding counter (the
     /// blocking path surfaces the actual failure).
+    ///
+    /// ```
+    /// use pixelmtj::config::PipelineConfig;
+    /// use pixelmtj::coordinator::Pipeline;
+    /// use pixelmtj::sensor::Frame;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let pl = Pipeline::synthetic_native(PipelineConfig::default())?;
+    /// let server = pl.stream()?;
+    /// // Load-shedding loop: drop the frame when the queue is full.
+    /// if let Err(rejected) = server.try_submit(Frame::new(3, 32, 32, 0)) {
+    ///     println!("queue full, shedding frame {}", rejected.seq);
+    /// }
+    /// server.shutdown()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn try_submit(&self, frame: Frame) -> std::result::Result<(), Frame> {
         let tx = match self.frame_tx.as_ref() {
             Some(tx) => tx,
@@ -702,6 +734,7 @@ fn execute_batch(
             label,
             sparsity: act.sparsity,
             link_bits: act.link_bits,
+            trace_id: act.trace_id,
         });
     }
     let mut results = shared.results.lock().unwrap();

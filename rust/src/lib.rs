@@ -49,6 +49,14 @@
 //!   (`metrics::registry`), Prometheus text exposition (`metrics::expo`),
 //!   the embedded `/metrics` + `/healthz` + `/readyz` HTTP server
 //!   (`metrics::http`), and per-frame trace spans with the JSONL sink
+//! * [`wire`] — the remote frame-ingest front door: a versioned
+//!   length-prefixed binary protocol (docs/PROTOCOL.md) over plain TCP,
+//!   with server sessions mapped onto per-session stream servers and the
+//!   `pixelmtj push` / `WireClient` sending side
+//!
+//! The end-to-end data path — sensor capture through the wire protocol,
+//! batcher, and backend to the telemetry plane — is drawn out in
+//! [`architecture`] (docs/ARCHITECTURE.md).
 
 pub mod backend;
 pub mod config;
@@ -65,5 +73,12 @@ pub mod sweep;
 pub mod system;
 pub mod util;
 pub mod validate;
+pub mod wire;
+
+/// The end-to-end architecture document (docs/ARCHITECTURE.md), rendered
+/// into the crate docs so `cargo doc` keeps it current with the code it
+/// describes.
+#[doc = include_str!("../../docs/ARCHITECTURE.md")]
+pub mod architecture {}
 
 pub use config::HwConfig;

@@ -15,15 +15,20 @@
 //! * `info`     — print configuration + backend/artifact inventory
 //! * `config`   — print the fully resolved configuration with per-field
 //!                provenance (default|hwcfg|file|env|cli)
+//! * `push`     — wire client: stream synthetic frames to a
+//!                `serve --stream --listen` server (docs/PROTOCOL.md)
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use pixelmtj::backend::InferenceBackend as _;
 use pixelmtj::config::{Cmd, EnvSource, KeyedEnum, Workload};
+use pixelmtj::coordinator::stream;
 use pixelmtj::reports::{self, sweep_report};
-use pixelmtj::system::{self, System, SystemSpec};
+use pixelmtj::system::{self, System, SystemSpec, WireService};
 use pixelmtj::util::cli::Args;
+use pixelmtj::wire::{StatusCode, WireClient};
 
 fn main() {
     if let Err(e) = run() {
@@ -50,6 +55,7 @@ fn run() -> Result<()> {
         Cmd::Validate => validate(spec),
         Cmd::Info => info(spec),
         Cmd::Config => config(spec),
+        Cmd::Push => push(spec),
     }
 }
 
@@ -73,6 +79,19 @@ fn serve(spec: SystemSpec) -> Result<()> {
             None => String::new(),
         },
     );
+
+    // Listen mode: frames arrive over the wire protocol instead of a
+    // local workload generator (the resolver already rejected an
+    // explicit --listen without --stream).
+    if sys.spec().streaming && sys.spec().pipeline.listen.is_some() {
+        return serve_wire(sys);
+    }
+    if let Some(addr) = &sys.spec().pipeline.listen {
+        eprintln!(
+            "note: config listen={addr} is ignored without --stream \
+             (pass --stream to open the wire front door)"
+        );
+    }
 
     // The exposition server scrapes the pipeline's live metrics for the
     // whole run; shut down after the final metrics JSON so a last scrape
@@ -119,6 +138,107 @@ fn serve(spec: SystemSpec) -> Result<()> {
     if let Some(server) = &mut telemetry {
         server.shutdown();
     }
+    Ok(())
+}
+
+/// Listen mode (`serve --stream --listen ADDR`): accept wire sessions
+/// until the `--frames` ingest budget is met and every session has
+/// drained (`--frames 0` serves until killed), then print the wire-level
+/// accounting.
+fn serve_wire(mut sys: System) -> Result<()> {
+    let budget = sys.spec().frames as u64;
+    let started = Instant::now();
+    let mut svc: WireService = sys.serve_wire()?;
+    println!("wire: listening on {}", svc.server.local_addr());
+    if let Some(server) = &svc.telemetry {
+        println!(
+            "telemetry: http://{}/metrics (/healthz /readyz)",
+            server.local_addr()
+        );
+    }
+    loop {
+        std::thread::sleep(Duration::from_millis(50));
+        if let Err(e) = svc.health.ready() {
+            svc.server.shutdown();
+            if let Some(server) = &mut svc.telemetry {
+                server.shutdown();
+            }
+            bail!("wire serving failed: {e}");
+        }
+        // Wait for the last session to drain, not just the last frame:
+        // its RESULTs and closing GOODBYE are still in flight when the
+        // budget-th FRAME lands.
+        if budget > 0
+            && svc.metrics.frames_received.get() >= budget
+            && svc.metrics.sessions_active() == 0
+        {
+            break;
+        }
+    }
+    svc.server.shutdown();
+    let errors: u64 = StatusCode::ALL
+        .iter()
+        .map(|c| svc.metrics.protocol_error_count(*c))
+        .sum();
+    println!(
+        "\nwire: {} frames over {} sessions → {} results, \
+         {} protocol errors in {:.2} s",
+        svc.metrics.frames_received.get(),
+        svc.metrics.sessions_total.get(),
+        svc.metrics.results_sent.get(),
+        errors,
+        started.elapsed().as_secs_f64()
+    );
+    if let Some(server) = &mut svc.telemetry {
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// The wire client: generate the spec's synthetic workload locally and
+/// stream it to a listening server, printing the returned labels'
+/// accounting and the bandwidth the negotiated coding actually cost.
+fn push(spec: SystemSpec) -> Result<()> {
+    let Some(addr) = spec.connect.clone() else {
+        bail!("push requires --connect ADDR (a serve --stream --listen address)");
+    };
+    let channels = spec.hw.network.in_channels;
+    let height = spec.pipeline.sensor_height;
+    let width = spec.pipeline.sensor_width;
+    let total = spec.frames as u32;
+    let mut source = stream::make_source(&spec.pipeline, channels, total);
+    println!(
+        "push: {} frames ({}) to {} as {}x{}x{} {}",
+        total,
+        source.name(),
+        addr,
+        channels,
+        height,
+        width,
+        spec.wire_coding.name()
+    );
+    let started = Instant::now();
+    let mut client =
+        WireClient::connect(&addr, spec.wire_coding, channels, height, width)?;
+    while let Some(frame) = source.next_frame() {
+        client.send_frame(&frame)?;
+        let idle = source.gap();
+        if !idle.is_zero() {
+            std::thread::sleep(idle);
+        }
+    }
+    let bytes = client.bytes_sent();
+    let results = client.finish()?;
+    let wall = started.elapsed().as_secs_f64();
+    println!(
+        "pushed {} frames, received {} results in {:.2} s → {:.1} fps \
+         ({} protocol bytes sent)",
+        total,
+        results.len(),
+        wall,
+        results.len() as f64 / wall.max(1e-9),
+        bytes
+    );
     Ok(())
 }
 

@@ -4,19 +4,21 @@
 //! `GET /readyz` (stage liveness via a caller-supplied probe).
 //!
 //! Deliberately minimal — no keep-alive, no TLS, no routing table — so
-//! the scrape path adds zero dependencies and stays auditable.
+//! the scrape path adds zero dependencies and stays auditable.  The
+//! listener/accept/shutdown mechanics live in [`crate::util::net`],
+//! shared with the wire ingest front door ([`crate::wire`]).
 
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use super::expo;
 use super::registry::Registry;
+use crate::util::net::TcpServer;
 
 /// Readiness probe: `Ok(())` while the instrumented pipeline is live,
 /// `Err(reason)` otherwise (the reason becomes the 503 body).
@@ -24,9 +26,7 @@ pub type Readiness = Arc<dyn Fn() -> Result<(), String> + Send + Sync>;
 
 /// A running exposition server.  Dropping it shuts it down.
 pub struct MetricsServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
+    inner: TcpServer,
 }
 
 impl MetricsServer {
@@ -37,56 +37,25 @@ impl MetricsServer {
         registry: Arc<Registry>,
         ready: Readiness,
     ) -> Result<Self> {
-        let listener = TcpListener::bind(addr)
-            .map_err(|e| anyhow!("binding metrics server on {addr}: {e}"))?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let accept = std::thread::Builder::new()
-            .name("pixelmtj-metrics-http".to_string())
-            .spawn(move || accept_loop(listener, registry, ready, stop2))?;
-        Ok(Self { addr: local, stop, accept: Some(accept) })
+        let inner = TcpServer::start(
+            addr,
+            "metrics server",
+            "pixelmtj-metrics",
+            Arc::new(AtomicBool::new(false)),
+            move |stream| handle_conn(stream, &registry, &ready),
+        )?;
+        Ok(Self { inner })
     }
 
     /// The actual bound address (resolves a `:0` port request).
     pub fn local_addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.local_addr()
     }
 
     /// Stop accepting and join the accept thread.  In-flight connection
     /// handlers are detached and finish on their own.  Idempotent.
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Wake the blocked accept() with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for MetricsServer {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-fn accept_loop(
-    listener: TcpListener,
-    registry: Arc<Registry>,
-    ready: Readiness,
-    stop: Arc<AtomicBool>,
-) {
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let Ok(stream) = conn else { continue };
-        let reg = Arc::clone(&registry);
-        let rdy = Arc::clone(&ready);
-        let _ = std::thread::Builder::new()
-            .name("pixelmtj-metrics-conn".to_string())
-            .spawn(move || handle_conn(stream, &reg, &rdy));
+        self.inner.shutdown();
     }
 }
 
@@ -159,6 +128,7 @@ fn respond(stream: &mut TcpStream, status: u16, ctype: &str, body: &str) {
 mod tests {
     use super::*;
     use crate::metrics::registry::register_up;
+    use std::sync::atomic::Ordering;
 
     fn http_get(addr: SocketAddr, path: &str) -> (u16, String, String) {
         let mut s = TcpStream::connect(addr).expect("connect");

@@ -79,6 +79,14 @@ pub fn words_for(bits: usize) -> usize {
 /// Padding bits stay zero, matching the zero padding in weight rows so
 /// the XOR contributes nothing there.  Compat shim for f32-shaped
 /// callers; the frame path carries [`BitPlane`] words and never packs.
+///
+/// ```
+/// use pixelmtj::sensor::pack_f32;
+///
+/// // Values binarize at > 0.5; bit i lives in word i/64, bit i%64.
+/// let words = pack_f32(&[1.0, 0.0, 0.3, 0.9]);
+/// assert_eq!(words, vec![0b1001]);
+/// ```
 pub fn pack_f32(xs: &[f32]) -> Vec<u64> {
     let mut out = vec![0u64; words_for(xs.len())];
     for (i, &x) in xs.iter().enumerate() {
@@ -222,6 +230,19 @@ impl BitPlane {
     /// Visit the flat index of every set bit in ascending order
     /// (trailing-zeros word scan — the link codecs build CSR/RLE from
     /// this instead of testing each element).
+    ///
+    /// ```
+    /// use pixelmtj::sensor::BitPlane;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let plane =
+    ///     BitPlane::from_bools(1, 2, 3, &[true, false, false, true, true, false], 0)?;
+    /// let mut ones = Vec::new();
+    /// plane.for_each_one(|i| ones.push(i));
+    /// assert_eq!(ones, vec![0, 3, 4]);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn for_each_one(&self, mut f: impl FnMut(usize)) {
         for (wi, &word) in self.words.iter().enumerate() {
             let mut w = word;

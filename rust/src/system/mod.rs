@@ -8,12 +8,13 @@
 //! callers over the same construction path instead of hand-assembling
 //! `PixelArraySim` + weights + backend per call site.
 //!
-//! ```no_run
+//! ```
 //! use pixelmtj::system::System;
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! let mut sys = System::builder().frames(16).build();
+//! let mut sys = System::builder().frames(4).workers(2).build();
 //! let report = sys.serve()?;
+//! assert_eq!(report.results.len(), 4);
 //! println!("{:.1} fps", report.fps);
 //! # Ok(())
 //! # }
@@ -36,7 +37,9 @@ use crate::config::{
     BackendKind, Cmd, GeometryPreset, KeyedEnum, Provenance, SparseCoding,
     SweepConfig, Workload,
 };
-use crate::coordinator::stream::{self, FrameSource, StreamServer};
+use crate::coordinator::stream::{
+    self, FrameSource, StageHealth, StreamServer,
+};
 use crate::coordinator::{Pipeline, RunReport};
 use crate::metrics::http::{MetricsServer, Readiness};
 use crate::metrics::registry::{register_up, Registry};
@@ -46,6 +49,7 @@ use crate::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
 use crate::sweep::{
     run_sweep_observed, run_sweep_with, CellResult, SweepSummary,
 };
+use crate::wire::{SessionCtx, WireMetrics, WireServer};
 
 /// The system facade: a resolved [`SystemSpec`] plus lazily built
 /// machinery (weights → sensor sim → backend → pipeline, each cached).
@@ -59,6 +63,22 @@ pub struct System {
 impl System {
     /// Programmatic entry for examples / tests / embedders: defaults +
     /// `artifacts/hwcfg.json` + explicit setters (see [`SystemBuilder`]).
+    ///
+    /// ```
+    /// use pixelmtj::config::SparseCoding;
+    /// use pixelmtj::system::System;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let mut sys = System::builder()
+    ///     .frames(2)
+    ///     .workers(1)
+    ///     .coding(SparseCoding::Rle)
+    ///     .build();
+    /// let report = sys.serve()?;
+    /// assert_eq!(report.results.len(), 2);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn builder() -> SystemBuilder {
         SystemBuilder::new()
     }
@@ -213,6 +233,55 @@ impl System {
         Ok(Some(MetricsServer::start(&addr, reg, ready)?))
     }
 
+    /// Open the wire frame-ingest front door (`serve --stream --listen`):
+    /// bind `spec.pipeline.listen`, accept remote sessions speaking the
+    /// docs/PROTOCOL.md protocol, and — when `metrics_addr` is also set —
+    /// expose one registry carrying both the pipeline families and the
+    /// `pixelmtj_wire_*` families, with `/readyz` following the wire
+    /// server's liveness.
+    pub fn serve_wire(&mut self) -> Result<WireService> {
+        let addr = self
+            .spec
+            .pipeline
+            .listen
+            .clone()
+            .context("serve_wire requires a listen address (--listen)")?;
+        let metrics_addr = self.spec.pipeline.metrics_addr.clone();
+        let backend_name = self.spec.pipeline.backend.name();
+        let coding_name = self.spec.pipeline.sparse_coding.name();
+        let channels = self.spec.hw.network.in_channels;
+        let sim = self.sim()?;
+        let pl = self.ensure_pipeline()?;
+        let ctx = SessionCtx {
+            cfg: pl.config().clone(),
+            channels,
+            sim,
+            backend: pl.backend().clone(),
+            metrics: pl.metrics(),
+        };
+        let pipeline_metrics = pl.metrics();
+        let metrics = Arc::new(WireMetrics::new());
+        let health = Arc::new(StageHealth::default());
+        let server =
+            WireServer::start(&addr, ctx, metrics.clone(), health.clone())?;
+        let telemetry = match metrics_addr {
+            Some(maddr) => {
+                let reg = Arc::new(Registry::new());
+                register_up(&reg)?;
+                pipeline_metrics.register_into(
+                    &reg,
+                    &[("backend", backend_name), ("coding", coding_name)],
+                )?;
+                metrics.register_into(&reg)?;
+                let h = health.clone();
+                let ready: Readiness = Arc::new(move || h.ready());
+                Some(MetricsServer::start(&maddr, reg, ready)?)
+            }
+            None => None,
+        };
+        Ok(WireService { server, telemetry, metrics, health })
+    }
+
     /// Campaign progress telemetry for the sweep path: a [`SweepMetrics`]
     /// the caller threads into [`System::sweep_observed`], plus the
     /// exposition server when `metrics_addr` is set.  Sweeps have no
@@ -268,6 +337,20 @@ impl System {
             std::path::Path::new(&self.spec.out_dir),
         )
     }
+}
+
+/// A running wire front door, returned by [`System::serve_wire`]: the
+/// ingest server, its (optional) telemetry exposition server, the wire
+/// counters, and the liveness state behind `/readyz`.
+pub struct WireService {
+    /// The listening ingest server; `shutdown` (or drop) stops it.
+    pub server: WireServer,
+    /// The Prometheus exposition server, when `metrics_addr` is set.
+    pub telemetry: Option<MetricsServer>,
+    /// Wire-level counters (the `pixelmtj_wire_*` families).
+    pub metrics: Arc<WireMetrics>,
+    /// Liveness behind `/readyz` in listen mode.
+    pub health: Arc<StageHealth>,
 }
 
 /// Builder facade for programmatic callers: starts from the spec
@@ -400,6 +483,14 @@ impl SystemBuilder {
     pub fn trace_log(self, path: impl Into<String>) -> Self {
         let path = path.into();
         self.set_field("trace-log", &path)
+    }
+
+    /// Wire frame-ingest bind address for [`System::serve_wire`]
+    /// (`127.0.0.1:0` picks a free port — read it back from the started
+    /// server's `local_addr`).
+    pub fn listen(self, addr: impl Into<String>) -> Self {
+        let addr = addr.into();
+        self.set_field("listen", &addr)
     }
 
     /// Apply the `hwcfg.json` layer from the (possibly overridden)

@@ -26,7 +26,7 @@ use std::sync::OnceLock;
 use crate::config::{
     env_key, BackendKind, Cmd, EnvSource, GeometryPreset, HwConfig,
     KeyedEnum, PipelineConfig, Provenance, SparseCoding, SweepConfig,
-    Workload,
+    WireCoding, Workload,
 };
 use crate::util::cli::Args;
 use crate::util::json::Value;
@@ -56,6 +56,10 @@ pub struct SystemSpec {
     pub out_dir: String,
     /// The `--config` / `PIXELMTJ_CONFIG` profile path, when given.
     pub config_path: Option<String>,
+    /// Wire-server address the `push` client connects to (`--connect`).
+    pub connect: Option<String>,
+    /// FRAME body coding the `push` client negotiates (`--wire-coding`).
+    pub wire_coding: WireCoding,
     prov: BTreeMap<&'static str, Provenance>,
 }
 
@@ -72,6 +76,8 @@ impl SystemSpec {
             streaming: false,
             out_dir: "reports".to_string(),
             config_path: None,
+            connect: None,
+            wire_coding: WireCoding::F32,
             prov: BTreeMap::new(),
         }
     }
@@ -146,10 +152,14 @@ pub(crate) struct FieldDef {
 
 const SERVE: &[Cmd] = &[Cmd::Serve, Cmd::Config];
 const SWEEP: &[Cmd] = &[Cmd::Sweep, Cmd::Config];
-const GEOM: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
+const GEOM: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Push, Cmd::Config];
+const SCRAPE: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
 const DIRS: &[Cmd] = &[Cmd::Serve, Cmd::Report, Cmd::Validate, Cmd::Info, Cmd::Config];
 const FILES: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
 const OUT: &[Cmd] = &[Cmd::Report, Cmd::Sweep, Cmd::Config];
+/// The wire client shares serve's synthetic-load shaping flags.
+const LOAD: &[Cmd] = &[Cmd::Serve, Cmd::Push, Cmd::Config];
+const PUSH: &[Cmd] = &[Cmd::Push, Cmd::Config];
 
 /// One row per field; `FieldDef` literals keep every declaration in one
 /// place (flag + json key + subcommands + parse + display).
@@ -159,7 +169,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "frames",
             hint: "N".to_string(),
             json: None,
-            cmds: SERVE,
+            cmds: LOAD,
             kind: Kind::USize(|s, v| s.frames = v),
             also_marks: &[],
             get: |s| s.frames.to_string(),
@@ -261,7 +271,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "workload",
             hint: Workload::keys_pipe(),
             json: Some("workload"),
-            cmds: SERVE,
+            cmds: LOAD,
             kind: Kind::Keyed(|s, v| {
                 s.pipeline.workload = Workload::parse(v)?;
                 Ok(())
@@ -282,7 +292,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "burst-len",
             hint: "N".to_string(),
             json: Some("burst_len"),
-            cmds: SERVE,
+            cmds: LOAD,
             kind: Kind::USize(|s, v| s.pipeline.burst_len = v),
             also_marks: &[],
             get: |s| s.pipeline.burst_len.to_string(),
@@ -291,7 +301,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "burst-gap-us",
             hint: "N".to_string(),
             json: Some("burst_gap_us"),
-            cmds: SERVE,
+            cmds: LOAD,
             kind: Kind::U64(|s, v| s.pipeline.burst_gap_us = v),
             also_marks: &[],
             get: |s| s.pipeline.burst_gap_us.to_string(),
@@ -374,7 +384,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "metrics-addr",
             hint: "ADDR".to_string(),
             json: Some("metrics_addr"),
-            cmds: GEOM,
+            cmds: SCRAPE,
             kind: Kind::Str(|s, v| s.pipeline.metrics_addr = Some(v)),
             also_marks: &[],
             get: |s| match &s.pipeline.metrics_addr {
@@ -393,6 +403,45 @@ fn build_registry() -> Vec<FieldDef> {
                 Some(p) => p.clone(),
                 None => "-".to_string(),
             },
+        },
+        // The wire front door (docs/PROTOCOL.md): `--listen` opens the
+        // frame-ingest server on `serve --stream`; `--connect` and
+        // `--wire-coding` shape the `push` client session.
+        FieldDef {
+            name: "listen",
+            hint: "ADDR".to_string(),
+            json: Some("listen"),
+            cmds: SERVE,
+            kind: Kind::Str(|s, v| s.pipeline.listen = Some(v)),
+            also_marks: &[],
+            get: |s| match &s.pipeline.listen {
+                Some(a) => a.clone(),
+                None => "-".to_string(),
+            },
+        },
+        FieldDef {
+            name: "connect",
+            hint: "ADDR".to_string(),
+            json: None,
+            cmds: PUSH,
+            kind: Kind::Str(|s, v| s.connect = Some(v)),
+            also_marks: &[],
+            get: |s| match &s.connect {
+                Some(a) => a.clone(),
+                None => "-".to_string(),
+            },
+        },
+        FieldDef {
+            name: "wire-coding",
+            hint: WireCoding::keys_pipe(),
+            json: None,
+            cmds: PUSH,
+            kind: Kind::Keyed(|s, v| {
+                s.wire_coding = WireCoding::parse(v)?;
+                Ok(())
+            }),
+            also_marks: &[],
+            get: |s| s.wire_coding.name().to_string(),
         },
     ]
 }
@@ -584,7 +633,7 @@ pub fn resolve_spec(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<SystemSpec
     //    the oneshot notice instead of a rejection) ----------------------
     if cmd == Cmd::Serve {
         if !spec.streaming {
-            for name in ["workload", "burst-len", "burst-gap-us"] {
+            for name in ["workload", "burst-len", "burst-gap-us", "listen"] {
                 if spec.provenance(name) == Provenance::Cli {
                     bail!("--{name} requires --stream");
                 }
@@ -860,6 +909,53 @@ mod tests {
         assert_eq!(spec.pipeline.metrics_addr.as_deref(), Some("127.0.0.1:0"));
         let err = resolve("sweep --grid v=0.8 --trace-log t.jsonl").unwrap_err();
         assert_eq!(format!("{err}"), "unknown option --trace-log");
+    }
+
+    #[test]
+    fn wire_fields_resolve_with_gating_and_provenance() {
+        // --listen is a serve flag, but only meaningful with --stream
+        // (the same CLI-layer-only rule as the workload flags).
+        let err = resolve("serve --listen 127.0.0.1:0").unwrap_err();
+        assert_eq!(format!("{err}"), "--listen requires --stream");
+        let spec = resolve("serve --stream --listen 127.0.0.1:0").unwrap();
+        assert_eq!(spec.pipeline.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(spec.provenance("listen"), Provenance::Cli);
+
+        // Ambient env listen is a profile: it resolves without --stream
+        // (the serve entry decides whether to honor it).
+        let a = args("serve");
+        let env = EnvSource::from_pairs([("PIXELMTJ_LISTEN", "127.0.0.1:7")]);
+        let spec = resolve_spec(Cmd::Serve, &a, &env).unwrap();
+        assert_eq!(spec.pipeline.listen.as_deref(), Some("127.0.0.1:7"));
+        assert_eq!(spec.provenance("listen"), Provenance::Env);
+
+        // `sweep` has no frame ingest.
+        let err = resolve("sweep --listen 127.0.0.1:0").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --listen");
+
+        // `push` resolves its session flags and shares the load-shaping
+        // flags with serve...
+        let spec = resolve(
+            "push --connect 127.0.0.1:9 --wire-coding rle --frames 12 \
+             --workload bursty --geometry imagenet",
+        )
+        .unwrap();
+        assert_eq!(spec.connect.as_deref(), Some("127.0.0.1:9"));
+        assert_eq!(spec.wire_coding, WireCoding::Rle);
+        assert_eq!(spec.frames, 12);
+        assert_eq!(spec.provenance("connect"), Provenance::Cli);
+        assert_eq!(spec.provenance("wire-coding"), Provenance::Cli);
+        assert_eq!(
+            (spec.pipeline.sensor_height, spec.pipeline.sensor_width),
+            (224, 224)
+        );
+        // ...but server-side knobs are rejected by the shared mechanism.
+        let err =
+            resolve("push --connect 127.0.0.1:9 --workers 4").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --workers");
+        let err =
+            resolve("push --connect 127.0.0.1:9 --listen 1.2.3.4:5").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --listen");
     }
 
     #[test]

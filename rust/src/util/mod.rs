@@ -4,8 +4,11 @@
 //! * [`bench`] — micro-benchmark harness (no criterion)
 //! * [`prop`] — property-test driver over the deterministic counter RNG
 //!   (no proptest)
+//! * [`net`] — blocking TCP listener shared by the metrics exposition
+//!   server and the wire ingest front door (no tokio/hyper)
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod net;
 pub mod prop;

@@ -1,0 +1,140 @@
+//! Shared blocking TCP listener: bind, accept, one named thread per
+//! connection, idempotent wake-on-shutdown.  Extracted from the metrics
+//! exposition server so the wire ingest front door ([`crate::wire`])
+//! reuses the exact same listener/thread/shutdown pattern instead of
+//! growing a second copy.
+//!
+//! The accept loop owns the listener; `shutdown` raises the stop flag and
+//! then connects to the bound address once, so the (blocking) `accept`
+//! call wakes, observes the flag, and drops the listener on its way out.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+/// A running accept loop plus the machinery to stop it.  Dropping the
+/// server shuts it down.
+pub struct TcpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (port 0 → ephemeral; read the outcome back via
+    /// [`TcpServer::local_addr`]) and start accepting.  Every accepted
+    /// connection runs `handle` on its own `{thread_prefix}-conn`
+    /// thread.  The `stop` flag is caller-supplied so a subsystem can
+    /// share one flag between its listener and its per-connection
+    /// workers; `what` names the server in bind errors.
+    pub fn start(
+        addr: &str,
+        what: &str,
+        thread_prefix: &str,
+        stop: Arc<AtomicBool>,
+        handle: impl Fn(TcpStream) + Send + Sync + 'static,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {what} to {addr}"))?;
+        let local = listener
+            .local_addr()
+            .with_context(|| format!("reading {what} bound address"))?;
+        let loop_stop = Arc::clone(&stop);
+        let prefix = thread_prefix.to_string();
+        let accept = std::thread::Builder::new()
+            .name(format!("{thread_prefix}-accept"))
+            .spawn(move || accept_loop(listener, loop_stop, prefix, handle))
+            .with_context(|| format!("spawning {what} accept thread"))?;
+        Ok(Self {
+            addr: local,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address actually bound — with port 0 this is where the
+    /// ephemeral port landed, so callers never pre-choose one.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread.  Idempotent.  The
+    /// listener itself is dropped by the accept loop, so connecting to
+    /// the old address errors once shutdown returns.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept.take() {
+            // Wake the blocking accept() so it can observe the flag.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    prefix: String,
+    handle: impl Fn(TcpStream) + Send + Sync + 'static,
+) {
+    let handle = Arc::new(handle);
+    loop {
+        let conn = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            return; // listener drops here, releasing the port
+        }
+        let Ok((stream, _peer)) = conn else { continue };
+        let h = Arc::clone(&handle);
+        let _ = std::thread::Builder::new()
+            .name(format!("{prefix}-conn"))
+            .spawn(move || h(stream));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn serves_connections_and_releases_port_on_shutdown() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut srv = TcpServer::start(
+            "127.0.0.1:0",
+            "echo server",
+            "pixelmtj-test",
+            stop,
+            |mut s| {
+                let mut buf = [0u8; 4];
+                if s.read_exact(&mut buf).is_ok() {
+                    let _ = s.write_all(&buf);
+                }
+            },
+        )
+        .expect("start");
+        let addr = srv.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral port resolved");
+
+        let mut c = TcpStream::connect(addr).expect("connect");
+        c.write_all(b"ping").unwrap();
+        let mut back = [0u8; 4];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"ping");
+
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "port released after shutdown"
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! The wire client: one blocking TCP session speaking the protocol of
+//! [`super::proto`].  Used by the `pixelmtj push` subcommand and
+//! `examples/wire_client.rs`, and by the loopback parity tests — so the
+//! protocol is exercised from both ends by the same codec the server
+//! trusts.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::proto::{self, Msg, MsgOutcome, StatusCode};
+use crate::config::WireCoding;
+use crate::sensor::Frame;
+
+/// One classification received over the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireResult {
+    pub seq: u32,
+    pub trace_id: u64,
+    pub label: u16,
+}
+
+/// A connected, negotiated session.
+pub struct WireClient {
+    stream: TcpStream,
+    coding: WireCoding,
+    channels: usize,
+    height: usize,
+    width: usize,
+    max_inflight: u32,
+    queue_depth: u32,
+    inflight: u32,
+    results: Vec<WireResult>,
+    bytes_sent: u64,
+}
+
+impl WireClient {
+    /// Connect, send `HELLO`, and wait for the `HELLO_ACK` (or the
+    /// server's typed rejection, surfaced as an error).
+    pub fn connect(
+        addr: &str,
+        coding: WireCoding,
+        channels: usize,
+        height: usize,
+        width: usize,
+    ) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to wire server {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        // Short socket timeout; `read_reply` turns repeated timeouts
+        // into a hard deadline so a wedged server fails loudly instead
+        // of hanging the client forever.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+        let hello = Msg::Hello {
+            version: proto::VERSION,
+            coding,
+            channels: channels as u16,
+            height: height as u32,
+            width: width as u32,
+        };
+        let bytes_sent = hello.encode().len() as u64;
+        proto::write_msg(&mut stream, &hello).context("sending HELLO")?;
+        match read_reply(&mut stream)? {
+            Msg::HelloAck { version, max_inflight, queue_depth } => {
+                if version != proto::VERSION {
+                    bail!(
+                        "server answered HELLO_ACK with version {version}, \
+                         expected {}",
+                        proto::VERSION
+                    );
+                }
+                Ok(Self {
+                    stream,
+                    coding,
+                    channels,
+                    height,
+                    width,
+                    max_inflight: max_inflight.max(1),
+                    queue_depth,
+                    inflight: 0,
+                    results: Vec::new(),
+                    bytes_sent,
+                })
+            }
+            Msg::Error { code, detail } => {
+                bail!("server rejected session: {} ({detail})", code.name())
+            }
+            other => bail!(
+                "expected HELLO_ACK, got message type 0x{:02x}",
+                other.type_byte()
+            ),
+        }
+    }
+
+    /// The credit window the server advertised in `HELLO_ACK`.
+    pub fn max_inflight(&self) -> u32 {
+        self.max_inflight
+    }
+
+    /// The server's configured frame queue depth (informational).
+    pub fn queue_depth(&self) -> u32 {
+        self.queue_depth
+    }
+
+    /// Total protocol bytes written so far (envelope + payload) — the
+    /// client-side view of the bandwidth the coding actually costs.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    /// Send one frame.  When the credit window is full, first absorb
+    /// `RESULT`s until a slot frees — the flow-control loop documented
+    /// in docs/PROTOCOL.md, which keeps one client inside its share of
+    /// the server's queue.
+    pub fn send_frame(&mut self, frame: &Frame) -> Result<()> {
+        if (frame.channels, frame.height, frame.width)
+            != (self.channels, self.height, self.width)
+        {
+            bail!(
+                "frame {} is {}x{}x{}, session negotiated {}x{}x{}",
+                frame.seq,
+                frame.channels,
+                frame.height,
+                frame.width,
+                self.channels,
+                self.height,
+                self.width
+            );
+        }
+        while self.inflight >= self.max_inflight {
+            self.absorb_one()?;
+        }
+        let body = proto::encode_frame_body(frame, self.coding);
+        let msg = Msg::Frame { seq: frame.seq, coding: self.coding, body };
+        let encoded = msg.encode();
+        self.bytes_sent += encoded.len() as u64;
+        self.stream
+            .write_all(&encoded)
+            .with_context(|| format!("sending FRAME {}", frame.seq))?;
+        self.inflight += 1;
+        Ok(())
+    }
+
+    /// Read one message and file it: `RESULT` is recorded, anything
+    /// terminal becomes an error.
+    fn absorb_one(&mut self) -> Result<()> {
+        match read_reply(&mut self.stream)? {
+            Msg::Result { seq, trace_id, label } => {
+                self.results.push(WireResult { seq, trace_id, label });
+                self.inflight = self.inflight.saturating_sub(1);
+                Ok(())
+            }
+            Msg::Error { code, detail } => {
+                bail!("server error: {} ({detail})", code.name())
+            }
+            Msg::Goodbye { code } => {
+                bail!(
+                    "server closed the session early ({})",
+                    code.name()
+                )
+            }
+            other => bail!(
+                "unexpected message type 0x{:02x} while awaiting RESULTs",
+                other.type_byte()
+            ),
+        }
+    }
+
+    /// Drain every outstanding `RESULT`, exchange `GOODBYE`s, and return
+    /// all results received over the session, sorted by `seq`.
+    pub fn finish(mut self) -> Result<Vec<WireResult>> {
+        while self.inflight > 0 {
+            self.absorb_one()?;
+        }
+        proto::write_msg(
+            &mut self.stream,
+            &Msg::Goodbye { code: StatusCode::Ok },
+        )
+        .context("sending GOODBYE")?;
+        match read_reply(&mut self.stream)? {
+            Msg::Goodbye { .. } => {}
+            Msg::Error { code, detail } => {
+                bail!(
+                    "server error at session end: {} ({detail})",
+                    code.name()
+                )
+            }
+            other => bail!(
+                "expected the closing GOODBYE, got message type 0x{:02x}",
+                other.type_byte()
+            ),
+        }
+        let mut out = self.results;
+        out.sort_by_key(|r| r.seq);
+        Ok(out)
+    }
+}
+
+fn read_reply(stream: &mut TcpStream) -> Result<Msg> {
+    // The per-read socket timeout only wakes the read loop; this
+    // deadline is what actually gives up on a silent server.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let overdue = move || Instant::now() > deadline;
+    match proto::read_msg(stream, &overdue) {
+        Ok(MsgOutcome::Msg(m)) => Ok(m),
+        Ok(MsgOutcome::Eof) => {
+            bail!("server closed the connection mid-session")
+        }
+        Ok(MsgOutcome::Stopped) => {
+            bail!("timed out waiting for the server")
+        }
+        Err(e) => bail!("protocol error from server: {e}"),
+    }
+}

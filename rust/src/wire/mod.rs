@@ -1,0 +1,29 @@
+//! The wire front door: a dependency-free TCP ingest service that turns
+//! the in-process streaming pipeline into something remote clients can
+//! actually hit — frames in, classifications out, over the versioned
+//! length-prefixed binary protocol specified byte-for-byte in
+//! docs/PROTOCOL.md.
+//!
+//! * [`proto`] — message framing, typed status codes, the shared
+//!   encoder/decoder, and the FRAME body codecs (raw f32 or the
+//!   [`crate::coordinator::sparse`] activation codecs, so the paper's
+//!   "ship binary activations, not pixels" bandwidth argument runs over
+//!   a real transport);
+//! * [`server`] — the listening side: sessions with geometry/version
+//!   negotiation, per-session [`crate::coordinator::StreamServer`]s,
+//!   credit-window QoS, `pixelmtj_wire_*` metric families, and
+//!   `/readyz` liveness;
+//! * [`client`] — the connecting side, used by `pixelmtj push`,
+//!   `examples/wire_client.rs`, and the loopback parity tests.
+//!
+//! Enable it with `pixelmtj serve --stream --listen ADDR` (also
+//! `PIXELMTJ_LISTEN` or the JSON `listen` key), then push frames with
+//! `pixelmtj push --connect ADDR`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{WireClient, WireResult};
+pub use proto::{Msg, MsgOutcome, StatusCode, WireError, MAGIC, VERSION};
+pub use server::{SessionCtx, WireMetrics, WireServer, MAX_SESSIONS};

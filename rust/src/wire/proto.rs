@@ -1,0 +1,698 @@
+//! Wire protocol v1: message framing, typed status codes, and the
+//! encoder/decoder both the server and the client (and the spec honesty
+//! test in `tests/wire.rs`) share.  The byte-level specification lives
+//! in docs/PROTOCOL.md — the tables there are parsed by the test suite
+//! and compared against [`MESSAGE_TYPES`], [`StatusCode::ALL`], and
+//! [`CODINGS`], so the document cannot drift from this module.
+//!
+//! Every message is `[magic "PXMJ"][type u8][payload_len u32 LE]` plus
+//! `payload_len` payload bytes.  All integers are little-endian.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::config::WireCoding;
+use crate::coordinator::sparse::{self, Encoded};
+use crate::sensor::{pack_f32, BitPlane, Frame};
+
+/// The four magic bytes opening every message.
+pub const MAGIC: [u8; 4] = *b"PXMJ";
+
+/// Protocol version this build speaks (negotiated in `HELLO`).
+pub const VERSION: u16 = 1;
+
+/// Envelope size: magic + type byte + payload length.
+pub const HEADER_LEN: usize = 9;
+
+/// Hard cap on one message's payload (64 MiB) — rejects hostile length
+/// prefixes before any allocation happens.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+
+/// `(type byte, spec name)` for every message — pinned against the
+/// docs/PROTOCOL.md message-type table by `tests/wire.rs`.
+pub const MESSAGE_TYPES: &[(u8, &str)] = &[
+    (0x01, "HELLO"),
+    (0x02, "HELLO_ACK"),
+    (0x03, "FRAME"),
+    (0x04, "RESULT"),
+    (0x05, "GOODBYE"),
+    (0x06, "ERROR"),
+];
+
+/// `(coding byte, spec name)` for the FRAME body codings — pinned
+/// against the docs/PROTOCOL.md coding table.
+pub const CODINGS: &[(u8, &str)] = &[
+    (0, "f32"),
+    (1, "dense"),
+    (2, "csr"),
+    (3, "rle"),
+];
+
+/// Typed status codes carried by `GOODBYE` and `ERROR`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatusCode {
+    /// Clean completion (the only code `GOODBYE` normally carries).
+    Ok = 0,
+    /// The first four bytes of a message were not `PXMJ`.
+    BadMagic = 1,
+    /// `HELLO` requested a protocol version this server does not speak.
+    BadVersion = 2,
+    /// Unknown message type, malformed payload, or a message that is
+    /// invalid in the current session state.
+    BadMessage = 3,
+    /// `HELLO` geometry does not match the serving pipeline's geometry.
+    BadGeometry = 4,
+    /// A `FRAME` body failed to decode (wrong coding, bad layout, or
+    /// content that violates the codec invariants).
+    BadFrame = 5,
+    /// Session limit reached, or the client overran its credit window.
+    Overloaded = 6,
+    /// The serving pipeline itself failed (not the client's fault).
+    Internal = 7,
+    /// The server is stopping; the session is being torn down.
+    ShuttingDown = 8,
+}
+
+impl StatusCode {
+    /// Every code, in byte order — backs the spec honesty test and the
+    /// per-code protocol-error metric samples.
+    pub const ALL: &'static [StatusCode] = &[
+        StatusCode::Ok,
+        StatusCode::BadMagic,
+        StatusCode::BadVersion,
+        StatusCode::BadMessage,
+        StatusCode::BadGeometry,
+        StatusCode::BadFrame,
+        StatusCode::Overloaded,
+        StatusCode::Internal,
+        StatusCode::ShuttingDown,
+    ];
+
+    /// Spec name — also the `code` label value of
+    /// `pixelmtj_wire_protocol_errors_total`.
+    pub fn name(self) -> &'static str {
+        match self {
+            StatusCode::Ok => "ok",
+            StatusCode::BadMagic => "bad_magic",
+            StatusCode::BadVersion => "bad_version",
+            StatusCode::BadMessage => "bad_message",
+            StatusCode::BadGeometry => "bad_geometry",
+            StatusCode::BadFrame => "bad_frame",
+            StatusCode::Overloaded => "overloaded",
+            StatusCode::Internal => "internal",
+            StatusCode::ShuttingDown => "shutting_down",
+        }
+    }
+
+    pub fn byte(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_byte(b: u8) -> Option<Self> {
+        Self::ALL.iter().copied().find(|c| c.byte() == b)
+    }
+}
+
+/// A protocol-level failure: the typed code that goes on the wire in an
+/// `ERROR` message plus a human-readable detail string.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub code: StatusCode,
+    pub detail: String,
+}
+
+impl WireError {
+    pub fn new(code: StatusCode, detail: impl Into<String>) -> Self {
+        Self { code, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({})", self.code.name(), self.detail)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One protocol message, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Client → server session opener: version + geometry + coding.
+    Hello {
+        version: u16,
+        coding: WireCoding,
+        channels: u16,
+        height: u32,
+        width: u32,
+    },
+    /// Server → client acceptance: the version served plus the QoS caps
+    /// (`max_inflight` is the client's credit window).
+    HelloAck { version: u16, max_inflight: u32, queue_depth: u32 },
+    /// Client → server frame payload in the negotiated coding.
+    Frame { seq: u32, coding: WireCoding, body: Vec<u8> },
+    /// Server → client classification: seq + trace id + label.
+    Result { seq: u32, trace_id: u64, label: u16 },
+    /// Either direction: orderly session end.
+    Goodbye { code: StatusCode },
+    /// Server → client terminal failure; the session closes after it.
+    Error { code: StatusCode, detail: String },
+}
+
+fn coding_byte(c: WireCoding) -> u8 {
+    match c {
+        WireCoding::F32 => 0,
+        WireCoding::Dense => 1,
+        WireCoding::Csr => 2,
+        WireCoding::Rle => 3,
+    }
+}
+
+fn coding_from_byte(b: u8) -> Option<WireCoding> {
+    match b {
+        0 => Some(WireCoding::F32),
+        1 => Some(WireCoding::Dense),
+        2 => Some(WireCoding::Csr),
+        3 => Some(WireCoding::Rle),
+        _ => None,
+    }
+}
+
+impl Msg {
+    /// The envelope type byte (see [`MESSAGE_TYPES`]).
+    pub fn type_byte(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 0x01,
+            Msg::HelloAck { .. } => 0x02,
+            Msg::Frame { .. } => 0x03,
+            Msg::Result { .. } => 0x04,
+            Msg::Goodbye { .. } => 0x05,
+            Msg::Error { .. } => 0x06,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Msg::Hello { version, coding, channels, height, width } => {
+                let mut p = Vec::with_capacity(13);
+                p.extend_from_slice(&version.to_le_bytes());
+                p.push(coding_byte(*coding));
+                p.extend_from_slice(&channels.to_le_bytes());
+                p.extend_from_slice(&height.to_le_bytes());
+                p.extend_from_slice(&width.to_le_bytes());
+                p
+            }
+            Msg::HelloAck { version, max_inflight, queue_depth } => {
+                let mut p = Vec::with_capacity(10);
+                p.extend_from_slice(&version.to_le_bytes());
+                p.extend_from_slice(&max_inflight.to_le_bytes());
+                p.extend_from_slice(&queue_depth.to_le_bytes());
+                p
+            }
+            Msg::Frame { seq, coding, body } => {
+                let mut p = Vec::with_capacity(5 + body.len());
+                p.extend_from_slice(&seq.to_le_bytes());
+                p.push(coding_byte(*coding));
+                p.extend_from_slice(body);
+                p
+            }
+            Msg::Result { seq, trace_id, label } => {
+                let mut p = Vec::with_capacity(14);
+                p.extend_from_slice(&seq.to_le_bytes());
+                p.extend_from_slice(&trace_id.to_le_bytes());
+                p.extend_from_slice(&label.to_le_bytes());
+                p
+            }
+            Msg::Goodbye { code } => vec![code.byte()],
+            Msg::Error { code, detail } => {
+                let mut p = Vec::with_capacity(1 + detail.len());
+                p.push(code.byte());
+                p.extend_from_slice(detail.as_bytes());
+                p
+            }
+        }
+    }
+
+    /// Serialize to the full envelope + payload byte sequence.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.type_byte());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse one payload given its envelope type byte.
+    pub fn decode_payload(ty: u8, p: &[u8]) -> Result<Msg, WireError> {
+        let fixed = |want: usize, what: &str| -> Result<(), WireError> {
+            if p.len() != want {
+                return Err(WireError::new(
+                    StatusCode::BadMessage,
+                    format!(
+                        "{what} payload is {} bytes, expected {want}",
+                        p.len()
+                    ),
+                ));
+            }
+            Ok(())
+        };
+        match ty {
+            0x01 => {
+                fixed(13, "HELLO")?;
+                let coding = coding_from_byte(p[2]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown HELLO coding byte {}", p[2]),
+                    )
+                })?;
+                Ok(Msg::Hello {
+                    version: u16::from_le_bytes(p[0..2].try_into().unwrap()),
+                    coding,
+                    channels: u16::from_le_bytes(p[3..5].try_into().unwrap()),
+                    height: u32::from_le_bytes(p[5..9].try_into().unwrap()),
+                    width: u32::from_le_bytes(p[9..13].try_into().unwrap()),
+                })
+            }
+            0x02 => {
+                fixed(10, "HELLO_ACK")?;
+                Ok(Msg::HelloAck {
+                    version: u16::from_le_bytes(p[0..2].try_into().unwrap()),
+                    max_inflight: u32::from_le_bytes(
+                        p[2..6].try_into().unwrap(),
+                    ),
+                    queue_depth: u32::from_le_bytes(
+                        p[6..10].try_into().unwrap(),
+                    ),
+                })
+            }
+            0x03 => {
+                if p.len() < 5 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!("FRAME payload is only {} bytes", p.len()),
+                    ));
+                }
+                let coding = coding_from_byte(p[4]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown FRAME coding byte {}", p[4]),
+                    )
+                })?;
+                Ok(Msg::Frame {
+                    seq: u32::from_le_bytes(p[0..4].try_into().unwrap()),
+                    coding,
+                    body: p[5..].to_vec(),
+                })
+            }
+            0x04 => {
+                fixed(14, "RESULT")?;
+                Ok(Msg::Result {
+                    seq: u32::from_le_bytes(p[0..4].try_into().unwrap()),
+                    trace_id: u64::from_le_bytes(p[4..12].try_into().unwrap()),
+                    label: u16::from_le_bytes(p[12..14].try_into().unwrap()),
+                })
+            }
+            0x05 => {
+                fixed(1, "GOODBYE")?;
+                let code = StatusCode::from_byte(p[0]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown GOODBYE status byte {}", p[0]),
+                    )
+                })?;
+                Ok(Msg::Goodbye { code })
+            }
+            0x06 => {
+                if p.is_empty() {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        "ERROR payload is empty",
+                    ));
+                }
+                let code = StatusCode::from_byte(p[0]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown ERROR status byte {}", p[0]),
+                    )
+                })?;
+                Ok(Msg::Error {
+                    code,
+                    detail: String::from_utf8_lossy(&p[1..]).into_owned(),
+                })
+            }
+            other => Err(WireError::new(
+                StatusCode::BadMessage,
+                format!("unknown message type 0x{other:02x}"),
+            )),
+        }
+    }
+}
+
+/// Write one full message to `w`.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> io::Result<()> {
+    w.write_all(&msg.encode())?;
+    w.flush()
+}
+
+/// Outcome of a stop-aware message read.
+#[derive(Debug)]
+pub enum MsgOutcome {
+    Msg(Msg),
+    /// The peer closed the connection at a message boundary.
+    Eof,
+    /// `should_stop` fired while waiting (server shutdown).
+    Stopped,
+}
+
+enum FillOutcome {
+    Filled,
+    Eof,
+    Stopped,
+}
+
+/// Read exactly `buf.len()` bytes, tolerating read-timeout wakeups:
+/// `should_stop` is polled on every `WouldBlock`/`TimedOut`, so a server
+/// thread blocked mid-read can observe shutdown without corrupting the
+/// message framing.  EOF is clean only before the first byte.
+fn fill_exact(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    should_stop: &dyn Fn() -> bool,
+) -> io::Result<FillOutcome> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(FillOutcome::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-message",
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+            {
+                if should_stop() {
+                    return Ok(FillOutcome::Stopped);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FillOutcome::Filled)
+}
+
+/// Read one whole message.  IO failures (including a peer dying
+/// mid-message) surface as `bad_message` protocol errors; a clean close
+/// at a message boundary is [`MsgOutcome::Eof`].
+pub fn read_msg(
+    r: &mut impl Read,
+    should_stop: &dyn Fn() -> bool,
+) -> Result<MsgOutcome, WireError> {
+    let io_err = |e: io::Error| {
+        WireError::new(StatusCode::BadMessage, format!("read failed: {e}"))
+    };
+    let mut header = [0u8; HEADER_LEN];
+    match fill_exact(r, &mut header, should_stop).map_err(io_err)? {
+        FillOutcome::Filled => {}
+        FillOutcome::Eof => return Ok(MsgOutcome::Eof),
+        FillOutcome::Stopped => return Ok(MsgOutcome::Stopped),
+    }
+    if header[0..4] != MAGIC {
+        return Err(WireError::new(
+            StatusCode::BadMagic,
+            format!(
+                "message does not start with PXMJ (got {:02x} {:02x} \
+                 {:02x} {:02x})",
+                header[0], header[1], header[2], header[3]
+            ),
+        ));
+    }
+    let ty = header[4];
+    let len = u32::from_le_bytes(header[5..9].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(WireError::new(
+            StatusCode::BadMessage,
+            format!("payload length {len} exceeds the {MAX_PAYLOAD} cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    match fill_exact(r, &mut payload, should_stop).map_err(io_err)? {
+        FillOutcome::Filled => {}
+        FillOutcome::Eof => {
+            return Err(WireError::new(
+                StatusCode::BadMessage,
+                "connection closed inside a payload",
+            ))
+        }
+        FillOutcome::Stopped => return Ok(MsgOutcome::Stopped),
+    }
+    Ok(MsgOutcome::Msg(Msg::decode_payload(ty, &payload)?))
+}
+
+/// Parse one message from a byte slice (tests and examples): returns the
+/// message plus the number of bytes consumed.
+pub fn decode(bytes: &[u8]) -> Result<(Msg, usize), WireError> {
+    let mut r = bytes;
+    match read_msg(&mut r, &|| false)? {
+        MsgOutcome::Msg(m) => Ok((m, bytes.len() - r.len())),
+        MsgOutcome::Eof | MsgOutcome::Stopped => Err(WireError::new(
+            StatusCode::BadMessage,
+            "buffer holds no complete message",
+        )),
+    }
+}
+
+/// Encode a frame into a FRAME body for `coding` (the client side of the
+/// negotiation).  The packed codings binarize at the same 0.5 threshold
+/// as [`pack_f32`], so the server receives exactly the activation plane
+/// an in-process submit of the thresholded frame would produce.
+pub fn encode_frame_body(frame: &Frame, coding: WireCoding) -> Vec<u8> {
+    match coding.sparse() {
+        None => {
+            let mut out = Vec::with_capacity(frame.data.len() * 4);
+            for v in &frame.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        Some(sc) => {
+            let words = pack_f32(&frame.data);
+            let plane = BitPlane::from_words(
+                frame.channels,
+                frame.height,
+                frame.width,
+                words,
+                frame.seq,
+            )
+            .expect("pack_f32 emits a valid plane");
+            sparse::encode(&plane, sc).wire_bytes()
+        }
+    }
+}
+
+/// Decode a FRAME body back into a [`Frame`] (the server side).  Every
+/// layout or content violation maps to a `bad_frame` protocol error.
+pub fn decode_frame_body(
+    coding: WireCoding,
+    channels: usize,
+    height: usize,
+    width: usize,
+    seq: u32,
+    body: &[u8],
+) -> Result<Frame, WireError> {
+    let bad = |detail: String| WireError::new(StatusCode::BadFrame, detail);
+    let n = channels * height * width;
+    match coding.sparse() {
+        None => {
+            if body.len() != n * 4 {
+                return Err(bad(format!(
+                    "f32 body is {} bytes, expected {} for \
+                     {channels}x{height}x{width}",
+                    body.len(),
+                    n * 4
+                )));
+            }
+            let data: Vec<f32> = body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Frame::from_data(channels, height, width, data, seq)
+                .map_err(|e| bad(format!("{e:#}")))
+        }
+        Some(sc) => {
+            let enc = Encoded::from_wire_bytes(
+                sc, channels, height, width, seq, body,
+            )
+            .map_err(|e| bad(format!("{e:#}")))?;
+            let plane =
+                sparse::decode(&enc).map_err(|e| bad(format!("{e:#}")))?;
+            Frame::from_data(channels, height, width, plane.to_f32(), seq)
+                .map_err(|e| bad(format!("{e:#}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KeyedEnum;
+
+    fn sample_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Hello {
+                version: VERSION,
+                coding: WireCoding::Csr,
+                channels: 3,
+                height: 32,
+                width: 32,
+            },
+            Msg::HelloAck {
+                version: VERSION,
+                max_inflight: 64,
+                queue_depth: 64,
+            },
+            Msg::Frame {
+                seq: 7,
+                coding: WireCoding::Dense,
+                body: vec![0xde, 0xad, 0xbe, 0xef],
+            },
+            Msg::Result { seq: 7, trace_id: 0x1234_5678_9abc_def0, label: 2 },
+            Msg::Goodbye { code: StatusCode::Ok },
+            Msg::Error {
+                code: StatusCode::Overloaded,
+                detail: "window exceeded".to_string(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_message_type_roundtrips() {
+        let msgs = sample_msgs();
+        // One sample per documented type byte, no type left untested.
+        let mut seen: Vec<u8> = msgs.iter().map(Msg::type_byte).collect();
+        seen.sort_unstable();
+        let mut want: Vec<u8> =
+            MESSAGE_TYPES.iter().map(|(b, _)| *b).collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+        for msg in msgs {
+            let bytes = msg.encode();
+            assert_eq!(&bytes[0..4], &MAGIC);
+            let (back, used) = decode(&bytes).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, bytes.len());
+        }
+    }
+
+    #[test]
+    fn two_messages_in_one_buffer_parse_sequentially() {
+        let a = Msg::Goodbye { code: StatusCode::Ok };
+        let b = Msg::Result { seq: 1, trace_id: 2, label: 3 };
+        let mut buf = a.encode();
+        buf.extend_from_slice(&b.encode());
+        let (m1, used) = decode(&buf).unwrap();
+        assert_eq!(m1, a);
+        let (m2, used2) = decode(&buf[used..]).unwrap();
+        assert_eq!(m2, b);
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn bad_magic_and_bad_lengths_get_typed_codes() {
+        let err = decode(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMagic);
+
+        // Unknown type byte.
+        let mut raw = Vec::from(MAGIC);
+        raw.push(0x7f);
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        let err = decode(&raw).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("0x7f"), "{err}");
+
+        // Oversized length prefix.
+        let mut raw = Vec::from(MAGIC);
+        raw.push(0x05);
+        raw.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let err = decode(&raw).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("cap"), "{err}");
+
+        // Truncated payload (header promises more than the buffer has).
+        let mut raw = Msg::Goodbye { code: StatusCode::Ok }.encode();
+        raw.truncate(raw.len() - 1);
+        let err = decode(&raw).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // Wrong payload size for a fixed-size message.
+        let err = Msg::decode_payload(0x05, &[0, 0]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+    }
+
+    #[test]
+    fn status_code_bytes_and_names_are_bijective() {
+        assert_eq!(StatusCode::ALL.len(), 9);
+        for (i, code) in StatusCode::ALL.iter().enumerate() {
+            assert_eq!(code.byte() as usize, i, "byte order matches ALL");
+            assert_eq!(StatusCode::from_byte(code.byte()), Some(*code));
+        }
+        assert_eq!(StatusCode::from_byte(200), None);
+        let mut names: Vec<_> =
+            StatusCode::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), StatusCode::ALL.len(), "names unique");
+    }
+
+    #[test]
+    fn codings_table_matches_the_keyed_enum() {
+        assert_eq!(CODINGS.len(), WireCoding::VARIANTS.len());
+        for (byte, name) in CODINGS {
+            let c = WireCoding::parse(name).unwrap();
+            assert_eq!(coding_byte(c), *byte);
+            assert_eq!(coding_from_byte(*byte), Some(c));
+        }
+        assert_eq!(coding_from_byte(9), None);
+    }
+
+    #[test]
+    fn frame_bodies_roundtrip_in_every_coding() {
+        let data: Vec<f32> =
+            (0..3 * 8 * 8).map(|i| (i % 5) as f32 / 4.0).collect();
+        let frame = Frame::from_data(3, 8, 8, data, 42).unwrap();
+        for &(_, name) in CODINGS {
+            let coding = WireCoding::parse(name).unwrap();
+            let body = encode_frame_body(&frame, coding);
+            let back =
+                decode_frame_body(coding, 3, 8, 8, 42, &body).unwrap();
+            assert_eq!(back.seq, 42);
+            match coding.sparse() {
+                None => assert_eq!(back.data, frame.data, "{name}"),
+                Some(_) => {
+                    // Packed codings ship the thresholded plane.
+                    let want: Vec<f32> = frame
+                        .data
+                        .iter()
+                        .map(|&v| if v > 0.5 { 1.0 } else { 0.0 })
+                        .collect();
+                    assert_eq!(back.data, want, "{name}");
+                }
+            }
+        }
+        // Geometry mismatch is a bad_frame, not a panic.
+        let body = encode_frame_body(&frame, WireCoding::F32);
+        let err = decode_frame_body(WireCoding::F32, 3, 8, 9, 42, &body)
+            .unwrap_err();
+        assert_eq!(err.code, StatusCode::BadFrame);
+    }
+}

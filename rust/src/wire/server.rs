@@ -1,0 +1,587 @@
+//! The wire ingest server: TCP sessions speaking the versioned protocol
+//! of [`super::proto`], each mapped onto its own [`StreamServer`] over
+//! the shared sensor sim + backend.
+//!
+//! Session anatomy (one accepted connection):
+//!
+//! * the connection thread validates `HELLO` (version, geometry,
+//!   coding), answers `HELLO_ACK` with the QoS caps, then loops reading
+//!   `FRAME`s — enforcing the credit window before each blocking
+//!   `submit` so one client can never wedge the shared queue past its
+//!   advertised share;
+//! * a collector thread drains the session's `StreamServer` and writes
+//!   `RESULT`s back as classifications complete (full duplex: results
+//!   stream while later frames are still arriving);
+//! * on the client's `GOODBYE` the reader waits for the in-flight count
+//!   to reach zero, answers `GOODBYE(ok)`, and tears the session stream
+//!   down.  Protocol violations end the session with a typed `ERROR`.
+//!
+//! Each session gets its own `StreamServer` because drained results form
+//! one shared pool per stream — per-session attribution requires
+//! per-session streams.  They all share the pipeline's
+//! [`PipelineMetrics`], so the global `pixelmtj_frames_in_total` etc.
+//! reflect wire traffic too; the `pixelmtj_wire_*` families in
+//! [`WireMetrics`] add the protocol-level view.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::proto::{self, Msg, MsgOutcome, StatusCode, WireError};
+use crate::backend::InferenceBackend;
+use crate::config::{PipelineConfig, WireCoding};
+use crate::coordinator::stream::{StageHealth, StreamServer};
+use crate::metrics::registry::{MetricType, Registry, Sample, SampleValue};
+use crate::metrics::{Counter, PipelineMetrics};
+use crate::sensor::PixelArraySim;
+use crate::util::net::TcpServer;
+
+/// Per-tenant cap: concurrent sessions beyond this are refused with
+/// `overloaded` at `HELLO` time.
+pub const MAX_SESSIONS: u64 = 8;
+
+/// How long the server waits for the last results to flush after a
+/// client's `GOODBYE` before declaring the drain stalled.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(60);
+
+/// The `pixelmtj_wire_*` metric families (registered into the PR-6
+/// registry via [`WireMetrics::register_into`]).
+pub struct WireMetrics {
+    /// Live session count (raw gauge — [`crate::metrics::Gauge`] is
+    /// peak-tracking, and liveness needs the instantaneous value).
+    sessions_active: AtomicU64,
+    pub sessions_total: Counter,
+    pub frames_received: Counter,
+    pub results_sent: Counter,
+    pub queue_rejections: Counter,
+    pub session_rejections: Counter,
+    /// One counter per [`StatusCode`], indexed by the code byte.
+    protocol_errors: Vec<Counter>,
+}
+
+impl Default for WireMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WireMetrics {
+    pub fn new() -> Self {
+        Self {
+            sessions_active: AtomicU64::new(0),
+            sessions_total: Counter::default(),
+            frames_received: Counter::default(),
+            results_sent: Counter::default(),
+            queue_rejections: Counter::default(),
+            session_rejections: Counter::default(),
+            protocol_errors: (0..StatusCode::ALL.len())
+                .map(|_| Counter::default())
+                .collect(),
+        }
+    }
+
+    pub fn sessions_active(&self) -> u64 {
+        self.sessions_active.load(Ordering::SeqCst)
+    }
+
+    /// Count one protocol error under its typed code.
+    pub fn protocol_error(&self, code: StatusCode) {
+        self.protocol_errors[code.byte() as usize].inc();
+    }
+
+    pub fn protocol_error_count(&self, code: StatusCode) -> u64 {
+        self.protocol_errors[code.byte() as usize].get()
+    }
+
+    fn register_counter(
+        self: &Arc<Self>,
+        reg: &Registry,
+        name: &str,
+        help: &str,
+        get: fn(&WireMetrics) -> u64,
+    ) -> Result<()> {
+        let m = Arc::clone(self);
+        reg.register(name, help, MetricType::Counter, move || {
+            vec![Sample::new(Vec::new(), SampleValue::Counter(get(&m)))]
+        })
+    }
+
+    /// Register every family.  Error codes are pre-materialized (zeros
+    /// included) so dashboards see the full code vocabulary from scrape
+    /// one; `ok` is skipped — it is not an error.
+    pub fn register_into(self: &Arc<Self>, reg: &Registry) -> Result<()> {
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_sessions_total",
+            "Wire sessions accepted since start",
+            |m| m.sessions_total.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_frames_received_total",
+            "FRAME messages decoded and submitted",
+            |m| m.frames_received.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_results_sent_total",
+            "RESULT messages written back to clients",
+            |m| m.results_sent.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_queue_rejections_total",
+            "Frames refused for overrunning the per-session window",
+            |m| m.queue_rejections.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_session_rejections_total",
+            "Sessions refused at the concurrent-session cap",
+            |m| m.session_rejections.get(),
+        )?;
+        let m = Arc::clone(self);
+        reg.register(
+            "pixelmtj_wire_sessions_active",
+            "Wire sessions currently open",
+            MetricType::Gauge,
+            move || {
+                vec![Sample::new(
+                    Vec::new(),
+                    SampleValue::Gauge(m.sessions_active() as f64),
+                )]
+            },
+        )?;
+        let m = Arc::clone(self);
+        reg.register(
+            "pixelmtj_wire_protocol_errors_total",
+            "Protocol errors by typed status code",
+            MetricType::Counter,
+            move || {
+                StatusCode::ALL
+                    .iter()
+                    .filter(|c| **c != StatusCode::Ok)
+                    .map(|c| {
+                        Sample::new(
+                            vec![("code".to_string(), c.name().to_string())],
+                            SampleValue::Counter(m.protocol_error_count(*c)),
+                        )
+                    })
+                    .collect()
+            },
+        )?;
+        Ok(())
+    }
+}
+
+/// Everything a session needs to run its own [`StreamServer`] against
+/// the shared serving state.
+#[derive(Clone)]
+pub struct SessionCtx {
+    pub cfg: PipelineConfig,
+    /// Input channels (from the hardware network config) — together with
+    /// `cfg.sensor_height`/`cfg.sensor_width` this is the geometry every
+    /// `HELLO` must match.
+    pub channels: usize,
+    pub sim: Arc<PixelArraySim>,
+    pub backend: Arc<dyn InferenceBackend>,
+    pub metrics: Arc<PipelineMetrics>,
+}
+
+/// The listening front door.  Dropping it shuts it down.
+pub struct WireServer {
+    inner: TcpServer,
+    health: Arc<StageHealth>,
+}
+
+impl WireServer {
+    /// Bind `addr` (port 0 → ephemeral, see [`WireServer::local_addr`])
+    /// and start accepting sessions.  `health` backs `/readyz` in listen
+    /// mode: armed here, stopped by [`WireServer::shutdown`], failed by
+    /// the first internal session-stream death.
+    pub fn start(
+        addr: &str,
+        ctx: SessionCtx,
+        metrics: Arc<WireMetrics>,
+        health: Arc<StageHealth>,
+    ) -> Result<Self> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let session_stop = Arc::clone(&stop);
+        let session_health = Arc::clone(&health);
+        let inner = TcpServer::start(
+            addr,
+            "wire server",
+            "pixelmtj-wire",
+            stop,
+            move |stream| {
+                handle_session(
+                    stream,
+                    &ctx,
+                    &metrics,
+                    &session_health,
+                    &session_stop,
+                );
+            },
+        )?;
+        health.set_ready();
+        Ok(Self { inner, health })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr()
+    }
+
+    /// Stop accepting, wake in-flight sessions (they observe the shared
+    /// stop flag on their next read timeout), and join the accept
+    /// thread.  Idempotent.
+    pub fn shutdown(&mut self) {
+        self.health.set_stopped();
+        self.inner.shutdown();
+    }
+}
+
+/// RAII slot in the session-count cap.
+struct SessionGuard<'a> {
+    metrics: &'a WireMetrics,
+}
+
+impl<'a> SessionGuard<'a> {
+    fn acquire(metrics: &'a WireMetrics) -> Option<Self> {
+        // CAS loop: increment only while under the cap, so a burst of
+        // connections cannot overshoot it.
+        let mut cur = metrics.sessions_active.load(Ordering::SeqCst);
+        loop {
+            if cur >= MAX_SESSIONS {
+                return None;
+            }
+            match metrics.sessions_active.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        metrics.sessions_total.inc();
+        Some(Self { metrics })
+    }
+}
+
+impl Drop for SessionGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.sessions_active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serialize writes from the reader and collector threads onto one
+/// socket.  Write failures are ignored — the reader notices the dead
+/// peer on its next read and tears the session down.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+fn send(writer: &SharedWriter, msg: &Msg) {
+    let mut stream = writer.lock().expect("wire writer lock");
+    let _ = proto::write_msg(&mut *stream, msg);
+}
+
+fn handle_session(
+    stream: TcpStream,
+    ctx: &SessionCtx,
+    metrics: &Arc<WireMetrics>,
+    health: &Arc<StageHealth>,
+    stop: &Arc<AtomicBool>,
+) {
+    // Short read timeout: the reader wakes regularly to observe the stop
+    // flag without ever splitting a message.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_nodelay(true);
+    let writer: SharedWriter = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = stream;
+    if let Err(err) =
+        run_session(&mut reader, &writer, ctx, metrics, health, stop)
+    {
+        metrics.protocol_error(err.code);
+        send(&writer, &Msg::Error { code: err.code, detail: err.detail });
+        let _ = writer.lock().expect("wire writer lock").flush();
+    }
+}
+
+fn run_session(
+    reader: &mut TcpStream,
+    writer: &SharedWriter,
+    ctx: &SessionCtx,
+    metrics: &Arc<WireMetrics>,
+    health: &Arc<StageHealth>,
+    stop: &Arc<AtomicBool>,
+) -> Result<(), WireError> {
+    let stop_fn = || stop.load(Ordering::SeqCst);
+
+    // --- HELLO: version + geometry + coding negotiation -------------
+    let hello = match proto::read_msg(reader, &stop_fn)? {
+        MsgOutcome::Msg(m) => m,
+        // A probe that connected and left (including the shutdown
+        // wake-connect) is not a session, and not an error.
+        MsgOutcome::Eof | MsgOutcome::Stopped => return Ok(()),
+    };
+    let Msg::Hello { version, coding, channels, height, width } = hello
+    else {
+        return Err(WireError::new(
+            StatusCode::BadMessage,
+            "expected HELLO as the first message",
+        ));
+    };
+    if version != proto::VERSION {
+        return Err(WireError::new(
+            StatusCode::BadVersion,
+            format!(
+                "server speaks protocol version {} (client sent {version})",
+                proto::VERSION
+            ),
+        ));
+    }
+    let want = (
+        ctx.channels as u16,
+        ctx.cfg.sensor_height as u32,
+        ctx.cfg.sensor_width as u32,
+    );
+    if (channels, height, width) != want {
+        return Err(WireError::new(
+            StatusCode::BadGeometry,
+            format!(
+                "server geometry is {}x{}x{} (client sent \
+                 {channels}x{height}x{width})",
+                want.0, want.1, want.2
+            ),
+        ));
+    }
+
+    // --- QoS: session slot + per-session stream ---------------------
+    let Some(_slot) = SessionGuard::acquire(metrics) else {
+        metrics.session_rejections.inc();
+        return Err(WireError::new(
+            StatusCode::Overloaded,
+            format!("session limit {MAX_SESSIONS} reached"),
+        ));
+    };
+    let server = StreamServer::start(
+        &ctx.cfg,
+        ctx.sim.clone(),
+        ctx.backend.clone(),
+        ctx.metrics.clone(),
+    )
+    .map_err(|e| {
+        let msg = format!("starting session stream: {e:#}");
+        health.record_failure("wire session", &msg);
+        WireError::new(StatusCode::Internal, msg)
+    })?;
+    let max_inflight = ctx.cfg.queue_depth.max(1) as u32;
+    send(
+        writer,
+        &Msg::HelloAck {
+            version: proto::VERSION,
+            max_inflight,
+            queue_depth: ctx.cfg.queue_depth as u32,
+        },
+    );
+
+    // --- FRAME loop + concurrent RESULT collector -------------------
+    let inflight = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let collector_failed = AtomicBool::new(false);
+    let (read_result, collector_result) = std::thread::scope(|s| {
+        let collector = s.spawn(|| {
+            collect_results(
+                &server,
+                writer,
+                metrics,
+                &inflight,
+                &done,
+                &collector_failed,
+            )
+        });
+        let r = read_frames(
+            reader,
+            writer,
+            &server,
+            ctx,
+            metrics,
+            coding,
+            &inflight,
+            max_inflight,
+            &collector_failed,
+            &stop_fn,
+        );
+        done.store(true, Ordering::SeqCst);
+        let c = collector
+            .join()
+            .unwrap_or_else(|_| Err("collector thread panicked".to_string()));
+        (r, c)
+    });
+
+    // Always tear the session stream down — joins its stage threads.
+    if let Err(e) = server.shutdown() {
+        let msg = format!("session stream shutdown: {e:#}");
+        health.record_failure("wire session", &msg);
+        if read_result.is_ok() && collector_result.is_ok() {
+            return Err(WireError::new(StatusCode::Internal, msg));
+        }
+    }
+    read_result?;
+    if let Err(msg) = collector_result {
+        health.record_failure("wire session", &msg);
+        return Err(WireError::new(StatusCode::Internal, msg));
+    }
+    Ok(())
+}
+
+/// The session's read half: FRAMEs in, window enforcement, final
+/// GOODBYE handshake.
+#[allow(clippy::too_many_arguments)]
+fn read_frames(
+    reader: &mut TcpStream,
+    writer: &SharedWriter,
+    server: &StreamServer,
+    ctx: &SessionCtx,
+    metrics: &Arc<WireMetrics>,
+    coding: WireCoding,
+    inflight: &AtomicU64,
+    max_inflight: u32,
+    collector_failed: &AtomicBool,
+    stop_fn: &dyn Fn() -> bool,
+) -> Result<(), WireError> {
+    loop {
+        let msg = match proto::read_msg(reader, stop_fn)? {
+            MsgOutcome::Msg(m) => m,
+            // Abrupt close: the client vanished; nothing left to send.
+            MsgOutcome::Eof => return Ok(()),
+            MsgOutcome::Stopped => {
+                return Err(WireError::new(
+                    StatusCode::ShuttingDown,
+                    "server is shutting down",
+                ))
+            }
+        };
+        match msg {
+            Msg::Frame { seq, coding: frame_coding, body } => {
+                if frame_coding != coding {
+                    return Err(WireError::new(
+                        StatusCode::BadFrame,
+                        format!(
+                            "FRAME {seq} coding differs from the \
+                             negotiated HELLO coding"
+                        ),
+                    ));
+                }
+                if inflight.load(Ordering::SeqCst) >= max_inflight as u64 {
+                    metrics.queue_rejections.inc();
+                    return Err(WireError::new(
+                        StatusCode::Overloaded,
+                        format!(
+                            "frame {seq} overran the advertised window \
+                             of {max_inflight}"
+                        ),
+                    ));
+                }
+                let frame = proto::decode_frame_body(
+                    coding,
+                    ctx.channels,
+                    ctx.cfg.sensor_height,
+                    ctx.cfg.sensor_width,
+                    seq,
+                    &body,
+                )?;
+                inflight.fetch_add(1, Ordering::SeqCst);
+                server.submit(frame).map_err(|e| {
+                    WireError::new(
+                        StatusCode::Internal,
+                        format!("submitting frame {seq}: {e:#}"),
+                    )
+                })?;
+                metrics.frames_received.inc();
+            }
+            Msg::Goodbye { .. } => break,
+            other => {
+                return Err(WireError::new(
+                    StatusCode::BadMessage,
+                    format!(
+                        "unexpected message type 0x{:02x} mid-session",
+                        other.type_byte()
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Client said goodbye: flush the remaining results, then confirm.
+    let deadline = Instant::now() + DRAIN_DEADLINE;
+    while inflight.load(Ordering::SeqCst) > 0 {
+        if collector_failed.load(Ordering::SeqCst) {
+            // The collector's root cause is reported by run_session.
+            return Ok(());
+        }
+        if stop_fn() {
+            return Err(WireError::new(
+                StatusCode::ShuttingDown,
+                "server is shutting down",
+            ));
+        }
+        if Instant::now() > deadline {
+            return Err(WireError::new(
+                StatusCode::Internal,
+                "result drain stalled after GOODBYE",
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    send(writer, &Msg::Goodbye { code: StatusCode::Ok });
+    Ok(())
+}
+
+/// The session's write half: drain classifications and stream RESULTs
+/// back while the reader is still accepting FRAMEs.
+fn collect_results(
+    server: &StreamServer,
+    writer: &SharedWriter,
+    metrics: &Arc<WireMetrics>,
+    inflight: &AtomicU64,
+    done: &AtomicBool,
+    failed: &AtomicBool,
+) -> Result<(), String> {
+    loop {
+        // Order matters: observe `done` before the drain, so one final
+        // drain always runs after the reader stops submitting.
+        let exit = done.load(Ordering::SeqCst);
+        match server.drain() {
+            Ok(results) => {
+                for c in results {
+                    send(
+                        writer,
+                        &Msg::Result {
+                            seq: c.seq,
+                            trace_id: c.trace_id,
+                            label: c.label as u16,
+                        },
+                    );
+                    metrics.results_sent.inc();
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) => {
+                failed.store(true, Ordering::SeqCst);
+                return Err(format!("draining session results: {e:#}"));
+            }
+        }
+        if exit {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}

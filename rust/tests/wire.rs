@@ -1,0 +1,507 @@
+//! Wire front-door integration tests, in three layers:
+//!
+//! * **Spec honesty** — docs/PROTOCOL.md is parsed and its normative
+//!   tables (message types, status codes, frame codings) are compared
+//!   against the protocol constants; the worked hex examples are decoded
+//!   byte for byte.  If the spec and the code disagree, these fail.
+//! * **Loopback parity** — a real `System::serve_wire` listener on an
+//!   ephemeral port, driven by `WireClient` in every coding, must
+//!   classify identically to in-process `Pipeline::serve` of the same
+//!   frames.
+//! * **Hostility** — malformed probes (bad magic, bad version, bad
+//!   geometry, wrong first message, coding mismatch) must each earn the
+//!   documented typed `ERROR` and land in the per-code metric.
+//!
+//! All on the native backend with synthetic weights, so nothing skips.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use pixelmtj::config::{HwConfig, PipelineConfig, WireCoding};
+use pixelmtj::sensor::{scene::SceneGen, Frame};
+use pixelmtj::system::{System, WireService};
+use pixelmtj::wire::proto::{self, CODINGS, MESSAGE_TYPES};
+use pixelmtj::wire::{Msg, StatusCode, WireClient};
+
+mod common;
+use common::native_pipeline;
+
+const DOC: &str = include_str!("../../docs/PROTOCOL.md");
+
+// ---------------------------------------------------------------------
+// Spec honesty: the document is normative, the constants must match it.
+// ---------------------------------------------------------------------
+
+/// The slice of `DOC` between `header` and the next `## ` heading.
+fn section<'a>(doc: &'a str, header: &str) -> &'a str {
+    let start = doc
+        .find(header)
+        .unwrap_or_else(|| panic!("PROTOCOL.md lost its {header:?} section"));
+    let rest = &doc[start + header.len()..];
+    match rest.find("\n## ") {
+        Some(end) => &rest[..end],
+        None => rest,
+    }
+}
+
+/// Markdown table rows as cell vectors, header and `---` rows dropped.
+fn table_rows(section: &str) -> Vec<Vec<String>> {
+    section
+        .lines()
+        .map(str::trim)
+        .filter(|l| l.starts_with('|'))
+        .map(|l| {
+            l.trim_matches('|')
+                .split('|')
+                .map(|c| c.trim().to_string())
+                .collect::<Vec<String>>()
+        })
+        .filter(|cells| {
+            let first = cells.first().map(String::as_str).unwrap_or("");
+            !first.is_empty()
+                && !first.chars().all(|ch| ch == '-')
+                && first
+                    .trim_start_matches("0x")
+                    .chars()
+                    .all(|ch| ch.is_ascii_hexdigit())
+        })
+        .collect()
+}
+
+#[test]
+fn protocol_doc_tables_match_the_wire_constants() {
+    // Message types: `| 0x01 | HELLO | ... |` rows.
+    let mut documented: Vec<(u8, String)> =
+        table_rows(section(DOC, "## Message types"))
+            .iter()
+            .map(|cells| {
+                let byte =
+                    u8::from_str_radix(cells[0].trim_start_matches("0x"), 16)
+                        .unwrap_or_else(|_| {
+                            panic!("bad type byte cell {:?}", cells[0])
+                        });
+                (byte, cells[1].clone())
+            })
+            .collect();
+    documented.sort_unstable();
+    let mut in_code: Vec<(u8, String)> = MESSAGE_TYPES
+        .iter()
+        .map(|(b, n)| (*b, n.to_string()))
+        .collect();
+    in_code.sort_unstable();
+    assert_eq!(documented, in_code, "message-type table drifted");
+
+    // Status codes: `| 0 | ok | ... |` rows, names doubling as the
+    // metric's `code` label values.
+    let documented: Vec<(u8, String)> =
+        table_rows(section(DOC, "## Status codes"))
+            .iter()
+            .map(|cells| (cells[0].parse::<u8>().unwrap(), cells[1].clone()))
+            .collect();
+    let in_code: Vec<(u8, String)> = StatusCode::ALL
+        .iter()
+        .map(|c| (c.byte(), c.name().to_string()))
+        .collect();
+    assert_eq!(documented, in_code, "status-code table drifted");
+
+    // Frame codings: `| 0 | f32 | ... |` rows.
+    let documented: Vec<(u8, String)> =
+        table_rows(section(DOC, "## Frame codings"))
+            .iter()
+            .map(|cells| (cells[0].parse::<u8>().unwrap(), cells[1].clone()))
+            .collect();
+    let in_code: Vec<(u8, String)> =
+        CODINGS.iter().map(|(b, n)| (*b, n.to_string())).collect();
+    assert_eq!(documented, in_code, "frame-coding table drifted");
+
+    // Envelope facts quoted in prose: version, magic, payload cap.
+    assert!(
+        DOC.contains(&format!("(version {})", proto::VERSION)),
+        "title must name protocol version {}",
+        proto::VERSION
+    );
+    let magic_hex = proto::MAGIC
+        .iter()
+        .map(|b| format!("{b:02X}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    assert!(DOC.contains(&magic_hex), "magic bytes {magic_hex} missing");
+    assert!(
+        DOC.contains(&proto::MAX_PAYLOAD.to_string()),
+        "payload cap {} missing",
+        proto::MAX_PAYLOAD
+    );
+}
+
+/// Hex dumps inside the `## Worked example` code fences: leading
+/// two-hex-digit tokens per line, stopping at the first prose token.
+fn hex_blocks(section: &str) -> Vec<Vec<u8>> {
+    let mut blocks = Vec::new();
+    let mut current: Option<Vec<u8>> = None;
+    for line in section.lines() {
+        if line.trim_start().starts_with("```") {
+            match current.take() {
+                Some(block) => blocks.push(block),
+                None => current = Some(Vec::new()),
+            }
+            continue;
+        }
+        if let Some(block) = current.as_mut() {
+            for token in line.split_whitespace() {
+                match u8::from_str_radix(token, 16) {
+                    Ok(byte) if token.len() == 2 => block.push(byte),
+                    _ => break,
+                }
+            }
+        }
+    }
+    blocks
+}
+
+#[test]
+fn protocol_doc_worked_examples_decode_byte_for_byte() {
+    let blocks = hex_blocks(section(DOC, "## Worked example"));
+    assert_eq!(blocks.len(), 2, "the spec shows two worked examples");
+
+    let (hello, used) = proto::decode(&blocks[0]).expect("HELLO example");
+    assert_eq!(used, blocks[0].len(), "no trailing bytes in the example");
+    assert_eq!(
+        hello,
+        Msg::Hello {
+            version: 1,
+            coding: WireCoding::Csr,
+            channels: 3,
+            height: 32,
+            width: 32,
+        }
+    );
+
+    let (result, used) = proto::decode(&blocks[1]).expect("RESULT example");
+    assert_eq!(used, blocks[1].len());
+    assert_eq!(
+        result,
+        Msg::Result { seq: 7, trace_id: 0x1234_5678_9abc_def0, label: 2 }
+    );
+}
+
+#[test]
+fn every_documented_message_type_roundtrips() {
+    let msgs = vec![
+        Msg::Hello {
+            version: proto::VERSION,
+            coding: WireCoding::Rle,
+            channels: 3,
+            height: 32,
+            width: 32,
+        },
+        Msg::HelloAck {
+            version: proto::VERSION,
+            max_inflight: 64,
+            queue_depth: 64,
+        },
+        Msg::Frame {
+            seq: 41,
+            coding: WireCoding::Dense,
+            body: vec![0xaa; 24],
+        },
+        Msg::Result { seq: 41, trace_id: 99, label: 7 },
+        Msg::Goodbye { code: StatusCode::Ok },
+        Msg::Error {
+            code: StatusCode::BadGeometry,
+            detail: "server geometry is 3x32x32".to_string(),
+        },
+    ];
+    // One sample per documented type byte — no type left untested.
+    let mut seen: Vec<u8> = msgs.iter().map(Msg::type_byte).collect();
+    seen.sort_unstable();
+    let mut want: Vec<u8> = MESSAGE_TYPES.iter().map(|(b, _)| *b).collect();
+    want.sort_unstable();
+    assert_eq!(seen, want);
+    for msg in msgs {
+        let bytes = msg.encode();
+        let (back, used) = proto::decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(used, bytes.len());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loopback parity: the wire path classifies exactly like in-process.
+// ---------------------------------------------------------------------
+
+fn listening_system() -> (System, usize, usize, usize) {
+    let mut sys = System::builder()
+        .artifacts_dir("/nonexistent")
+        .workers(2)
+        .listen("127.0.0.1:0")
+        .build();
+    let channels = HwConfig::default().network.in_channels;
+    let (height, width) = (
+        sys.spec().pipeline.sensor_height,
+        sys.spec().pipeline.sensor_width,
+    );
+    (sys, channels, height, width)
+}
+
+fn textured_frames(n: u32, c: usize, h: usize, w: usize) -> Vec<Frame> {
+    let gen = SceneGen::new(c, h, w);
+    (0..n).map(|i| gen.textured(i)).collect()
+}
+
+/// The frame an in-process caller would submit to match a packed wire
+/// coding: binarized at the same 0.5 threshold as `pack_f32`.
+fn thresholded(frame: &Frame) -> Frame {
+    let data = frame
+        .data
+        .iter()
+        .map(|v| if *v > 0.5 { 1.0 } else { 0.0 })
+        .collect();
+    Frame::from_data(frame.channels, frame.height, frame.width, data, frame.seq)
+        .expect("thresholding preserves geometry")
+}
+
+/// Wait for the last session thread to release its slot — the client's
+/// closing GOODBYE races the server-side guard drop by a few µs.
+fn await_quiescent(svc: &WireService) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while svc.metrics.sessions_active() != 0 {
+        assert!(Instant::now() < deadline, "session never released its slot");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn wire_serving_matches_in_process_serving_across_codings() {
+    const N: u32 = 10;
+    let (mut sys, channels, height, width) = listening_system();
+    let mut svc = sys.serve_wire().unwrap();
+    assert!(svc.health.ready().is_ok(), "listening server must be ready");
+    let addr = svc.server.local_addr().to_string();
+    let frames = textured_frames(N, channels, height, width);
+
+    // The in-process references: raw frames (what an f32 session ships)
+    // and thresholded frames (what the packed codings reconstruct).
+    let raw_ref = native_pipeline(PipelineConfig::default())
+        .serve(frames.clone())
+        .unwrap();
+    let packed_ref = native_pipeline(PipelineConfig::default())
+        .serve(frames.iter().map(thresholded).collect())
+        .unwrap();
+
+    for coding in [
+        WireCoding::F32,
+        WireCoding::Dense,
+        WireCoding::Csr,
+        WireCoding::Rle,
+    ] {
+        let mut client =
+            WireClient::connect(&addr, coding, channels, height, width)
+                .unwrap();
+        assert_eq!(
+            client.max_inflight(),
+            client.queue_depth().max(1),
+            "the credit window is the advertised queue share"
+        );
+        for frame in &frames {
+            client.send_frame(frame).unwrap();
+        }
+        let results = client.finish().unwrap();
+        assert_eq!(results.len(), N as usize, "{coding:?}: one RESULT each");
+
+        let reference = match coding {
+            WireCoding::F32 => &raw_ref,
+            _ => &packed_ref,
+        };
+        for (wire, local) in results.iter().zip(reference.results.iter()) {
+            assert_eq!(wire.seq, local.seq, "{coding:?}: seq order");
+            assert_eq!(
+                wire.label, local.label,
+                "{coding:?}: wire seq {} classified differently from the \
+                 in-process pipeline",
+                wire.seq
+            );
+        }
+        let ids: std::collections::BTreeSet<u64> =
+            results.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids.len(), N as usize, "{coding:?}: distinct trace ids");
+    }
+
+    await_quiescent(&svc);
+    assert_eq!(svc.metrics.sessions_total.get(), 4);
+    assert_eq!(svc.metrics.frames_received.get(), 4 * N as u64);
+    assert_eq!(svc.metrics.results_sent.get(), 4 * N as u64);
+    assert_eq!(svc.metrics.queue_rejections.get(), 0);
+    assert_eq!(svc.metrics.session_rejections.get(), 0);
+    for code in StatusCode::ALL {
+        assert_eq!(
+            svc.metrics.protocol_error_count(*code),
+            0,
+            "clean sessions must not count {} errors",
+            code.name()
+        );
+    }
+
+    // Shutdown flips readiness exactly like the in-process stream does.
+    svc.server.shutdown();
+    let err = svc.health.ready().expect_err("stopped server is not ready");
+    assert!(format!("{err:#}").contains("stream stopped"), "{err:#}");
+}
+
+#[test]
+fn client_rejects_geometry_mismatch_before_sending() {
+    let (mut sys, channels, height, width) = listening_system();
+    let mut svc = sys.serve_wire().unwrap();
+    let addr = svc.server.local_addr().to_string();
+
+    let mut client = WireClient::connect(
+        &addr,
+        WireCoding::Dense,
+        channels,
+        height,
+        width,
+    )
+    .unwrap();
+    let err = client
+        .send_frame(&Frame::new(channels, height + 1, width, 0))
+        .expect_err("a mis-sized frame must fail client-side");
+    assert!(
+        format!("{err:#}").contains("session negotiated"),
+        "{err:#}"
+    );
+    // Nothing hit the wire: dropping the client is a silent probe, not
+    // a protocol error.
+    drop(client);
+    await_quiescent(&svc);
+    assert_eq!(svc.metrics.protocol_error_count(StatusCode::BadFrame), 0);
+    assert_eq!(svc.metrics.frames_received.get(), 0);
+    svc.server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Hostility: every malformed probe earns its documented typed ERROR.
+// ---------------------------------------------------------------------
+
+/// Fire raw bytes at the server and decode the reply, which must be a
+/// single terminal `ERROR` before the server closes the connection.
+fn probe(addr: &str, bytes: &[u8]) -> (StatusCode, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(bytes).unwrap();
+    let mut reply = Vec::new();
+    stream.read_to_end(&mut reply).unwrap();
+    let (msg, _) = proto::decode(&reply)
+        .unwrap_or_else(|e| panic!("expected an ERROR reply, got {e}"));
+    match msg {
+        Msg::Error { code, detail } => (code, detail),
+        other => panic!("expected ERROR, got {other:?}"),
+    }
+}
+
+/// Read one server message off a hand-driven socket, with a deadline so
+/// a wedged server fails the test instead of hanging it.
+fn read_one(stream: &mut TcpStream) -> Msg {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let overdue = move || Instant::now() > deadline;
+    match proto::read_msg(stream, &overdue) {
+        Ok(proto::MsgOutcome::Msg(m)) => m,
+        other => panic!("expected a message, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_probes_get_typed_errors_and_are_counted() {
+    let (mut sys, channels, height, width) = listening_system();
+    let mut svc = sys.serve_wire().unwrap();
+    let addr = svc.server.local_addr().to_string();
+
+    // Envelope-sized bytes that are not "PXMJ...": bad_magic.
+    let (code, detail) = probe(&addr, b"GET / HTT");
+    assert_eq!(code, StatusCode::BadMagic, "{detail}");
+
+    // A well-formed HELLO asking for a version this build cannot speak.
+    let hello = |version: u16, c: usize, h: usize, w: usize| {
+        Msg::Hello {
+            version,
+            coding: WireCoding::Dense,
+            channels: c as u16,
+            height: h as u32,
+            width: w as u32,
+        }
+        .encode()
+    };
+    let (code, detail) =
+        probe(&addr, &hello(99, channels, height, width));
+    assert_eq!(code, StatusCode::BadVersion);
+    assert!(
+        detail.contains(&format!("version {}", proto::VERSION)),
+        "rejection must name the served version: {detail}"
+    );
+
+    // Valid version, wrong geometry.
+    let (code, detail) =
+        probe(&addr, &hello(proto::VERSION, channels + 2, height, width));
+    assert_eq!(code, StatusCode::BadGeometry);
+    assert!(
+        detail.contains(&format!("{channels}x{height}x{width}")),
+        "rejection must name the serving geometry: {detail}"
+    );
+
+    // A first message that is not HELLO.
+    let (code, detail) =
+        probe(&addr, &Msg::Goodbye { code: StatusCode::Ok }.encode());
+    assert_eq!(code, StatusCode::BadMessage);
+    assert!(detail.contains("HELLO"), "{detail}");
+
+    // A negotiated session whose FRAME carries the wrong coding byte:
+    // full handshake first, then the violation mid-session.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .write_all(&hello(proto::VERSION, channels, height, width))
+        .unwrap();
+    match read_one(&mut stream) {
+        Msg::HelloAck { version, .. } => assert_eq!(version, proto::VERSION),
+        other => panic!("expected HELLO_ACK, got {other:?}"),
+    }
+    stream
+        .write_all(
+            &Msg::Frame { seq: 0, coding: WireCoding::F32, body: Vec::new() }
+                .encode(),
+        )
+        .unwrap();
+    match read_one(&mut stream) {
+        Msg::Error { code, detail } => {
+            assert_eq!(code, StatusCode::BadFrame);
+            assert!(detail.contains("coding"), "{detail}");
+        }
+        other => panic!("expected ERROR, got {other:?}"),
+    }
+    drop(stream);
+
+    // Every probe landed under its documented code, nothing else moved.
+    await_quiescent(&svc);
+    let counts: Vec<(&str, u64)> = StatusCode::ALL
+        .iter()
+        .map(|c| (c.name(), svc.metrics.protocol_error_count(*c)))
+        .collect();
+    assert_eq!(
+        counts,
+        vec![
+            ("ok", 0),
+            ("bad_magic", 1),
+            ("bad_version", 1),
+            ("bad_message", 1),
+            ("bad_geometry", 1),
+            ("bad_frame", 1),
+            ("overloaded", 0),
+            ("internal", 0),
+            ("shutting_down", 0),
+        ]
+    );
+    // Only the fully negotiated session ever held a slot; no frame was
+    // accepted, so no result was produced.
+    assert_eq!(svc.metrics.sessions_total.get(), 1);
+    assert_eq!(svc.metrics.frames_received.get(), 0);
+    assert_eq!(svc.metrics.results_sent.get(), 0);
+    svc.server.shutdown();
+}
