@@ -3,9 +3,11 @@
 //! Emits `BENCH_backend.json` (frames/sec for both paths + speedup) so
 //! the perf trajectory is machine-diffable across PRs.
 
-use pixelmtj::backend::{InferenceBackend, NativeBackend, NativePath};
+use pixelmtj::backend::{
+    active_simd, InferScratch, InferenceBackend, NativeBackend, NativePath,
+};
 use pixelmtj::config::HwConfig;
-use pixelmtj::sensor::{scene::SceneGen, FirstLayerWeights};
+use pixelmtj::sensor::{scene::SceneGen, words_for, FirstLayerWeights};
 use pixelmtj::util::bench::{bb, Bencher};
 use pixelmtj::util::json::Value;
 
@@ -24,6 +26,17 @@ fn main() {
     let mut batch8 = Vec::with_capacity(8 * elems);
     for i in 0..8u32 {
         batch8.extend(packed.run_frontend(&gen.textured(i)).unwrap().to_f32());
+    }
+
+    // Packed-domain batch (BitPlane words, no f32 widening) — the exact
+    // representation the stream dispatcher feeds, for the kernel arms.
+    let model = packed.model();
+    let wpf = words_for(elems);
+    let nc = model.num_classes();
+    let mut batch8_words = Vec::with_capacity(8 * wpf);
+    for i in 0..8u32 {
+        let map = packed.run_frontend(&gen.textured(i)).unwrap();
+        batch8_words.extend_from_slice(map.words());
     }
 
     let mut b = Bencher::new("backend");
@@ -48,6 +61,24 @@ fn main() {
         })
         .clone();
 
+    // Kernel-level arms: the runtime-dispatched SIMD XNOR-popcount vs
+    // the forced-scalar loop, both over the zero-allocation batched
+    // entry (shared scratch, caller-owned logits).
+    let mut scratch = InferScratch::default();
+    let mut logits = vec![0.0f32; 8 * nc];
+    let s_simd8 = b
+        .bench("packed_words_simd_b8", || {
+            model.infer_batch_words(bb(&batch8_words), 8, &mut logits, &mut scratch);
+            bb(&logits);
+        })
+        .clone();
+    let s_scalar8 = b
+        .bench("packed_words_scalar_b8", || {
+            model.infer_batch_words_scalar(bb(&batch8_words), 8, &mut logits, &mut scratch);
+            bb(&logits);
+        })
+        .clone();
+
     let speedup_b1 = s_dense1.mean_ns / s_packed1.mean_ns;
     let fps_packed8 = 8.0 / (s_packed8.mean_ns / 1e9);
     let fps_dense8 = 8.0 / (s_dense8.mean_ns / 1e9);
@@ -55,6 +86,11 @@ fn main() {
         "\n→ XNOR-popcount vs dense reference: {speedup_b1:.1}× at b=1, \
          {:.1}× at b=8 ({fps_packed8:.0} vs {fps_dense8:.0} frames/s)",
         s_dense8.mean_ns / s_packed8.mean_ns
+    );
+    let simd_vs_scalar = s_scalar8.mean_ns / s_simd8.mean_ns;
+    println!(
+        "→ dispatched kernel `{}` vs scalar popcount: {simd_vs_scalar:.2}× at b=8",
+        active_simd()
     );
 
     let payload = Value::obj(vec![
@@ -70,6 +106,10 @@ fn main() {
         ),
         ("native_b8_fps", Value::Num(fps_packed8)),
         ("dense_b8_fps", Value::Num(fps_dense8)),
+        ("simd_kernel", Value::Str(active_simd().into())),
+        ("simd_b8_ns", Value::Num(s_simd8.mean_ns)),
+        ("scalar_b8_ns", Value::Num(s_scalar8.mean_ns)),
+        ("simd_speedup_b8", Value::Num(simd_vs_scalar)),
     ]);
     let path = "BENCH_backend.json";
     match std::fs::write(path, payload.to_string_pretty()) {

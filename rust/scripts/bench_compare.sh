@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# Warn-only bench regression gate: compare the fresh BENCH_*.json
+# throughput numbers (written by `cargo bench` into rust/) against the
+# committed baselines in benches/baseline/.  Never fails the build —
+# shared CI runners make timings too noisy for a hard gate — but a perf
+# cliff shows up as a ::warning annotation on the PR.
+#
+# Baselines marked `"provisional": true` were estimated without a local
+# toolchain; the warning text says so.  Bless real numbers by replacing
+# the baseline file with a CI artifact from a healthy run.
+set -u
+cd "$(dirname "$0")/.."
+
+python3 - <<'PY'
+import json
+
+TOLERANCE = 0.4  # warn when fresh throughput drops below 40% of baseline
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def warn(msg):
+    print(f"::warning::bench-compare: {msg}")
+
+
+def compare(name, fresh_val, base_val, provisional):
+    if not isinstance(fresh_val, (int, float)):
+        return 0
+    if not isinstance(base_val, (int, float)) or base_val <= 0:
+        return 0
+    if fresh_val < TOLERANCE * base_val:
+        tag = " (baseline is provisional)" if provisional else ""
+        warn(
+            f"{name}: {fresh_val:.1f} vs baseline {base_val:.1f} "
+            f"— below {TOLERANCE:.0%} of baseline{tag}"
+        )
+    return 1
+
+
+checked = 0
+
+base = load("benches/baseline/BENCH_stream.json")
+fresh = load("BENCH_stream.json")
+if base and fresh:
+    prov = bool(base.get("provisional"))
+    for key in ("single_worker_fps", "multi_worker_fps"):
+        if key in base and key in fresh:
+            checked += compare(f"stream.{key}", fresh[key], base[key], prov)
+elif base:
+    warn("BENCH_stream.json missing — stream bench produced no output")
+
+base = load("benches/baseline/BENCH_pack.json")
+fresh = load("BENCH_pack.json")
+if base and fresh:
+    prov = bool(base.get("provisional"))
+    by_name = {
+        g.get("geometry"): g
+        for g in base.get("geometries", [])
+        if isinstance(g, dict)
+    }
+    for g in fresh.get("geometries", []):
+        if not isinstance(g, dict):
+            continue
+        bg = by_name.get(g.get("geometry"))
+        if bg and "e2e_packed_fps" in bg and "e2e_packed_fps" in g:
+            checked += compare(
+                f"pack.{g['geometry']}.e2e_packed_fps",
+                g["e2e_packed_fps"],
+                bg["e2e_packed_fps"],
+                prov,
+            )
+elif base:
+    warn("BENCH_pack.json missing — pack bench produced no output")
+
+print(f"bench-compare: {checked} throughput keys checked (warn-only)")
+PY
+
+exit 0

@@ -21,7 +21,10 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use native::{NativeBackend, NativeModel, NativePath};
+pub use native::{
+    active_simd, xor_popcount, xor_popcount_scalar, InferScratch,
+    NativeBackend, NativeModel, NativePath,
+};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
@@ -100,6 +103,24 @@ pub trait InferenceBackend: Send + Sync {
             unpack_f32(frame_words, elems, frame_dense);
         }
         self.run_backend(&dense, batch)
+    }
+
+    /// [`Self::run_backend_packed`] into a caller-owned logits buffer:
+    /// `out` is cleared and filled with `batch × num_classes` logits, so
+    /// a steady-state dispatch loop can recycle one allocation across
+    /// batches.  The default delegates to [`Self::run_backend_packed`];
+    /// the native engine overrides both entries so neither allocates
+    /// beyond the caller's buffer on the single-worker hot path.
+    fn run_backend_packed_into(
+        &self,
+        words: &[u64],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let logits = self.run_backend_packed(words, batch)?;
+        out.clear();
+        out.extend_from_slice(&logits);
+        Ok(())
     }
 }
 

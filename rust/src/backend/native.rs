@@ -23,6 +23,9 @@
 //! Everything downstream — trait, packing, batching, parallelism — is
 //! independent of where the weights come from.
 
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
 use anyhow::{ensure, Result};
 
 use crate::config::HwConfig;
@@ -33,6 +36,164 @@ use crate::sensor::{
 };
 
 use super::InferenceBackend;
+
+// ---------------------------------------------------------------------------
+// XNOR-popcount inner kernel (runtime SIMD dispatch)
+// ---------------------------------------------------------------------------
+
+/// Function-pointer type for the XNOR-popcount inner kernel, so the
+/// batched forward can be instantiated once per kernel flavour.
+type XnorFn = fn(&[u64], &[u64]) -> u32;
+
+/// Popcount of `a ⊕ b` over the common prefix of the two word slices —
+/// the one inner loop every binary dot product in the model reduces to.
+///
+/// Dispatches once per process to the widest kernel this CPU supports
+/// (AVX2 on x86-64, NEON on aarch64, scalar anywhere else).  Popcount is
+/// an exact integer operation, so every kernel returns bit-identical
+/// results; [`xor_popcount_scalar`] is the pinned reference and the
+/// parity suite compares the two on random inputs.
+#[inline]
+pub fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::xor_popcount(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::xor_popcount(a, b) },
+        Kernel::Scalar => xor_popcount_scalar(a, b),
+    }
+}
+
+/// Portable reference kernel: one XOR + `count_ones` per `u64` lane.
+#[inline]
+pub fn xor_popcount_scalar(a: &[u64], b: &[u64]) -> u32 {
+    let mut differing = 0u32;
+    for (&xw, &ww) in a.iter().zip(b.iter()) {
+        differing += (xw ^ ww).count_ones();
+    }
+    differing
+}
+
+/// Name of the kernel [`xor_popcount`] dispatches to on this CPU
+/// (`"avx2"`, `"neon"`, or `"scalar"`) — for banners and bench records.
+pub fn active_simd() -> &'static str {
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => "neon",
+        Kernel::Scalar => "scalar",
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Kernel {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+fn kernel() -> Kernel {
+    static KERNEL: OnceLock<Kernel> = OnceLock::new();
+    *KERNEL.get_or_init(detect_kernel)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_kernel() -> Kernel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_kernel() -> Kernel {
+    // NEON is a mandatory part of the AArch64 baseline — no probe needed.
+    Kernel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_kernel() -> Kernel {
+    Kernel::Scalar
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 XNOR-popcount: Muła's nibble-LUT popcount over 256-bit lanes.
+    //!
+    //! Each iteration XORs four `u64` words at once, splits the 32 bytes
+    //! into low/high nibbles, looks both up in a per-nibble popcount table
+    //! with `_mm256_shuffle_epi8`, and horizontally sums the byte counts
+    //! into four `u64` lanes with `_mm256_sad_epu8`.  Byte counts peak at
+    //! 8 and lane sums at 64 per iteration, so nothing can overflow.
+
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    ///
+    /// Caller must ensure the CPU supports AVX2; the runtime dispatcher
+    /// (`super::kernel`) only selects this after feature detection.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len().min(b.len());
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let chunks = n / 4;
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * 4) as *const __m256i;
+            let pb = b.as_ptr().add(c * 4) as *const __m256i;
+            let x = _mm256_xor_si256(_mm256_loadu_si256(pa), _mm256_loadu_si256(pb));
+            let lo = _mm256_and_si256(x, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+            let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        }
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+        for i in chunks * 4..n {
+            total += (a[i] ^ b[i]).count_ones();
+        }
+        total
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON XNOR-popcount: `vcntq_u8` per-byte popcount over 128-bit
+    //! lanes, horizontally summed with the widening `vaddlvq_u8`.
+
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    ///
+    /// NEON is part of the AArch64 baseline, so this is always callable
+    /// on aarch64; the `unsafe fn` mirrors the AVX2 kernel's shape.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let n = a.len().min(b.len());
+        let mut total = 0u32;
+        let chunks = n / 2;
+        for c in 0..chunks {
+            let va = vld1q_u64(a.as_ptr().add(c * 2));
+            let vb = vld1q_u64(b.as_ptr().add(c * 2));
+            let bytes = vcntq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+            total += vaddlvq_u8(bytes) as u32;
+        }
+        for i in chunks * 2..n {
+            total += (a[i] ^ b[i]).count_ones();
+        }
+        total
+    }
+}
 
 /// Which inner-loop implementation `run_backend` uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,15 +248,38 @@ impl BinaryDense {
         }
     }
 
-    /// Integer preactivation of output `o` over packed ±1 inputs.
+    /// Integer preactivation of output `o` over packed ±1 inputs, via
+    /// the dispatched SIMD [`xor_popcount`] kernel.
     #[inline]
     fn preact_packed(&self, o: usize, x: &[u64]) -> i32 {
         let row = &self.w_packed[o * self.words..(o + 1) * self.words];
-        let mut differing = 0u32;
-        for (&xw, &ww) in x.iter().zip(row.iter()) {
-            differing += (xw ^ ww).count_ones();
+        self.in_features as i32 - 2 * xor_popcount(x, row) as i32
+    }
+
+    /// Batch-major blocked forward: the weight-row loop is the *outer*
+    /// loop, so each packed row is streamed from memory once and applied
+    /// to every frame in the batch while hot in cache.  `x` holds
+    /// `batch × ⌈in/64⌉` words, `out` holds `batch × ⌈out/64⌉` words and
+    /// is fully overwritten with the binarized packed outputs.
+    fn forward_block(&self, x: &[u64], batch: usize, out: &mut [u64], kern: XnorFn) {
+        let wpf_in = self.words;
+        let wpf_out = words_for(self.out_features);
+        debug_assert_eq!(x.len(), batch * wpf_in);
+        debug_assert_eq!(out.len(), batch * wpf_out);
+        out.fill(0);
+        for o in 0..self.out_features {
+            let row = &self.w_packed[o * wpf_in..(o + 1) * wpf_in];
+            let t = self.thresh[o];
+            let slot = o / 64;
+            let bit = 1u64 << (o % 64);
+            for item in 0..batch {
+                let xi = &x[item * wpf_in..(item + 1) * wpf_in];
+                let pre = self.in_features as i32 - 2 * kern(xi, row) as i32;
+                if pre >= t {
+                    out[item * wpf_out + slot] |= bit;
+                }
+            }
         }
-        self.in_features as i32 - 2 * differing as i32
     }
 
     /// f32 preactivation of output `o` over dense ±1.0 inputs, via
@@ -110,6 +294,31 @@ impl BinaryDense {
         }
         acc
     }
+}
+
+/// Reusable ping-pong scratch for packed inference: two `u64` buffers
+/// that alternate as layer input/output.  Hand one to
+/// [`NativeModel::infer_batch_words`] and steady-state inference performs
+/// no heap allocation once the buffers have grown to the model's widest
+/// layer.
+#[derive(Debug, Default)]
+pub struct InferScratch {
+    a: Vec<u64>,
+    b: Vec<u64>,
+}
+
+thread_local! {
+    /// Per-thread scratch shared by the allocation-free entry points
+    /// ([`NativeModel::infer_words`], the backend's sequential batch
+    /// path).  The model never re-enters itself on one thread, so a
+    /// single slot suffices.
+    static INFER_SCRATCH: RefCell<InferScratch> =
+        const { RefCell::new(InferScratch { a: Vec::new(), b: Vec::new() }) };
+}
+
+/// Run `f` with this thread's inference scratch.
+fn with_scratch<R>(f: impl FnOnce(&mut InferScratch) -> R) -> R {
+    INFER_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// The native classifier: binarized hidden layers + an affine logit head.
@@ -156,26 +365,76 @@ impl NativeModel {
 
     /// XNOR-popcount inference of one frame straight from its packed
     /// [`BitPlane`] words (`words_for(act_elems)` of them, zero padding
-    /// lanes) — no per-frame re-pack anywhere on this path.
+    /// lanes) — no per-frame re-pack anywhere on this path, and no heap
+    /// allocation in steady state (per-thread ping-pong scratch).
     pub fn infer_words(&self, words: &[u64], logits: &mut [f32]) {
-        debug_assert_eq!(words.len(), words_for(self.act_elems()));
-        let mut storage: Option<Vec<u64>> = None;
+        with_scratch(|scratch| self.infer_batch_words(words, 1, logits, scratch));
+    }
+
+    /// Batched XNOR-popcount inference over `batch` frames of packed
+    /// words laid out contiguously (`batch × words_for(act_elems)`),
+    /// writing `batch × num_classes` logits.  Each hidden layer runs
+    /// batch-major blocked ([`BinaryDense::forward_block`]) with the
+    /// dispatched SIMD kernel; `scratch` is reused across calls, so
+    /// steady-state inference allocates nothing.
+    pub fn infer_batch_words(
+        &self,
+        words: &[u64],
+        batch: usize,
+        logits: &mut [f32],
+        scratch: &mut InferScratch,
+    ) {
+        self.infer_batch_impl(words, batch, logits, scratch, xor_popcount);
+    }
+
+    /// Forced-scalar variant of [`Self::infer_batch_words`] — the parity
+    /// suite compares it against the SIMD-dispatched kernel.
+    pub fn infer_batch_words_scalar(
+        &self,
+        words: &[u64],
+        batch: usize,
+        logits: &mut [f32],
+        scratch: &mut InferScratch,
+    ) {
+        self.infer_batch_impl(words, batch, logits, scratch, xor_popcount_scalar);
+    }
+
+    fn infer_batch_impl(
+        &self,
+        words: &[u64],
+        batch: usize,
+        logits: &mut [f32],
+        scratch: &mut InferScratch,
+        kern: XnorFn,
+    ) {
+        debug_assert_eq!(words.len(), batch * words_for(self.act_elems()));
+        debug_assert_eq!(logits.len(), batch * self.num_classes());
+        let mut cur = std::mem::take(&mut scratch.a);
+        let mut next = std::mem::take(&mut scratch.b);
+        let mut first = true;
         for layer in &self.hidden {
-            let cur: &[u64] = storage.as_deref().unwrap_or(words);
-            let mut next = vec![0u64; words_for(layer.out_features)];
-            for o in 0..layer.out_features {
-                if layer.preact_packed(o, cur) >= layer.thresh[o] {
-                    next[o / 64] |= 1u64 << (o % 64);
-                }
+            next.clear();
+            next.resize(batch * words_for(layer.out_features), 0);
+            let src: &[u64] = if first { words } else { &cur };
+            layer.forward_block(src, batch, &mut next, kern);
+            std::mem::swap(&mut cur, &mut next);
+            first = false;
+        }
+        let src: &[u64] = if first { words } else { &cur };
+        let nc = self.head.out_features;
+        let wpf_in = self.head.words;
+        for o in 0..nc {
+            let row = &self.head.w_packed[o * wpf_in..(o + 1) * wpf_in];
+            let scale = self.head_scale[o];
+            let bias = self.head_bias[o];
+            for item in 0..batch {
+                let xi = &src[item * wpf_in..(item + 1) * wpf_in];
+                let pre = self.head.in_features as i32 - 2 * kern(xi, row) as i32;
+                logits[item * nc + o] = pre as f32 * scale + bias;
             }
-            storage = Some(next);
         }
-        let cur: &[u64] = storage.as_deref().unwrap_or(words);
-        for o in 0..self.head.out_features {
-            logits[o] = self.head.preact_packed(o, cur) as f32
-                * self.head_scale[o]
-                + self.head_bias[o];
-        }
+        scratch.a = cur;
+        scratch.b = next;
     }
 
     /// XNOR-popcount inference of one frame's `{0,1}` f32 activations
@@ -373,6 +632,24 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn run_backend_packed(&self, words: &[u64], batch: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.run_backend_packed_into(words, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free batch entry: logits land in the caller's buffer,
+    /// layer activations in per-thread [`InferScratch`].  With one worker
+    /// the whole batch runs batch-major blocked on the calling thread; in
+    /// steady state (warm buffers) that path performs zero heap
+    /// allocation.  With several workers each scope thread processes its
+    /// chunk with its own scratch (one allocation set per thread per
+    /// batch — thread spawning dominates that cost anyway).
+    fn run_backend_packed_into(
+        &self,
+        words: &[u64],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let elems = self.model.act_elems();
         let wpf = words_for(elems);
         ensure!(
@@ -381,29 +658,49 @@ impl InferenceBackend for NativeBackend {
             words.len()
         );
         let nc = self.model.num_classes();
-        let mut out = vec![0.0f32; batch * nc];
+        out.clear();
+        out.resize(batch * nc, 0.0);
         let workers = self.workers.min(batch.max(1));
         if workers <= 1 || batch <= 1 {
-            for (item, logits) in words.chunks(wpf).zip(out.chunks_mut(nc)) {
-                self.infer_one_words(item, logits);
+            match self.path {
+                NativePath::Packed => with_scratch(|scratch| {
+                    self.model.infer_batch_words(words, batch, out, scratch);
+                }),
+                NativePath::DenseRef => {
+                    for (item, logits) in words.chunks(wpf).zip(out.chunks_mut(nc)) {
+                        self.infer_one_words(item, logits);
+                    }
+                }
             }
-            return Ok(out);
+            return Ok(());
         }
         let per = batch.div_ceil(workers);
         std::thread::scope(|s| {
             for (in_chunk, out_chunk) in
                 words.chunks(per * wpf).zip(out.chunks_mut(per * nc))
             {
-                let _worker = s.spawn(move || {
-                    for (item, logits) in
-                        in_chunk.chunks(wpf).zip(out_chunk.chunks_mut(nc))
-                    {
-                        self.infer_one_words(item, logits);
+                let _worker = s.spawn(move || match self.path {
+                    NativePath::Packed => {
+                        let chunk_batch = in_chunk.len() / wpf;
+                        let mut scratch = InferScratch::default();
+                        self.model.infer_batch_words(
+                            in_chunk,
+                            chunk_batch,
+                            out_chunk,
+                            &mut scratch,
+                        );
+                    }
+                    NativePath::DenseRef => {
+                        for (item, logits) in
+                            in_chunk.chunks(wpf).zip(out_chunk.chunks_mut(nc))
+                        {
+                            self.infer_one_words(item, logits);
+                        }
                     }
                 });
             }
         });
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -521,5 +818,77 @@ mod tests {
         let w = FirstLayerWeights::synthetic(8, 3, 3, 1);
         let backend = NativeBackend::new(hw, w, 16, 16, 1);
         assert!(backend.run_backend(&[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_on_all_lengths() {
+        // Lengths straddle every SIMD block boundary (AVX2 consumes 4
+        // words/iter, NEON 2) plus odd tails and the empty slice.
+        let mut rng = CounterRng::new(77, 3);
+        let mut word = || {
+            let hi = (rng.next_uniform() * 4_294_967_296.0) as u64;
+            let lo = (rng.next_uniform() * 4_294_967_296.0) as u64;
+            (hi << 32) | lo
+        };
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 33, 64, 129] {
+            let a: Vec<u64> = (0..len).map(|_| word()).collect();
+            let b: Vec<u64> = (0..len).map(|_| word()).collect();
+            assert_eq!(
+                xor_popcount(&a, &b),
+                xor_popcount_scalar(&a, &b),
+                "len {len} (kernel {})",
+                active_simd()
+            );
+        }
+        assert!(["avx2", "neon", "scalar"].contains(&active_simd()));
+    }
+
+    #[test]
+    fn batched_words_match_per_frame_and_scalar_kernel() {
+        let model = NativeModel::synthetic([8, 5, 5], &[64, 32], 10, 11);
+        let wpf = words_for(model.act_elems());
+        let nc = model.num_classes();
+        let batch = 6usize;
+        let mut rng = CounterRng::new(41, 7);
+        let mut words = Vec::with_capacity(batch * wpf);
+        let mut expect = vec![0.0f32; batch * nc];
+        for item in 0..batch {
+            let act: Vec<f32> = (0..model.act_elems())
+                .map(|_| if rng.next_uniform() < 0.3 { 1.0 } else { 0.0 })
+                .collect();
+            let packed = pack_f32(&act);
+            model.infer_words(&packed, &mut expect[item * nc..(item + 1) * nc]);
+            words.extend(packed);
+        }
+        let mut scratch = InferScratch::default();
+        let mut got = vec![0.0f32; batch * nc];
+        model.infer_batch_words(&words, batch, &mut got, &mut scratch);
+        assert_eq!(got, expect, "batched vs per-frame");
+        let mut scalar = vec![0.0f32; batch * nc];
+        model.infer_batch_words_scalar(&words, batch, &mut scalar, &mut scratch);
+        assert_eq!(scalar, expect, "forced-scalar kernel vs dispatched");
+    }
+
+    #[test]
+    fn packed_into_reuses_buffer_and_matches_vec_entry() {
+        let hw = HwConfig::default();
+        let w = FirstLayerWeights::synthetic(16, 3, 3, 5);
+        let backend = NativeBackend::new(hw, w, 20, 20, 1);
+        let wpf = words_for(backend.act_elems());
+        let batch = 3usize;
+        let mut rng = CounterRng::new(55, 2);
+        let words: Vec<u64> = (0..batch * wpf)
+            .map(|_| (rng.next_uniform() * u32::MAX as f64) as u64)
+            .collect();
+        let via_vec = backend.run_backend_packed(&words, batch).unwrap();
+        let mut out = Vec::new();
+        backend.run_backend_packed_into(&words, batch, &mut out).unwrap();
+        assert_eq!(out, via_vec);
+        // Second call must reuse the buffer (same capacity, fresh fill).
+        backend.run_backend_packed_into(&words, batch, &mut out).unwrap();
+        assert_eq!(out, via_vec);
+        assert!(backend
+            .run_backend_packed_into(&words[1..], batch, &mut out)
+            .is_err());
     }
 }

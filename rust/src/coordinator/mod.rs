@@ -18,7 +18,7 @@ pub mod stream;
 
 pub use batcher::Batcher;
 pub use pipeline::{Classification, Pipeline, RunReport};
-pub use sparse::{decode, encode, Encoded};
+pub use sparse::{decode, decode_into, encode, encode_into, Encoded};
 pub use stream::{
     feed, make_source, BurstySource, FrameSource, MotionSweepSource,
     StageHealth, SteadySource, StreamObservers, StreamServer,

@@ -43,31 +43,111 @@ enum EncodedData {
 
 /// Encode with the requested codec.
 pub fn encode(map: &BitPlane, coding: SparseCoding) -> Encoded {
+    let mut out = Encoded::empty(coding);
+    encode_into(map, coding, &mut out);
+    out
+}
+
+/// [`encode`] into a caller-owned [`Encoded`]: the codec buffers are
+/// recycled when the variant already matches `coding` (the steady-state
+/// streaming case), so repeated encodes of same-size planes allocate
+/// nothing.  Semantically identical to `encode` — the reuse tests pin it.
+pub fn encode_into(map: &BitPlane, coding: SparseCoding, out: &mut Encoded) {
+    out.coding = coding;
+    out.channels = map.channels;
+    out.height = map.height;
+    out.width = map.width;
+    out.seq = map.seq;
     match coding {
-        SparseCoding::Dense => encode_dense(map),
-        SparseCoding::Csr => encode_csr(map),
-        SparseCoding::Rle => encode_rle(map),
+        SparseCoding::Dense => {
+            if !matches!(out.data, EncodedData::Dense(_)) {
+                out.data = EncodedData::Dense(Vec::new());
+            }
+            let EncodedData::Dense(words) = &mut out.data else {
+                unreachable!()
+            };
+            words.clear();
+            words.extend_from_slice(map.words());
+            out.payload_bits = map.len() as u64;
+        }
+        SparseCoding::Csr => {
+            if !matches!(out.data, EncodedData::Csr { .. }) {
+                out.data = EncodedData::Csr { row_ptr: Vec::new(), cols: Vec::new() };
+            }
+            let EncodedData::Csr { row_ptr, cols } = &mut out.data else {
+                unreachable!()
+            };
+            csr_scan(map, row_ptr, cols);
+            // Link cost: ⌈log2(w+1)⌉ bits per column index + ⌈log2(nnz+1)⌉
+            // per row pointer (the physical format packs exactly these
+            // field widths).
+            let col_bits = bits_for(map.width as u64);
+            let ptr_bits = bits_for(cols.len() as u64);
+            out.payload_bits = cols.len() as u64 * col_bits + row_ptr.len() as u64 * ptr_bits;
+        }
+        SparseCoding::Rle => {
+            if !matches!(out.data, EncodedData::Rle { .. }) {
+                out.data = EncodedData::Rle { k: 0, words: Vec::new(), bit_len: 0 };
+            }
+            let EncodedData::Rle { k, words, bit_len } = &mut out.data else {
+                unreachable!()
+            };
+            let storage = std::mem::take(words);
+            let (new_k, new_words, new_len) = rle_write(map, storage);
+            *k = new_k;
+            *words = new_words;
+            *bit_len = new_len;
+            out.payload_bits = new_len + 5; // + k parameter header
+        }
     }
 }
 
 /// Decode back to a packed activation plane (lossless inverse of
 /// [`encode`]).
 pub fn decode(enc: &Encoded) -> Result<BitPlane> {
+    let mut map = BitPlane::empty();
+    decode_into(enc, &mut map)?;
+    Ok(map)
+}
+
+/// [`decode`] into a caller-owned [`BitPlane`] whose word storage is
+/// recycled (geometry is reset from the payload's).  Applies the same
+/// content validation as `decode`; on error the plane's contents are
+/// unspecified but still structurally valid.
+///
+/// Hostile wire `FRAME` bodies reach this path via
+/// [`Encoded::from_wire_bytes`], so every structural invariant the
+/// codecs rely on is re-checked here: CSR row pointers must be monotone
+/// and bounded by the column array *before* any slicing, RLE runs must
+/// not overflow or overrun the plane — a malformed payload returns
+/// `Err`, it can never panic the decoding stage thread.
+pub fn decode_into(enc: &Encoded, map: &mut BitPlane) -> Result<()> {
     match &enc.data {
-        EncodedData::Dense(words) => BitPlane::from_words(
+        EncodedData::Dense(words) => map.assign_words(
             enc.channels,
             enc.height,
             enc.width,
-            words.clone(),
+            words,
             enc.seq,
         ),
         EncodedData::Csr { row_ptr, cols } => {
-            let mut map =
-                BitPlane::new(enc.channels, enc.height, enc.width, enc.seq);
             let rows = enc.channels * enc.height;
             if row_ptr.len() != rows + 1 {
                 bail!("CSR row_ptr length mismatch");
             }
+            let mut prev = 0usize;
+            for (r, &p) in row_ptr.iter().enumerate() {
+                let p = p as usize;
+                if p < prev || p > cols.len() {
+                    bail!(
+                        "CSR row_ptr invalid at row {r}: {p} after {prev} \
+                         with {} columns",
+                        cols.len()
+                    );
+                }
+                prev = p;
+            }
+            map.reset(enc.channels, enc.height, enc.width, enc.seq);
             for r in 0..rows {
                 for &c in &cols[row_ptr[r] as usize..row_ptr[r + 1] as usize] {
                     if c as usize >= enc.width {
@@ -76,28 +156,61 @@ pub fn decode(enc: &Encoded) -> Result<BitPlane> {
                     map.set(r * enc.width + c as usize, true);
                 }
             }
-            Ok(map)
+            Ok(())
         }
         EncodedData::Rle { k, words, bit_len } => {
-            let mut map =
-                BitPlane::new(enc.channels, enc.height, enc.width, enc.seq);
+            if *k >= 64 {
+                // from_wire_bytes already rejects these; defense in depth
+                // for payloads constructed another way.
+                bail!("RLE Rice parameter {k} out of range (max 63)");
+            }
+            map.reset(enc.channels, enc.height, enc.width, enc.seq);
             let mut reader = BitReader { words, pos: 0, len: *bit_len };
             let n = map.len();
             let mut i = 0usize;
             while i < n {
                 let run = reader.read_golomb(*k)? as usize;
-                i += run; // `run` zeros...
+                // `run` zeros... (checked: a hostile stream can claim a
+                // run that overruns the plane or overflows the index)
+                i = match i.checked_add(run) {
+                    Some(next) if next <= n => next,
+                    _ => bail!("RLE run {run} overruns the {n}-element plane"),
+                };
                 if i < n {
                     map.set(i, true); // ...then a one
                     i += 1;
                 }
             }
-            Ok(map)
+            Ok(())
         }
     }
 }
 
 impl Encoded {
+    /// An empty payload slot for [`encode_into`] reuse.  The data variant
+    /// is pre-matched to `coding`, so the very first encode already lands
+    /// in the buffers every later encode recycles.
+    pub fn empty(coding: SparseCoding) -> Self {
+        let data = match coding {
+            SparseCoding::Dense => EncodedData::Dense(Vec::new()),
+            SparseCoding::Csr => {
+                EncodedData::Csr { row_ptr: Vec::new(), cols: Vec::new() }
+            }
+            SparseCoding::Rle => {
+                EncodedData::Rle { k: 0, words: Vec::new(), bit_len: 0 }
+            }
+        };
+        Self {
+            coding,
+            channels: 0,
+            height: 0,
+            width: 0,
+            seq: 0,
+            payload_bits: 0,
+            data,
+        }
+    }
+
     /// Serialize the codec body for a wire `FRAME` message
     /// (docs/PROTOCOL.md).  Geometry, coding and `seq` travel in the
     /// message envelope, so the body is just the codec's own data,
@@ -211,6 +324,12 @@ impl Encoded {
                     bail!("RLE body length {} is malformed", bytes.len());
                 }
                 let k = bytes[0] as u32;
+                if k >= 64 {
+                    // Golomb decoding shifts by k; encode never produces
+                    // k ≥ 64 (k ≈ log2(mean run) < 64), so this is always
+                    // a hostile or corrupt body.
+                    bail!("RLE Rice parameter {k} out of range (max 63)");
+                }
                 let bit_len =
                     u64::from_le_bytes(bytes[1..9].try_into().unwrap());
                 let words: Vec<u64> = bytes[9..]
@@ -238,23 +357,12 @@ impl Encoded {
     }
 }
 
-fn encode_dense(map: &BitPlane) -> Encoded {
-    Encoded {
-        coding: SparseCoding::Dense,
-        channels: map.channels,
-        height: map.height,
-        width: map.width,
-        seq: map.seq,
-        payload_bits: map.len() as u64,
-        data: EncodedData::Dense(map.words().to_vec()),
-    }
-}
-
-fn encode_csr(map: &BitPlane) -> Encoded {
+/// CSR scan into caller-owned (cleared, capacity-recycled) buffers.
+fn csr_scan(map: &BitPlane, row_ptr: &mut Vec<u32>, cols: &mut Vec<u16>) {
     let rows = map.channels * map.height;
     let width = map.width;
-    let mut row_ptr = Vec::with_capacity(rows + 1);
-    let mut cols: Vec<u16> = Vec::new();
+    row_ptr.clear();
+    cols.clear();
     row_ptr.push(0u32);
     // Set bits arrive in ascending flat order from the word scan, so rows
     // close in order: emit each row's end pointer when the first one of a
@@ -272,30 +380,18 @@ fn encode_csr(map: &BitPlane) -> Encoded {
         row_ptr.push(cols.len() as u32);
         closed += 1;
     }
-    // Link cost: ⌈log2(w+1)⌉ bits per column index + ⌈log2(nnz+1)⌉ per row
-    // pointer (the physical format packs exactly these field widths).
-    let col_bits = bits_for(map.width as u64);
-    let ptr_bits = bits_for(cols.len() as u64);
-    let payload_bits =
-        cols.len() as u64 * col_bits + row_ptr.len() as u64 * ptr_bits;
-    Encoded {
-        coding: SparseCoding::Csr,
-        channels: map.channels,
-        height: map.height,
-        width: map.width,
-        seq: map.seq,
-        payload_bits,
-        data: EncodedData::Csr { row_ptr, cols },
-    }
 }
 
-fn encode_rle(map: &BitPlane) -> Encoded {
+/// Golomb-Rice encode into recycled word storage; returns
+/// `(k, words, bit_len)`.
+fn rle_write(map: &BitPlane, storage: Vec<u64>) -> (u32, Vec<u64>, u64) {
     // Optimal Rice parameter for geometric run lengths: k ≈ log2(mean run).
     let ones = map.count_ones().max(1);
     let mean_run = map.len() as f64 / ones as f64;
     let k = mean_run.log2().floor().max(0.0) as u32;
 
-    let mut writer = BitWriter::default();
+    let mut writer = BitWriter { words: storage, len: 0 };
+    writer.words.clear();
     // Zero-run before each one, from the gap between consecutive set
     // bits, then the trailing zero-run (n when the plane is all zeros).
     let mut prev: Option<usize> = None;
@@ -308,16 +404,7 @@ fn encode_rle(map: &BitPlane) -> Encoded {
     if tail > 0 {
         writer.write_golomb(tail as u64, k);
     }
-    let bit_len = writer.len;
-    Encoded {
-        coding: SparseCoding::Rle,
-        channels: map.channels,
-        height: map.height,
-        width: map.width,
-        seq: map.seq,
-        payload_bits: bit_len + 5, // + k parameter header
-        data: EncodedData::Rle { k, words: writer.words, bit_len },
-    }
+    (k, writer.words, writer.len)
 }
 
 fn bits_for(max_value: u64) -> u64 {
@@ -560,5 +647,127 @@ mod tests {
         let enc = encode(&m, SparseCoding::Rle);
         assert_eq!((enc.channels, enc.height, enc.width), (4, 5, 6));
         assert_eq!(enc.seq, 77);
+    }
+
+    /// A structurally valid CSR body (length checks pass) whose row_ptr
+    /// content is attacker-controlled.  `ptrs` must have `rows+1` entries.
+    fn hostile_csr(
+        rows: usize,
+        width: usize,
+        ptrs: &[u32],
+        cols: &[u16],
+    ) -> Encoded {
+        assert_eq!(ptrs.len(), rows + 1);
+        let mut body = Vec::new();
+        body.extend_from_slice(&(cols.len() as u32).to_le_bytes());
+        for p in ptrs {
+            body.extend_from_slice(&p.to_le_bytes());
+        }
+        for c in cols {
+            body.extend_from_slice(&c.to_le_bytes());
+        }
+        Encoded::from_wire_bytes(SparseCoding::Csr, 1, rows, width, 0, &body)
+            .unwrap()
+    }
+
+    #[test]
+    fn csr_decode_rejects_nonmonotone_row_ptr() {
+        // row 0 spans cols[2..1] — a reversed range that would panic the
+        // slice before validation existed.
+        let enc = hostile_csr(2, 4, &[2, 1, 2], &[0, 1]);
+        let err = decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("row_ptr"), "got: {err}");
+    }
+
+    #[test]
+    fn csr_decode_rejects_out_of_range_row_ptr() {
+        // Final pointer claims 9 columns; only 2 are present — the slice
+        // upper bound would be past cols.len().
+        let enc = hostile_csr(2, 4, &[0, 1, 9], &[0, 1]);
+        let err = decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("row_ptr"), "got: {err}");
+    }
+
+    #[test]
+    fn rle_wire_rejects_oversized_rice_parameter() {
+        // k = 64 would shift-overflow in read_bits/read_golomb.
+        for k in [64u8, 100, 255] {
+            let mut body = vec![k];
+            body.extend_from_slice(&0u64.to_le_bytes()); // bit_len = 0
+            let err =
+                Encoded::from_wire_bytes(SparseCoding::Rle, 1, 2, 3, 0, &body)
+                    .unwrap_err()
+                    .to_string();
+            assert!(err.contains("Rice parameter"), "k={k}: {err}");
+        }
+    }
+
+    fn hostile_rle(k: u8, bit_len: u64, words: &[u64]) -> Encoded {
+        let mut body = vec![k];
+        body.extend_from_slice(&bit_len.to_le_bytes());
+        for w in words {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+        Encoded::from_wire_bytes(SparseCoding::Rle, 1, 2, 3, 0, &body).unwrap()
+    }
+
+    #[test]
+    fn rle_decode_rejects_overrunning_runs() {
+        // k=0 unary stream: 7 ones then a zero claims a 7-zero run in a
+        // 6-element plane — must bail, not write out of bounds.
+        let enc = hostile_rle(0, 9, &[0x7f]);
+        let err = decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("overruns"), "got: {err}");
+    }
+
+    #[test]
+    fn rle_decode_rejects_index_overflow() {
+        // k=63, quotient 1: value = (1 << 63) | (2^63 - 1) = u64::MAX.
+        // The old `i += run` would overflow usize; now it must bail.
+        // Bits: [1] unary one, [0] terminator, then 63 remainder ones.
+        let w0 = !0b10u64; // bits 0 and 2..=63 set
+        let w1 = 0x1u64; // remainder bit 63 (stream bit 64)
+        let enc = hostile_rle(63, 65, &[w0, w1]);
+        let err = decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("overruns"), "got: {err}");
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_and_matches_encode() {
+        for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+            let mut out = Encoded::empty(coding);
+            for (p, seed) in [(0.0f32, 2), (0.3, 4), (0.8, 6), (1.0, 8)] {
+                let m = random_map(3, 7, 11, p, seed);
+                encode_into(&m, coding, &mut out);
+                let fresh = encode(&m, coding);
+                assert_eq!(out.payload_bits, fresh.payload_bits, "{coding:?}");
+                assert_eq!(out.wire_bytes(), fresh.wire_bytes(), "{coding:?}");
+                assert_eq!(decode(&out).unwrap(), m, "{coding:?} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_into_switches_codings_in_place() {
+        let m = random_map(2, 5, 9, 0.25, 42);
+        let mut out = Encoded::empty(SparseCoding::Dense);
+        for coding in [SparseCoding::Csr, SparseCoding::Rle, SparseCoding::Dense] {
+            encode_into(&m, coding, &mut out);
+            assert_eq!(out.coding, coding);
+            assert_eq!(decode(&out).unwrap(), m, "{coding:?}");
+        }
+    }
+
+    #[test]
+    fn decode_into_reuses_plane_and_matches_decode() {
+        let mut plane = BitPlane::empty();
+        for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+            for (p, seed) in [(0.0f32, 3), (0.2, 5), (0.9, 7)] {
+                let m = random_map(4, 6, 5, p, seed);
+                let enc = encode(&m, coding);
+                decode_into(&enc, &mut plane).unwrap();
+                assert_eq!(plane, m, "{coding:?} p={p}");
+            }
+        }
     }
 }

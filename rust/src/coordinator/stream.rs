@@ -45,7 +45,7 @@ use crate::coordinator::pipeline::{Classification, RunReport};
 use crate::coordinator::sparse;
 use crate::metrics::{trace_id, FrameSpan, PipelineMetrics, TraceLog};
 use crate::sensor::{
-    scene::SceneGen, words_for, BitPlane, CaptureMode, Frame, PixelArraySim,
+    scene::SceneGen, BitPlane, CaptureMode, Frame, PixelArraySim,
 };
 
 /// A frame in the source queue, stamped at submission for e2e latency
@@ -226,6 +226,81 @@ impl Drop for DispatcherDoneGuard {
     }
 }
 
+/// Surfaces a stage-thread *panic* exactly like an `Err` exit: while
+/// armed, dropping the guard during unwind records the death into
+/// [`StageHealth`] and flips `Shared::failed`, so a concurrent
+/// [`StreamServer::drain`] errors promptly and `/readyz` goes red
+/// instead of staying green on a dead stage.  The orderly exit path
+/// disarms it first (errors are reported with their real message there).
+struct PanicGuard {
+    shared: Arc<Shared>,
+    health: Option<Arc<StageHealth>>,
+    stage: &'static str,
+    armed: bool,
+}
+
+impl PanicGuard {
+    fn new(shared: Arc<Shared>, health: Option<Arc<StageHealth>>, stage: &'static str) -> Self {
+        Self { shared, health, stage, armed: true }
+    }
+
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Some(h) = &self.health {
+            h.record_failure(self.stage, "stage thread panicked");
+        }
+        self.shared.fail();
+    }
+}
+
+/// Freelist recycling [`BitPlane`] word storage around the stream loop:
+/// sensor workers take storage for their decoded planes, the dispatcher
+/// returns each plane's storage once its batch has executed.  Bounded so
+/// a burst cannot pin memory forever — an empty pool just allocates
+/// (cold start), an over-full return is dropped.
+struct WordPool {
+    slots: Mutex<Vec<Vec<u64>>>,
+    cap: usize,
+}
+
+impl WordPool {
+    fn new(cap: usize) -> Self {
+        Self { slots: Mutex::new(Vec::new()), cap: cap.max(1) }
+    }
+
+    fn take(&self) -> Vec<u64> {
+        self.slots.lock().expect("word pool lock").pop().unwrap_or_default()
+    }
+
+    fn put(&self, words: Vec<u64>) {
+        let mut slots = self.slots.lock().expect("word pool lock");
+        if slots.len() < self.cap {
+            slots.push(words);
+        }
+    }
+}
+
+/// Dispatcher-side reusable buffers: the concatenated batch input, the
+/// backend's logits, the per-frame batch-wait samples, and the staged
+/// classifications all land in the same four allocations every batch
+/// (`Vec::append` hands the classifications to the results pool while
+/// keeping `out`'s capacity).
+#[derive(Default)]
+struct DispatchBufs {
+    input: Vec<u64>,
+    logits: Vec<f32>,
+    waits: Vec<u64>,
+    out: Vec<Classification>,
+}
+
 /// The concurrent streaming serving layer over one sensor + one backend.
 ///
 /// Stage threads start immediately; the server is ready for `submit` as
@@ -288,6 +363,13 @@ impl StreamServer {
         } else {
             CaptureMode::Ideal
         };
+        let max_batch = cfg.batch_sizes.iter().copied().max().unwrap_or(1);
+        // Freelist sized for the steady-state population of decoded
+        // planes: one per act-queue slot, per batcher/in-execution batch
+        // slot, plus one in hand per sensor worker.
+        let pool = Arc::new(WordPool::new(
+            depth + 2 * max_batch + cfg.sensor_workers.max(1),
+        ));
 
         let mut workers = Vec::new();
         for _ in 0..cfg.sensor_workers.max(1) {
@@ -297,8 +379,14 @@ impl StreamServer {
             let worker_metrics = metrics.clone();
             let worker_shared = shared.clone();
             let worker_health = obs.health.clone();
+            let worker_pool = pool.clone();
             let coding = cfg.sparse_coding;
             workers.push(std::thread::spawn(move || -> Result<()> {
+                let mut panic_guard = PanicGuard::new(
+                    worker_shared.clone(),
+                    worker_health.clone(),
+                    "sensor worker",
+                );
                 let out = worker_loop(
                     rx,
                     tx,
@@ -307,7 +395,9 @@ impl StreamServer {
                     worker_shared.clone(),
                     mode,
                     coding,
+                    worker_pool,
                 );
+                panic_guard.disarm();
                 if let Err(e) = &out {
                     if let Some(h) = &worker_health {
                         h.record_failure("sensor worker", &format!("{e:#}"));
@@ -330,9 +420,15 @@ impl StreamServer {
             let disp_shared = shared.clone();
             let disp_health = obs.health.clone();
             let disp_trace = obs.trace.clone();
+            let disp_pool = pool;
             let coding_name = cfg.sparse_coding.name();
             std::thread::spawn(move || -> Result<()> {
                 let _done = DispatcherDoneGuard(disp_shared.clone());
+                let mut panic_guard = PanicGuard::new(
+                    disp_shared.clone(),
+                    disp_health.clone(),
+                    "dispatcher",
+                );
                 let out = dispatch_loop(
                     backend.as_ref(),
                     &disp_metrics,
@@ -342,7 +438,9 @@ impl StreamServer {
                     recv_tick,
                     disp_trace.as_deref(),
                     coding_name,
+                    &disp_pool,
                 );
+                panic_guard.disarm();
                 if let Err(e) = &out {
                     if let Some(h) = &disp_health {
                         h.record_failure("dispatcher", &format!("{e:#}"));
@@ -402,7 +500,6 @@ impl StreamServer {
             bail!("a stream stage failed; shut down to collect the error");
         }
         let depth = self.shared.begin_submit();
-        self.metrics.frame_queue_peak.observe(depth);
         let sub = Submitted {
             frame,
             t_submit: Instant::now(),
@@ -416,8 +513,11 @@ impl StreamServer {
             bail!("stream workers stopped (frame queue closed)");
         }
         self.shared.commit_submit();
-        // Ingestion counts only after a successful enqueue, keeping
-        // `frames_in == frames_out + frames_dropped` an invariant.
+        // Peak and ingestion count only after a successful enqueue
+        // (matching `try_submit`): a rolled-back send must not inflate
+        // the peak gauge, and `frames_in == frames_out + frames_dropped`
+        // stays an invariant.
+        self.metrics.frame_queue_peak.observe(depth);
         self.metrics.frames_in.inc();
         Ok(())
     }
@@ -570,6 +670,12 @@ impl StreamServer {
 
 /// Sensor-shard stage: capture the frame, run the sensor→backend link
 /// codec, and queue the decoded activation for dispatch.
+///
+/// The capture plane and the encoded link payload live in two buffers
+/// reused across the worker's whole life, and the decoded plane's word
+/// storage is recycled through the [`WordPool`] — in steady state this
+/// loop performs zero heap allocation per frame.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: SharedReceiver<Submitted>,
     tx: SyncSender<Activation>,
@@ -578,7 +684,10 @@ fn worker_loop(
     shared: Arc<Shared>,
     mode: CaptureMode,
     coding: SparseCoding,
+    pool: Arc<WordPool>,
 ) -> Result<()> {
+    let mut cap_plane = BitPlane::empty();
+    let mut enc = sparse::Encoded::empty(coding);
     while let Some(sub) = rx.recv() {
         shared.frame_depth.fetch_sub(1, Ordering::Relaxed);
         // Span timings are computed once and shared between the stage
@@ -587,17 +696,18 @@ fn worker_loop(
         let queue_wait_us = sub.t_submit.elapsed().as_micros() as u64;
         metrics.frame_queue_wait.record_us(queue_wait_us);
         let t_cap = Instant::now();
-        let (map, stats) = sim.capture(&sub.frame, mode);
+        let stats = sim.capture_reuse(&sub.frame, mode, &mut cap_plane);
         let capture_us = t_cap.elapsed().as_micros() as u64;
         metrics.capture_latency.record_us(capture_us);
         metrics.mtj_writes.add(stats.mtj_writes);
         metrics.mtj_resets.add(stats.mtj_resets);
 
         // Simulate the sensor→backend link: encode, account bits, decode
-        // on the far side.
+        // on the far side (into pool-recycled storage).
         let t_enc = Instant::now();
-        let enc = sparse::encode(&map, coding);
-        let decoded = sparse::decode(&enc).context("link decode (codec bug)")?;
+        sparse::encode_into(&cap_plane, coding, &mut enc);
+        let mut decoded = BitPlane::recycled(pool.take());
+        sparse::decode_into(&enc, &mut decoded).context("link decode (codec bug)")?;
         let encode_us = t_enc.elapsed().as_micros() as u64;
         metrics.encode_latency.record_us(encode_us);
         metrics.link_bits.add(enc.payload_bits);
@@ -606,7 +716,7 @@ fn worker_loop(
         // frame — `len/64` u64 equality checks, cheap even at ImageNet
         // geometry.  A mismatch is a codec bug: count it for the metrics
         // report and fail the stream loudly.
-        if decoded.words() != map.words() {
+        if decoded.words() != cap_plane.words() {
             metrics.link_decode_mismatch.inc();
             anyhow::bail!(
                 "link decode mismatch on frame {} ({} coding)",
@@ -617,7 +727,7 @@ fn worker_loop(
 
         let act = Activation {
             seq: sub.frame.seq,
-            sparsity: map.sparsity(),
+            sparsity: cap_plane.sparsity(),
             plane: decoded,
             link_bits: enc.payload_bits,
             t_submit: sub.t_submit,
@@ -648,7 +758,9 @@ fn dispatch_loop(
     recv_tick: Duration,
     trace: Option<&TraceLog>,
     coding: &'static str,
+    pool: &WordPool,
 ) -> Result<()> {
+    let mut bufs = DispatchBufs::default();
     let mut open = true;
     while open || !batcher.is_empty() {
         if open {
@@ -668,12 +780,22 @@ fn dispatch_loop(
         }
         let flush = !open || shared.flush.load(Ordering::SeqCst) > 0;
         while let Some(batch) = batcher.poll(Instant::now(), flush) {
-            execute_batch(backend, metrics, shared, batch, trace, coding)?;
+            execute_batch(
+                backend,
+                metrics,
+                shared,
+                batch,
+                trace,
+                coding,
+                pool,
+                &mut bufs,
+            )?;
         }
     }
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     backend: &dyn InferenceBackend,
     metrics: &PipelineMetrics,
@@ -681,34 +803,37 @@ fn execute_batch(
     batch: Vec<Activation>,
     trace: Option<&TraceLog>,
     coding: &'static str,
+    pool: &WordPool,
+    bufs: &mut DispatchBufs,
 ) -> Result<()> {
     let b = batch.len();
     let act_elems = backend.act_elems();
-    let wpf = words_for(act_elems);
-    let mut input = Vec::with_capacity(b * wpf);
-    let mut batch_waits = Vec::with_capacity(b);
+    bufs.input.clear();
+    bufs.waits.clear();
     for act in &batch {
         debug_assert_eq!(act.plane.len(), act_elems);
         // Residency ends here, at dispatch — not after the backend run.
         let wait_us = act.t_act.elapsed().as_micros() as u64;
         metrics.batch_wait.record_us(wait_us);
-        batch_waits.push(wait_us);
-        input.extend_from_slice(act.plane.words());
+        bufs.waits.push(wait_us);
+        bufs.input.extend_from_slice(act.plane.words());
     }
 
     let t_exec = Instant::now();
-    let logits_all = backend.run_backend_packed(&input, b)?;
+    backend.run_backend_packed_into(&bufs.input, b, &mut bufs.logits)?;
     let infer_us = t_exec.elapsed().as_micros() as u64;
     metrics.backend_latency.record_us(infer_us);
     metrics.batches.inc();
     metrics.batch_occupancy_sum.add(b as u64);
 
     // Build the classifications (and trace records — file I/O) before
-    // taking the results lock, keeping the critical section tight.
+    // taking the results lock, keeping the critical section tight.  The
+    // per-frame `logits` clone is the user-facing `Classification`
+    // payload — the one intentional per-frame allocation on this path.
     let nc = backend.num_classes();
-    let mut out = Vec::with_capacity(b);
+    bufs.out.clear();
     for (i, act) in batch.into_iter().enumerate() {
-        let logits = logits_all[i * nc..(i + 1) * nc].to_vec();
+        let logits = bufs.logits[i * nc..(i + 1) * nc].to_vec();
         let label = argmax(&logits);
         let e2e_us = act.t_submit.elapsed().as_micros() as u64;
         metrics.e2e_latency.record_us(e2e_us);
@@ -720,7 +845,7 @@ fn execute_batch(
                 queue_wait_us: act.queue_wait_us,
                 capture_us: act.capture_us,
                 encode_us: act.encode_us,
-                batch_wait_us: batch_waits[i],
+                batch_wait_us: bufs.waits[i],
                 infer_us,
                 e2e_us,
                 batch_size: b,
@@ -728,7 +853,7 @@ fn execute_batch(
                 payload_bits: act.link_bits,
             });
         }
-        out.push(Classification {
+        bufs.out.push(Classification {
             seq: act.seq,
             logits,
             label,
@@ -736,9 +861,12 @@ fn execute_batch(
             link_bits: act.link_bits,
             trace_id: act.trace_id,
         });
+        // The decoded plane is spent: recycle its words to the capture
+        // side of the loop.
+        pool.put(act.plane.into_storage());
     }
     let mut results = shared.results.lock().unwrap();
-    results.extend(out);
+    results.append(&mut bufs.out);
     // Bump + notify under the lock (like Shared::fail): a notify fired
     // between drain's stale read of `completed` and its wait would
     // otherwise be lost, stalling drain for its full fallback timeout.

@@ -148,7 +148,7 @@ impl CaptureStats {
 /// (channel, y', x') in CHW order, plus the frame's Hoyer extremum —
 /// everything the device stage needs, detached from the frame so the
 /// sweep engine can compute it once per trial and binarize per cell.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct AnalogPlane {
     pub z: Vec<f32>,
     pub ext: f32,
@@ -248,13 +248,25 @@ impl PixelArraySim {
     /// shift folded into the comparator (paper §2.4.1), identical math to
     /// `kernels/ref.py::frontend_ref`.
     pub fn analog_plane(&self, frame: &Frame) -> (AnalogPlane, CaptureStats) {
+        let mut plane = AnalogPlane::default();
+        let stats = self.analog_plane_into(frame, &mut plane);
+        (plane, stats)
+    }
+
+    /// [`Self::analog_plane`] into a caller-owned plane whose `z` storage
+    /// is reused — the streaming hot path captures thousands of
+    /// same-geometry frames, so the per-frame `Vec<f32>` allocation is
+    /// pure churn there.
+    pub fn analog_plane_into(&self, frame: &Frame, out: &mut AnalogPlane) -> CaptureStats {
         let w = &self.weights;
         let (oh, ow) = self.out_hw(frame.height, frame.width);
         let k = w.k;
         let s = self.cfg.network.stride;
         let n_pos = oh * ow;
         let ckk = w.c_in * k * k;
-        let mut z = vec![0.0f32; w.c_out * n_pos];
+        out.z.clear();
+        out.z.resize(w.c_out * n_pos, 0.0);
+        let z = &mut out.z;
         let mut stats = CaptureStats {
             integration_phases: 2,
             elements: (w.c_out * n_pos) as u64,
@@ -315,21 +327,36 @@ impl PixelArraySim {
         // Hoyer extremum over the clipped plane (paper Eq. 2).
         let mut s2 = 0.0f64;
         let mut s1 = 0.0f64;
-        for &zv in &z {
+        for &zv in z.iter() {
             let c = zv.clamp(0.0, 1.0) as f64;
             s2 += c * c;
             s1 += c;
         }
-        let ext = (s2 / (s1 + 1e-9)) as f32;
-        (AnalogPlane { z, ext }, stats)
+        out.ext = (s2 / (s1 + 1e-9)) as f32;
+        stats
     }
 
     /// Capture one frame into a packed binary activation plane.
     pub fn capture(&self, frame: &Frame, mode: CaptureMode) -> (BitPlane, CaptureStats) {
-        let (oh, ow) = self.out_hw(frame.height, frame.width);
-        let mut map = BitPlane::new(self.weights.c_out, oh, ow, frame.seq);
-        let stats = self.capture_into(frame, mode, &mut map);
+        let mut map = BitPlane::empty();
+        let stats = self.capture_reuse(frame, mode, &mut map);
         (map, stats)
+    }
+
+    /// [`Self::capture`] into a caller-owned plane: the plane is
+    /// re-geometried in place (word storage recycled), so a streaming
+    /// worker reusing one plane per shard captures with zero per-frame
+    /// heap allocation.  Bit-identical to `capture` — every mode writes
+    /// every output bit, so recycled storage never leaks stale lanes.
+    pub fn capture_reuse(
+        &self,
+        frame: &Frame,
+        mode: CaptureMode,
+        map: &mut BitPlane,
+    ) -> CaptureStats {
+        let (oh, ow) = self.out_hw(frame.height, frame.width);
+        map.reset(self.weights.c_out, oh, ow, frame.seq);
+        self.capture_into(frame, mode, map)
     }
 
     /// Pre-refactor bool reference of [`Self::capture`]: same decision
@@ -353,7 +380,17 @@ impl PixelArraySim {
         mode: CaptureMode,
         sink: &mut S,
     ) -> CaptureStats {
-        let (plane, mut stats) = self.analog_plane(frame);
+        // Thread-local analog scratch: same take/put pattern as PATCH_BUF
+        // above, so the capture hot path does not allocate a z-plane per
+        // frame (part of the zero-allocation streaming invariant pinned
+        // by tests/alloc_hotpath.rs).
+        thread_local! {
+            static ANALOG_BUF: std::cell::RefCell<AnalogPlane> =
+                std::cell::RefCell::new(AnalogPlane::default());
+        }
+        let mut plane = ANALOG_BUF
+            .with(|b| std::mem::take(&mut *b.borrow_mut()));
+        let mut stats = self.analog_plane_into(frame, &mut plane);
 
         match mode {
             CaptureMode::Ideal => {
@@ -386,6 +423,7 @@ impl PixelArraySim {
             }
         }
         stats.ones = sink.count_set();
+        ANALOG_BUF.with(|b| *b.borrow_mut() = plane);
         stats
     }
 

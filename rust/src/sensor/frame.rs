@@ -121,10 +121,66 @@ pub struct BitPlane {
     words: Vec<u64>,
 }
 
+/// Validate raw packed words for a `channels×height×width` plane: word
+/// count must match and padding bits past the last element must be zero
+/// (see the module docs — accepting garbage lanes would silently corrupt
+/// every popcount downstream).
+fn check_words(channels: usize, height: usize, width: usize, words: &[u64]) -> Result<usize> {
+    let len = channels * height * width;
+    if words.len() != words_for(len) {
+        bail!(
+            "packed plane has {} words; {}x{}x{} bits need {}",
+            words.len(),
+            channels,
+            height,
+            width,
+            words_for(len)
+        );
+    }
+    let pad = len % 64;
+    if pad != 0 && words.last().is_some_and(|&w| w & !((1u64 << pad) - 1) != 0) {
+        bail!("packed plane has nonzero padding bits past element {len}");
+    }
+    Ok(len)
+}
+
 impl BitPlane {
     pub fn new(channels: usize, height: usize, width: usize, seq: u32) -> Self {
         let len = channels * height * width;
         Self { channels, height, width, seq, len, words: vec![0u64; words_for(len)] }
+    }
+
+    /// A 0×0×0 plane with no storage — the starting slot for the
+    /// in-place reuse APIs ([`Self::reset`], [`Self::assign_words`],
+    /// `sparse::decode_into`), which re-geometry it on first use.
+    pub fn empty() -> Self {
+        Self::new(0, 0, 0, 0)
+    }
+
+    /// Build an empty plane on recycled word storage (cleared; capacity
+    /// kept).  Pair with [`Self::into_storage`] to run planes through a
+    /// freelist without reallocating.
+    pub fn recycled(mut storage: Vec<u64>) -> Self {
+        storage.clear();
+        Self { channels: 0, height: 0, width: 0, seq: 0, len: 0, words: storage }
+    }
+
+    /// Consume the plane, returning its word storage for recycling.
+    pub fn into_storage(self) -> Vec<u64> {
+        self.words
+    }
+
+    /// Re-geometry this plane in place: all bits cleared to zero, word
+    /// storage reused (no allocation once capacity covers the geometry).
+    pub fn reset(&mut self, channels: usize, height: usize, width: usize, seq: u32) {
+        let len = channels * height * width;
+        self.channels = channels;
+        self.height = height;
+        self.width = width;
+        self.seq = seq;
+        self.len = len;
+        self.words.clear();
+        self.words.resize(words_for(len), 0);
     }
 
     /// Rebuild a plane from raw packed words (link decode, artifact
@@ -138,22 +194,31 @@ impl BitPlane {
         words: Vec<u64>,
         seq: u32,
     ) -> Result<Self> {
-        let len = channels * height * width;
-        if words.len() != words_for(len) {
-            bail!(
-                "packed plane has {} words; {}x{}x{} bits need {}",
-                words.len(),
-                channels,
-                height,
-                width,
-                words_for(len)
-            );
-        }
-        let pad = len % 64;
-        if pad != 0 && words.last().is_some_and(|&w| w & !((1u64 << pad) - 1) != 0) {
-            bail!("packed plane has nonzero padding bits past element {len}");
-        }
+        let len = check_words(channels, height, width, &words)?;
         Ok(Self { channels, height, width, seq, len, words })
+    }
+
+    /// In-place [`Self::from_words`]: same validation, but the words are
+    /// copied into this plane's reused storage instead of being taken by
+    /// value — no allocation once capacity covers the geometry.  On
+    /// error the plane is left unchanged.
+    pub fn assign_words(
+        &mut self,
+        channels: usize,
+        height: usize,
+        width: usize,
+        words: &[u64],
+        seq: u32,
+    ) -> Result<()> {
+        let len = check_words(channels, height, width, words)?;
+        self.channels = channels;
+        self.height = height;
+        self.width = width;
+        self.seq = seq;
+        self.len = len;
+        self.words.clear();
+        self.words.extend_from_slice(words);
+        Ok(())
     }
 
     /// Pack a dense bool plane (the pre-BitPlane representation).
@@ -357,6 +422,47 @@ mod tests {
         assert!(BitPlane::from_words(1, 2, 2, vec![1 << 4], 0).is_err());
         let p = BitPlane::from_words(1, 2, 2, vec![0b1011], 0).unwrap();
         assert_eq!(p.to_bools(), vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn reset_reuses_storage_and_clears_bits() {
+        let mut p = BitPlane::new(1, 8, 8, 3);
+        p.set(5, true);
+        let ptr = p.words().as_ptr();
+        p.reset(1, 8, 8, 4);
+        assert_eq!(p.count_ones(), 0, "reset must clear every bit");
+        assert_eq!(p.seq, 4);
+        // Same geometry → same word count → clear+resize cannot realloc.
+        assert_eq!(p.words().as_ptr(), ptr, "reset must not reallocate");
+        // Shrinking re-geometry stays in place too.
+        p.reset(1, 2, 2, 5);
+        assert_eq!((p.len(), p.words().len()), (4, 1));
+        assert_eq!(p.words().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn recycled_storage_roundtrip() {
+        let mut p = BitPlane::new(1, 10, 13, 0);
+        p.set(70, true);
+        let storage = p.into_storage();
+        let q = BitPlane::recycled(storage);
+        assert!(q.is_empty(), "recycled plane starts empty");
+        let mut q2 = q;
+        q2.reset(1, 10, 13, 1);
+        assert_eq!(q2.count_ones(), 0, "recycled bits must be cleared");
+    }
+
+    #[test]
+    fn assign_words_validates_like_from_words() {
+        let mut p = BitPlane::empty();
+        assert!(p.assign_words(1, 2, 2, &[0, 0], 0).is_err());
+        assert!(p.assign_words(1, 2, 2, &[1 << 4], 0).is_err());
+        p.assign_words(1, 2, 2, &[0b1011], 7).unwrap();
+        assert_eq!(p.to_bools(), vec![true, true, false, true]);
+        assert_eq!(p.seq, 7);
+        // Reuse with a different geometry in the same slot.
+        p.assign_words(1, 1, 3, &[0b101], 8).unwrap();
+        assert_eq!(p.to_bools(), vec![true, false, true]);
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Steady-state allocation audit for the frame hot path.
+//!
+//! The tentpole contract of the zero-allocation refactor: once every
+//! reusable buffer has warmed up, one frame's trip through
+//! capture → link encode → link decode → packed inference performs
+//! **zero** heap allocations.  A counting `#[global_allocator]` wrapper
+//! proves it — the counter only runs while this thread's tracking flag
+//! is up, so harness noise on other threads cannot flake the assert.
+//!
+//! Scope: this pins the per-frame stage loop the stream workers and the
+//! dispatcher run (with one inference worker).  The user-facing
+//! `Classification` payload (its per-frame logits `Vec`) and the
+//! batcher's batch `Vec` are intentional allocations outside this path
+//! and are documented in rust/README.md.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use pixelmtj::backend::{InferenceBackend, NativeBackend};
+use pixelmtj::config::{HwConfig, SparseCoding};
+use pixelmtj::coordinator::sparse::{decode_into, encode_into, Encoded};
+use pixelmtj::sensor::{
+    scene::SceneGen, BitPlane, CaptureMode, FirstLayerWeights, PixelArraySim,
+};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Only count while the measuring thread holds this flag up —
+    /// allocations from the libtest harness or other threads are noise.
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn count() {
+        // `try_with` so allocations during TLS teardown can't panic.
+        if TRACK.try_with(Cell::get).unwrap_or(false) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::count();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_frame_loop_allocates_nothing() {
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = PixelArraySim::new(hw.clone(), weights.clone());
+    let backend = NativeBackend::new(hw, weights, 32, 32, 1);
+    let gen = SceneGen::new(3, 32, 32);
+    let frames: Vec<_> = (0..4u32).map(|i| gen.textured(i)).collect();
+
+    for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+        // The stage-owned reusable buffers, exactly as the stream worker
+        // and dispatcher hold them.
+        let mut cap = BitPlane::empty();
+        let mut enc = Encoded::empty(coding);
+        let mut dec = BitPlane::empty();
+        let mut logits: Vec<f32> = Vec::new();
+
+        // Warm up: grow every buffer (including the thread-local capture
+        // and inference scratch) to this geometry's steady-state size.
+        for _ in 0..2 {
+            for frame in &frames {
+                sim.capture_reuse(frame, CaptureMode::Ideal, &mut cap);
+                encode_into(&cap, coding, &mut enc);
+                decode_into(&enc, &mut dec).unwrap();
+                backend
+                    .run_backend_packed_into(dec.words(), 1, &mut logits)
+                    .unwrap();
+            }
+        }
+
+        // Measure: the same per-frame loop must not touch the heap.
+        TRACK.with(|t| t.set(true));
+        for frame in &frames {
+            sim.capture_reuse(frame, CaptureMode::Ideal, &mut cap);
+            encode_into(&cap, coding, &mut enc);
+            decode_into(&enc, &mut dec).unwrap();
+            backend
+                .run_backend_packed_into(dec.words(), 1, &mut logits)
+                .unwrap();
+        }
+        TRACK.with(|t| t.set(false));
+        let allocs = ALLOCS.swap(0, Ordering::SeqCst);
+        assert_eq!(
+            allocs, 0,
+            "{coding:?}: steady-state frame loop hit the allocator \
+             {allocs} times"
+        );
+        assert_eq!(dec.words(), cap.words(), "{coding:?}: link must stay lossless");
+        assert_eq!(logits.len(), backend.num_classes());
+    }
+}

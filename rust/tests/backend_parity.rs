@@ -6,11 +6,14 @@
 
 use std::sync::Arc;
 
-use pixelmtj::backend::{InferenceBackend, NativeBackend, NativePath};
+use pixelmtj::backend::{
+    active_simd, xor_popcount, xor_popcount_scalar, InferScratch,
+    InferenceBackend, NativeBackend, NativePath,
+};
 use pixelmtj::config::{BackendKind, HwConfig, PipelineConfig, SparseCoding};
 use pixelmtj::coordinator::Pipeline;
 use pixelmtj::sensor::{
-    scene::SceneGen, CaptureMode, FirstLayerWeights, PixelArraySim,
+    scene::SceneGen, words_for, CaptureMode, FirstLayerWeights, PixelArraySim,
 };
 
 fn backend_pair(
@@ -102,6 +105,54 @@ fn batched_matches_single_frame_runs() {
             "frame {i}"
         );
     }
+}
+
+#[test]
+fn simd_kernel_bit_identical_to_scalar_reference() {
+    // Deterministic pseudo-random words over lengths that straddle every
+    // SIMD block boundary (AVX2 eats 4 words/iter, NEON 2) plus tails.
+    let mut state = 0x243F_6A88_85A3_08D3u64;
+    let mut word = || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        state ^ (state >> 29)
+    };
+    for len in 0..=40usize {
+        let a: Vec<u64> = (0..len).map(|_| word()).collect();
+        let b: Vec<u64> = (0..len).map(|_| word()).collect();
+        assert_eq!(
+            xor_popcount(&a, &b),
+            xor_popcount_scalar(&a, &b),
+            "len {len}, dispatched kernel {}",
+            active_simd()
+        );
+    }
+}
+
+#[test]
+fn simd_model_path_bit_identical_to_scalar_and_dense() {
+    // Whole-model three-way parity: SIMD-dispatched batched kernel vs
+    // forced-scalar batched kernel vs the dense f32 reference.
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 6);
+    let (packed, dense) = backend_pair(&hw, &weights, 24, 24, 1);
+    let gen = SceneGen::new(3, 24, 24);
+    let model = packed.model();
+    let wpf = words_for(model.act_elems());
+    let nc = model.num_classes();
+    let batch = 5usize;
+    let mut words = Vec::with_capacity(batch * wpf);
+    for i in 0..batch as u32 {
+        let map = packed.run_frontend(&gen.textured(i)).unwrap();
+        words.extend_from_slice(map.words());
+    }
+    let mut scratch = InferScratch::default();
+    let mut simd = vec![0.0f32; batch * nc];
+    let mut scalar = vec![0.0f32; batch * nc];
+    model.infer_batch_words(&words, batch, &mut simd, &mut scratch);
+    model.infer_batch_words_scalar(&words, batch, &mut scalar, &mut scratch);
+    assert_eq!(simd, scalar, "dispatched ({}) vs scalar", active_simd());
+    let via_dense = dense.run_backend_packed(&words, batch).unwrap();
+    assert_eq!(simd, via_dense, "batched SIMD vs dense f32 reference");
 }
 
 #[test]

@@ -7,7 +7,7 @@ use std::time::{Duration, Instant};
 
 use pixelmtj::circuit::subtractor::{threshold_to_volts, AnalogSubtractor};
 use pixelmtj::config::{CircuitConfig, HwConfig, MtjConfig, SparseCoding};
-use pixelmtj::coordinator::sparse::{decode, encode};
+use pixelmtj::coordinator::sparse::{decode, encode, Encoded};
 use pixelmtj::coordinator::Batcher;
 use pixelmtj::device::interp::MonotoneCubic;
 use pixelmtj::device::mtj::{MtjModel, MtjState};
@@ -81,6 +81,45 @@ fn prop_codec_roundtrip_all_codings() {
             }
             if enc.payload_bits == 0 && !m.is_empty() {
                 return Err("zero payload for nonempty map".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hostile_wire_bytes_never_panic() {
+    // The codec-hardening contract: any truncation or byte-level
+    // mutation of a valid wire body must come back as `Ok` or `Err` from
+    // parse + decode — never a panic — across all three codings.  This
+    // is what keeps a hostile `FRAME` body from killing a stage thread.
+    check("hostile wire bytes", 150, |g| {
+        let m = arbitrary_map(g);
+        let (c, h, w) = (m.channels, m.height, m.width);
+        for coding in [SparseCoding::Dense, SparseCoding::Csr, SparseCoding::Rle] {
+            let bytes = encode(&m, coding).wire_bytes();
+            let seq = m.seq;
+            let run = |body: &[u8]| {
+                Encoded::from_wire_bytes(coding, c, h, w, seq, body).and_then(|e| decode(&e))
+            };
+            // The untouched body must still round-trip.
+            let intact = run(&bytes).map_err(|e| format!("{coding:?}: intact body: {e}"))?;
+            if intact != m {
+                return Err(format!("{coding:?}: intact body mismatch"));
+            }
+            // Truncations: fixed fractions plus a random cut point.
+            let n = bytes.len();
+            for cut in [0, n / 4, n / 2, 3 * n / 4, g.usize_in(0, n)] {
+                let _ = run(&bytes[..cut]);
+            }
+            // Byte mutations: 1–4 random nonzero XORs per round.
+            for _ in 0..4 {
+                let mut mutated = bytes.clone();
+                for _ in 0..g.usize_in(1, 4) {
+                    let i = g.usize_in(0, mutated.len() - 1);
+                    mutated[i] ^= (g.u32() % 255 + 1) as u8;
+                }
+                let _ = run(&mutated);
             }
         }
         Ok(())

@@ -1,13 +1,54 @@
 //! Streaming-layer integration tests: backpressure on the bounded frame
 //! queue, clean shutdown with in-flight frames, drain keeping the stream
-//! open, and stream-vs-oneshot classification parity.  All on the native
-//! backend so nothing skips.
+//! open, stream-vs-oneshot classification parity, and panic containment
+//! in the stage threads.  All on the native backend so nothing skips.
 
-use pixelmtj::config::{PipelineConfig, SparseCoding};
-use pixelmtj::sensor::{scene::SceneGen, Frame};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use pixelmtj::backend::InferenceBackend;
+use pixelmtj::config::{HwConfig, PipelineConfig, SparseCoding};
+use pixelmtj::coordinator::{StageHealth, StreamObservers, StreamServer};
+use pixelmtj::metrics::PipelineMetrics;
+use pixelmtj::sensor::{
+    scene::SceneGen, BitPlane, FirstLayerWeights, Frame, PixelArraySim,
+};
 
 mod common;
 use common::native_pipeline;
+
+/// Run `drain` on a helper thread with a watchdog timeout, so a
+/// regression back to the spin-forever behaviour fails the test in
+/// seconds instead of hanging the suite.  Returns the drain outcome and
+/// hands the server back once the helper has finished with it.
+fn drain_with_watchdog(server: StreamServer) -> (Result<usize>, StreamServer) {
+    let server = Arc::new(server);
+    let (tx, rx) = mpsc::channel();
+    {
+        let server = server.clone();
+        std::thread::spawn(move || {
+            let _ = tx.send(server.drain().map(|v| v.len()));
+        });
+    }
+    let outcome = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("drain must return promptly when a stage dies");
+    // The helper thread drops its Arc clone just after the send; spin
+    // briefly until we hold the last reference.
+    let mut server = Arc::try_unwrap(server);
+    for _ in 0..500 {
+        match server {
+            Ok(s) => return (outcome, s),
+            Err(arc) => {
+                std::thread::sleep(Duration::from_millis(10));
+                server = Arc::try_unwrap(arc);
+            }
+        }
+    }
+    panic!("drain helper thread did not release the server");
+}
 
 fn textured_frames(n: u32) -> Vec<Frame> {
     let gen = SceneGen::new(3, 32, 32);
@@ -202,6 +243,99 @@ fn link_verification_is_clean_across_codings() {
     }
     assert_eq!(labels_by_coding[0], labels_by_coding[1]);
     assert_eq!(labels_by_coding[0], labels_by_coding[2]);
+}
+
+#[test]
+fn worker_panic_fails_drain_and_readyz_promptly() {
+    // A frame whose claimed geometry doesn't match its (empty) pixel
+    // buffer panics the capture stage via an out-of-bounds slice — a
+    // *panic*, not an `Err`.  The stage panic guard must surface it like
+    // an error: drain bails out promptly and `/readyz` goes red.
+    let cfg = PipelineConfig {
+        sensor_workers: 1,
+        ..PipelineConfig::default()
+    };
+    let pipeline = native_pipeline(cfg);
+    let health = pipeline.health();
+    let server = pipeline.stream().unwrap();
+    assert!(health.ready().is_ok(), "stream must start healthy");
+
+    let mut bad = Frame::new(3, 32, 32, 0);
+    bad.data.clear();
+    server.submit(bad).unwrap();
+
+    let (drained, server) = drain_with_watchdog(server);
+    assert!(drained.is_err(), "drain must error on a panicked worker");
+    let readyz = health.ready().expect_err("readyz must go red");
+    assert!(
+        readyz.contains("sensor worker") && readyz.contains("panic"),
+        "readyz must name the panicked stage, got: {readyz}"
+    );
+    let err = server.shutdown().expect_err("shutdown must surface the panic");
+    assert!(
+        format!("{err:#}").contains("panicked"),
+        "shutdown error must mention the panic, got: {err:#}"
+    );
+}
+
+/// A backend whose batch entry panics — exercises the dispatcher-side
+/// panic guard the same way the malformed frame exercises the worker's.
+struct PanickingBackend;
+
+impl InferenceBackend for PanickingBackend {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn act_shape(&self) -> [usize; 3] {
+        [32, 15, 15]
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn preload(&self, _batches: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    fn run_frontend(&self, _frame: &Frame) -> Result<BitPlane> {
+        unreachable!("streaming never calls run_frontend")
+    }
+
+    fn run_backend(&self, _acts: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        panic!("injected backend fault")
+    }
+}
+
+#[test]
+fn dispatcher_panic_fails_drain_and_readyz_promptly() {
+    let cfg = PipelineConfig {
+        sensor_workers: 1,
+        ..PipelineConfig::default()
+    };
+    let hw = HwConfig::default();
+    let weights = FirstLayerWeights::synthetic(32, 3, 3, 1);
+    let sim = Arc::new(PixelArraySim::new(hw, weights));
+    let backend: Arc<dyn InferenceBackend> = Arc::new(PanickingBackend);
+    let metrics = Arc::new(PipelineMetrics::default());
+    let health = Arc::new(StageHealth::default());
+    let obs = StreamObservers { health: Some(health.clone()), trace: None };
+    let server = StreamServer::start_observed(&cfg, sim, backend, metrics, obs).unwrap();
+    server.submit(Frame::new(3, 32, 32, 0)).unwrap();
+
+    let (drained, server) = drain_with_watchdog(server);
+    assert!(drained.is_err(), "drain must error on a panicked dispatcher");
+    let readyz = health.ready().expect_err("readyz must go red");
+    assert!(
+        readyz.contains("dispatcher") && readyz.contains("panic"),
+        "readyz must name the panicked stage, got: {readyz}"
+    );
+    let err = server.shutdown().expect_err("shutdown must surface the panic");
+    assert!(
+        format!("{err:#}").contains("dispatcher panicked"),
+        "shutdown error must blame the dispatcher, got: {err:#}"
+    );
 }
 
 #[test]
