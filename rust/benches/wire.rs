@@ -1,0 +1,301 @@
+//! Wire ingest bench: throughput, round-trip latency, and bandwidth of
+//! the readiness-reactor front door across a sessions × batch-size grid.
+//! Emits `BENCH_wire.json` so the ingest trajectory is machine-diffable
+//! across PRs; `PIXELMTJ_BENCH_FAST=1` shrinks the grid for CI.
+//!
+//! The acceptance claim this file pins: FRAME_BATCH envelopes (protocol
+//! v2, batch ≥ 8) ship strictly fewer protocol bytes per frame and
+//! strictly fewer envelopes than the same frames as v1 FRAMEs.
+//!
+//! Per tier it reports:
+//! * `fps` — pipelined end-to-end throughput over all sessions;
+//! * `rt_p99_us` — p99 of serialized envelope round trips (send one
+//!   FRAME / FRAME_BATCH, wait for every RESULT) on a dedicated probe
+//!   session, i.e. unloaded protocol + pipeline latency;
+//! * `bytes_per_frame` — client-counted protocol bytes / frames;
+//! * `envelopes` — client→server envelope count (HELLO + frames);
+//! * `threads_mid_run` — `/proc/self/task` size while the load is in
+//!   flight (−1 where /proc is unavailable): the reactor's "no thread
+//!   per session" claim as a number.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use pixelmtj::config::{HwConfig, WireCoding};
+use pixelmtj::sensor::{scene::SceneGen, Frame};
+use pixelmtj::system::System;
+use pixelmtj::util::json::Value;
+use pixelmtj::wire::{proto, Msg, StatusCode, WireClient, VERSION, VERSION_V2};
+
+struct TierResult {
+    sessions: usize,
+    batch: usize,
+    fps: f64,
+    rt_p99_us: u64,
+    bytes_per_frame: f64,
+    envelopes: u64,
+    threads_mid_run: i64,
+}
+
+fn thread_count() -> i64 {
+    std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count() as i64)
+        .unwrap_or(-1)
+}
+
+/// Serialized round trips on a fresh session: one envelope out, all of
+/// its RESULTs back, timed.  Returns the p99 in µs.
+fn latency_probe(
+    addr: &str,
+    version: u16,
+    batch: usize,
+    frames: &[Frame],
+    channels: usize,
+    height: usize,
+    width: usize,
+) -> u64 {
+    let mut stream = TcpStream::connect(addr).expect("probe connect");
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let overdue = move || Instant::now() > deadline;
+    stream
+        .write_all(
+            &Msg::Hello {
+                version,
+                coding: WireCoding::Csr,
+                channels: channels as u16,
+                height: height as u32,
+                width: width as u32,
+            }
+            .encode(),
+        )
+        .expect("probe HELLO");
+    match proto::read_msg(&mut stream, &overdue).expect("probe ACK") {
+        proto::MsgOutcome::Msg(Msg::HelloAck { .. }) => {}
+        other => panic!("probe expected HELLO_ACK, got {other:?}"),
+    }
+
+    let mut rtts: Vec<Duration> = Vec::new();
+    for chunk in frames.chunks(batch.max(1)).take(32) {
+        let msg = if batch > 1 {
+            Msg::FrameBatch {
+                first_seq: chunk[0].seq,
+                coding: WireCoding::Csr,
+                bodies: chunk
+                    .iter()
+                    .map(|f| proto::encode_frame_body(f, WireCoding::Csr))
+                    .collect(),
+            }
+        } else {
+            Msg::Frame {
+                seq: chunk[0].seq,
+                coding: WireCoding::Csr,
+                body: proto::encode_frame_body(&chunk[0], WireCoding::Csr),
+            }
+        };
+        let t0 = Instant::now();
+        stream.write_all(&msg.encode()).expect("probe envelope");
+        let mut got = 0usize;
+        while got < chunk.len() {
+            match proto::read_msg(&mut stream, &overdue).expect("probe read")
+            {
+                proto::MsgOutcome::Msg(Msg::Result { .. }) => got += 1,
+                proto::MsgOutcome::Msg(Msg::ResultBatch { results }) => {
+                    got += results.len()
+                }
+                other => panic!("probe expected results, got {other:?}"),
+            }
+        }
+        rtts.push(t0.elapsed());
+    }
+    stream
+        .write_all(&Msg::Goodbye { code: StatusCode::Ok }.encode())
+        .expect("probe GOODBYE");
+    loop {
+        match proto::read_msg(&mut stream, &overdue) {
+            Ok(proto::MsgOutcome::Msg(Msg::Goodbye { .. })) | Err(_) => break,
+            Ok(proto::MsgOutcome::Msg(_)) => {}
+            Ok(proto::MsgOutcome::Eof | proto::MsgOutcome::Stopped) => break,
+        }
+    }
+
+    rtts.sort_unstable();
+    let idx = (rtts.len().saturating_sub(1)) * 99 / 100;
+    rtts.get(idx).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+fn run_tier(
+    sessions: usize,
+    batch: usize,
+    frames_per_session: u32,
+) -> TierResult {
+    let mut sys = System::builder()
+        .artifacts_dir("/nonexistent")
+        .workers(2)
+        .listen("127.0.0.1:0")
+        .max_sessions(sessions as u64 + 4)
+        .build();
+    let mut svc = sys.serve_wire().expect("wire server");
+    let addr = svc.server.local_addr().to_string();
+    let channels = HwConfig::default().network.in_channels;
+    let (height, width) = (
+        sys.spec().pipeline.sensor_height,
+        sys.spec().pipeline.sensor_width,
+    );
+    let gen = SceneGen::new(channels, height, width);
+    let frames: Vec<Frame> =
+        (0..frames_per_session).map(|i| gen.textured(i)).collect();
+    let version = if batch > 1 { VERSION_V2 } else { VERSION };
+
+    // Throughput pass: `sessions` pipelined clients on their own threads
+    // (client threads belong to the load generator, not the server — the
+    // thread snapshot below is what the server side adds).
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..sessions {
+        let addr = addr.clone();
+        let frames = frames.clone();
+        handles.push(std::thread::spawn(
+            move || -> anyhow::Result<(usize, u64, u64)> {
+                let mut client = WireClient::connect_versioned(
+                    &addr, version, WireCoding::Csr, channels, height, width,
+                )?;
+                if batch > 1 {
+                    for chunk in frames.chunks(batch) {
+                        client.send_batch(chunk)?;
+                    }
+                } else {
+                    for frame in &frames {
+                        client.send_frame(frame)?;
+                    }
+                }
+                let bytes = client.bytes_sent();
+                let envelopes = client.envelopes_sent();
+                Ok((client.finish()?.len(), bytes, envelopes))
+            },
+        ));
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let threads_mid_run = thread_count();
+    let mut results = 0usize;
+    let mut bytes = 0u64;
+    let mut envelopes = 0u64;
+    for h in handles {
+        let (n, b, e) = h.join().expect("client thread").expect("client run");
+        results += n;
+        bytes += b;
+        envelopes += e;
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let want = sessions * frames_per_session as usize;
+    assert_eq!(results, want, "lost results");
+
+    let rt_p99_us = latency_probe(
+        &addr, version, batch, &frames, channels, height, width,
+    );
+    svc.server.shutdown();
+
+    TierResult {
+        sessions,
+        batch,
+        fps: want as f64 / wall.max(1e-9),
+        rt_p99_us,
+        bytes_per_frame: bytes as f64 / want as f64,
+        envelopes,
+        threads_mid_run,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+    let frames_per_session: u32 = if fast { 64 } else { 256 };
+    let session_counts: &[usize] = if fast { &[1, 4] } else { &[1, 4, 16] };
+    let batch_sizes: &[usize] = if fast { &[1, 8] } else { &[1, 8, 32] };
+
+    println!(
+        "wire bench: csr coding, {frames_per_session} frames per session\n"
+    );
+    let mut runs = Vec::new();
+    for &sessions in session_counts {
+        for &batch in batch_sizes {
+            let r = run_tier(sessions, batch, frames_per_session);
+            println!(
+                "sessions={} batch={:>2}: {:>8.1} fps  rt p99 {} µs  \
+                 {:>7.1} B/frame  {} envelopes  {} threads mid-run",
+                r.sessions,
+                r.batch,
+                r.fps,
+                r.rt_p99_us,
+                r.bytes_per_frame,
+                r.envelopes,
+                r.threads_mid_run,
+            );
+            runs.push(r);
+        }
+    }
+
+    // The headline: v2 batching vs v1 per-frame envelopes, one session.
+    let tier = |batch: usize| {
+        runs.iter()
+            .find(|r| r.sessions == 1 && r.batch == batch)
+            .expect("grid holds the comparison tiers")
+    };
+    let v1 = tier(1);
+    let batched = tier(*batch_sizes.last().unwrap());
+    assert!(
+        batched.bytes_per_frame < v1.bytes_per_frame,
+        "batching must cut bytes/frame ({} vs {})",
+        batched.bytes_per_frame,
+        v1.bytes_per_frame
+    );
+    assert!(
+        batched.envelopes < v1.envelopes,
+        "batching must cut envelopes ({} vs {})",
+        batched.envelopes,
+        v1.envelopes
+    );
+    println!(
+        "\n→ batch={}: {:.1} → {:.1} B/frame ({:.1}% saved), {} → {} \
+         envelopes",
+        batched.batch,
+        v1.bytes_per_frame,
+        batched.bytes_per_frame,
+        100.0 * (1.0 - batched.bytes_per_frame / v1.bytes_per_frame),
+        v1.envelopes,
+        batched.envelopes,
+    );
+
+    let run_objs: Vec<Value> = runs
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("sessions", Value::Num(r.sessions as f64)),
+                ("batch_frames", Value::Num(r.batch as f64)),
+                ("fps", Value::Num(r.fps)),
+                ("rt_p99_us", Value::Num(r.rt_p99_us as f64)),
+                ("bytes_per_frame", Value::Num(r.bytes_per_frame)),
+                ("envelopes", Value::Num(r.envelopes as f64)),
+                ("threads_mid_run", Value::Num(r.threads_mid_run as f64)),
+            ])
+        })
+        .collect();
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("wire".into())),
+        ("coding", Value::Str("csr".into())),
+        ("frames_per_session", Value::Num(frames_per_session as f64)),
+        ("v1_bytes_per_frame", Value::Num(v1.bytes_per_frame)),
+        ("batched_bytes_per_frame", Value::Num(batched.bytes_per_frame)),
+        (
+            "batch_bytes_saving",
+            Value::Num(1.0 - batched.bytes_per_frame / v1.bytes_per_frame),
+        ),
+        ("runs", Value::Arr(run_objs)),
+    ]);
+    let path = "BENCH_wire.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -78,6 +78,38 @@ if base and fresh:
 elif base:
     warn("BENCH_pack.json missing — pack bench produced no output")
 
+base = load("benches/baseline/BENCH_wire.json")
+fresh = load("BENCH_wire.json")
+if base and fresh:
+    prov = bool(base.get("provisional"))
+    by_tier = {
+        (r.get("sessions"), r.get("batch_frames")): r
+        for r in base.get("runs", [])
+        if isinstance(r, dict)
+    }
+    for r in fresh.get("runs", []):
+        if not isinstance(r, dict):
+            continue
+        br = by_tier.get((r.get("sessions"), r.get("batch_frames")))
+        if br and "fps" in br and "fps" in r:
+            checked += compare(
+                f"wire.s{r['sessions']}.b{r['batch_frames']}.fps",
+                r["fps"],
+                br["fps"],
+                prov,
+            )
+    # Bandwidth is deterministic (no timing noise), so drift here is a
+    # protocol change, not runner jitter — still warn-only by policy.
+    for key in ("v1_bytes_per_frame", "batched_bytes_per_frame"):
+        if key in base and key in fresh and fresh[key] > base[key] * 1.05:
+            tag = " (baseline is provisional)" if prov else ""
+            warn(
+                f"wire.{key}: {fresh[key]:.1f} B vs baseline "
+                f"{base[key]:.1f} B — bandwidth regressed{tag}"
+            )
+elif base:
+    warn("BENCH_wire.json missing — wire bench produced no output")
+
 print(f"bench-compare: {checked} throughput keys checked (warn-only)")
 PY
 

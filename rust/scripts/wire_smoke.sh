@@ -69,8 +69,11 @@ done
 curl -sf "http://$MADDR/readyz" | grep -q '^ready$'
 echo "mid-run scrape OK"
 
-# Session 2 fills the ingest budget (dense coding for coverage).
-"$BIN" push --connect "$ADDR" --wire-coding dense --frames 24 | tee "$PUSH"
+# Session 2 fills the ingest budget (dense coding for coverage) over a
+# protocol-v2 session with 8 frames per FRAME_BATCH envelope.
+"$BIN" push --connect "$ADDR" --wire-coding dense --frames 24 \
+  --batch-frames 8 | tee "$PUSH"
+grep -q '^push: protocol v2, 8 frames/envelope' "$PUSH"
 grep -q '^pushed 24 frames, received 24 results' "$PUSH"
 
 wait "$PID"

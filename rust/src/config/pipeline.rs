@@ -52,6 +52,9 @@ pub struct PipelineConfig {
     /// Bind address for the wire frame-ingest server (`serve --stream`
     /// only; see docs/PROTOCOL.md); `None` keeps serving in-process.
     pub listen: Option<String>,
+    /// Concurrent wire sessions admitted before `HELLO` is refused with
+    /// `overloaded` (the per-tenant cap of docs/PROTOCOL.md).
+    pub max_sessions: u64,
 }
 
 impl Default for PipelineConfig {
@@ -75,6 +78,7 @@ impl Default for PipelineConfig {
             metrics_addr: None,
             trace_log: None,
             listen: None,
+            max_sessions: 8,
         }
     }
 }
@@ -162,6 +166,8 @@ impl PipelineConfig {
                 Ok(x) => Some(x.as_str()?.to_string()),
                 Err(_) => d.listen,
             },
+            max_sessions: getf("max_sessions", d.max_sessions as f64)?
+                as u64,
         })
     }
 }
@@ -237,6 +243,21 @@ mod tests {
             PipelineConfig::default().listen,
             None,
             "the wire front door defaults to off"
+        );
+    }
+
+    #[test]
+    fn pipeline_config_max_sessions_parses_and_defaults() {
+        let dir = std::env::temp_dir().join("pixelmtj_cfg_test_sessions");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("pipe.json");
+        std::fs::write(&p, r#"{"max_sessions": 64}"#).unwrap();
+        let cfg = PipelineConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.max_sessions, 64);
+        assert_eq!(
+            PipelineConfig::default().max_sessions,
+            crate::wire::MAX_SESSIONS,
+            "the config default is the documented session cap"
         );
     }
 

@@ -88,6 +88,12 @@ struct Shared {
     /// A refcount (not a bool) so one drain finishing cannot clobber a
     /// concurrent drain's eager-flush request.
     flush: AtomicU64,
+    /// Standing eager-flush mode: while set, the dispatcher flushes
+    /// partial batches on every tick even with no drain in progress —
+    /// the nonblocking-collector (`try_collect`) analogue of the `flush`
+    /// refcount, for callers that poll instead of wait (the wire session
+    /// reactor).
+    eager: AtomicBool,
     /// A stage thread exited with an error.
     failed: AtomicBool,
     /// The dispatcher thread has returned (shutdown or failure).
@@ -627,6 +633,33 @@ impl StreamServer {
         Ok(out)
     }
 
+    /// Put the dispatcher in (or out of) standing eager-flush mode:
+    /// while on, partial batches flush on every dispatcher tick instead
+    /// of waiting out the batch timeout, exactly as if a
+    /// [`drain`](Self::drain) were permanently in progress.  Pair it with
+    /// [`try_collect`](Self::try_collect) for poll-driven collectors
+    /// that can never afford to block (the wire session reactor).
+    pub fn set_eager_flush(&self, on: bool) {
+        self.shared.eager.store(on, Ordering::SeqCst);
+    }
+
+    /// Collect whatever classifications are ready right now, without
+    /// waiting: the nonblocking counterpart of [`drain`](Self::drain)
+    /// (same shared pool, same seq-sorted delivery, same exactly-once
+    /// guarantee per classification).  Returns an empty vec when nothing
+    /// has completed since the last collection; errors once a stage has
+    /// failed, whether or not frames are in flight.
+    pub fn try_collect(&self) -> Result<Vec<Classification>> {
+        if self.shared.failed.load(Ordering::SeqCst) {
+            bail!("a stream stage failed; shut down to collect the error");
+        }
+        let mut results = self.shared.results.lock().unwrap();
+        let mut out = std::mem::take(&mut *results);
+        drop(results);
+        out.sort_by_key(|r| r.seq);
+        Ok(out)
+    }
+
     /// Tear down after a failed submit/drain, preferring the stage
     /// thread's root-cause error (joined via shutdown) over the generic
     /// caller-facing `err` — submit only sees "a stage failed", while the
@@ -778,7 +811,9 @@ fn dispatch_loop(
                 batcher.push(act);
             }
         }
-        let flush = !open || shared.flush.load(Ordering::SeqCst) > 0;
+        let flush = !open
+            || shared.flush.load(Ordering::SeqCst) > 0
+            || shared.eager.load(Ordering::SeqCst);
         while let Some(batch) = batcher.poll(Instant::now(), flush) {
             execute_batch(
                 backend,
@@ -1101,6 +1136,29 @@ pub fn feed(server: &StreamServer, source: &mut dyn FrameSource) -> Result<u64> 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn eager_flush_try_collect_drains_without_blocking() {
+        use crate::coordinator::Pipeline;
+        let pl =
+            Pipeline::synthetic_native(PipelineConfig::default()).unwrap();
+        let server = pl.stream().unwrap();
+        server.set_eager_flush(true);
+        for i in 0..3 {
+            server.submit(Frame::new(3, 32, 32, i)).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut got = Vec::new();
+        while got.len() < 3 {
+            assert!(Instant::now() < deadline, "eager flush stalled");
+            got.extend(server.try_collect().unwrap());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut seqs: Vec<u32> = got.iter().map(|c| c.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        server.shutdown().unwrap();
+    }
 
     #[test]
     fn argmax_picks_largest() {

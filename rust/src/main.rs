@@ -28,7 +28,7 @@ use pixelmtj::coordinator::stream;
 use pixelmtj::reports::{self, sweep_report};
 use pixelmtj::system::{self, System, SystemSpec, WireService};
 use pixelmtj::util::cli::Args;
-use pixelmtj::wire::{StatusCode, WireClient};
+use pixelmtj::wire::{self, StatusCode, WireClient};
 
 fn main() {
     if let Err(e) = run() {
@@ -198,6 +198,9 @@ fn serve_wire(mut sys: System) -> Result<()> {
 /// The wire client: generate the spec's synthetic workload locally and
 /// stream it to a listening server, printing the returned labels'
 /// accounting and the bandwidth the negotiated coding actually cost.
+/// `--batch-frames N` (N > 1) negotiates protocol v2 and ships frames in
+/// `FRAME_BATCH` envelopes; `--sessions N` interleaves N concurrent
+/// sessions from one process (the soak/bench load driver).
 fn push(spec: SystemSpec) -> Result<()> {
     let Some(addr) = spec.connect.clone() else {
         bail!("push requires --connect ADDR (a serve --stream --listen address)");
@@ -206,39 +209,111 @@ fn push(spec: SystemSpec) -> Result<()> {
     let height = spec.pipeline.sensor_height;
     let width = spec.pipeline.sensor_width;
     let total = spec.frames as u32;
-    let mut source = stream::make_source(&spec.pipeline, channels, total);
+    let sessions = spec.push_sessions.max(1) as u32;
+    let batch = spec.push_batch_frames.max(1);
+    let version = if batch > 1 { wire::VERSION_V2 } else { wire::VERSION };
+
+    // One lane per session: its own client, its own workload slice (the
+    // remainder frames land on the first lanes), seqs starting at 0.
+    struct Lane {
+        client: WireClient,
+        source: Box<dyn stream::FrameSource>,
+        open: bool,
+    }
+    let mut lanes = Vec::with_capacity(sessions as usize);
+    for i in 0..sessions {
+        let share =
+            total / sessions + u32::from(i < total % sessions);
+        lanes.push(Lane {
+            client: WireClient::connect_versioned(
+                &addr,
+                version,
+                spec.wire_coding,
+                channels,
+                height,
+                width,
+            )?,
+            source: stream::make_source(&spec.pipeline, channels, share),
+            open: true,
+        });
+    }
     println!(
         "push: {} frames ({}) to {} as {}x{}x{} {}",
         total,
-        source.name(),
+        lanes[0].source.name(),
         addr,
         channels,
         height,
         width,
         spec.wire_coding.name()
     );
+    if batch > 1 || sessions > 1 {
+        println!(
+            "push: protocol v{version}, {batch} frames/envelope, \
+             {sessions} interleaved sessions"
+        );
+    }
+
     let started = Instant::now();
-    let mut client =
-        WireClient::connect(&addr, spec.wire_coding, channels, height, width)?;
-    while let Some(frame) = source.next_frame() {
-        client.send_frame(&frame)?;
-        let idle = source.gap();
-        if !idle.is_zero() {
-            std::thread::sleep(idle);
+    let mut open = lanes.len();
+    while open > 0 {
+        for lane in &mut lanes {
+            if !lane.open {
+                continue;
+            }
+            // A batch never outruns the advertised window: `send_batch`
+            // absorbs RESULTs to make room but cannot shrink the batch.
+            let cap = batch.min(lane.client.max_inflight() as usize).max(1);
+            let mut chunk = Vec::with_capacity(cap);
+            while chunk.len() < cap {
+                match lane.source.next_frame() {
+                    Some(f) => chunk.push(f),
+                    None => {
+                        lane.open = false;
+                        open -= 1;
+                        break;
+                    }
+                }
+            }
+            if chunk.is_empty() {
+                continue;
+            }
+            if batch > 1 {
+                lane.client.send_batch(&chunk)?;
+            } else {
+                lane.client.send_frame(&chunk[0])?;
+            }
+            let idle = lane.source.gap();
+            if !idle.is_zero() {
+                std::thread::sleep(idle);
+            }
         }
     }
-    let bytes = client.bytes_sent();
-    let results = client.finish()?;
+    let mut bytes = 0u64;
+    let mut envelopes = 0u64;
+    let mut received = 0usize;
+    for lane in lanes {
+        bytes += lane.client.bytes_sent();
+        envelopes += lane.client.envelopes_sent();
+        received += lane.client.finish()?.len();
+    }
     let wall = started.elapsed().as_secs_f64();
     println!(
         "pushed {} frames, received {} results in {:.2} s → {:.1} fps \
          ({} protocol bytes sent)",
         total,
-        results.len(),
+        received,
         wall,
-        results.len() as f64 / wall.max(1e-9),
+        received as f64 / wall.max(1e-9),
         bytes
     );
+    if batch > 1 || sessions > 1 {
+        println!(
+            "wire: {} envelopes sent → {:.1} bytes/frame",
+            envelopes,
+            bytes as f64 / f64::from(total.max(1))
+        );
+    }
     Ok(())
 }
 

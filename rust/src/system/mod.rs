@@ -493,6 +493,12 @@ impl SystemBuilder {
         self.set_field("listen", &addr)
     }
 
+    /// Concurrent wire-session cap for [`System::serve_wire`] (sessions
+    /// beyond it are refused at `HELLO` with `overloaded`).
+    pub fn max_sessions(self, n: u64) -> Self {
+        self.set_field("max-sessions", &n.to_string())
+    }
+
     /// Apply the `hwcfg.json` layer from the (possibly overridden)
     /// artifacts dir and hand back the facade.
     pub fn build(mut self) -> System {

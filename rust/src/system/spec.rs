@@ -60,6 +60,11 @@ pub struct SystemSpec {
     pub connect: Option<String>,
     /// FRAME body coding the `push` client negotiates (`--wire-coding`).
     pub wire_coding: WireCoding,
+    /// Frames per `FRAME_BATCH` envelope for `push` (`--batch-frames`);
+    /// 1 keeps the session at protocol v1 with single-frame envelopes.
+    pub push_batch_frames: usize,
+    /// Concurrent interleaved sessions for `push` (`--sessions`).
+    pub push_sessions: usize,
     prov: BTreeMap<&'static str, Provenance>,
 }
 
@@ -78,6 +83,8 @@ impl SystemSpec {
             config_path: None,
             connect: None,
             wire_coding: WireCoding::F32,
+            push_batch_frames: 1,
+            push_sessions: 1,
             prov: BTreeMap::new(),
         }
     }
@@ -443,6 +450,35 @@ fn build_registry() -> Vec<FieldDef> {
             also_marks: &[],
             get: |s| s.wire_coding.name().to_string(),
         },
+        // Wire scale knobs: the server-side session cap, and the push
+        // client's batching / concurrency load shaping.
+        FieldDef {
+            name: "max-sessions",
+            hint: "N".to_string(),
+            json: Some("max_sessions"),
+            cmds: SERVE,
+            kind: Kind::U64(|s, v| s.pipeline.max_sessions = v),
+            also_marks: &[],
+            get: |s| s.pipeline.max_sessions.to_string(),
+        },
+        FieldDef {
+            name: "batch-frames",
+            hint: "N".to_string(),
+            json: None,
+            cmds: PUSH,
+            kind: Kind::USize(|s, v| s.push_batch_frames = v),
+            also_marks: &[],
+            get: |s| s.push_batch_frames.to_string(),
+        },
+        FieldDef {
+            name: "sessions",
+            hint: "N".to_string(),
+            json: None,
+            cmds: PUSH,
+            kind: Kind::USize(|s, v| s.push_sessions = v),
+            also_marks: &[],
+            get: |s| s.push_sessions.to_string(),
+        },
     ]
 }
 
@@ -633,7 +669,13 @@ pub fn resolve_spec(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<SystemSpec
     //    the oneshot notice instead of a rejection) ----------------------
     if cmd == Cmd::Serve {
         if !spec.streaming {
-            for name in ["workload", "burst-len", "burst-gap-us", "listen"] {
+            for name in [
+                "workload",
+                "burst-len",
+                "burst-gap-us",
+                "listen",
+                "max-sessions",
+            ] {
                 if spec.provenance(name) == Provenance::Cli {
                     bail!("--{name} requires --stream");
                 }
@@ -956,6 +998,46 @@ mod tests {
         let err =
             resolve("push --connect 127.0.0.1:9 --listen 1.2.3.4:5").unwrap_err();
         assert_eq!(format!("{err}"), "unknown option --listen");
+    }
+
+    #[test]
+    fn wire_scale_fields_resolve_with_gating_and_provenance() {
+        // max-sessions is a serve knob, stream-gated on the CLI layer
+        // like the other wire flags.
+        let err = resolve("serve --max-sessions 64").unwrap_err();
+        assert_eq!(format!("{err}"), "--max-sessions requires --stream");
+        let spec =
+            resolve("serve --stream --listen 127.0.0.1:0 --max-sessions 64")
+                .unwrap();
+        assert_eq!(spec.pipeline.max_sessions, 64);
+        assert_eq!(spec.provenance("max-sessions"), Provenance::Cli);
+        assert_eq!(
+            SystemSpec::defaults(Cmd::Serve).pipeline.max_sessions,
+            crate::wire::MAX_SESSIONS
+        );
+
+        // Env layer applies without --stream (ambient profile), and CLI
+        // still wins over it.
+        let a = args("serve --stream --max-sessions 3");
+        let env = EnvSource::from_pairs([("PIXELMTJ_MAX_SESSIONS", "9")]);
+        let spec = resolve_spec(Cmd::Serve, &a, &env).unwrap();
+        assert_eq!(spec.pipeline.max_sessions, 3);
+        assert_eq!(spec.provenance("max-sessions"), Provenance::Cli);
+
+        // push's load knobs resolve on push and nowhere else.
+        let spec = resolve(
+            "push --connect 127.0.0.1:9 --batch-frames 8 --sessions 4",
+        )
+        .unwrap();
+        assert_eq!(spec.push_batch_frames, 8);
+        assert_eq!(spec.push_sessions, 4);
+        assert_eq!(spec.provenance("batch-frames"), Provenance::Cli);
+        assert_eq!(spec.provenance("sessions"), Provenance::Cli);
+        let err = resolve("serve --batch-frames 8").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --batch-frames");
+        let err = resolve("push --connect 1.2.3.4:5 --max-sessions 2")
+            .unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --max-sessions");
     }
 
     #[test]

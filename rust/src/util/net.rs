@@ -1,19 +1,92 @@
-//! Shared blocking TCP listener: bind, accept, one named thread per
-//! connection, idempotent wake-on-shutdown.  Extracted from the metrics
-//! exposition server so the wire ingest front door ([`crate::wire`])
-//! reuses the exact same listener/thread/shutdown pattern instead of
-//! growing a second copy.
+//! Shared TCP plumbing: the blocking thread-per-connection listener
+//! ([`TcpServer`], used by the metrics exposition server) and the
+//! minimal `poll(2)` readiness shim ([`poll_fds`]) the wire session
+//! reactor ([`crate::wire::server`]) drives its nonblocking sockets
+//! with.  The shim is a direct `extern "C"` declaration — std already
+//! links libc, so no crates are pulled in.
 //!
 //! The accept loop owns the listener; `shutdown` raises the stop flag and
 //! then connects to the bound address once, so the (blocking) `accept`
 //! call wakes, observes the flag, and drops the listener on its way out.
+//! Persistent accept errors (EMFILE and friends return errors forever,
+//! not once) back the loop off instead of hot-spinning.
 
+use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::RawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
+
+/// Readable data (or a peer close, which reads as EOF) is ready.
+pub const POLLIN: i16 = 0x001;
+/// The socket can accept more outgoing bytes without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only; never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// The fd is not open (revents only) — a reactor bookkeeping bug.
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry of a `poll(2)` set, ABI-compatible with `struct pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// The fd to watch (`AsRawFd::as_raw_fd`).
+    pub fd: RawFd,
+    /// Requested readiness ([`POLLIN`] / [`POLLOUT`] bits).
+    pub events: i16,
+    /// Kernel-reported readiness; cleared before the call.
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        Self { fd, events, revents: 0 }
+    }
+}
+
+#[cfg(target_os = "linux")]
+type Nfds = std::ffi::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::ffi::c_uint;
+
+extern "C" {
+    // int poll(struct pollfd *fds, nfds_t nfds, int timeout);
+    // std links libc on every tier-1 unix target, so declaring the
+    // symbol directly avoids a dependency on the libc crate.
+    fn poll(
+        fds: *mut PollFd,
+        nfds: Nfds,
+        timeout: std::ffi::c_int,
+    ) -> std::ffi::c_int;
+}
+
+/// Block until at least one fd in `fds` is ready, `timeout_ms`
+/// milliseconds pass (0 → immediate, negative → forever), or an error.
+/// Returns the number of entries with nonzero `revents`.  EINTR is
+/// retried internally so callers never see spurious wakeups as errors.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    for e in fds.iter_mut() {
+        e.revents = 0;
+    }
+    loop {
+        let rc = unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms)
+        };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
 
 /// A running accept loop plus the machinery to stop it.  Dropping the
 /// server shuts it down.
@@ -92,7 +165,14 @@ fn accept_loop(
         if stop.load(Ordering::SeqCst) {
             return; // listener drops here, releasing the port
         }
-        let Ok((stream, _peer)) = conn else { continue };
+        let Ok((stream, _peer)) = conn else {
+            // EMFILE/ENFILE and friends fail every accept until fds free
+            // up — an instant retry is a hot spin.  Sleep briefly; the
+            // wake-connect in `shutdown` still lands because the flag is
+            // checked right after accept returns.
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        };
         let h = Arc::clone(&handle);
         let _ = std::thread::Builder::new()
             .name(format!("{prefix}-conn"))
@@ -104,6 +184,27 @@ fn accept_loop(
 mod tests {
     use super::*;
     use std::io::{Read, Write};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn poll_fds_reports_readable_sockets() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut set = [PollFd::new(server.as_raw_fd(), POLLIN)];
+        // Nothing written yet: an immediate poll reports no readiness.
+        assert_eq!(poll_fds(&mut set, 0).unwrap(), 0);
+        client.write_all(b"x").unwrap();
+        let n = poll_fds(&mut set, 5_000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(set[0].revents & POLLIN, 0, "POLLIN after a write");
+        // Peer close surfaces as readable EOF, the reactor's close signal.
+        drop(client);
+        let n = poll_fds(&mut set, 5_000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(set[0].revents & (POLLIN | POLLHUP), 0);
+    }
 
     #[test]
     fn serves_connections_and_releases_port_on_shutdown() {

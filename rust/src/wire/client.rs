@@ -25,6 +25,7 @@ pub struct WireResult {
 /// A connected, negotiated session.
 pub struct WireClient {
     stream: TcpStream,
+    version: u16,
     coding: WireCoding,
     channels: usize,
     height: usize,
@@ -34,13 +35,38 @@ pub struct WireClient {
     inflight: u32,
     results: Vec<WireResult>,
     bytes_sent: u64,
+    envelopes_sent: u64,
 }
 
 impl WireClient {
     /// Connect, send `HELLO`, and wait for the `HELLO_ACK` (or the
-    /// server's typed rejection, surfaced as an error).
+    /// server's typed rejection, surfaced as an error).  Speaks protocol
+    /// v1 — byte-identical to every pre-v2 client; see
+    /// [`WireClient::connect_versioned`] for the batched v2 session.
     pub fn connect(
         addr: &str,
+        coding: WireCoding,
+        channels: usize,
+        height: usize,
+        width: usize,
+    ) -> Result<Self> {
+        Self::connect_versioned(
+            addr,
+            proto::VERSION,
+            coding,
+            channels,
+            height,
+            width,
+        )
+    }
+
+    /// Connect at an explicit protocol version.  v1 sessions exchange
+    /// only single-frame `FRAME`/`RESULT` envelopes; v2 sessions may
+    /// additionally use [`WireClient::send_batch`] and receive coalesced
+    /// `RESULT_BATCH` replies.
+    pub fn connect_versioned(
+        addr: &str,
+        version: u16,
         coding: WireCoding,
         channels: usize,
         height: usize,
@@ -54,7 +80,7 @@ impl WireClient {
         // of hanging the client forever.
         let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
         let hello = Msg::Hello {
-            version: proto::VERSION,
+            version,
             coding,
             channels: channels as u16,
             height: height as u32,
@@ -63,16 +89,16 @@ impl WireClient {
         let bytes_sent = hello.encode().len() as u64;
         proto::write_msg(&mut stream, &hello).context("sending HELLO")?;
         match read_reply(&mut stream)? {
-            Msg::HelloAck { version, max_inflight, queue_depth } => {
-                if version != proto::VERSION {
+            Msg::HelloAck { version: acked, max_inflight, queue_depth } => {
+                if acked != version {
                     bail!(
-                        "server answered HELLO_ACK with version {version}, \
-                         expected {}",
-                        proto::VERSION
+                        "server answered HELLO_ACK with version {acked}, \
+                         expected {version}"
                     );
                 }
                 Ok(Self {
                     stream,
+                    version,
                     coding,
                     channels,
                     height,
@@ -82,6 +108,7 @@ impl WireClient {
                     inflight: 0,
                     results: Vec::new(),
                     bytes_sent,
+                    envelopes_sent: 1,
                 })
             }
             Msg::Error { code, detail } => {
@@ -110,6 +137,18 @@ impl WireClient {
         self.bytes_sent
     }
 
+    /// Messages written so far (HELLO included) — with
+    /// [`bytes_sent`](Self::bytes_sent), the envelope-amortization view
+    /// the wire bench reports: batching cuts envelopes per frame.
+    pub fn envelopes_sent(&self) -> u64 {
+        self.envelopes_sent
+    }
+
+    /// The protocol version this session negotiated.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
     /// Send one frame.  When the credit window is full, first absorb
     /// `RESULT`s until a slot frees — the flow-control loop documented
     /// in docs/PROTOCOL.md, which keeps one client inside its share of
@@ -136,6 +175,7 @@ impl WireClient {
         let msg = Msg::Frame { seq: frame.seq, coding: self.coding, body };
         let encoded = msg.encode();
         self.bytes_sent += encoded.len() as u64;
+        self.envelopes_sent += 1;
         self.stream
             .write_all(&encoded)
             .with_context(|| format!("sending FRAME {}", frame.seq))?;
@@ -143,13 +183,87 @@ impl WireClient {
         Ok(())
     }
 
-    /// Read one message and file it: `RESULT` is recorded, anything
-    /// terminal becomes an error.
+    /// Send several consecutive frames in one `FRAME_BATCH` envelope
+    /// (v2 sessions only).  The protocol derives frame `i`'s seq as
+    /// `first_seq + i`, so the frames must carry consecutive seqs; the
+    /// whole batch must fit the credit window (`RESULT`s are absorbed
+    /// first to make room, as in [`send_frame`](Self::send_frame)).
+    pub fn send_batch(&mut self, frames: &[Frame]) -> Result<()> {
+        if self.version < proto::VERSION_V2 {
+            bail!(
+                "FRAME_BATCH needs a v2 session (negotiated v{})",
+                self.version
+            );
+        }
+        let Some(first) = frames.first() else { return Ok(()) };
+        let count = frames.len() as u32;
+        if count > self.max_inflight {
+            bail!(
+                "batch of {count} frames can never fit the advertised \
+                 window of {}",
+                self.max_inflight
+            );
+        }
+        for (i, frame) in frames.iter().enumerate() {
+            if (frame.channels, frame.height, frame.width)
+                != (self.channels, self.height, self.width)
+            {
+                bail!(
+                    "frame {} is {}x{}x{}, session negotiated {}x{}x{}",
+                    frame.seq,
+                    frame.channels,
+                    frame.height,
+                    frame.width,
+                    self.channels,
+                    self.height,
+                    self.width
+                );
+            }
+            let want = first.seq.wrapping_add(i as u32);
+            if frame.seq != want {
+                bail!(
+                    "batch seqs must be consecutive: frame {i} carries \
+                     seq {}, expected {want}",
+                    frame.seq
+                );
+            }
+        }
+        while self.inflight + count > self.max_inflight {
+            self.absorb_one()?;
+        }
+        let bodies = frames
+            .iter()
+            .map(|f| proto::encode_frame_body(f, self.coding))
+            .collect();
+        let msg = Msg::FrameBatch {
+            first_seq: first.seq,
+            coding: self.coding,
+            bodies,
+        };
+        let encoded = msg.encode();
+        self.bytes_sent += encoded.len() as u64;
+        self.envelopes_sent += 1;
+        self.stream.write_all(&encoded).with_context(|| {
+            format!("sending FRAME_BATCH {}+{count}", first.seq)
+        })?;
+        self.inflight += count;
+        Ok(())
+    }
+
+    /// Read one message and file it: `RESULT` / `RESULT_BATCH` is
+    /// recorded, anything terminal becomes an error.
     fn absorb_one(&mut self) -> Result<()> {
         match read_reply(&mut self.stream)? {
             Msg::Result { seq, trace_id, label } => {
                 self.results.push(WireResult { seq, trace_id, label });
                 self.inflight = self.inflight.saturating_sub(1);
+                Ok(())
+            }
+            Msg::ResultBatch { results } => {
+                for (seq, trace_id, label) in results {
+                    self.results.push(WireResult { seq, trace_id, label });
+                    self.inflight = self.inflight.saturating_sub(1);
+                }
                 Ok(())
             }
             Msg::Error { code, detail } => {
@@ -174,11 +288,11 @@ impl WireClient {
         while self.inflight > 0 {
             self.absorb_one()?;
         }
-        proto::write_msg(
-            &mut self.stream,
-            &Msg::Goodbye { code: StatusCode::Ok },
-        )
-        .context("sending GOODBYE")?;
+        let goodbye = Msg::Goodbye { code: StatusCode::Ok };
+        self.bytes_sent += goodbye.encode().len() as u64;
+        self.envelopes_sent += 1;
+        proto::write_msg(&mut self.stream, &goodbye)
+            .context("sending GOODBYE")?;
         match read_reply(&mut self.stream)? {
             Msg::Goodbye { .. } => {}
             Msg::Error { code, detail } => {

@@ -9,10 +9,11 @@
 //!   [`crate::coordinator::sparse`] activation codecs, so the paper's
 //!   "ship binary activations, not pixels" bandwidth argument runs over
 //!   a real transport);
-//! * [`server`] — the listening side: sessions with geometry/version
-//!   negotiation, per-session [`crate::coordinator::StreamServer`]s,
-//!   credit-window QoS, `pixelmtj_wire_*` metric families, and
-//!   `/readyz` liveness;
+//! * [`server`] — the listening side: a single-threaded readiness
+//!   reactor (`poll(2)`) driving every session's state machine, with
+//!   geometry/version negotiation, lazily-started per-session
+//!   [`crate::coordinator::StreamServer`]s, credit-window QoS,
+//!   `pixelmtj_wire_*` metric families, and `/readyz` liveness;
 //! * [`client`] — the connecting side, used by `pixelmtj push`,
 //!   `examples/wire_client.rs`, and the loopback parity tests.
 //!
@@ -25,5 +26,7 @@ pub mod proto;
 pub mod server;
 
 pub use client::{WireClient, WireResult};
-pub use proto::{Msg, MsgOutcome, StatusCode, WireError, MAGIC, VERSION};
+pub use proto::{
+    Msg, MsgOutcome, StatusCode, WireError, MAGIC, VERSION, VERSION_V2,
+};
 pub use server::{SessionCtx, WireMetrics, WireServer, MAX_SESSIONS};

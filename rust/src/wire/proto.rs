@@ -1,4 +1,4 @@
-//! Wire protocol v1: message framing, typed status codes, and the
+//! Wire protocol v1/v2: message framing, typed status codes, and the
 //! encoder/decoder both the server and the client (and the spec honesty
 //! test in `tests/wire.rs`) share.  The byte-level specification lives
 //! in docs/PROTOCOL.md — the tables there are parsed by the test suite
@@ -7,6 +7,11 @@
 //!
 //! Every message is `[magic "PXMJ"][type u8][payload_len u32 LE]` plus
 //! `payload_len` payload bytes.  All integers are little-endian.
+//!
+//! Version 2 (negotiated through the `HELLO` version field; v1 sessions
+//! never see it) adds the batched envelopes `FRAME_BATCH` and
+//! `RESULT_BATCH`, which amortize the 9-byte envelope and the
+//! per-message syscalls across `count` frames at high fps.
 
 use std::fmt;
 use std::io::{self, Read, Write};
@@ -18,8 +23,13 @@ use crate::sensor::{pack_f32, BitPlane, Frame};
 /// The four magic bytes opening every message.
 pub const MAGIC: [u8; 4] = *b"PXMJ";
 
-/// Protocol version this build speaks (negotiated in `HELLO`).
+/// Baseline protocol version (negotiated in `HELLO`); v1 sessions use
+/// single-frame `FRAME`/`RESULT` envelopes only.
 pub const VERSION: u16 = 1;
+
+/// Batched protocol version: sessions negotiated at v2 may additionally
+/// exchange `FRAME_BATCH`/`RESULT_BATCH` envelopes.
+pub const VERSION_V2: u16 = 2;
 
 /// Envelope size: magic + type byte + payload length.
 pub const HEADER_LEN: usize = 9;
@@ -37,6 +47,8 @@ pub const MESSAGE_TYPES: &[(u8, &str)] = &[
     (0x04, "RESULT"),
     (0x05, "GOODBYE"),
     (0x06, "ERROR"),
+    (0x07, "FRAME_BATCH"),
+    (0x08, "RESULT_BATCH"),
 ];
 
 /// `(coding byte, spec name)` for the FRAME body codings — pinned
@@ -157,6 +169,13 @@ pub enum Msg {
     Goodbye { code: StatusCode },
     /// Server → client terminal failure; the session closes after it.
     Error { code: StatusCode, detail: String },
+    /// Client → server (v2 only): `bodies.len()` frames in one envelope,
+    /// all in the negotiated coding; frame `i` carries seq
+    /// `first_seq + i`.
+    FrameBatch { first_seq: u32, coding: WireCoding, bodies: Vec<Vec<u8>> },
+    /// Server → client (v2 only): coalesced classifications, one
+    /// `(seq, trace_id, label)` triple per frame.
+    ResultBatch { results: Vec<(u32, u64, u16)> },
 }
 
 fn coding_byte(c: WireCoding) -> u8 {
@@ -188,6 +207,8 @@ impl Msg {
             Msg::Result { .. } => 0x04,
             Msg::Goodbye { .. } => 0x05,
             Msg::Error { .. } => 0x06,
+            Msg::FrameBatch { .. } => 0x07,
+            Msg::ResultBatch { .. } => 0x08,
         }
     }
 
@@ -228,6 +249,31 @@ impl Msg {
                 let mut p = Vec::with_capacity(1 + detail.len());
                 p.push(code.byte());
                 p.extend_from_slice(detail.as_bytes());
+                p
+            }
+            Msg::FrameBatch { first_seq, coding, bodies } => {
+                let total: usize = bodies.iter().map(Vec::len).sum();
+                let mut p =
+                    Vec::with_capacity(7 + 4 * bodies.len() + total);
+                p.extend_from_slice(&first_seq.to_le_bytes());
+                p.push(coding_byte(*coding));
+                p.extend_from_slice(&(bodies.len() as u16).to_le_bytes());
+                for body in bodies {
+                    p.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                }
+                for body in bodies {
+                    p.extend_from_slice(body);
+                }
+                p
+            }
+            Msg::ResultBatch { results } => {
+                let mut p = Vec::with_capacity(2 + 14 * results.len());
+                p.extend_from_slice(&(results.len() as u16).to_le_bytes());
+                for (seq, trace_id, label) in results {
+                    p.extend_from_slice(&seq.to_le_bytes());
+                    p.extend_from_slice(&trace_id.to_le_bytes());
+                    p.extend_from_slice(&label.to_le_bytes());
+                }
                 p
             }
         }
@@ -341,6 +387,119 @@ impl Msg {
                     code,
                     detail: String::from_utf8_lossy(&p[1..]).into_owned(),
                 })
+            }
+            0x07 => {
+                if p.len() < 7 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "FRAME_BATCH payload is only {} bytes",
+                            p.len()
+                        ),
+                    ));
+                }
+                let coding = coding_from_byte(p[4]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown FRAME_BATCH coding byte {}", p[4]),
+                    )
+                })?;
+                let count =
+                    u16::from_le_bytes(p[5..7].try_into().unwrap()) as usize;
+                if count == 0 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        "FRAME_BATCH count is zero",
+                    ));
+                }
+                // Validate the declared sizes against the actual payload
+                // before slicing anything: a lying count or length table
+                // must come back as bad_message, never a panic or an
+                // oversized allocation.  All sums run in u64 so a
+                // hostile table cannot overflow them.
+                let table_end = 7 + 4 * count;
+                if p.len() < table_end {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "FRAME_BATCH length table for {count} frames \
+                             needs {table_end} bytes, payload is {}",
+                            p.len()
+                        ),
+                    ));
+                }
+                let lens: Vec<usize> = p[7..table_end]
+                    .chunks_exact(4)
+                    .map(|c| {
+                        u32::from_le_bytes(c.try_into().unwrap()) as usize
+                    })
+                    .collect();
+                let want = table_end as u64
+                    + lens.iter().map(|&l| l as u64).sum::<u64>();
+                if want != p.len() as u64 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "FRAME_BATCH declares {want} bytes of bodies \
+                             and table, payload is {}",
+                            p.len()
+                        ),
+                    ));
+                }
+                let mut bodies = Vec::with_capacity(count);
+                let mut at = table_end;
+                for len in lens {
+                    bodies.push(p[at..at + len].to_vec());
+                    at += len;
+                }
+                Ok(Msg::FrameBatch {
+                    first_seq: u32::from_le_bytes(
+                        p[0..4].try_into().unwrap(),
+                    ),
+                    coding,
+                    bodies,
+                })
+            }
+            0x08 => {
+                if p.len() < 2 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "RESULT_BATCH payload is only {} bytes",
+                            p.len()
+                        ),
+                    ));
+                }
+                let count =
+                    u16::from_le_bytes(p[0..2].try_into().unwrap()) as usize;
+                if count == 0 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        "RESULT_BATCH count is zero",
+                    ));
+                }
+                let want = 2 + 14 * count;
+                if p.len() != want {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "RESULT_BATCH payload is {} bytes, expected \
+                             {want} for {count} results",
+                            p.len()
+                        ),
+                    ));
+                }
+                let results = p[2..]
+                    .chunks_exact(14)
+                    .map(|c| {
+                        (
+                            u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                            u64::from_le_bytes(c[4..12].try_into().unwrap()),
+                            u16::from_le_bytes(c[12..14].try_into().unwrap()),
+                        )
+                    })
+                    .collect();
+                Ok(Msg::ResultBatch { results })
             }
             other => Err(WireError::new(
                 StatusCode::BadMessage,
@@ -572,6 +731,14 @@ mod tests {
                 code: StatusCode::Overloaded,
                 detail: "window exceeded".to_string(),
             },
+            Msg::FrameBatch {
+                first_seq: 12,
+                coding: WireCoding::Rle,
+                bodies: vec![vec![1, 2, 3], vec![], vec![4, 5]],
+            },
+            Msg::ResultBatch {
+                results: vec![(12, 0xfeed_beef, 1), (13, 7, 0)],
+            },
         ]
     }
 
@@ -637,6 +804,75 @@ mod tests {
         // Wrong payload size for a fixed-size message.
         let err = Msg::decode_payload(0x05, &[0, 0]).unwrap_err();
         assert_eq!(err.code, StatusCode::BadMessage);
+    }
+
+    #[test]
+    fn hostile_frame_batch_payloads_get_typed_errors() {
+        let valid = Msg::FrameBatch {
+            first_seq: 3,
+            coding: WireCoding::Csr,
+            bodies: vec![vec![0xaa; 6], vec![0xbb; 4]],
+        };
+        let payload = valid.payload();
+        assert_eq!(Msg::decode_payload(0x07, &payload).unwrap(), valid);
+
+        // Too short to even hold the fixed prefix.
+        let err = Msg::decode_payload(0x07, &payload[..5]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // Zero count.
+        let mut p = payload.clone();
+        p[5] = 0;
+        p[6] = 0;
+        let err = Msg::decode_payload(0x07, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("count is zero"), "{err}");
+
+        // Lying count: claims more frames than the length table holds.
+        let mut p = payload.clone();
+        p[5] = 0xff;
+        p[6] = 0xff;
+        let err = Msg::decode_payload(0x07, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("length table"), "{err}");
+
+        // Lying length table: one body claims u32::MAX bytes — the u64
+        // size check must reject it before any slicing.
+        let mut p = payload.clone();
+        p[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Msg::decode_payload(0x07, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // Truncated bodies.
+        let err =
+            Msg::decode_payload(0x07, &payload[..payload.len() - 1])
+                .unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // Unknown coding byte.
+        let mut p = payload.clone();
+        p[4] = 9;
+        let err = Msg::decode_payload(0x07, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("coding byte"), "{err}");
+    }
+
+    #[test]
+    fn hostile_result_batch_payloads_get_typed_errors() {
+        let valid =
+            Msg::ResultBatch { results: vec![(1, 2, 3), (4, 5, 6)] };
+        let payload = valid.payload();
+        assert_eq!(Msg::decode_payload(0x08, &payload).unwrap(), valid);
+        for bad in [
+            &payload[..1],                 // shorter than the count field
+            &payload[..payload.len() - 3], // truncated entries
+            &payload[..2],                 // count says 2, no entries
+        ] {
+            let err = Msg::decode_payload(0x08, bad).unwrap_err();
+            assert_eq!(err.code, StatusCode::BadMessage, "{err}");
+        }
+        let err = Msg::decode_payload(0x08, &[0, 0]).unwrap_err();
+        assert!(err.detail.contains("count is zero"), "{err}");
     }
 
     #[test]

@@ -1,20 +1,35 @@
-//! The wire ingest server: TCP sessions speaking the versioned protocol
-//! of [`super::proto`], each mapped onto its own [`StreamServer`] over
-//! the shared sensor sim + backend.
+//! The wire ingest server: a readiness-polled session reactor speaking
+//! the versioned protocol of [`super::proto`], each negotiated session
+//! mapped onto its own [`StreamServer`] over the shared sensor sim +
+//! backend.
+//!
+//! Threading model (the PR-9 scaling rung): ONE reactor thread drives
+//! every session.  Accepted sockets go nonblocking and are multiplexed
+//! with `poll(2)` ([`crate::util::net::poll_fds`]); each session is a
+//! state machine (`Hello → Streaming → Draining → Closing`) advanced by
+//! readiness events instead of a blocking reader/collector thread pair.
+//! Idle sessions therefore cost two buffers and a pollfd entry — no
+//! threads — and the per-session `StreamServer` stages (which do scale
+//! by worker count) are started lazily on the first `FRAME`, so a
+//! connected-but-quiet camera costs no stage threads either.
 //!
 //! Session anatomy (one accepted connection):
 //!
-//! * the connection thread validates `HELLO` (version, geometry,
-//!   coding), answers `HELLO_ACK` with the QoS caps, then loops reading
-//!   `FRAME`s — enforcing the credit window before each blocking
-//!   `submit` so one client can never wedge the shared queue past its
-//!   advertised share;
-//! * a collector thread drains the session's `StreamServer` and writes
-//!   `RESULT`s back as classifications complete (full duplex: results
-//!   stream while later frames are still arriving);
-//! * on the client's `GOODBYE` the reader waits for the in-flight count
-//!   to reach zero, answers `GOODBYE(ok)`, and tears the session stream
-//!   down.  Protocol violations end the session with a typed `ERROR`.
+//! * `HELLO` is validated (version, geometry, coding) and answered with
+//!   `HELLO_ACK` carrying the QoS caps; v1 and v2 clients are both
+//!   accepted, and the ACK echoes the client's version;
+//! * `FRAME` (and, on v2 sessions, `FRAME_BATCH`) submissions enforce
+//!   the credit window *before* entering the stream queue, so the
+//!   blocking `StreamServer::submit` provably never blocks the reactor:
+//!   queue occupancy is bounded by the in-flight count, which is held
+//!   under the window, which equals the queue depth;
+//! * classifications are pumped back each tick through the stream's
+//!   nonblocking [`StreamServer::try_collect`] hook — as `RESULT`s on
+//!   v1 sessions, coalesced `RESULT_BATCH` envelopes on v2 — with
+//!   write-interest registered only while output is actually pending;
+//! * on `GOODBYE` the session drains its in-flight frames, answers
+//!   `GOODBYE(ok)`, and closes.  Protocol violations end the session
+//!   with a typed `ERROR`, written out before the close.
 //!
 //! Each session gets its own `StreamServer` because drained results form
 //! one shared pool per stream — per-session attribution requires
@@ -23,30 +38,37 @@
 //! reflect wire traffic too; the `pixelmtj_wire_*` families in
 //! [`WireMetrics`] add the protocol-level view.
 
-use std::io::Write;
-use std::net::{SocketAddr, TcpStream};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use super::proto::{self, Msg, MsgOutcome, StatusCode, WireError};
+use super::proto::{self, Msg, StatusCode, WireError};
 use crate::backend::InferenceBackend;
 use crate::config::{PipelineConfig, WireCoding};
 use crate::coordinator::stream::{StageHealth, StreamServer};
 use crate::metrics::registry::{MetricType, Registry, Sample, SampleValue};
 use crate::metrics::{Counter, PipelineMetrics};
 use crate::sensor::PixelArraySim;
-use crate::util::net::TcpServer;
+use crate::util::net::{poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT};
 
-/// Per-tenant cap: concurrent sessions beyond this are refused with
-/// `overloaded` at `HELLO` time.
+/// Default per-tenant session cap (the `max_sessions` config field's
+/// default): concurrent sessions beyond the configured cap are refused
+/// with `overloaded` at `HELLO` time.
 pub const MAX_SESSIONS: u64 = 8;
 
 /// How long the server waits for the last results to flush after a
 /// client's `GOODBYE` before declaring the drain stalled.
 const DRAIN_DEADLINE: Duration = Duration::from_secs(60);
+
+/// How long the accept path stays parked after a persistent accept
+/// error (EMFILE and friends) before retrying.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
 
 /// The `pixelmtj_wire_*` metric families (registered into the PR-6
 /// registry via [`WireMetrics::register_into`]).
@@ -59,6 +81,9 @@ pub struct WireMetrics {
     pub results_sent: Counter,
     pub queue_rejections: Counter,
     pub session_rejections: Counter,
+    /// Accept-loop errors (fd exhaustion etc.) — each one also parks the
+    /// accept path for [`ACCEPT_BACKOFF`].
+    pub accept_errors: Counter,
     /// One counter per [`StatusCode`], indexed by the code byte.
     protocol_errors: Vec<Counter>,
 }
@@ -78,6 +103,7 @@ impl WireMetrics {
             results_sent: Counter::default(),
             queue_rejections: Counter::default(),
             session_rejections: Counter::default(),
+            accept_errors: Counter::default(),
             protocol_errors: (0..StatusCode::ALL.len())
                 .map(|_| Counter::default())
                 .collect(),
@@ -144,6 +170,12 @@ impl WireMetrics {
             "Sessions refused at the concurrent-session cap",
             |m| m.session_rejections.get(),
         )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_wire_accept_errors_total",
+            "Accept failures (each parks the accept path briefly)",
+            |m| m.accept_errors.get(),
+        )?;
         let m = Arc::clone(self);
         reg.register(
             "pixelmtj_wire_sessions_active",
@@ -194,68 +226,88 @@ pub struct SessionCtx {
 
 /// The listening front door.  Dropping it shuts it down.
 pub struct WireServer {
-    inner: TcpServer,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    reactor: Option<JoinHandle<()>>,
     health: Arc<StageHealth>,
 }
 
 impl WireServer {
-    /// Bind `addr` (port 0 → ephemeral, see [`WireServer::local_addr`])
-    /// and start accepting sessions.  `health` backs `/readyz` in listen
-    /// mode: armed here, stopped by [`WireServer::shutdown`], failed by
-    /// the first internal session-stream death.
+    /// Bind `addr` (port 0 → ephemeral, see [`WireServer::local_addr`]),
+    /// put the listener into nonblocking mode, and start the reactor
+    /// thread.  `health` backs `/readyz` in listen mode: armed here,
+    /// stopped by [`WireServer::shutdown`], failed by the first internal
+    /// session-stream death.
     pub fn start(
         addr: &str,
         ctx: SessionCtx,
         metrics: Arc<WireMetrics>,
         health: Arc<StageHealth>,
     ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding wire server to {addr}"))?;
+        let local = listener
+            .local_addr()
+            .context("reading wire server bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("wire listener nonblocking mode")?;
         let stop = Arc::new(AtomicBool::new(false));
-        let session_stop = Arc::clone(&stop);
-        let session_health = Arc::clone(&health);
-        let inner = TcpServer::start(
-            addr,
-            "wire server",
-            "pixelmtj-wire",
-            stop,
-            move |stream| {
-                handle_session(
-                    stream,
-                    &ctx,
-                    &metrics,
-                    &session_health,
-                    &session_stop,
-                );
-            },
-        )?;
+        let reactor = Reactor {
+            listener,
+            ctx,
+            metrics,
+            health: Arc::clone(&health),
+            stop: Arc::clone(&stop),
+            sessions: Vec::new(),
+            accept_parked_until: None,
+        };
+        let handle = std::thread::Builder::new()
+            .name("pixelmtj-wire-reactor".to_string())
+            .spawn(move || reactor.run())
+            .context("spawning wire reactor thread")?;
         health.set_ready();
-        Ok(Self { inner, health })
+        Ok(Self { addr: local, stop, reactor: Some(handle), health })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
-        self.inner.local_addr()
+        self.addr
     }
 
-    /// Stop accepting, wake in-flight sessions (they observe the shared
-    /// stop flag on their next read timeout), and join the accept
-    /// thread.  Idempotent.
+    /// Stop the reactor: raise the stop flag, wake `poll` with a
+    /// self-connect, and join the reactor thread (which ends in-flight
+    /// sessions with `shutting_down` and tears their streams down).
+    /// Idempotent.
     pub fn shutdown(&mut self) {
         self.health.set_stopped();
-        self.inner.shutdown();
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.reactor.take() {
+            // Wake the poll so the flag is observed promptly.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
     }
 }
 
-/// RAII slot in the session-count cap.
-struct SessionGuard<'a> {
-    metrics: &'a WireMetrics,
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
-impl<'a> SessionGuard<'a> {
-    fn acquire(metrics: &'a WireMetrics) -> Option<Self> {
+/// RAII slot in the session-count cap (owned, so a [`Session`] can hold
+/// it for its whole life on the reactor thread).
+struct SessionSlot {
+    metrics: Arc<WireMetrics>,
+}
+
+impl SessionSlot {
+    fn acquire(metrics: &Arc<WireMetrics>, cap: u64) -> Option<Self> {
         // CAS loop: increment only while under the cap, so a burst of
         // connections cannot overshoot it.
         let mut cur = metrics.sessions_active.load(Ordering::SeqCst);
         loop {
-            if cur >= MAX_SESSIONS {
+            if cur >= cap {
                 return None;
             }
             match metrics.sessions_active.compare_exchange(
@@ -269,319 +321,739 @@ impl<'a> SessionGuard<'a> {
             }
         }
         metrics.sessions_total.inc();
-        Some(Self { metrics })
+        Some(Self { metrics: Arc::clone(metrics) })
     }
 }
 
-impl Drop for SessionGuard<'_> {
+impl Drop for SessionSlot {
     fn drop(&mut self) {
         self.metrics.sessions_active.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-/// Serialize writes from the reader and collector threads onto one
-/// socket.  Write failures are ignored — the reader notices the dead
-/// peer on its next read and tears the session down.
-type SharedWriter = Arc<Mutex<TcpStream>>;
-
-fn send(writer: &SharedWriter, msg: &Msg) {
-    let mut stream = writer.lock().expect("wire writer lock");
-    let _ = proto::write_msg(&mut *stream, msg);
+/// Where a session is in its life cycle.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    /// Connected, `HELLO` not yet seen.
+    Hello,
+    /// Negotiated; `FRAME`s are welcome.
+    Streaming,
+    /// Client said `GOODBYE`; waiting for in-flight results to flush.
+    Draining,
+    /// Terminal: flush the write buffer, then close the socket.
+    Closing,
 }
 
-fn handle_session(
+/// One nonblocking connection driven by the reactor.
+struct Session {
     stream: TcpStream,
-    ctx: &SessionCtx,
-    metrics: &Arc<WireMetrics>,
-    health: &Arc<StageHealth>,
-    stop: &Arc<AtomicBool>,
-) {
-    // Short read timeout: the reader wakes regularly to observe the stop
-    // flag without ever splitting a message.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let _ = stream.set_nodelay(true);
-    let writer: SharedWriter = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
-        Err(_) => return,
-    };
-    let mut reader = stream;
-    if let Err(err) =
-        run_session(&mut reader, &writer, ctx, metrics, health, stop)
-    {
-        metrics.protocol_error(err.code);
-        send(&writer, &Msg::Error { code: err.code, detail: err.detail });
-        let _ = writer.lock().expect("wire writer lock").flush();
-    }
+    /// Unparsed input; a consumed prefix is compacted away each tick.
+    rbuf: Vec<u8>,
+    /// Pending output; drained by writability events.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    phase: Phase,
+    /// Negotiated protocol version (v2 sessions get batched results).
+    version: u16,
+    coding: WireCoding,
+    slot: Option<SessionSlot>,
+    /// Started lazily on the first frame, so idle sessions cost no
+    /// stage threads.
+    server: Option<StreamServer>,
+    inflight: u64,
+    max_inflight: u64,
+    drain_deadline: Option<Instant>,
+    /// The peer closed its write half; fail pending partial input once
+    /// the buffer is parsed out.
+    eof: bool,
 }
 
-fn run_session(
-    reader: &mut TcpStream,
-    writer: &SharedWriter,
-    ctx: &SessionCtx,
-    metrics: &Arc<WireMetrics>,
-    health: &Arc<StageHealth>,
-    stop: &Arc<AtomicBool>,
-) -> Result<(), WireError> {
-    let stop_fn = || stop.load(Ordering::SeqCst);
-
-    // --- HELLO: version + geometry + coding negotiation -------------
-    let hello = match proto::read_msg(reader, &stop_fn)? {
-        MsgOutcome::Msg(m) => m,
-        // A probe that connected and left (including the shutdown
-        // wake-connect) is not a session, and not an error.
-        MsgOutcome::Eof | MsgOutcome::Stopped => return Ok(()),
-    };
-    let Msg::Hello { version, coding, channels, height, width } = hello
-    else {
-        return Err(WireError::new(
-            StatusCode::BadMessage,
-            "expected HELLO as the first message",
-        ));
-    };
-    if version != proto::VERSION {
-        return Err(WireError::new(
-            StatusCode::BadVersion,
-            format!(
-                "server speaks protocol version {} (client sent {version})",
-                proto::VERSION
-            ),
-        ));
-    }
-    let want = (
-        ctx.channels as u16,
-        ctx.cfg.sensor_height as u32,
-        ctx.cfg.sensor_width as u32,
-    );
-    if (channels, height, width) != want {
-        return Err(WireError::new(
-            StatusCode::BadGeometry,
-            format!(
-                "server geometry is {}x{}x{} (client sent \
-                 {channels}x{height}x{width})",
-                want.0, want.1, want.2
-            ),
-        ));
-    }
-
-    // --- QoS: session slot + per-session stream ---------------------
-    let Some(_slot) = SessionGuard::acquire(metrics) else {
-        metrics.session_rejections.inc();
-        return Err(WireError::new(
-            StatusCode::Overloaded,
-            format!("session limit {MAX_SESSIONS} reached"),
-        ));
-    };
-    let server = StreamServer::start(
-        &ctx.cfg,
-        ctx.sim.clone(),
-        ctx.backend.clone(),
-        ctx.metrics.clone(),
-    )
-    .map_err(|e| {
-        let msg = format!("starting session stream: {e:#}");
-        health.record_failure("wire session", &msg);
-        WireError::new(StatusCode::Internal, msg)
-    })?;
-    let max_inflight = ctx.cfg.queue_depth.max(1) as u32;
-    send(
-        writer,
-        &Msg::HelloAck {
+impl Session {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            phase: Phase::Hello,
             version: proto::VERSION,
-            max_inflight,
-            queue_depth: ctx.cfg.queue_depth as u32,
-        },
-    );
-
-    // --- FRAME loop + concurrent RESULT collector -------------------
-    let inflight = AtomicU64::new(0);
-    let done = AtomicBool::new(false);
-    let collector_failed = AtomicBool::new(false);
-    let (read_result, collector_result) = std::thread::scope(|s| {
-        let collector = s.spawn(|| {
-            collect_results(
-                &server,
-                writer,
-                metrics,
-                &inflight,
-                &done,
-                &collector_failed,
-            )
-        });
-        let r = read_frames(
-            reader,
-            writer,
-            &server,
-            ctx,
-            metrics,
-            coding,
-            &inflight,
-            max_inflight,
-            &collector_failed,
-            &stop_fn,
-        );
-        done.store(true, Ordering::SeqCst);
-        let c = collector
-            .join()
-            .unwrap_or_else(|_| Err("collector thread panicked".to_string()));
-        (r, c)
-    });
-
-    // Always tear the session stream down — joins its stage threads.
-    if let Err(e) = server.shutdown() {
-        let msg = format!("session stream shutdown: {e:#}");
-        health.record_failure("wire session", &msg);
-        if read_result.is_ok() && collector_result.is_ok() {
-            return Err(WireError::new(StatusCode::Internal, msg));
+            coding: WireCoding::F32,
+            slot: None,
+            server: None,
+            inflight: 0,
+            max_inflight: 0,
+            drain_deadline: None,
+            eof: false,
         }
     }
-    read_result?;
-    if let Err(msg) = collector_result {
-        health.record_failure("wire session", &msg);
-        return Err(WireError::new(StatusCode::Internal, msg));
+
+    fn has_output(&self) -> bool {
+        self.wpos < self.wbuf.len()
     }
-    Ok(())
+
+    /// The poll interest mask for this tick.
+    fn events(&self) -> i16 {
+        let mut ev = 0;
+        if self.phase != Phase::Closing && !self.eof {
+            ev |= POLLIN;
+        }
+        if self.has_output() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    /// Whether the reactor should tick quickly for this session even
+    /// without socket readiness (results to pump, drains to finish).
+    fn wants_fast_tick(&self) -> bool {
+        self.inflight > 0
+            || self.has_output()
+            || matches!(self.phase, Phase::Draining | Phase::Closing)
+    }
+
+    fn queue_msg(&mut self, msg: &Msg) {
+        self.wbuf.extend_from_slice(&msg.encode());
+    }
+
+    /// End the session with a typed error: count it, queue the `ERROR`
+    /// for the flush-then-close path.
+    fn fail(&mut self, metrics: &WireMetrics, err: WireError) {
+        metrics.protocol_error(err.code);
+        self.queue_msg(&Msg::Error { code: err.code, detail: err.detail });
+        self.phase = Phase::Closing;
+    }
+
+    /// Flush as much of `wbuf` as the socket accepts.  Returns false if
+    /// the peer is gone (write error) — the session should be dropped.
+    fn flush(&mut self) -> bool {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    break
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                // Write failures are not protocol errors: the peer died;
+                // nothing is left to tell it.
+                Err(_) => return false,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 4096 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        true
+    }
 }
 
-/// The session's read half: FRAMEs in, window enforcement, final
-/// GOODBYE handshake.
-#[allow(clippy::too_many_arguments)]
-fn read_frames(
-    reader: &mut TcpStream,
-    writer: &SharedWriter,
-    server: &StreamServer,
-    ctx: &SessionCtx,
-    metrics: &Arc<WireMetrics>,
-    coding: WireCoding,
-    inflight: &AtomicU64,
-    max_inflight: u32,
-    collector_failed: &AtomicBool,
-    stop_fn: &dyn Fn() -> bool,
-) -> Result<(), WireError> {
-    loop {
-        let msg = match proto::read_msg(reader, stop_fn)? {
-            MsgOutcome::Msg(m) => m,
-            // Abrupt close: the client vanished; nothing left to send.
-            MsgOutcome::Eof => return Ok(()),
-            MsgOutcome::Stopped => {
-                return Err(WireError::new(
-                    StatusCode::ShuttingDown,
-                    "server is shutting down",
-                ))
+/// The readiness-driven session reactor: one thread, every session.
+struct Reactor {
+    listener: TcpListener,
+    ctx: SessionCtx,
+    metrics: Arc<WireMetrics>,
+    health: Arc<StageHealth>,
+    stop: Arc<AtomicBool>,
+    sessions: Vec<Session>,
+    /// Accept backoff after a persistent accept error (satellite of the
+    /// EMFILE hot-spin fix): while set, the listener is not polled.
+    accept_parked_until: Option<Instant>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut pollset: Vec<PollFd> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                self.shutdown_sessions();
+                return; // listener drops here, releasing the port
             }
-        };
-        match msg {
-            Msg::Frame { seq, coding: frame_coding, body } => {
-                if frame_coding != coding {
-                    return Err(WireError::new(
-                        StatusCode::BadFrame,
-                        format!(
-                            "FRAME {seq} coding differs from the \
-                             negotiated HELLO coding"
-                        ),
+
+            let accept_open = match self.accept_parked_until {
+                Some(t) if Instant::now() < t => false,
+                _ => {
+                    self.accept_parked_until = None;
+                    true
+                }
+            };
+
+            pollset.clear();
+            pollset.push(PollFd::new(
+                self.listener.as_raw_fd(),
+                if accept_open { POLLIN } else { 0 },
+            ));
+            for s in &self.sessions {
+                pollset.push(PollFd::new(s.stream.as_raw_fd(), s.events()));
+            }
+
+            // Sessions with in-flight frames need result pumping on a
+            // short cadence (classification completion is not a socket
+            // event); a fully idle server sleeps longer.  An armed
+            // accept backoff bounds the sleep so the park expires.
+            let busy = self.sessions.iter().any(Session::wants_fast_tick);
+            let mut timeout_ms = if busy { 1 } else { 100 };
+            if self.accept_parked_until.is_some() {
+                timeout_ms = timeout_ms.min(10);
+            }
+            if poll_fds(&mut pollset, timeout_ms).is_err() {
+                // poll itself failing (EINVAL/ENOMEM) is not actionable
+                // per-session; yield briefly and retry.
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+
+            if pollset[0].revents & POLLIN != 0 {
+                self.accept_ready();
+            }
+
+            // Drive each session: reads advance the state machine,
+            // result pumping fills wbuf, flush drains it.  Iterate by
+            // index so sessions can be dropped in place.
+            let mut i = 0;
+            while i < self.sessions.len() {
+                let revents = pollset
+                    .get(1 + i)
+                    .map(|p| p.revents)
+                    .unwrap_or(0);
+                let alive = self.drive_session(i, revents, &mut scratch);
+                if alive {
+                    i += 1;
+                } else {
+                    let s = self.sessions.swap_remove(i);
+                    self.teardown(s);
+                }
+            }
+        }
+    }
+
+    /// Accept every pending connection (the listener is nonblocking).
+    /// A real accept error — EMFILE et al. fail persistently, not once —
+    /// is counted and parks the accept path for [`ACCEPT_BACKOFF`]
+    /// instead of hot-spinning.
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.sessions.push(Session::new(stream));
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.metrics.accept_errors.inc();
+                    self.accept_parked_until =
+                        Some(Instant::now() + ACCEPT_BACKOFF);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// One tick of one session.  Returns false when the session is over
+    /// (socket closed or to be closed) and should be removed.
+    fn drive_session(
+        &mut self,
+        i: usize,
+        revents: i16,
+        scratch: &mut [u8],
+    ) -> bool {
+        // Read every byte the socket has for us, then parse complete
+        // messages out of the buffer.
+        if revents & (POLLIN | POLLHUP | POLLERR) != 0
+            && self.sessions[i].phase != Phase::Closing
+        {
+            if let Some(err) = self.read_into_buffer(i, scratch) {
+                let s = &mut self.sessions[i];
+                s.fail(&self.metrics, err);
+            }
+        }
+        loop {
+            match self.parse_step(i) {
+                ParseStep::Advanced => {}
+                ParseStep::NeedMore => break,
+                ParseStep::Failed(err) => {
+                    let s = &mut self.sessions[i];
+                    s.fail(&self.metrics, err);
+                    break;
+                }
+            }
+        }
+        // Compact the consumed prefix opportunistically.
+        {
+            let s = &mut self.sessions[i];
+            if s.phase == Phase::Closing {
+                s.rbuf.clear();
+            }
+        }
+
+        self.pump_results(i);
+        self.finish_drain(i);
+
+        let s = &mut self.sessions[i];
+        if !s.flush() {
+            s.phase = Phase::Closing;
+            s.wbuf.clear();
+            s.wpos = 0;
+        }
+        // A clean peer close with nothing left to parse or send ends
+        // the session silently (a probe that connected and left — or
+        // the shutdown wake-connect — is not a session, not an error).
+        if s.eof && s.phase != Phase::Closing && s.rbuf.is_empty() {
+            s.phase = Phase::Closing;
+        }
+        !(s.phase == Phase::Closing && !s.has_output())
+    }
+
+    /// Pull everything readable into the session's buffer.  Returns a
+    /// wire error for read failures that must end the session.
+    fn read_into_buffer(
+        &mut self,
+        i: usize,
+        scratch: &mut [u8],
+    ) -> Option<WireError> {
+        let s = &mut self.sessions[i];
+        loop {
+            match s.stream.read(scratch) {
+                Ok(0) => {
+                    s.eof = true;
+                    return None;
+                }
+                Ok(n) => s.rbuf.extend_from_slice(&scratch[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return None
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // Parity with the blocking read path: IO failures
+                    // surface as bad_message protocol errors.
+                    return Some(WireError::new(
+                        StatusCode::BadMessage,
+                        format!("read failed: {e}"),
                     ));
                 }
-                if inflight.load(Ordering::SeqCst) >= max_inflight as u64 {
-                    metrics.queue_rejections.inc();
-                    return Err(WireError::new(
-                        StatusCode::Overloaded,
-                        format!(
-                            "frame {seq} overran the advertised window \
-                             of {max_inflight}"
-                        ),
-                    ));
-                }
-                let frame = proto::decode_frame_body(
-                    coding,
-                    ctx.channels,
-                    ctx.cfg.sensor_height,
-                    ctx.cfg.sensor_width,
-                    seq,
-                    &body,
-                )?;
-                inflight.fetch_add(1, Ordering::SeqCst);
-                server.submit(frame).map_err(|e| {
-                    WireError::new(
-                        StatusCode::Internal,
-                        format!("submitting frame {seq}: {e:#}"),
-                    )
-                })?;
-                metrics.frames_received.inc();
             }
-            Msg::Goodbye { .. } => break,
-            other => {
-                return Err(WireError::new(
+        }
+    }
+
+    /// Try to parse and dispatch one message from the session's buffer.
+    fn parse_step(&mut self, i: usize) -> ParseStep {
+        let s = &mut self.sessions[i];
+        if matches!(s.phase, Phase::Closing | Phase::Draining) {
+            // Draining sessions have said goodbye; their remaining input
+            // (there should be none) waits unparsed.
+            return ParseStep::NeedMore;
+        }
+        if s.rbuf.len() < proto::HEADER_LEN {
+            if s.eof && !s.rbuf.is_empty() {
+                // Mid-header close — same wording the blocking
+                // `fill_exact` path produced.
+                return ParseStep::Failed(WireError::new(
                     StatusCode::BadMessage,
-                    format!(
-                        "unexpected message type 0x{:02x} mid-session",
-                        other.type_byte()
-                    ),
+                    "read failed: connection closed mid-message",
                 ));
             }
+            return ParseStep::NeedMore;
+        }
+        if s.rbuf[0..4] != proto::MAGIC {
+            return ParseStep::Failed(WireError::new(
+                StatusCode::BadMagic,
+                format!(
+                    "message does not start with PXMJ (got {:02x} {:02x} \
+                     {:02x} {:02x})",
+                    s.rbuf[0], s.rbuf[1], s.rbuf[2], s.rbuf[3]
+                ),
+            ));
+        }
+        let ty = s.rbuf[4];
+        let len =
+            u32::from_le_bytes(s.rbuf[5..9].try_into().unwrap());
+        if len > proto::MAX_PAYLOAD {
+            return ParseStep::Failed(WireError::new(
+                StatusCode::BadMessage,
+                format!(
+                    "payload length {len} exceeds the {} cap",
+                    proto::MAX_PAYLOAD
+                ),
+            ));
+        }
+        let total = proto::HEADER_LEN + len as usize;
+        if s.rbuf.len() < total {
+            if s.eof {
+                return ParseStep::Failed(WireError::new(
+                    StatusCode::BadMessage,
+                    "connection closed inside a payload",
+                ));
+            }
+            return ParseStep::NeedMore;
+        }
+        let msg = match Msg::decode_payload(
+            ty,
+            &s.rbuf[proto::HEADER_LEN..total],
+        ) {
+            Ok(m) => m,
+            Err(e) => return ParseStep::Failed(e),
+        };
+        s.rbuf.drain(..total);
+        match self.dispatch(i, msg) {
+            Ok(()) => ParseStep::Advanced,
+            Err(e) => ParseStep::Failed(e),
         }
     }
 
-    // Client said goodbye: flush the remaining results, then confirm.
-    let deadline = Instant::now() + DRAIN_DEADLINE;
-    while inflight.load(Ordering::SeqCst) > 0 {
-        if collector_failed.load(Ordering::SeqCst) {
-            // The collector's root cause is reported by run_session.
+    /// Advance the session state machine with one decoded message.
+    fn dispatch(&mut self, i: usize, msg: Msg) -> Result<(), WireError> {
+        match self.sessions[i].phase {
+            Phase::Hello => self.on_hello(i, msg),
+            Phase::Streaming => self.on_streaming(i, msg),
+            Phase::Draining | Phase::Closing => Ok(()),
+        }
+    }
+
+    fn on_hello(&mut self, i: usize, msg: Msg) -> Result<(), WireError> {
+        let Msg::Hello { version, coding, channels, height, width } = msg
+        else {
+            return Err(WireError::new(
+                StatusCode::BadMessage,
+                "expected HELLO as the first message",
+            ));
+        };
+        if version != proto::VERSION && version != proto::VERSION_V2 {
+            return Err(WireError::new(
+                StatusCode::BadVersion,
+                format!(
+                    "server speaks protocol version {}-{} (client sent \
+                     {version})",
+                    proto::VERSION,
+                    proto::VERSION_V2
+                ),
+            ));
+        }
+        let want = (
+            self.ctx.channels as u16,
+            self.ctx.cfg.sensor_height as u32,
+            self.ctx.cfg.sensor_width as u32,
+        );
+        if (channels, height, width) != want {
+            return Err(WireError::new(
+                StatusCode::BadGeometry,
+                format!(
+                    "server geometry is {}x{}x{} (client sent \
+                     {channels}x{height}x{width})",
+                    want.0, want.1, want.2
+                ),
+            ));
+        }
+        let cap = self.ctx.cfg.max_sessions;
+        let Some(slot) = SessionSlot::acquire(&self.metrics, cap) else {
+            self.metrics.session_rejections.inc();
+            return Err(WireError::new(
+                StatusCode::Overloaded,
+                format!("session limit {cap} reached"),
+            ));
+        };
+        let max_inflight = self.ctx.cfg.queue_depth.max(1) as u32;
+        let s = &mut self.sessions[i];
+        s.slot = Some(slot);
+        s.version = version;
+        s.coding = coding;
+        s.max_inflight = max_inflight as u64;
+        s.phase = Phase::Streaming;
+        // The session's StreamServer starts lazily on the first frame;
+        // the ACK values derive from config alone.
+        s.queue_msg(&Msg::HelloAck {
+            version,
+            max_inflight,
+            queue_depth: self.ctx.cfg.queue_depth as u32,
+        });
+        Ok(())
+    }
+
+    fn on_streaming(
+        &mut self,
+        i: usize,
+        msg: Msg,
+    ) -> Result<(), WireError> {
+        match msg {
+            Msg::Frame { seq, coding, body } => {
+                self.admit_frames(i, seq, coding, &[body])
+            }
+            Msg::FrameBatch { first_seq, coding, bodies }
+                if self.sessions[i].version >= proto::VERSION_V2 =>
+            {
+                self.admit_frames(i, first_seq, coding, &bodies)
+            }
+            Msg::Goodbye { .. } => {
+                let s = &mut self.sessions[i];
+                s.phase = Phase::Draining;
+                s.drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+                Ok(())
+            }
+            other => Err(WireError::new(
+                StatusCode::BadMessage,
+                format!(
+                    "unexpected message type 0x{:02x} mid-session",
+                    other.type_byte()
+                ),
+            )),
+        }
+    }
+
+    /// Window-check, decode, and submit `bodies.len()` frames starting
+    /// at `first_seq`.  The window is enforced before any submit, so the
+    /// blocking `StreamServer::submit` can never block the reactor: the
+    /// stream queue's occupancy is bounded by `inflight`, which stays
+    /// under `max_inflight == queue_depth`.
+    fn admit_frames(
+        &mut self,
+        i: usize,
+        first_seq: u32,
+        coding: WireCoding,
+        bodies: &[Vec<u8>],
+    ) -> Result<(), WireError> {
+        let count = bodies.len() as u64;
+        let (negotiated, inflight, max_inflight) = {
+            let s = &self.sessions[i];
+            (s.coding, s.inflight, s.max_inflight)
+        };
+        if coding != negotiated {
+            return Err(WireError::new(
+                StatusCode::BadFrame,
+                format!(
+                    "FRAME {first_seq} coding differs from the \
+                     negotiated HELLO coding"
+                ),
+            ));
+        }
+        if inflight + count > max_inflight {
+            self.metrics.queue_rejections.inc();
+            let what = if count == 1 {
+                format!("frame {first_seq}")
+            } else {
+                format!("frame batch {first_seq}+{count}")
+            };
+            return Err(WireError::new(
+                StatusCode::Overloaded,
+                format!(
+                    "{what} overran the advertised window of {max_inflight}"
+                ),
+            ));
+        }
+        // Decode everything before submitting anything, so a bad body
+        // in the middle of a batch rejects the whole envelope without
+        // leaving half of it in flight.
+        let mut frames = Vec::with_capacity(bodies.len());
+        for (k, body) in bodies.iter().enumerate() {
+            let seq = first_seq.wrapping_add(k as u32);
+            frames.push(proto::decode_frame_body(
+                coding,
+                self.ctx.channels,
+                self.ctx.cfg.sensor_height,
+                self.ctx.cfg.sensor_width,
+                seq,
+                body,
+            )?);
+        }
+        self.ensure_stream(i)?;
+        for frame in frames {
+            let seq = frame.seq;
+            let s = &mut self.sessions[i];
+            s.inflight += 1;
+            let server = s.server.as_ref().expect("stream started above");
+            server.submit(frame).map_err(|e| {
+                WireError::new(
+                    StatusCode::Internal,
+                    format!("submitting frame {seq}: {e:#}"),
+                )
+            })?;
+            self.metrics.frames_received.inc();
+        }
+        Ok(())
+    }
+
+    /// Start the session's `StreamServer` if it is not running yet (the
+    /// lazy path: negotiated-but-idle sessions never pay for stage
+    /// threads).  The stream runs in standing eager-flush mode so the
+    /// reactor's nonblocking `try_collect` sees completions promptly.
+    fn ensure_stream(&mut self, i: usize) -> Result<(), WireError> {
+        if self.sessions[i].server.is_some() {
             return Ok(());
         }
-        if stop_fn() {
-            return Err(WireError::new(
-                StatusCode::ShuttingDown,
-                "server is shutting down",
-            ));
-        }
-        if Instant::now() > deadline {
-            return Err(WireError::new(
-                StatusCode::Internal,
-                "result drain stalled after GOODBYE",
-            ));
-        }
-        std::thread::sleep(Duration::from_millis(1));
+        let server = StreamServer::start(
+            &self.ctx.cfg,
+            self.ctx.sim.clone(),
+            self.ctx.backend.clone(),
+            self.ctx.metrics.clone(),
+        )
+        .map_err(|e| {
+            let msg = format!("starting session stream: {e:#}");
+            self.health.record_failure("wire session", &msg);
+            WireError::new(StatusCode::Internal, msg)
+        })?;
+        server.set_eager_flush(true);
+        self.sessions[i].server = Some(server);
+        Ok(())
     }
-    send(writer, &Msg::Goodbye { code: StatusCode::Ok });
-    Ok(())
-}
 
-/// The session's write half: drain classifications and stream RESULTs
-/// back while the reader is still accepting FRAMEs.
-fn collect_results(
-    server: &StreamServer,
-    writer: &SharedWriter,
-    metrics: &Arc<WireMetrics>,
-    inflight: &AtomicU64,
-    done: &AtomicBool,
-    failed: &AtomicBool,
-) -> Result<(), String> {
-    loop {
-        // Order matters: observe `done` before the drain, so one final
-        // drain always runs after the reader stops submitting.
-        let exit = done.load(Ordering::SeqCst);
-        match server.drain() {
-            Ok(results) => {
-                for c in results {
-                    send(
-                        writer,
-                        &Msg::Result {
-                            seq: c.seq,
-                            trace_id: c.trace_id,
-                            label: c.label as u16,
-                        },
-                    );
-                    metrics.results_sent.inc();
-                    inflight.fetch_sub(1, Ordering::SeqCst);
+    /// Ship every classification the session's stream has ready:
+    /// `RESULT` per frame on v1 sessions, one coalesced `RESULT_BATCH`
+    /// per tick on v2.
+    fn pump_results(&mut self, i: usize) {
+        let s = &mut self.sessions[i];
+        if s.inflight == 0 || s.phase == Phase::Closing {
+            return;
+        }
+        let Some(server) = s.server.as_ref() else { return };
+        let results = match server.try_collect() {
+            Ok(r) => r,
+            Err(e) => {
+                let msg = format!("draining session results: {e:#}");
+                self.health.record_failure("wire session", &msg);
+                let err = WireError::new(StatusCode::Internal, msg);
+                self.sessions[i].fail(&self.metrics, err);
+                return;
+            }
+        };
+        if results.is_empty() {
+            return;
+        }
+        s.inflight = s.inflight.saturating_sub(results.len() as u64);
+        if s.version >= proto::VERSION_V2 {
+            for chunk in results.chunks(u16::MAX as usize) {
+                let triples = chunk
+                    .iter()
+                    .map(|c| (c.seq, c.trace_id, c.label as u16))
+                    .collect();
+                s.queue_msg(&Msg::ResultBatch { results: triples });
+                for _ in chunk {
+                    self.metrics.results_sent.inc();
                 }
             }
-            Err(e) => {
-                failed.store(true, Ordering::SeqCst);
-                return Err(format!("draining session results: {e:#}"));
+        } else {
+            for c in &results {
+                s.queue_msg(&Msg::Result {
+                    seq: c.seq,
+                    trace_id: c.trace_id,
+                    label: c.label as u16,
+                });
+                self.metrics.results_sent.inc();
             }
         }
-        if exit {
-            return Ok(());
-        }
-        std::thread::sleep(Duration::from_millis(1));
     }
+
+    /// Complete (or time out) a `GOODBYE` drain: once the in-flight
+    /// count reaches zero the session is confirmed with `GOODBYE(ok)`
+    /// and moves to the flush-then-close phase.
+    fn finish_drain(&mut self, i: usize) {
+        let s = &mut self.sessions[i];
+        if s.phase != Phase::Draining {
+            return;
+        }
+        if s.inflight == 0 {
+            s.queue_msg(&Msg::Goodbye { code: StatusCode::Ok });
+            s.phase = Phase::Closing;
+            return;
+        }
+        if s.drain_deadline.is_some_and(|d| Instant::now() > d) {
+            let err = WireError::new(
+                StatusCode::Internal,
+                "result drain stalled after GOODBYE",
+            );
+            s.fail(&self.metrics, err);
+        }
+    }
+
+    /// Tear one session's stream down.  With nothing in flight the
+    /// stage threads join immediately, so the shutdown runs inline; a
+    /// stream that still owes classifications is reaped on a detached
+    /// thread instead, so one slow session can never stall the reactor.
+    fn teardown(&mut self, mut s: Session) {
+        let Some(server) = s.server.take() else { return };
+        let slot = s.slot.take(); // released when the reap finishes
+        let health = Arc::clone(&self.health);
+        let metrics = Arc::clone(&self.metrics);
+        let reap = move || {
+            if let Err(e) = server.shutdown() {
+                let msg = format!("session stream shutdown: {e:#}");
+                health.record_failure("wire session", &msg);
+                metrics.protocol_error(StatusCode::Internal);
+            }
+            drop(slot);
+        };
+        if s.inflight == 0 {
+            reap();
+        } else {
+            let _ = std::thread::Builder::new()
+                .name("pixelmtj-wire-reap".to_string())
+                .spawn(reap);
+        }
+    }
+
+    /// Stop-flag path: end every session the way the blocking server
+    /// did — pre-HELLO connections close silently, mid-session ones get
+    /// a `shutting_down` ERROR — then flush and tear everything down.
+    fn shutdown_sessions(&mut self) {
+        let mut sessions = std::mem::take(&mut self.sessions);
+        for s in &mut sessions {
+            if matches!(s.phase, Phase::Streaming | Phase::Draining) {
+                let err = WireError::new(
+                    StatusCode::ShuttingDown,
+                    "server is shutting down",
+                );
+                s.fail(&self.metrics, err);
+            }
+        }
+        // Best-effort flush of the final ERROR frames: bounded, so a
+        // stuck peer cannot wedge the whole server shutdown.
+        let deadline = Instant::now() + Duration::from_millis(500);
+        while Instant::now() < deadline
+            && sessions.iter().any(Session::has_output)
+        {
+            let mut pollset: Vec<PollFd> = sessions
+                .iter()
+                .map(|s| {
+                    PollFd::new(
+                        s.stream.as_raw_fd(),
+                        if s.has_output() { POLLOUT } else { 0 },
+                    )
+                })
+                .collect();
+            if poll_fds(&mut pollset, 50).is_err() {
+                break;
+            }
+            for s in &mut sessions {
+                if s.has_output() && !s.flush() {
+                    s.wbuf.clear();
+                    s.wpos = 0;
+                }
+            }
+        }
+        for s in sessions {
+            self.teardown(s);
+        }
+    }
+}
+
+/// Outcome of one [`Reactor::parse_step`] attempt.
+enum ParseStep {
+    /// A message was parsed and dispatched; try for another.
+    Advanced,
+    /// The buffer holds no complete message; wait for more bytes.
+    NeedMore,
+    /// The session must end with this error.
+    Failed(WireError),
 }

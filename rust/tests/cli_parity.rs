@@ -350,6 +350,60 @@ fn precedence_matrix_sweep_fields_share_the_serve_behavior() {
 }
 
 #[test]
+fn wire_scale_flags_resolve_and_gate() {
+    // --max-sessions is serve-only and stream-gated, with the full
+    // default < file < env < cli stack behind it.
+    let s = resolve("serve --stream --max-sessions 32").unwrap();
+    assert_eq!(s.pipeline.max_sessions, 32);
+    assert_eq!(s.provenance("max-sessions"), Provenance::Cli);
+
+    let s = resolve("serve").unwrap();
+    assert_eq!(s.pipeline.max_sessions, 8, "the documented session cap");
+    assert_eq!(s.provenance("max-sessions"), Provenance::Default);
+
+    let file = tmp_config("wire_scale.json", r#"{"max_sessions": 12}"#);
+    let s = resolve(&format!("serve --stream --config {file}")).unwrap();
+    assert_eq!(s.pipeline.max_sessions, 12);
+    assert_eq!(s.provenance("max-sessions"), Provenance::File);
+
+    let s = resolve_env(
+        &format!("serve --stream --config {file}"),
+        &[("PIXELMTJ_MAX_SESSIONS", "24")],
+    )
+    .unwrap();
+    assert_eq!(s.pipeline.max_sessions, 24, "env beats file");
+    assert_eq!(s.provenance("max-sessions"), Provenance::Env);
+
+    // The push load-driver flags resolve with Cli provenance and sane
+    // defaults (one frame per envelope, one session).
+    let s = resolve(
+        "push --connect 127.0.0.1:9 --batch-frames 8 --sessions 4",
+    )
+    .unwrap();
+    assert_eq!(s.push_batch_frames, 8);
+    assert_eq!(s.push_sessions, 4);
+    for f in ["batch-frames", "sessions"] {
+        assert_eq!(s.provenance(f), Provenance::Cli, "{f}");
+    }
+    let s = resolve("push --connect 127.0.0.1:9").unwrap();
+    assert_eq!((s.push_batch_frames, s.push_sessions), (1, 1));
+
+    // Each flag stays inside its subcommand.
+    for (line, want) in [
+        ("serve --max-sessions 4", "--max-sessions requires --stream"),
+        (
+            "push --connect x --max-sessions 4",
+            "unknown option --max-sessions",
+        ),
+        ("serve --batch-frames 8", "unknown option --batch-frames"),
+        ("sweep --sessions 4", "unknown option --sessions"),
+    ] {
+        let err = resolve(line).unwrap_err();
+        assert_eq!(format!("{err}"), want, "{line}");
+    }
+}
+
+#[test]
 fn one_config_file_serves_both_subcommands() {
     // The unified file layer: pipeline and sweep keys in one profile,
     // each subcommand picking up its half (unknown keys ignored).
@@ -412,6 +466,7 @@ fn usage_documents_every_subcommand_and_flag() {
         "--geometry", "--artifacts", "--config", "--stream", "--workload",
         "--queue-depth", "--burst-len", "--burst-gap-us", "--grid",
         "--trials", "--threads", "--seed", "--height", "--width", "--out",
+        "--max-sessions", "--batch-frames", "--sessions",
     ] {
         assert!(u.contains(flag), "{flag}\n{u}");
     }

@@ -127,6 +127,73 @@ fn prop_hostile_wire_bytes_never_panic() {
 }
 
 #[test]
+fn prop_hostile_batch_envelopes_never_panic() {
+    use pixelmtj::config::WireCoding;
+    use pixelmtj::wire::{proto, Msg};
+    // The v2 extension of the codec-hardening contract: any truncation
+    // or byte-level mutation of a valid FRAME_BATCH / RESULT_BATCH
+    // envelope must come back as `Ok` or `Err` from the shared decoder —
+    // never a panic — so a hostile batch cannot kill the reactor thread.
+    check("hostile batch envelopes", 150, |g| {
+        let count = g.usize_in(1, 6);
+        let bodies: Vec<Vec<u8>> = (0..count)
+            .map(|_| {
+                let n = g.usize_in(0, 32);
+                (0..n).map(|_| (g.u32() & 0xff) as u8).collect()
+            })
+            .collect();
+        let coding = match g.u32() % 4 {
+            0 => WireCoding::F32,
+            1 => WireCoding::Dense,
+            2 => WireCoding::Csr,
+            _ => WireCoding::Rle,
+        };
+        let frames =
+            Msg::FrameBatch { first_seq: g.u32(), coding, bodies }.encode();
+        let results = Msg::ResultBatch {
+            results: (0..count)
+                .map(|i| {
+                    (
+                        g.u32(),
+                        (u64::from(g.u32()) << 32) | i as u64,
+                        (g.u32() & 0xffff) as u16,
+                    )
+                })
+                .collect(),
+        }
+        .encode();
+        for bytes in [frames, results] {
+            // The intact envelope round-trips canonically.
+            let (msg, used) = proto::decode(&bytes)
+                .map_err(|e| format!("intact envelope: {e}"))?;
+            if used != bytes.len() {
+                return Err("intact decode left trailing bytes".into());
+            }
+            if msg.encode() != bytes {
+                return Err("re-encode diverged from the original".into());
+            }
+            // Truncations at fixed fractions plus a random cut point.
+            let n = bytes.len();
+            for cut in [0, n / 4, n / 2, 3 * n / 4, g.usize_in(0, n)] {
+                let _ = proto::decode(&bytes[..cut]);
+            }
+            // Byte mutations: 1–4 random nonzero XORs per round, hitting
+            // the magic, type byte, envelope length, counts, and the
+            // per-body length table alike.
+            for _ in 0..4 {
+                let mut mutated = bytes.clone();
+                for _ in 0..g.usize_in(1, 4) {
+                    let i = g.usize_in(0, mutated.len() - 1);
+                    mutated[i] ^= (g.u32() % 255 + 1) as u8;
+                }
+                let _ = proto::decode(&mutated);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_dense_payload_is_exactly_one_bit_per_element() {
     check("dense payload", 50, |g| {
         let m = arbitrary_map(g);

@@ -186,6 +186,43 @@ fn protocol_doc_worked_examples_decode_byte_for_byte() {
 }
 
 #[test]
+fn protocol_doc_v2_batch_examples_decode_byte_for_byte() {
+    let v2 = section(DOC, "## Protocol v2");
+    assert!(
+        v2.contains("FRAME_BATCH") && v2.contains("RESULT_BATCH"),
+        "the v2 section must document both batch envelopes"
+    );
+    assert!(
+        DOC.contains(&format!("version {}", proto::VERSION_V2)),
+        "the spec must name negotiated version {}",
+        proto::VERSION_V2
+    );
+
+    let blocks = hex_blocks(v2);
+    assert_eq!(blocks.len(), 2, "the v2 spec shows one batch each way");
+
+    let (batch, used) =
+        proto::decode(&blocks[0]).expect("FRAME_BATCH example");
+    assert_eq!(used, blocks[0].len(), "no trailing bytes in the example");
+    assert_eq!(
+        batch,
+        Msg::FrameBatch {
+            first_seq: 7,
+            coding: WireCoding::Dense,
+            bodies: vec![vec![0xaa, 0xbb, 0xcc], vec![0xff]],
+        }
+    );
+
+    let (results, used) =
+        proto::decode(&blocks[1]).expect("RESULT_BATCH example");
+    assert_eq!(used, blocks[1].len());
+    assert_eq!(
+        results,
+        Msg::ResultBatch { results: vec![(7, 1, 2), (8, 2, 0)] }
+    );
+}
+
+#[test]
 fn every_documented_message_type_roundtrips() {
     let msgs = vec![
         Msg::Hello {
@@ -210,6 +247,14 @@ fn every_documented_message_type_roundtrips() {
         Msg::Error {
             code: StatusCode::BadGeometry,
             detail: "server geometry is 3x32x32".to_string(),
+        },
+        Msg::FrameBatch {
+            first_seq: 42,
+            coding: WireCoding::Csr,
+            bodies: vec![vec![1, 2, 3], Vec::new(), vec![0xff; 9]],
+        },
+        Msg::ResultBatch {
+            results: vec![(42, 7, 0), (43, 8, 5), (44, 9, 1)],
         },
     ];
     // One sample per documented type byte — no type left untested.
@@ -346,6 +391,107 @@ fn wire_serving_matches_in_process_serving_across_codings() {
     svc.server.shutdown();
     let err = svc.health.ready().expect_err("stopped server is not ready");
     assert!(format!("{err:#}").contains("stream stopped"), "{err:#}");
+}
+
+#[test]
+fn v2_batched_session_classifies_identically_and_cuts_envelopes() {
+    const N: u32 = 12;
+    let (mut sys, channels, height, width) = listening_system();
+    let mut svc = sys.serve_wire().unwrap();
+    let addr = svc.server.local_addr().to_string();
+    let frames = textured_frames(N, channels, height, width);
+
+    // The v1 per-frame session: reference labels and envelope count.
+    let mut v1 =
+        WireClient::connect(&addr, WireCoding::Csr, channels, height, width)
+            .unwrap();
+    assert_eq!(v1.version(), proto::VERSION);
+    for frame in &frames {
+        v1.send_frame(frame).unwrap();
+    }
+    let v1_envelopes = v1.envelopes_sent();
+    let v1_results = v1.finish().unwrap();
+    assert_eq!(v1_results.len(), N as usize);
+
+    // The same frames over a v2 session, 8 per FRAME_BATCH envelope.
+    let mut v2 = WireClient::connect_versioned(
+        &addr,
+        proto::VERSION_V2,
+        WireCoding::Csr,
+        channels,
+        height,
+        width,
+    )
+    .unwrap();
+    assert_eq!(v2.version(), proto::VERSION_V2);
+    for chunk in frames.chunks(8) {
+        v2.send_batch(chunk).unwrap();
+    }
+    let v2_envelopes = v2.envelopes_sent();
+    let v2_results = v2.finish().unwrap();
+    assert_eq!(v2_results.len(), N as usize);
+
+    for (a, b) in v1_results.iter().zip(v2_results.iter()) {
+        assert_eq!(a.seq, b.seq, "batched sessions preserve seq order");
+        assert_eq!(
+            a.label, b.label,
+            "batched seq {} classified differently from per-frame v1",
+            a.seq
+        );
+    }
+    assert!(
+        v2_envelopes < v1_envelopes,
+        "batching must cut the envelope count ({v2_envelopes} vs \
+         {v1_envelopes})"
+    );
+
+    // A v1 session shipping the v2-only type byte is a protocol error:
+    // batching exists only once HELLO negotiated version 2.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .write_all(
+            &Msg::Hello {
+                version: proto::VERSION,
+                coding: WireCoding::Csr,
+                channels: channels as u16,
+                height: height as u32,
+                width: width as u32,
+            }
+            .encode(),
+        )
+        .unwrap();
+    match read_one(&mut stream) {
+        Msg::HelloAck { version, .. } => assert_eq!(version, proto::VERSION),
+        other => panic!("expected HELLO_ACK, got {other:?}"),
+    }
+    stream
+        .write_all(
+            &Msg::FrameBatch {
+                first_seq: 0,
+                coding: WireCoding::Csr,
+                bodies: vec![Vec::new()],
+            }
+            .encode(),
+        )
+        .unwrap();
+    match read_one(&mut stream) {
+        Msg::Error { code, detail } => {
+            assert_eq!(code, StatusCode::BadMessage);
+            assert!(detail.contains("0x07"), "{detail}");
+        }
+        other => panic!("expected ERROR, got {other:?}"),
+    }
+    drop(stream);
+
+    await_quiescent(&svc);
+    assert_eq!(svc.metrics.frames_received.get(), 2 * N as u64);
+    assert_eq!(svc.metrics.results_sent.get(), 2 * N as u64);
+    assert_eq!(
+        svc.metrics.protocol_error_count(StatusCode::BadMessage),
+        1,
+        "only the premature FRAME_BATCH errored"
+    );
+    svc.server.shutdown();
 }
 
 #[test]

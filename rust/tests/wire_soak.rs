@@ -1,0 +1,84 @@
+//! Idle-session soak: the reactor claim made concrete.  A
+//! thread-per-session server pays one OS thread per connected client;
+//! the readiness reactor pays one thread total, with per-session stage
+//! threads appearing only once a session actually ships a frame.  This
+//! test parks 64 negotiated-but-idle sessions on a live server and
+//! asserts the process thread count does not move.
+//!
+//! Lives in its own integration binary on purpose: `/proc/self/task`
+//! counts every thread in the process, so sharing a binary with the
+//! other wire tests (whose pipelines spawn stage workers concurrently)
+//! would make the baseline racy.
+
+#![cfg(target_os = "linux")]
+
+use std::time::{Duration, Instant};
+
+use pixelmtj::config::{HwConfig, WireCoding};
+use pixelmtj::system::System;
+use pixelmtj::wire::WireClient;
+
+const IDLE_SESSIONS: usize = 64;
+
+/// Threads alive in this process right now.
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .expect("/proc/self/task readable on linux")
+        .count()
+}
+
+#[test]
+fn idle_sessions_hold_a_constant_thread_count() {
+    let mut sys = System::builder()
+        .artifacts_dir("/nonexistent")
+        .workers(2)
+        .listen("127.0.0.1:0")
+        .max_sessions(IDLE_SESSIONS as u64 + 8)
+        .build();
+    let mut svc = sys.serve_wire().unwrap();
+    let addr = svc.server.local_addr().to_string();
+    let channels = HwConfig::default().network.in_channels;
+    let (height, width) = (
+        sys.spec().pipeline.sensor_height,
+        sys.spec().pipeline.sensor_width,
+    );
+
+    // Negotiate one session first, then take the baseline: the reactor
+    // thread is already up, so every later connect must be thread-free.
+    let connect = || {
+        WireClient::connect(&addr, WireCoding::Csr, channels, height, width)
+            .expect("idle session negotiates")
+    };
+    let mut clients = vec![connect()];
+    let baseline = thread_count();
+    while clients.len() < IDLE_SESSIONS {
+        clients.push(connect());
+    }
+    assert_eq!(
+        svc.metrics.sessions_active(),
+        IDLE_SESSIONS as u64,
+        "every connect returned with HELLO_ACK, so every slot is held"
+    );
+
+    // Let the reactor tick a few times with all sessions parked, then
+    // measure: no per-session threads may have appeared.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(
+        thread_count(),
+        baseline,
+        "{IDLE_SESSIONS} idle sessions must not grow the thread count"
+    );
+
+    // Hanging up without GOODBYE is a silent close: slots drain, no
+    // protocol errors are counted, and the reactor thread survives.
+    drop(clients);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while svc.metrics.sessions_active() != 0 {
+        assert!(Instant::now() < deadline, "sessions never released slots");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc.metrics.sessions_total.get(), IDLE_SESSIONS as u64);
+    assert_eq!(svc.metrics.frames_received.get(), 0);
+    assert_eq!(thread_count(), baseline, "slot release spawned no threads");
+    svc.server.shutdown();
+}
