@@ -4,7 +4,7 @@
 
 RUST_DIR := rust
 
-.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack sweep artifacts metrics-smoke wire-smoke
+.PHONY: check build test fmt clippy doc bench-backend bench-stream bench-sweep bench-pack bench-campaign sweep artifacts metrics-smoke wire-smoke campaign-smoke
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -42,6 +42,11 @@ bench-sweep:
 bench-pack:
 	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench pack
 
+# Distributed campaign: cells/sec vs 1/2/4 loopback workers, each tier
+# byte-checked against run_sweep → rust/BENCH_campaign.json
+bench-campaign:
+	cd $(RUST_DIR) && PIXELMTJ_BENCH_FAST=1 cargo bench --bench campaign
+
 # End-to-end telemetry smoke: curl /metrics + /healthz + /readyz while
 # `serve --stream` runs, then verify the trace-log JSONL (mirrors CI).
 metrics-smoke:
@@ -52,6 +57,13 @@ metrics-smoke:
 # arithmetic (mirrors CI; transcript → rust/wire_smoke_transcript.txt).
 wire-smoke:
 	$(RUST_DIR)/scripts/wire_smoke.sh
+
+# Distributed-campaign smoke: coordinator + 2 workers over loopback,
+# SIGKILL a worker and the coordinator mid-campaign, resume from the
+# checkpoint journal, byte-diff the report against a single-process
+# sweep (mirrors CI; transcript → rust/campaign_smoke_transcript.txt).
+campaign-smoke:
+	$(RUST_DIR)/scripts/campaign_smoke.sh
 
 # Default reliability campaign (paper's calibrated points) → rust/reports/
 sweep:

@@ -1,0 +1,166 @@
+//! Distributed campaign bench: coordinator-side cells/sec as loopback
+//! worker processes scale 1 → 2 → 4, vs the single-process sweep on the
+//! same grid.  Emits `BENCH_campaign.json` so the distribution
+//! overhead (protocol + journal fsync per cell) is machine-diffable
+//! across PRs; `PIXELMTJ_BENCH_FAST=1` shrinks the campaign for CI.
+//!
+//! Every tier hard-asserts the acceptance claim on its way out: the
+//! reassembled campaign report is byte-identical to `run_sweep` of the
+//! same grid/seed, whatever the worker count.
+//!
+//! Workers here are in-process threads driving real loopback TCP
+//! sessions through `run_worker` — the same protocol path as separate
+//! processes, minus fork overhead, so cells/sec isolates coordination
+//! cost rather than process startup.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use pixelmtj::campaign::{
+    run_coordinator, run_worker, CampaignOptions, DEFAULT_LEASE_TTL,
+};
+use pixelmtj::config::SweepConfig;
+use pixelmtj::reports::sweep_report;
+use pixelmtj::sweep::run_sweep;
+use pixelmtj::util::json::Value;
+
+fn campaign_cfg(fast: bool) -> SweepConfig {
+    SweepConfig {
+        // 12 cells fast / 20 cells full — enough leases that 4 workers
+        // all see work at 2 cells per lease.
+        grid: if fast {
+            "v=0.7,0.8,0.9;k=4,5;sigma=0,0.02".to_string()
+        } else {
+            "v=0.7,0.75,0.8,0.85,0.9;k=4,5;sigma=0,0.02".to_string()
+        },
+        trials: if fast { 4 } else { 16 },
+        threads: 2,
+        seed: 13,
+        sensor_height: if fast { 16 } else { 24 },
+        sensor_width: if fast { 16 } else { 24 },
+        ..SweepConfig::default()
+    }
+}
+
+struct TierResult {
+    workers: usize,
+    cells_per_sec: f64,
+    wall_secs: f64,
+}
+
+fn run_tier(cfg: &SweepConfig, workers: usize, reference: &str) -> TierResult {
+    let dir = std::env::temp_dir().join(format!(
+        "pixelmtj-bench-campaign-{}-{workers}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = CampaignOptions {
+        listen: "127.0.0.1:0".to_string(),
+        lease_cells: 2,
+        checkpoint: dir.join("campaign.journal"),
+        lease_ttl: DEFAULT_LEASE_TTL,
+    };
+
+    let started = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let coordinator = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            run_coordinator(
+                &cfg,
+                &opts,
+                None,
+                |addr| {
+                    let _ = tx.send(addr);
+                },
+                |_idx, _cell| {},
+            )
+            .expect("coordinator run")
+        })
+    };
+    let addr = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("coordinator listen address")
+        .to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, 1, 0))
+        })
+        .collect();
+    let mut completed = 0u64;
+    for h in handles {
+        completed += h
+            .join()
+            .expect("worker thread")
+            .expect("worker run")
+            .cells_completed;
+    }
+    let summary = coordinator.join().expect("coordinator thread");
+    let wall = started.elapsed().as_secs_f64();
+
+    assert_eq!(completed, summary.cells.len() as u64, "lost cells");
+    assert_eq!(
+        sweep_report::to_json(&summary).to_string_pretty(),
+        reference,
+        "campaign over {workers} workers must serialize byte-identical \
+         to run_sweep"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    TierResult {
+        workers,
+        cells_per_sec: summary.cells.len() as f64 / wall.max(1e-9),
+        wall_secs: wall,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PIXELMTJ_BENCH_FAST").is_ok();
+    let cfg = campaign_cfg(fast);
+
+    let started = Instant::now();
+    let single = run_sweep(&cfg).expect("reference sweep");
+    let single_wall = started.elapsed().as_secs_f64();
+    let cells = single.cells.len();
+    let single_rate = cells as f64 / single_wall.max(1e-9);
+    let reference = sweep_report::to_json(&single).to_string_pretty();
+    println!(
+        "campaign bench: {cells} cells × {} trials at {}×{}\n\
+         single-process sweep ({} threads): {single_rate:>8.1} cells/s\n",
+        cfg.trials, cfg.sensor_height, cfg.sensor_width, cfg.threads
+    );
+
+    let mut runs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let r = run_tier(&cfg, workers, &reference);
+        println!(
+            "workers={}: {:>8.1} cells/s  ({:.2} s wall, byte-identical ✓)",
+            r.workers, r.cells_per_sec, r.wall_secs
+        );
+        runs.push(r);
+    }
+
+    let run_objs: Vec<Value> = runs
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("workers", Value::Num(r.workers as f64)),
+                ("cells_per_sec", Value::Num(r.cells_per_sec)),
+                ("wall_secs", Value::Num(r.wall_secs)),
+            ])
+        })
+        .collect();
+    let payload = Value::obj(vec![
+        ("suite", Value::Str("campaign".into())),
+        ("cells", Value::Num(cells as f64)),
+        ("trials", Value::Num(cfg.trials as f64)),
+        ("single_process_cells_per_sec", Value::Num(single_rate)),
+        ("runs", Value::Arr(run_objs)),
+    ]);
+    let path = "BENCH_campaign.json";
+    match std::fs::write(path, payload.to_string_pretty()) {
+        Ok(()) => println!("\n[saved {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -110,6 +110,29 @@ if base and fresh:
 elif base:
     warn("BENCH_wire.json missing — wire bench produced no output")
 
+base = load("benches/baseline/BENCH_campaign.json")
+fresh = load("BENCH_campaign.json")
+if base and fresh:
+    prov = bool(base.get("provisional"))
+    by_workers = {
+        r.get("workers"): r
+        for r in base.get("runs", [])
+        if isinstance(r, dict)
+    }
+    for r in fresh.get("runs", []):
+        if not isinstance(r, dict):
+            continue
+        br = by_workers.get(r.get("workers"))
+        if br and "cells_per_sec" in br and "cells_per_sec" in r:
+            checked += compare(
+                f"campaign.w{r['workers']}.cells_per_sec",
+                r["cells_per_sec"],
+                br["cells_per_sec"],
+                prov,
+            )
+elif base:
+    warn("BENCH_campaign.json missing — campaign bench produced no output")
+
 print(f"bench-compare: {checked} throughput keys checked (warn-only)")
 PY
 

@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# Distributed-campaign smoke (CI runs this via `make campaign-smoke`):
+# a coordinator and two worker processes over loopback, one worker
+# SIGKILLed mid-campaign, then the coordinator itself SIGKILLed and
+# resumed from its checkpoint journal — and the reassembled report must
+# be byte-identical to a single-process `sweep` of the same grid/seed.
+# The full transcript lands in campaign_smoke_transcript.txt (uploaded
+# as a CI artifact on every run).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+. scripts/lib.sh
+
+TRANSCRIPT=campaign_smoke_transcript.txt
+exec > >(tee "$TRANSCRIPT") 2>&1
+
+GRID='v=0.7,0.75,0.8,0.85,0.9,0.95;k=4,5;sigma=0,0.02'   # 24 cells
+TRIALS=10
+SEED=11
+
+WORK=$(mktemp -d)
+COORD= W1= W2= W3=
+cleanup() {
+  for p in $COORD $W1 $W2 $W3; do kill -9 "$p" 2>/dev/null || true; done
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+# await_rows N LOG PID — poll until LOG holds at least N result-table
+# rows (cells stream live, so row count tracks durable progress).
+# Returns nonzero once PID is gone; the caller decides if that matters.
+await_rows() {
+  local n=$1 log=$2 pid=$3 _i
+  for _i in $(seq 1 300); do
+    if [ "$(grep -Ec '^ *[0-9]+ .*\|' "$log" 2>/dev/null || true)" -ge "$n" ]; then
+      return 0
+    fi
+    kill -0 "$pid" 2>/dev/null || return 1
+    sleep 0.1
+  done
+  return 1
+}
+
+cargo build --release
+BIN=target/release/pixelmtj
+
+echo "== reference: single-process sweep =="
+"$BIN" sweep --grid "$GRID" --trials "$TRIALS" --seed "$SEED" \
+  --threads 2 --out "$WORK/ref" >"$WORK/ref.log" 2>&1
+test -f "$WORK/ref/sweep.json"
+echo "reference report written"
+
+echo "== round 1: coordinator + 2 workers, SIGKILL both mid-campaign =="
+"$BIN" campaign --coordinate 127.0.0.1:0 --grid "$GRID" \
+  --trials "$TRIALS" --seed "$SEED" --lease-cells 1 \
+  --checkpoint "$WORK/campaign.journal" --out "$WORK/camp" \
+  >"$WORK/coord1.log" 2>&1 &
+COORD=$!
+LINE=$(await_line '^campaign: listening on ' "$WORK/coord1.log" "$COORD")
+ADDR=${LINE#campaign: listening on }
+echo "coordinator up at $ADDR"
+
+"$BIN" work --join "$ADDR" --threads 1 --lease-cells 1 \
+  >"$WORK/w1.log" 2>&1 &
+W1=$!
+"$BIN" work --join "$ADDR" --threads 1 --lease-cells 1 \
+  >"$WORK/w2.log" 2>&1 &
+W2=$!
+
+# Let a couple of cells checkpoint, then murder one worker outright —
+# its outstanding lease must be reissued, not lost.
+if await_rows 2 "$WORK/coord1.log" "$COORD"; then
+  kill -9 "$W1" 2>/dev/null || true
+  echo "worker 1 SIGKILLed mid-campaign"
+else
+  echo "campaign finished before the worker kill landed (fast machine)"
+fi
+
+# More progress, then murder the coordinator itself mid-campaign.  The
+# journal (fsync'd per cell) is all that survives.
+if await_rows 4 "$WORK/coord1.log" "$COORD"; then
+  kill -9 "$COORD" 2>/dev/null || true
+  echo "coordinator SIGKILLed mid-campaign"
+else
+  echo "campaign finished before the coordinator kill landed"
+fi
+wait "$COORD" 2>/dev/null || true
+wait "$W1" 2>/dev/null || true
+wait "$W2" 2>/dev/null || true
+COORD= W1= W2=
+
+echo "== round 2: resume from the checkpoint journal =="
+"$BIN" campaign --coordinate 127.0.0.1:0 --grid "$GRID" \
+  --trials "$TRIALS" --seed "$SEED" --lease-cells 1 \
+  --checkpoint "$WORK/campaign.journal" --out "$WORK/camp" \
+  >"$WORK/coord2.log" 2>&1 &
+COORD=$!
+# A listener only binds when cells remain; a fully journaled round 1
+# (possible on a very fast machine) resumes straight to the report.
+if LINE=$(await_line '^campaign: listening on ' "$WORK/coord2.log" "$COORD" 2>/dev/null); then
+  ADDR=${LINE#campaign: listening on }
+  echo "resumed coordinator up at $ADDR"
+  "$BIN" work --join "$ADDR" --threads 1 --lease-cells 1 \
+    >"$WORK/w3.log" 2>&1 &
+  W3=$!
+  wait "$W3"
+  W3=
+  echo "resume worker finished"
+else
+  echo "journal already complete — coordinator resumed without a listener"
+fi
+wait "$COORD"
+COORD=
+
+echo "== coordinator round 2 transcript =="
+cat "$WORK/coord2.log"
+
+# Every cell appears exactly once in the resumed run's live table
+# (recovered cells first, then the remainder as it completes).
+ROWS=$(grep -Ec '^ *[0-9]+ .*\|' "$WORK/coord2.log")
+if [ "$ROWS" -ne 24 ]; then
+  echo "FAIL: resumed coordinator streamed $ROWS rows, want 24" >&2
+  exit 1
+fi
+grep -Eq "^24 cells × $TRIALS trials" "$WORK/coord2.log"
+
+# The contract: byte-identical to the single-process sweep.
+if ! cmp "$WORK/ref/sweep.json" "$WORK/camp/sweep.json"; then
+  echo "FAIL: campaign report differs from single-process sweep" >&2
+  diff "$WORK/ref/sweep.json" "$WORK/camp/sweep.json" >&2 || true
+  exit 1
+fi
+echo "campaign smoke OK: kill/resume report byte-identical to sweep"

@@ -1,0 +1,831 @@
+//! The campaign coordinator: owns the grid, the lease table, and the
+//! checkpoint journal; never evaluates a cell itself.
+//!
+//! One thread runs a `poll(2)` readiness reactor (the same shape as the
+//! wire ingest reactor in [`crate::wire::server`]) over a dedicated
+//! campaign listener.  Workers connect, negotiate with
+//! `CAMPAIGN_HELLO`/`CAMPAIGN_WELCOME`, and pull cell-range **leases**;
+//! every completed cell comes back as a `CELL_RESULT`, is journaled
+//! (fsync'd) before it counts, and is slotted by global grid index.
+//!
+//! Fault model:
+//!
+//! * **worker death** — the session drops; its unfinished lease ranges
+//!   go back on the pending queue immediately;
+//! * **slow worker** — a lease past its TTL is reissued; if the
+//!   original worker later delivers anyway, the duplicate is resolved
+//!   idempotently by grid index (first completion wins, both are
+//!   bit-identical by the determinism contract);
+//! * **coordinator death** — the journal replays on the next start:
+//!   completed cells are recovered, only the remainder is re-leased.
+//!
+//! The final [`SweepSummary`] is reassembled in grid order from records
+//! whose statistics travelled and were stored as f64 bit patterns, so
+//! it is bit-identical to a single-process [`crate::sweep::run_sweep`]
+//! of the same grid and seed.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::campaign::journal::{CellRecord, Journal, JournalHeader};
+use crate::config::{KeyedEnum, SweepConfig};
+use crate::metrics::CampaignMetrics;
+use crate::sweep::{CellResult, SweepCell, SweepGrid, SweepSummary};
+use crate::util::net::{
+    poll_fds, PollFd, POLLERR, POLLHUP, POLLIN, POLLOUT,
+};
+use crate::wire::proto::{
+    self, LeaseState, Msg, StatusCode, WireError, CAMPAIGN_VERSION,
+};
+
+/// How long a granted lease may run before it is reissued.  Generous:
+/// expiry exists for dead-but-connected workers; clean disconnects
+/// release leases instantly.
+pub const DEFAULT_LEASE_TTL: Duration = Duration::from_secs(120);
+
+/// `retry_ms` sent with `Wait` grants.
+const WAIT_RETRY_MS: u32 = 200;
+
+/// How long the coordinator keeps servicing sessions after the last
+/// cell lands, so workers receive their `Done` grants and `GOODBYE`s
+/// instead of a reset.
+const FINISH_GRACE: Duration = Duration::from_millis(500);
+
+/// Coordinator-side campaign options (the `campaign` subcommand flags).
+#[derive(Debug, Clone)]
+pub struct CampaignOptions {
+    /// Listen address (`--coordinate`; port 0 picks an ephemeral port,
+    /// reported through `on_listen`).
+    pub listen: String,
+    /// Cells per lease (`--lease-cells`); workers may ask for fewer.
+    pub lease_cells: usize,
+    /// Checkpoint journal path (`--checkpoint`).
+    pub checkpoint: PathBuf,
+    /// Lease TTL before reissue.
+    pub lease_ttl: Duration,
+}
+
+/// The journal identity for a campaign configuration — shared between
+/// the coordinator and the resume tests.
+pub fn journal_header(cfg: &SweepConfig, cells: usize) -> JournalHeader {
+    JournalHeader {
+        grid: cfg.grid.clone(),
+        trials: cfg.trials,
+        seed: cfg.seed,
+        sensor_height: cfg.sensor_height as u32,
+        sensor_width: cfg.sensor_width as u32,
+        geometry: cfg
+            .geometry
+            .map(|g| g.name().to_string())
+            .unwrap_or_default(),
+        cells: cells as u64,
+    }
+}
+
+fn rebuild(cell: SweepCell, r: &CellRecord) -> CellResult {
+    CellResult {
+        cell,
+        trials: r.trials,
+        elements_per_frame: r.elements_per_frame,
+        ber: r.ber,
+        e10: r.e10,
+        e01: r.e01,
+        agreement: r.agreement,
+        mean_sparsity: r.mean_sparsity,
+        energy_pj_per_frame: r.energy_pj_per_frame,
+    }
+}
+
+/// One granted, unexpired cell-range lease.  The wire-visible lease id
+/// is advisory (results are keyed by grid index); the coordinator
+/// tracks leases by range + owning session.
+struct Lease {
+    start: usize,
+    count: usize,
+    /// Owning session (stable id, not vec index — sessions are
+    /// swap-removed).
+    sid: u64,
+    deadline: Instant,
+}
+
+/// Where a campaign session is in its life cycle.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Connected, `CAMPAIGN_HELLO` not yet seen.
+    Hello,
+    /// Negotiated; lease requests and results are welcome.
+    Active,
+    /// Terminal: flush the write buffer, then close.
+    Closing,
+}
+
+/// One nonblocking worker connection.
+struct Session {
+    stream: TcpStream,
+    sid: u64,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    phase: Phase,
+    /// Effective cells-per-lease for this worker.
+    lease_cells: usize,
+    /// Completed the campaign handshake (drives worker accounting —
+    /// a session failed during hello never joined).
+    joined: bool,
+    eof: bool,
+}
+
+impl Session {
+    fn new(stream: TcpStream, sid: u64) -> Self {
+        Self {
+            stream,
+            sid,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            phase: Phase::Hello,
+            lease_cells: 1,
+            joined: false,
+            eof: false,
+        }
+    }
+
+    fn has_output(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    fn events(&self) -> i16 {
+        let mut ev = 0;
+        if self.phase != Phase::Closing && !self.eof {
+            ev |= POLLIN;
+        }
+        if self.has_output() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    fn queue_msg(&mut self, msg: &Msg) {
+        self.wbuf.extend_from_slice(&msg.encode());
+    }
+
+    /// End the session with a typed error (flush-then-close).
+    fn fail(&mut self, err: WireError) {
+        self.queue_msg(&Msg::Error { code: err.code, detail: err.detail });
+        self.phase = Phase::Closing;
+    }
+
+    /// Flush as much of `wbuf` as the socket accepts; false = peer gone.
+    fn flush(&mut self) -> bool {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.wpos += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        true
+    }
+}
+
+enum ParseStep {
+    Advanced,
+    NeedMore,
+    Failed(WireError),
+}
+
+/// Run a campaign to completion: bind `opts.listen`, recover the
+/// journal, lease cells to joining workers, and return the grid-ordered
+/// summary once every cell is durable.
+///
+/// `on_listen` fires once with the bound address (port 0 resolved);
+/// `on_cell` streams `(global grid index, result)` as cells become
+/// durable — journal-recovered cells first (in index order), then live
+/// completions in arrival order.
+pub fn run_coordinator(
+    cfg: &SweepConfig,
+    opts: &CampaignOptions,
+    telemetry: Option<&CampaignMetrics>,
+    on_listen: impl FnOnce(SocketAddr),
+    mut on_cell: impl FnMut(usize, &CellResult),
+) -> Result<SweepSummary> {
+    let t0 = Instant::now();
+    let grid = SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
+    let cells = grid.cells().context("expanding sweep grid")?;
+    ensure!(!cells.is_empty(), "sweep grid expands to zero cells");
+    ensure!(cfg.trials > 0, "sweep needs at least one trial per cell");
+    ensure!(
+        cfg.sensor_height >= 8 && cfg.sensor_width >= 8,
+        "sweep frames must be at least 8×8 (got {}×{})",
+        cfg.sensor_height,
+        cfg.sensor_width
+    );
+    let lease_cells = opts.lease_cells.max(1);
+
+    let opened =
+        Journal::open(&opts.checkpoint, &journal_header(cfg, cells.len()))?;
+    let mut journal = opened.journal;
+    if let Some(t) = telemetry {
+        t.begin(cells.len());
+        if opened.resumed {
+            t.resumes.inc();
+        }
+    }
+
+    let mut done: Vec<Option<CellRecord>> = vec![None; cells.len()];
+    let mut remaining = cells.len();
+    for rec in &opened.cells {
+        let idx = rec.index as usize;
+        ensure!(
+            idx < cells.len() && rec.trials == cfg.trials,
+            "journal cell record (index {}, trials {}) does not fit the \
+             campaign ({} cells, {} trials)",
+            rec.index,
+            rec.trials,
+            cells.len(),
+            cfg.trials
+        );
+        if done[idx].is_none() {
+            done[idx] = Some(*rec);
+            remaining -= 1;
+        }
+    }
+    // Recovered cells stream to the sink first, in index order, so a
+    // resumed campaign's live table is complete.
+    for (idx, rec) in done.iter().enumerate() {
+        if let Some(rec) = rec {
+            on_cell(idx, &rebuild(cells[idx], rec));
+        }
+    }
+
+    let mut workers_seen = 0usize;
+    if remaining > 0 {
+        let listener = TcpListener::bind(&opts.listen).with_context(|| {
+            format!("binding campaign coordinator to {}", opts.listen)
+        })?;
+        listener
+            .set_nonblocking(true)
+            .context("setting campaign listener nonblocking")?;
+        on_listen(
+            listener
+                .local_addr()
+                .context("reading campaign bound address")?,
+        );
+
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+        requeue(&mut pending, &done, 0, cells.len(), lease_cells);
+        let mut leases: Vec<Lease> = Vec::new();
+        let mut next_lease_id = 1u64;
+        let mut sessions: Vec<Session> = Vec::new();
+        let mut next_sid = 1u64;
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut pollset: Vec<PollFd> = Vec::new();
+        let mut finish_at: Option<Instant> = None;
+
+        loop {
+            if remaining == 0 {
+                // Grace period: answer the last lease requests with
+                // `Done` and exchange GOODBYEs before tearing down.
+                let at = *finish_at
+                    .get_or_insert_with(|| Instant::now() + FINISH_GRACE);
+                if sessions.is_empty() || Instant::now() > at {
+                    break;
+                }
+            }
+
+            pollset.clear();
+            pollset.push(PollFd::new(
+                listener.as_raw_fd(),
+                if remaining > 0 { POLLIN } else { 0 },
+            ));
+            for s in &sessions {
+                pollset.push(PollFd::new(s.stream.as_raw_fd(), s.events()));
+            }
+            let timeout_ms = if remaining == 0 { 20 } else { 100 };
+            if poll_fds(&mut pollset, timeout_ms).is_err() {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+
+            if pollset[0].revents & POLLIN != 0 {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            sessions.push(Session::new(stream, next_sid));
+                            next_sid += 1;
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            break
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => break,
+                    }
+                }
+            }
+
+            // Reissue leases whose deadline passed (dead-but-connected
+            // workers); the range goes back on the queue, minus any
+            // cells that already landed.
+            let now = Instant::now();
+            let mut i = 0;
+            while i < leases.len() {
+                if leases[i].deadline <= now {
+                    let l = leases.swap_remove(i);
+                    requeue(&mut pending, &done, l.start, l.count, lease_cells);
+                    if let Some(t) = telemetry {
+                        t.leases_expired.inc();
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+
+            let mut i = 0;
+            while i < sessions.len() {
+                let revents =
+                    pollset.get(1 + i).map(|p| p.revents).unwrap_or(0);
+                let alive = drive_session(
+                    &mut sessions[i],
+                    revents,
+                    &mut scratch,
+                    cfg,
+                    &cells,
+                    &mut done,
+                    &mut remaining,
+                    &mut journal,
+                    &mut pending,
+                    &mut leases,
+                    &mut next_lease_id,
+                    lease_cells,
+                    opts.lease_ttl,
+                    telemetry,
+                    &mut workers_seen,
+                    &mut on_cell,
+                )?;
+                if alive {
+                    i += 1;
+                } else {
+                    let s = sessions.swap_remove(i);
+                    if s.joined {
+                        if let Some(t) = telemetry {
+                            t.worker_left();
+                        }
+                    }
+                    // A dying worker's leases go straight back on the
+                    // queue — no need to wait out the TTL.
+                    let mut j = 0;
+                    while j < leases.len() {
+                        if leases[j].sid == s.sid {
+                            let l = leases.swap_remove(j);
+                            requeue(
+                                &mut pending,
+                                &done,
+                                l.start,
+                                l.count,
+                                lease_cells,
+                            );
+                            if let Some(t) = telemetry {
+                                t.leases_expired.inc();
+                            }
+                        } else {
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            if let Some(t) = telemetry {
+                t.set_leases_outstanding(leases.len());
+            }
+        }
+    }
+
+    let mut results = Vec::with_capacity(cells.len());
+    for (idx, rec) in done.into_iter().enumerate() {
+        let rec = rec.with_context(|| {
+            format!("campaign finished with cell {idx} missing")
+        })?;
+        results.push(rebuild(cells[idx], &rec));
+    }
+    Ok(SweepSummary {
+        grid: cfg.grid.clone(),
+        trials: cfg.trials,
+        seed: cfg.seed,
+        sensor_height: cfg.sensor_height,
+        sensor_width: cfg.sensor_width,
+        cells: results,
+        threads_used: workers_seen.max(1),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Push every not-yet-done run inside `[start, start+count)` back onto
+/// the pending queue, chunked to at most `chunk` cells per range.
+fn requeue(
+    pending: &mut VecDeque<(usize, usize)>,
+    done: &[Option<CellRecord>],
+    start: usize,
+    count: usize,
+    chunk: usize,
+) {
+    let end = start + count;
+    let mut i = start;
+    while i < end {
+        while i < end && done[i].is_some() {
+            i += 1;
+        }
+        let run = i;
+        while i < end && done[i].is_none() && i - run < chunk {
+            i += 1;
+        }
+        if i > run {
+            pending.push_back((run, i - run));
+        }
+    }
+}
+
+/// One tick of one session: read, parse, dispatch, flush.  Returns
+/// `Ok(false)` when the session should be removed; `Err` only for
+/// coordinator-fatal conditions (journal write failure).
+#[allow(clippy::too_many_arguments)]
+fn drive_session(
+    s: &mut Session,
+    revents: i16,
+    scratch: &mut [u8],
+    cfg: &SweepConfig,
+    cells: &[SweepCell],
+    done: &mut [Option<CellRecord>],
+    remaining: &mut usize,
+    journal: &mut Journal,
+    pending: &mut VecDeque<(usize, usize)>,
+    leases: &mut Vec<Lease>,
+    next_lease_id: &mut u64,
+    lease_cells: usize,
+    lease_ttl: Duration,
+    telemetry: Option<&CampaignMetrics>,
+    workers_seen: &mut usize,
+    on_cell: &mut impl FnMut(usize, &CellResult),
+) -> Result<bool> {
+    if revents & (POLLIN | POLLHUP | POLLERR) != 0
+        && s.phase != Phase::Closing
+    {
+        loop {
+            match s.stream.read(scratch) {
+                Ok(0) => {
+                    s.eof = true;
+                    break;
+                }
+                Ok(n) => s.rbuf.extend_from_slice(&scratch[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    s.fail(WireError::new(
+                        StatusCode::BadMessage,
+                        format!("read failed: {e}"),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+    loop {
+        match parse_step(
+            s,
+            cfg,
+            cells,
+            done,
+            remaining,
+            journal,
+            pending,
+            leases,
+            next_lease_id,
+            lease_cells,
+            lease_ttl,
+            telemetry,
+            workers_seen,
+            on_cell,
+        )? {
+            ParseStep::Advanced => {}
+            ParseStep::NeedMore => break,
+            ParseStep::Failed(err) => {
+                s.fail(err);
+                break;
+            }
+        }
+    }
+    if s.phase == Phase::Closing {
+        s.rbuf.clear();
+    }
+    if !s.flush() {
+        return Ok(false);
+    }
+    if s.eof && s.phase != Phase::Closing && s.rbuf.is_empty() {
+        s.phase = Phase::Closing;
+    }
+    Ok(!(s.phase == Phase::Closing && !s.has_output()))
+}
+
+/// Parse and dispatch one message from the session buffer.
+#[allow(clippy::too_many_arguments)]
+fn parse_step(
+    s: &mut Session,
+    cfg: &SweepConfig,
+    cells: &[SweepCell],
+    done: &mut [Option<CellRecord>],
+    remaining: &mut usize,
+    journal: &mut Journal,
+    pending: &mut VecDeque<(usize, usize)>,
+    leases: &mut Vec<Lease>,
+    next_lease_id: &mut u64,
+    lease_cells: usize,
+    lease_ttl: Duration,
+    telemetry: Option<&CampaignMetrics>,
+    workers_seen: &mut usize,
+    on_cell: &mut impl FnMut(usize, &CellResult),
+) -> Result<ParseStep> {
+    if s.phase == Phase::Closing {
+        return Ok(ParseStep::NeedMore);
+    }
+    if s.rbuf.len() < proto::HEADER_LEN {
+        if s.eof && !s.rbuf.is_empty() {
+            return Ok(ParseStep::Failed(WireError::new(
+                StatusCode::BadMessage,
+                "read failed: connection closed mid-message",
+            )));
+        }
+        return Ok(ParseStep::NeedMore);
+    }
+    if s.rbuf[0..4] != proto::MAGIC {
+        return Ok(ParseStep::Failed(WireError::new(
+            StatusCode::BadMagic,
+            format!(
+                "message does not start with PXMJ (got {:02x} {:02x} \
+                 {:02x} {:02x})",
+                s.rbuf[0], s.rbuf[1], s.rbuf[2], s.rbuf[3]
+            ),
+        )));
+    }
+    let ty = s.rbuf[4];
+    let len = u32::from_le_bytes(s.rbuf[5..9].try_into().unwrap());
+    if len > proto::MAX_PAYLOAD {
+        return Ok(ParseStep::Failed(WireError::new(
+            StatusCode::BadMessage,
+            format!(
+                "payload length {len} exceeds the {} cap",
+                proto::MAX_PAYLOAD
+            ),
+        )));
+    }
+    let total = proto::HEADER_LEN + len as usize;
+    if s.rbuf.len() < total {
+        if s.eof {
+            return Ok(ParseStep::Failed(WireError::new(
+                StatusCode::BadMessage,
+                "connection closed inside a payload",
+            )));
+        }
+        return Ok(ParseStep::NeedMore);
+    }
+    let msg =
+        match Msg::decode_payload(ty, &s.rbuf[proto::HEADER_LEN..total]) {
+            Ok(m) => m,
+            Err(e) => return Ok(ParseStep::Failed(e)),
+        };
+    s.rbuf.drain(..total);
+
+    match (s.phase, msg) {
+        (Phase::Hello, Msg::CampaignHello { version, lease_cells: hint }) => {
+            if version != CAMPAIGN_VERSION {
+                return Ok(ParseStep::Failed(WireError::new(
+                    StatusCode::BadVersion,
+                    format!(
+                        "campaign protocol v{version} unsupported \
+                         (coordinator speaks v{CAMPAIGN_VERSION})"
+                    ),
+                )));
+            }
+            // 0 = take the coordinator default; a nonzero ask is capped
+            // by it (workers can shrink their slice, never grow it).
+            s.lease_cells = match hint as usize {
+                0 => lease_cells,
+                n => n.min(lease_cells),
+            };
+            s.phase = Phase::Active;
+            s.joined = true;
+            *workers_seen += 1;
+            if let Some(t) = telemetry {
+                t.worker_joined();
+            }
+            s.queue_msg(&Msg::CampaignWelcome {
+                trials: cfg.trials,
+                seed: cfg.seed,
+                height: cfg.sensor_height as u32,
+                width: cfg.sensor_width as u32,
+                grid: cfg.grid.clone(),
+                geometry: cfg
+                    .geometry
+                    .map(|g| g.name().to_string())
+                    .unwrap_or_default(),
+            });
+            Ok(ParseStep::Advanced)
+        }
+        (Phase::Hello, other) => Ok(ParseStep::Failed(WireError::new(
+            StatusCode::BadMessage,
+            format!(
+                "expected CAMPAIGN_HELLO, got message type 0x{:02x}",
+                other.type_byte()
+            ),
+        ))),
+        (Phase::Active, Msg::LeaseRequest) => {
+            let grant = if *remaining == 0 {
+                Msg::LeaseGrant {
+                    state: LeaseState::Done,
+                    lease_id: 0,
+                    start: 0,
+                    count: 0,
+                    retry_ms: 0,
+                }
+            } else if let Some((start, count)) = pending.pop_front() {
+                let take = count.min(s.lease_cells);
+                if take < count {
+                    pending.push_front((start + take, count - take));
+                }
+                let id = *next_lease_id;
+                *next_lease_id += 1;
+                leases.push(Lease {
+                    start,
+                    count: take,
+                    sid: s.sid,
+                    deadline: Instant::now() + lease_ttl,
+                });
+                Msg::LeaseGrant {
+                    state: LeaseState::Granted,
+                    lease_id: id,
+                    start: start as u64,
+                    count: take as u32,
+                    retry_ms: 0,
+                }
+            } else {
+                // Everything is leased out but not finished yet.
+                Msg::LeaseGrant {
+                    state: LeaseState::Wait,
+                    lease_id: 0,
+                    start: 0,
+                    count: 0,
+                    retry_ms: WAIT_RETRY_MS,
+                }
+            };
+            s.queue_msg(&grant);
+            Ok(ParseStep::Advanced)
+        }
+        (Phase::Active, Msg::CellResult { lease_id: _, index, trials,
+            elements_per_frame, ber, e10, e01, agreement, mean_sparsity,
+            energy_pj_per_frame }) =>
+        {
+            let idx = index as usize;
+            if idx >= cells.len() {
+                return Ok(ParseStep::Failed(WireError::new(
+                    StatusCode::BadMessage,
+                    format!(
+                        "CELL_RESULT index {index} beyond the {}-cell grid",
+                        cells.len()
+                    ),
+                )));
+            }
+            if trials != cfg.trials {
+                return Ok(ParseStep::Failed(WireError::new(
+                    StatusCode::BadMessage,
+                    format!(
+                        "CELL_RESULT carries {trials} trials, campaign \
+                         runs {}",
+                        cfg.trials
+                    ),
+                )));
+            }
+            if done[idx].is_some() {
+                // A reissued lease raced the original worker: results
+                // are bit-identical by construction, first one wins.
+                if let Some(t) = telemetry {
+                    t.duplicate_results.inc();
+                }
+                return Ok(ParseStep::Advanced);
+            }
+            let rec = CellRecord {
+                index,
+                trials,
+                elements_per_frame,
+                ber,
+                e10,
+                e01,
+                agreement,
+                mean_sparsity,
+                energy_pj_per_frame,
+            };
+            // Durability before acknowledgement: journal failures are
+            // coordinator-fatal, never silently dropped progress.
+            journal.append(&rec)?;
+            done[idx] = Some(rec);
+            *remaining -= 1;
+            if let Some(t) = telemetry {
+                t.cells_checkpointed.inc();
+            }
+            on_cell(idx, &rebuild(cells[idx], &rec));
+            // Retire every lease whose range is now fully durable.
+            leases.retain(|l| {
+                !(l.start..l.start + l.count)
+                    .all(|i| done[i].is_some())
+            });
+            Ok(ParseStep::Advanced)
+        }
+        (Phase::Active, Msg::Goodbye { .. }) => {
+            s.queue_msg(&Msg::Goodbye { code: StatusCode::Ok });
+            s.phase = Phase::Closing;
+            Ok(ParseStep::Advanced)
+        }
+        (_, other) => Ok(ParseStep::Failed(WireError::new(
+            StatusCode::BadMessage,
+            format!(
+                "unexpected message type 0x{:02x} on the campaign channel",
+                other.type_byte()
+            ),
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requeue_chunks_skip_done_cells() {
+        let mut done: Vec<Option<CellRecord>> = vec![None; 10];
+        let rec = CellRecord {
+            index: 0,
+            trials: 1,
+            elements_per_frame: 1,
+            ber: 0.0,
+            e10: 0.0,
+            e01: 0.0,
+            agreement: 1.0,
+            mean_sparsity: 0.5,
+            energy_pj_per_frame: 1.0,
+        };
+        done[2] = Some(rec);
+        done[3] = Some(rec);
+        let mut pending = VecDeque::new();
+        requeue(&mut pending, &done, 0, 10, 3);
+        // Runs: [0,2), then [4,10) chunked by 3.
+        assert_eq!(
+            pending.into_iter().collect::<Vec<_>>(),
+            vec![(0, 2), (4, 3), (7, 3)]
+        );
+    }
+
+    #[test]
+    fn journal_header_binds_the_full_identity() {
+        let cfg = SweepConfig {
+            grid: "v=0.8".to_string(),
+            trials: 4,
+            seed: 9,
+            sensor_height: 16,
+            sensor_width: 16,
+            ..SweepConfig::default()
+        };
+        let h = journal_header(&cfg, 1);
+        assert_eq!(h.grid, "v=0.8");
+        assert_eq!((h.trials, h.seed), (4, 9));
+        assert_eq!((h.sensor_height, h.sensor_width), (16, 16));
+        assert_eq!(h.geometry, "");
+        assert_eq!(h.cells, 1);
+    }
+}

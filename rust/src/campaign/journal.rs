@@ -1,0 +1,481 @@
+//! The checkpoint journal: an append-only, CRC-framed record log that
+//! makes a campaign resumable after any crash — coordinator or worker.
+//!
+//! Layout: a sequence of records, each framed as
+//!
+//! ```text
+//! [len u32 LE][crc32 u32 LE][body: len bytes]
+//! ```
+//!
+//! where the CRC (IEEE 802.3, the zlib/PNG polynomial) covers the body
+//! only.  `body[0]` is a record kind:
+//!
+//! * kind `0` — the **campaign header**, written first: it binds the
+//!   journal to one exact campaign (grid spec, trials, seed, sensor
+//!   geometry, cell count).  Resuming with a different configuration is
+//!   a hard error — silently merging results from two different grids
+//!   would corrupt the report while looking plausible.
+//! * kind `1` — one **completed cell**, keyed by global grid index and
+//!   carrying the six per-cell statistics as f64 **bit patterns**, so a
+//!   resumed report is byte-identical to an uninterrupted one.
+//!
+//! Every append is `fsync`'d before the coordinator acknowledges the
+//! cell as durable.  On open, a truncated or CRC-corrupt tail — the
+//! normal residue of `kill -9` mid-append — is dropped (the file is
+//! truncated back to the last valid record), never fatal; only a
+//! mismatched header is.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Record kinds (`body[0]`).
+const KIND_HEADER: u8 = 0;
+const KIND_CELL: u8 = 1;
+
+/// Upper bound on a record body — headers carry a grid spec and a
+/// geometry name, cells are fixed 69 bytes; anything larger is
+/// corruption, not data.
+const MAX_BODY: u32 = 1024 * 1024;
+
+/// Cell record body: kind + index + trials + elements + 6 × f64.
+const CELL_BODY_LEN: usize = 1 + 8 + 4 + 8 + 6 * 8;
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE 802.3) over `data` — the zlib/PNG checksum, hand-rolled
+/// so the journal stays dependency-free.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The campaign identity a journal is bound to.  Two headers must be
+/// byte-equal for a resume to be accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalHeader {
+    pub grid: String,
+    pub trials: u32,
+    pub seed: u32,
+    pub sensor_height: u32,
+    pub sensor_width: u32,
+    /// Geometry preset name (empty = none / explicit dimensions).
+    pub geometry: String,
+    /// Cell count the grid expands to — a cheap cross-check that the
+    /// grid semantics did not change under the same spec string.
+    pub cells: u64,
+}
+
+impl JournalHeader {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(32 + self.grid.len());
+        b.push(KIND_HEADER);
+        b.extend_from_slice(&self.trials.to_le_bytes());
+        b.extend_from_slice(&self.seed.to_le_bytes());
+        b.extend_from_slice(&self.sensor_height.to_le_bytes());
+        b.extend_from_slice(&self.sensor_width.to_le_bytes());
+        b.extend_from_slice(&self.cells.to_le_bytes());
+        b.extend_from_slice(&(self.grid.len() as u16).to_le_bytes());
+        b.extend_from_slice(self.grid.as_bytes());
+        b.extend_from_slice(self.geometry.as_bytes());
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Self> {
+        ensure!(
+            body.len() >= 27 && body[0] == KIND_HEADER,
+            "journal header record is malformed"
+        );
+        let trials = u32::from_le_bytes(body[1..5].try_into().unwrap());
+        let seed = u32::from_le_bytes(body[5..9].try_into().unwrap());
+        let sensor_height =
+            u32::from_le_bytes(body[9..13].try_into().unwrap());
+        let sensor_width =
+            u32::from_le_bytes(body[13..17].try_into().unwrap());
+        let cells = u64::from_le_bytes(body[17..25].try_into().unwrap());
+        let grid_len =
+            u16::from_le_bytes(body[25..27].try_into().unwrap()) as usize;
+        let grid_end = 27usize
+            .checked_add(grid_len)
+            .filter(|&e| e <= body.len())
+            .context("journal header grid overruns the record")?;
+        let text = |what: &str, bytes: &[u8]| -> Result<String> {
+            String::from_utf8(bytes.to_vec())
+                .with_context(|| format!("journal header {what} not UTF-8"))
+        };
+        Ok(Self {
+            grid: text("grid", &body[27..grid_end])?,
+            trials,
+            seed,
+            sensor_height,
+            sensor_width,
+            geometry: text("geometry", &body[grid_end..])?,
+            cells,
+        })
+    }
+}
+
+/// One durably completed cell, keyed by global grid index.  Statistics
+/// are stored as f64 bit patterns — reassembly is bit-exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellRecord {
+    pub index: u64,
+    pub trials: u32,
+    pub elements_per_frame: u64,
+    pub ber: f64,
+    pub e10: f64,
+    pub e01: f64,
+    pub agreement: f64,
+    pub mean_sparsity: f64,
+    pub energy_pj_per_frame: f64,
+}
+
+impl CellRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(CELL_BODY_LEN);
+        b.push(KIND_CELL);
+        b.extend_from_slice(&self.index.to_le_bytes());
+        b.extend_from_slice(&self.trials.to_le_bytes());
+        b.extend_from_slice(&self.elements_per_frame.to_le_bytes());
+        for v in [
+            self.ber,
+            self.e10,
+            self.e01,
+            self.agreement,
+            self.mean_sparsity,
+            self.energy_pj_per_frame,
+        ] {
+            b.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Self> {
+        ensure!(
+            body.len() == CELL_BODY_LEN && body[0] == KIND_CELL,
+            "journal cell record is malformed ({} bytes)",
+            body.len()
+        );
+        let f = |at: usize| {
+            f64::from_bits(u64::from_le_bytes(
+                body[at..at + 8].try_into().unwrap(),
+            ))
+        };
+        Ok(Self {
+            index: u64::from_le_bytes(body[1..9].try_into().unwrap()),
+            trials: u32::from_le_bytes(body[9..13].try_into().unwrap()),
+            elements_per_frame: u64::from_le_bytes(
+                body[13..21].try_into().unwrap(),
+            ),
+            ber: f(21),
+            e10: f(29),
+            e01: f(37),
+            agreement: f(45),
+            mean_sparsity: f(53),
+            energy_pj_per_frame: f(61),
+        })
+    }
+}
+
+fn frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// What [`Journal::open`] recovered.
+pub struct JournalOpen {
+    pub journal: Journal,
+    /// Every valid cell record in append order (duplicates possible —
+    /// the coordinator dedupes by index).
+    pub cells: Vec<CellRecord>,
+    /// True when a valid pre-existing journal for this campaign was
+    /// found — the campaign is a resume, not a fresh start.
+    pub resumed: bool,
+}
+
+/// An open, append-only checkpoint journal.
+pub struct Journal {
+    file: File,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path` for the campaign `expect`
+    /// describes.
+    ///
+    /// * missing or empty file → write the header, fresh campaign;
+    /// * valid header matching `expect` → collect cell records, resume;
+    /// * valid header for a *different* campaign → hard error;
+    /// * corrupt or truncated tail → dropped (file truncated back to
+    ///   the last valid record) and recovery continues.
+    pub fn open(path: &Path, expect: &JournalHeader) -> Result<JournalOpen> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(|| {
+                    format!("creating journal directory {}", dir.display())
+                })?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| {
+                format!("opening checkpoint journal {}", path.display())
+            })?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)
+            .context("reading checkpoint journal")?;
+
+        // Scan the record stream; `valid_end` tracks the last byte of
+        // the last fully valid record.
+        let mut cells = Vec::new();
+        let mut header: Option<JournalHeader> = None;
+        let mut pos = 0usize;
+        let mut valid_end = 0usize;
+        while bytes.len() - pos >= 8 {
+            let len =
+                u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(
+                bytes[pos + 4..pos + 8].try_into().unwrap(),
+            );
+            if len == 0 || len > MAX_BODY {
+                break; // length is garbage — corrupt tail
+            }
+            let body_start = pos + 8;
+            let Some(body_end) = body_start.checked_add(len as usize) else {
+                break;
+            };
+            if body_end > bytes.len() {
+                break; // truncated mid-record (kill -9 residue)
+            }
+            let body = &bytes[body_start..body_end];
+            if crc32(body) != crc {
+                break; // bit rot or torn write — drop from here on
+            }
+            match body[0] {
+                KIND_HEADER if header.is_none() && pos == 0 => {
+                    header = Some(JournalHeader::decode(body)?);
+                }
+                KIND_CELL if header.is_some() => {
+                    // A record that frames+checksums but fails to
+                    // decode is still corruption: stop trusting the
+                    // tail rather than erroring the resume.
+                    match CellRecord::decode(body) {
+                        Ok(c) => cells.push(c),
+                        Err(_) => break,
+                    }
+                }
+                _ => break, // unknown kind or out-of-order header
+            }
+            pos = body_end;
+            valid_end = body_end;
+        }
+
+        if valid_end < bytes.len() {
+            // Drop the invalid tail so future appends start at a clean
+            // record boundary.
+            file.set_len(valid_end as u64)
+                .context("truncating corrupt journal tail")?;
+        }
+        file.seek(SeekFrom::End(0))
+            .context("seeking to journal end")?;
+
+        let resumed = match &header {
+            Some(found) => {
+                if found != expect {
+                    bail!(
+                        "checkpoint journal {} was written by a different \
+                         campaign (journal: grid '{}' trials {} seed {} \
+                         {}x{}; this run: grid '{}' trials {} seed {} \
+                         {}x{}) — pick a different --checkpoint path",
+                        path.display(),
+                        found.grid,
+                        found.trials,
+                        found.seed,
+                        found.sensor_height,
+                        found.sensor_width,
+                        expect.grid,
+                        expect.trials,
+                        expect.seed,
+                        expect.sensor_height,
+                        expect.sensor_width,
+                    );
+                }
+                true
+            }
+            None => {
+                let rec = frame(&expect.encode());
+                file.write_all(&rec).context("writing journal header")?;
+                file.sync_data().context("fsyncing journal header")?;
+                false
+            }
+        };
+
+        Ok(JournalOpen { journal: Journal { file }, cells, resumed })
+    }
+
+    /// Append one completed cell and fsync — once this returns, the
+    /// cell survives any crash.
+    pub fn append(&mut self, rec: &CellRecord) -> Result<()> {
+        self.file
+            .write_all(&frame(&rec.encode()))
+            .with_context(|| format!("journaling cell {}", rec.index))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing cell {}", rec.index))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> JournalHeader {
+        JournalHeader {
+            grid: "v=0.7,0.8;k=4".to_string(),
+            trials: 3,
+            seed: 7,
+            sensor_height: 16,
+            sensor_width: 16,
+            geometry: String::new(),
+            cells: 2,
+        }
+    }
+
+    fn cell(index: u64) -> CellRecord {
+        CellRecord {
+            index,
+            trials: 3,
+            elements_per_frame: 1152,
+            ber: 0.1 + 0.2, // deliberately non-representable exactly
+            e10: f64::MIN_POSITIVE,
+            e01: 0.0,
+            agreement: 1.0 / 3.0,
+            mean_sparsity: 0.5,
+            energy_pj_per_frame: 12.75,
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The canonical CRC-32 check: crc of "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fresh_open_append_reopen_recovers_cells_bit_exactly() {
+        let dir = std::env::temp_dir()
+            .join(format!("pixelmtj-journal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("fresh.journal");
+
+        let h = header();
+        let opened = Journal::open(&path, &h).unwrap();
+        assert!(!opened.resumed, "fresh journal is not a resume");
+        assert!(opened.cells.is_empty());
+        let mut j = opened.journal;
+        j.append(&cell(0)).unwrap();
+        j.append(&cell(1)).unwrap();
+        drop(j);
+
+        let opened = Journal::open(&path, &h).unwrap();
+        assert!(opened.resumed, "pre-existing journal is a resume");
+        assert_eq!(opened.cells.len(), 2);
+        // Bit-exact: compare the f64 bit patterns, not approx values.
+        assert_eq!(
+            opened.cells[0].ber.to_bits(),
+            cell(0).ber.to_bits()
+        );
+        assert_eq!(opened.cells[1], cell(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_tails_are_dropped_not_fatal() {
+        let dir = std::env::temp_dir()
+            .join(format!("pixelmtj-journal-tail-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("tail.journal");
+        let h = header();
+
+        // Two good cells, then simulate a torn append (partial record).
+        let mut j = Journal::open(&path, &h).unwrap().journal;
+        j.append(&cell(0)).unwrap();
+        j.append(&cell(1)).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let good_len = bytes.len();
+        bytes.extend_from_slice(&[0x45, 0x00, 0x00, 0x00, 0xde, 0xad]);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let opened = Journal::open(&path, &h).unwrap();
+        assert_eq!(opened.cells.len(), 2, "good prefix survives");
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            good_len as u64,
+            "torn tail truncated away"
+        );
+
+        // Now corrupt a byte inside the last record's body: its CRC
+        // fails, it is dropped, the first record survives.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let opened = Journal::open(&path, &h).unwrap();
+        assert_eq!(opened.cells.len(), 1, "corrupt record dropped");
+        assert_eq!(opened.cells[0], cell(0));
+
+        // Appends after recovery land on a clean boundary.
+        let mut j = opened.journal;
+        j.append(&cell(1)).unwrap();
+        drop(j);
+        let opened = Journal::open(&path, &h).unwrap();
+        assert_eq!(opened.cells.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_campaign_header_is_a_hard_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("pixelmtj-journal-mis-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("mis.journal");
+        let h = header();
+        drop(Journal::open(&path, &h).unwrap());
+
+        let mut other = header();
+        other.seed = 8;
+        let err = Journal::open(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("different campaign"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

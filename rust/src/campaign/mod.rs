@@ -1,0 +1,43 @@
+//! Distributed, resumable sweep campaigns: a coordinator/worker split
+//! over the campaign wire channel, with per-cell checkpointing.
+//!
+//! The Monte-Carlo sweep engine ([`crate::sweep`]) shards cells across
+//! the threads of one process; this module shards them across
+//! *processes* (and machines).  The split is free determinism-wise:
+//! every stochastic draw in a cell derives from counter-RNG coordinates
+//! `(campaign seed, trial, element, stream)`, so a cell's statistics
+//! are a pure function of the campaign configuration and the grid
+//! index — whoever computes them, whenever, in whatever order.
+//!
+//! * [`coordinator`] — owns the grid, leases cell ranges to workers
+//!   over the campaign messages (`0x10`–`0x14` in
+//!   [`crate::wire::proto`], spec'd in docs/PROTOCOL.md), journals
+//!   every completed cell (fsync'd, CRC-framed, keyed by grid index),
+//!   and reassembles the grid-ordered [`crate::sweep::SweepSummary`];
+//! * [`worker`] — joins a coordinator, builds the sweep world once,
+//!   and evaluates leases through the same engine core a local sweep
+//!   uses;
+//! * [`journal`] — the append-only checkpoint file that makes a killed
+//!   campaign (either side) resume instead of restart.
+//!
+//! **Bit-exactness contract:** cell statistics travel and persist as
+//! f64 bit patterns, completions are idempotent by grid index, and the
+//! final report is reassembled in grid order — so a campaign across any
+//! number of workers, interrupted and resumed any number of times,
+//! produces a report byte-identical to a single-process
+//! [`crate::sweep::run_sweep`] of the same grid and seed
+//! (`tests/campaign.rs` pins this, and `scripts/campaign_smoke.sh`
+//! re-proves it across real processes with a SIGKILL mid-campaign).
+//!
+//! Enable with `pixelmtj campaign --coordinate ADDR` on the
+//! coordinator and `pixelmtj work --join ADDR` on each worker.
+
+pub mod coordinator;
+pub mod journal;
+pub mod worker;
+
+pub use coordinator::{
+    journal_header, run_coordinator, CampaignOptions, DEFAULT_LEASE_TTL,
+};
+pub use journal::{crc32, CellRecord, Journal, JournalHeader, JournalOpen};
+pub use worker::{run_worker, WorkerSummary};

@@ -1,0 +1,210 @@
+//! The campaign worker: a blocking client that joins a coordinator,
+//! builds the sweep world the `CAMPAIGN_WELCOME` describes, and pulls
+//! cell-range leases until the coordinator says `Done`.
+//!
+//! The worker is stateless across leases — every cell it scores is a
+//! pure function of the campaign configuration and the grid index, so a
+//! worker can die at any point and the coordinator just reissues its
+//! lease.  Results stream back one `CELL_RESULT` per cell as each cell
+//! completes (completion order within a lease is scheduling-dependent;
+//! the coordinator keys by grid index, so order never matters).
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{GeometryPreset, KeyedEnum, SweepConfig};
+use crate::sweep::SweepWorld;
+use crate::wire::proto::{
+    self, LeaseState, Msg, MsgOutcome, StatusCode, CAMPAIGN_VERSION,
+};
+
+/// What one worker did over its session, for the CLI exit line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Cells evaluated and streamed back.
+    pub cells_completed: u64,
+    /// Leases granted to this worker.
+    pub leases_granted: u64,
+}
+
+/// Join the coordinator at `addr` and work until the campaign is done.
+///
+/// `threads` is the local evaluation pool (0 = all cores);
+/// `lease_cells` is the preferred cells-per-lease (0 = take the
+/// coordinator default).  Returns after the closing `GOODBYE`
+/// handshake.
+pub fn run_worker(
+    addr: &str,
+    threads: usize,
+    lease_cells: usize,
+) -> Result<WorkerSummary> {
+    let mut stream = TcpStream::connect(addr).with_context(|| {
+        format!("connecting to campaign coordinator {addr}")
+    })?;
+    let _ = stream.set_nodelay(true);
+    // Short socket timeout; `read_reply` turns repeated timeouts into a
+    // hard deadline so a wedged coordinator fails loudly.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+
+    proto::write_msg(
+        &mut stream,
+        &Msg::CampaignHello {
+            version: CAMPAIGN_VERSION,
+            lease_cells: lease_cells as u32,
+        },
+    )
+    .context("sending CAMPAIGN_HELLO")?;
+    let welcome = match read_reply(&mut stream)? {
+        Msg::CampaignWelcome {
+            trials,
+            seed,
+            height,
+            width,
+            grid,
+            geometry,
+        } => (trials, seed, height, width, grid, geometry),
+        Msg::Error { code, detail } => {
+            bail!("coordinator rejected worker: {} ({detail})", code.name())
+        }
+        other => bail!(
+            "expected CAMPAIGN_WELCOME, got message type 0x{:02x}",
+            other.type_byte()
+        ),
+    };
+    let (trials, seed, height, width, grid, geometry) = welcome;
+    let geometry = if geometry.is_empty() {
+        None
+    } else {
+        Some(GeometryPreset::parse(&geometry).with_context(|| {
+            format!("coordinator sent unknown geometry '{geometry}'")
+        })?)
+    };
+    let cfg = SweepConfig {
+        grid,
+        trials,
+        threads,
+        seed,
+        sensor_height: height as usize,
+        sensor_width: width as usize,
+        geometry,
+        ..SweepConfig::default()
+    };
+    // The expensive, lease-independent setup happens once: grid
+    // expansion, sensor sim, and the shared per-trial planes.
+    let world = SweepWorld::build(&cfg)
+        .context("building sweep world from CAMPAIGN_WELCOME")?;
+
+    let mut summary = WorkerSummary::default();
+    loop {
+        proto::write_msg(&mut stream, &Msg::LeaseRequest)
+            .context("sending LEASE_REQUEST")?;
+        match read_reply(&mut stream)? {
+            Msg::LeaseGrant {
+                state: LeaseState::Granted,
+                lease_id,
+                start,
+                count,
+                ..
+            } => {
+                let (start, count) = (start as usize, count as usize);
+                ensure!(
+                    count > 0
+                        && start
+                            .checked_add(count)
+                            .is_some_and(|e| e <= world.cells().len()),
+                    "lease {lease_id} covers cells {start}+{count}, \
+                     grid has {}",
+                    world.cells().len()
+                );
+                // Stream each cell as it completes; the closure cannot
+                // return an error, so the first send failure is parked
+                // and re-raised after eval_range returns.
+                let mut send_err: Option<anyhow::Error> = None;
+                let results = world.eval_range(
+                    start,
+                    count,
+                    threads,
+                    None,
+                    |idx, r| {
+                        if send_err.is_some() {
+                            return;
+                        }
+                        let msg = Msg::CellResult {
+                            lease_id,
+                            index: idx as u64,
+                            trials: r.trials,
+                            elements_per_frame: r.elements_per_frame,
+                            ber: r.ber,
+                            e10: r.e10,
+                            e01: r.e01,
+                            agreement: r.agreement,
+                            mean_sparsity: r.mean_sparsity,
+                            energy_pj_per_frame: r.energy_pj_per_frame,
+                        };
+                        if let Err(e) = stream.write_all(&msg.encode()) {
+                            send_err = Some(anyhow::anyhow!(
+                                "sending CELL_RESULT {idx}: {e}"
+                            ));
+                        }
+                    },
+                )?;
+                if let Some(e) = send_err {
+                    return Err(e);
+                }
+                stream.flush().context("flushing CELL_RESULTs")?;
+                summary.leases_granted += 1;
+                summary.cells_completed += results.len() as u64;
+            }
+            Msg::LeaseGrant { state: LeaseState::Wait, retry_ms, .. } => {
+                std::thread::sleep(Duration::from_millis(
+                    retry_ms.max(10) as u64,
+                ));
+            }
+            Msg::LeaseGrant { state: LeaseState::Done, .. } => break,
+            Msg::Error { code, detail } => {
+                bail!("coordinator error: {} ({detail})", code.name())
+            }
+            other => bail!(
+                "expected LEASE_GRANT, got message type 0x{:02x}",
+                other.type_byte()
+            ),
+        }
+    }
+
+    proto::write_msg(&mut stream, &Msg::Goodbye { code: StatusCode::Ok })
+        .context("sending GOODBYE")?;
+    match read_reply(&mut stream)? {
+        Msg::Goodbye { .. } => {}
+        Msg::Error { code, detail } => {
+            bail!(
+                "coordinator error at session end: {} ({detail})",
+                code.name()
+            )
+        }
+        other => bail!(
+            "expected the closing GOODBYE, got message type 0x{:02x}",
+            other.type_byte()
+        ),
+    }
+    Ok(summary)
+}
+
+fn read_reply(stream: &mut TcpStream) -> Result<Msg> {
+    // The per-read socket timeout only wakes the read loop; this
+    // deadline is what actually gives up on a silent coordinator.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let overdue = move || Instant::now() > deadline;
+    match proto::read_msg(stream, &overdue) {
+        Ok(MsgOutcome::Msg(m)) => Ok(m),
+        Ok(MsgOutcome::Eof) => {
+            bail!("coordinator closed the connection mid-session")
+        }
+        Ok(MsgOutcome::Stopped) => {
+            bail!("timed out waiting for the coordinator")
+        }
+        Err(e) => bail!("protocol error from coordinator: {e}"),
+    }
+}

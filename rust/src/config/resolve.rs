@@ -52,6 +52,11 @@ pub enum Cmd {
     /// Wire client: push a synthetic frame stream to a `serve --stream
     /// --listen` server over the docs/PROTOCOL.md protocol.
     Push,
+    /// Campaign coordinator: lease sweep cells to remote workers,
+    /// checkpoint completions, reassemble the grid-ordered report.
+    Campaign,
+    /// Campaign worker: join a coordinator and evaluate leased cells.
+    Work,
 }
 
 impl KeyedEnum for Cmd {
@@ -64,6 +69,8 @@ impl KeyedEnum for Cmd {
         ("info", Self::Info),
         ("config", Self::Config),
         ("push", Self::Push),
+        ("campaign", Self::Campaign),
+        ("work", Self::Work),
     ];
 }
 
@@ -135,6 +142,7 @@ mod tests {
     fn cmd_and_provenance_are_keyed_enums() {
         for s in [
             "serve", "report", "sweep", "validate", "info", "config", "push",
+            "campaign", "work",
         ] {
             assert_eq!(Cmd::parse(s).unwrap().name(), s);
         }

@@ -41,6 +41,11 @@
 //!   (feature `pjrt`)
 //! * [`sweep`] — parallel Monte-Carlo reliability sweep engine over the
 //!   joint operating space (deterministic for any thread count)
+//! * [`campaign`] — distributed, resumable sweep campaigns: the
+//!   coordinator (cell-range leases, fsync'd CRC-framed checkpoint
+//!   journal, grid-ordered reassembly) and the worker that evaluates
+//!   leases through the same sweep engine core, over the campaign
+//!   messages of docs/PROTOCOL.md
 //! * [`energy`] — energy / bandwidth / latency accounting (paper §3.2-3.4)
 //! * [`runtime`] — PJRT client wrapper executing the AOT artifacts
 //!   (feature `pjrt`)
@@ -59,6 +64,7 @@
 //! [`architecture`] (docs/ARCHITECTURE.md).
 
 pub mod backend;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod circuit;

@@ -17,6 +17,11 @@
 //!                provenance (default|hwcfg|file|env|cli)
 //! * `push`     — wire client: stream synthetic frames to a
 //!                `serve --stream --listen` server (docs/PROTOCOL.md)
+//! * `campaign` — distributed-sweep coordinator: lease grid cells to
+//!                `work` processes, checkpoint completions, reassemble
+//!                the grid-ordered report (bit-identical to `sweep`)
+//! * `work`     — campaign worker: join a coordinator and evaluate
+//!                leased cells with the local thread pool
 
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -56,6 +61,8 @@ fn run() -> Result<()> {
         Cmd::Info => info(spec),
         Cmd::Config => config(spec),
         Cmd::Push => push(spec),
+        Cmd::Campaign => campaign(spec),
+        Cmd::Work => work(spec),
     }
 }
 
@@ -373,6 +380,83 @@ fn sweep(spec: SystemSpec) -> Result<()> {
         summary.cells.len() as f64 / summary.wall_secs.max(1e-9)
     );
     sweep_report::save(&PathBuf::from(&sys.spec().sweep.out_dir), &summary)?;
+    Ok(())
+}
+
+/// The distributed-campaign coordinator (`pixelmtj campaign`): same
+/// banner, table, and saved report as `sweep`, but the cells are
+/// evaluated by `pixelmtj work` processes over the campaign channel and
+/// every completion is journaled to `--checkpoint` before it counts —
+/// a killed campaign resumes instead of restarting.
+fn campaign(spec: SystemSpec) -> Result<()> {
+    let sys = System::new(spec);
+    let cfg = &sys.spec().sweep;
+    println!(
+        "campaign: grid \"{}\" × {} trials at {}×{}{} (seed {})",
+        cfg.grid,
+        cfg.trials,
+        cfg.sensor_height,
+        cfg.sensor_width,
+        match cfg.geometry {
+            Some(g) => format!(" [{}]", g.name()),
+            None => String::new(),
+        },
+        cfg.seed
+    );
+    println!(
+        "campaign: checkpoint {} ({} cells/lease)",
+        sys.spec().campaign.checkpoint,
+        sys.spec().campaign.lease_cells
+    );
+    let (cm, mut telemetry) = sys.campaign_telemetry()?;
+    if let Some(server) = &telemetry {
+        println!(
+            "telemetry: http://{}/metrics (/healthz /readyz)",
+            server.local_addr()
+        );
+    }
+    sweep_report::print_header();
+    let summary = sys.campaign_observed(
+        Some(&cm),
+        // The smoke script and the worker invocations key off this
+        // exact line to learn the bound (possibly ephemeral) port.
+        |addr| println!("campaign: listening on {addr}"),
+        |idx, cell| sweep_report::print_row(idx, cell),
+    )?;
+    if let Some(server) = &mut telemetry {
+        server.shutdown();
+    }
+    println!(
+        "\n{} cells × {} trials in {:.2} s over {} workers \
+         ({} checkpointed, {} leases reissued)",
+        summary.cells.len(),
+        summary.trials,
+        summary.wall_secs,
+        summary.threads_used,
+        cm.cells_checkpointed.get(),
+        cm.leases_expired.get()
+    );
+    sweep_report::save(&PathBuf::from(&sys.spec().sweep.out_dir), &summary)?;
+    Ok(())
+}
+
+/// A campaign worker (`pixelmtj work --join ADDR`): pulls cell-range
+/// leases and streams results until the coordinator reports done.
+fn work(spec: SystemSpec) -> Result<()> {
+    if spec.campaign.join.is_empty() {
+        bail!("work requires --join ADDR (a campaign --coordinate address)");
+    }
+    let addr = spec.campaign.join.clone();
+    println!("work: connecting to {addr}");
+    let sys = System::new(spec);
+    let started = Instant::now();
+    let summary = sys.work()?;
+    println!(
+        "work: {} cells over {} leases in {:.2} s",
+        summary.cells_completed,
+        summary.leases_granted,
+        started.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 

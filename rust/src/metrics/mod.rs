@@ -508,6 +508,148 @@ impl SweepMetrics {
     }
 }
 
+/// Coordinator-side telemetry for a distributed campaign
+/// (`crate::campaign`): lease economy, worker fleet, and checkpoint
+/// durability.  Observation-only, like [`SweepMetrics`] — nothing here
+/// feeds back into scheduling or scoring, so attaching it never
+/// perturbs the bit-exact reassembly contract.
+///
+/// `leases_outstanding` / `workers_alive` are *live* values (they go
+/// down as well as up), so they are plain atomics with reader methods
+/// rather than the peak-tracking [`Gauge`].
+#[derive(Debug, Default)]
+pub struct CampaignMetrics {
+    cells_total: AtomicU64,
+    leases_outstanding: AtomicU64,
+    workers_alive: AtomicU64,
+    /// Workers that ever completed the campaign handshake.
+    pub workers_total: Counter,
+    /// Leases reissued after a deadline pass or worker death.
+    pub leases_expired: Counter,
+    /// Cells made durable in the checkpoint journal (monotone; resumes
+    /// start it at the recovered count's worth of appends only for new
+    /// cells — recovered cells were counted by the crashed run).
+    pub cells_checkpointed: Counter,
+    /// Results for an already-checkpointed grid index (reissued lease
+    /// raced the original worker) — resolved idempotently, not errors.
+    pub duplicate_results: Counter,
+    /// Campaigns that started from a non-empty journal.
+    pub resumes: Counter,
+}
+
+impl CampaignMetrics {
+    /// Record the planned campaign size.
+    pub fn begin(&self, cells: usize) {
+        self.cells_total.store(cells as u64, Ordering::Relaxed);
+    }
+
+    pub fn set_leases_outstanding(&self, n: usize) {
+        self.leases_outstanding.store(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn worker_joined(&self) {
+        self.workers_total.inc();
+        self.workers_alive.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_left(&self) {
+        self.workers_alive.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn cells_total(&self) -> u64 {
+        self.cells_total.load(Ordering::Relaxed)
+    }
+
+    pub fn leases_outstanding(&self) -> u64 {
+        self.leases_outstanding.load(Ordering::Relaxed)
+    }
+
+    pub fn workers_alive(&self) -> u64 {
+        self.workers_alive.load(Ordering::Relaxed)
+    }
+
+    fn register_gauge(
+        self: &Arc<Self>,
+        reg: &Registry,
+        name: &str,
+        help: &str,
+        read: fn(&CampaignMetrics) -> f64,
+    ) -> Result<()> {
+        let m = Arc::clone(self);
+        let collect = move || {
+            vec![Sample::new(Vec::new(), SampleValue::Gauge(read(&m)))]
+        };
+        reg.register(name, help, MetricType::Gauge, collect)
+    }
+
+    fn register_counter(
+        self: &Arc<Self>,
+        reg: &Registry,
+        name: &str,
+        help: &str,
+        read: fn(&CampaignMetrics) -> u64,
+    ) -> Result<()> {
+        let m = Arc::clone(self);
+        let collect = move || {
+            vec![Sample::new(Vec::new(), SampleValue::Counter(read(&m)))]
+        };
+        reg.register(name, help, MetricType::Counter, collect)
+    }
+
+    /// Register the campaign coordinator families into `reg`.
+    pub fn register_into(self: &Arc<Self>, reg: &Registry) -> Result<()> {
+        self.register_gauge(
+            reg,
+            "pixelmtj_campaign_cells",
+            "Cells planned in the running distributed campaign",
+            |m| m.cells_total() as f64,
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_campaign_leases_outstanding",
+            "Cell-range leases currently granted and unexpired",
+            |m| m.leases_outstanding() as f64,
+        )?;
+        self.register_gauge(
+            reg,
+            "pixelmtj_campaign_workers_alive",
+            "Campaign workers currently connected",
+            |m| m.workers_alive() as f64,
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_campaign_workers_total",
+            "Workers that ever joined the campaign",
+            |m| m.workers_total.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_campaign_leases_expired_total",
+            "Leases reissued after worker death or deadline expiry",
+            |m| m.leases_expired.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_campaign_cells_checkpointed_total",
+            "Cells made durable in the checkpoint journal",
+            |m| m.cells_checkpointed.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_campaign_duplicate_results_total",
+            "Duplicate cell completions resolved idempotently",
+            |m| m.duplicate_results.get(),
+        )?;
+        self.register_counter(
+            reg,
+            "pixelmtj_campaign_resumes_total",
+            "Campaign starts that resumed from a non-empty journal",
+            |m| m.resumes.get(),
+        )?;
+        Ok(())
+    }
+}
+
 /// SplitMix64-style finalizer: derives a well-mixed per-frame `trace_id`
 /// from a `(stream epoch, submit sequence)` pair without shared RNG
 /// state — stamping trace ids can never perturb device RNG streams.
@@ -683,6 +825,44 @@ mod tests {
         m.worker_stopped();
         m.worker_stopped();
         assert_eq!(m.workers_alive(), 0);
+    }
+
+    #[test]
+    fn campaign_metrics_track_live_values_and_register() {
+        let m = Arc::new(CampaignMetrics::default());
+        m.begin(12);
+        m.worker_joined();
+        m.worker_joined();
+        m.set_leases_outstanding(3);
+        m.cells_checkpointed.inc();
+        m.duplicate_results.inc();
+        m.leases_expired.inc();
+        assert_eq!(m.cells_total(), 12);
+        assert_eq!(m.workers_alive(), 2);
+        assert_eq!(m.workers_total.get(), 2);
+        assert_eq!(m.leases_outstanding(), 3);
+        m.worker_left();
+        m.set_leases_outstanding(1);
+        // Live values go down — unlike the peak-tracking Gauge.
+        assert_eq!(m.workers_alive(), 1);
+        assert_eq!(m.leases_outstanding(), 1);
+
+        let reg = Registry::new();
+        m.register_into(&reg).unwrap();
+        let text = expo::encode(&reg.gather());
+        assert!(text.contains("pixelmtj_campaign_cells 12"), "{text}");
+        assert!(
+            text.contains("pixelmtj_campaign_workers_alive 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("pixelmtj_campaign_leases_expired_total 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("pixelmtj_campaign_resumes_total 0"),
+            "{text}"
+        );
     }
 
     #[test]

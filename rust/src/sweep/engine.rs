@@ -195,6 +195,249 @@ pub fn run_sweep_with(
     run_sweep_observed(cfg, None, on_cell)
 }
 
+/// The campaign world: every cell-independent fact a sweep needs, built
+/// once and shared by all evaluation — the sensor sim, the backend, the
+/// precomputed trial planes, and the grid-ordered cell expansion.
+///
+/// Cell evaluation through [`SweepWorld::eval_range`] is a **pure
+/// function** of `(config, cell index)`: two worlds built from the same
+/// [`SweepConfig`] — in the same process or across machines — score any
+/// cell to bit-identical [`CellResult`]s.  This is what makes the
+/// distributed campaign layer (`crate::campaign`) free determinism-wise:
+/// a coordinator can shard index ranges across worker processes and
+/// reassemble by index, and the merged report equals a single-process
+/// [`run_sweep`] byte for byte.
+pub struct SweepWorld {
+    sim: PixelArraySim,
+    backend: NativeBackend,
+    trials: Vec<Trial>,
+    geom: Geometry,
+    seed: u32,
+    oh: usize,
+    ow: usize,
+    cells: Vec<SweepCell>,
+}
+
+impl SweepWorld {
+    /// Validate `cfg`, expand its grid, and precompute the shared trial
+    /// planes (the expensive, cell-independent half of the campaign).
+    pub fn build(cfg: &SweepConfig) -> Result<Self> {
+        let grid =
+            SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
+        let cells = grid.cells().context("expanding sweep grid")?;
+        ensure!(!cells.is_empty(), "sweep grid expands to zero cells");
+        ensure!(cfg.trials > 0, "sweep needs at least one trial per cell");
+        ensure!(
+            cfg.sensor_height >= 8 && cfg.sensor_width >= 8,
+            "sweep frames must be at least 8×8 (got {}×{})",
+            cfg.sensor_height,
+            cfg.sensor_width
+        );
+
+        // One shared sensor sim + backend: binarize_at takes the
+        // operating point explicitly, so per-cell HwConfig clones are
+        // unnecessary.  The backend runs batch-1 per frame, so its
+        // internal batch pool is pinned to one worker — the sweep pool
+        // is the only parallelism.
+        let hw = HwConfig::default();
+        let weights = FirstLayerWeights::synthetic(
+            hw.network.first_channels,
+            hw.network.in_channels,
+            hw.network.kernel_size,
+            1,
+        );
+        let sim = PixelArraySim::new(hw.clone(), weights.clone());
+        let backend = NativeBackend::new(
+            hw,
+            weights,
+            cfg.sensor_height,
+            cfg.sensor_width,
+            1,
+        );
+        let gen = SceneGen::new(
+            sim.cfg.network.in_channels,
+            cfg.sensor_height,
+            cfg.sensor_width,
+        );
+        let geom =
+            Geometry::from_cfg(&sim.cfg, cfg.sensor_height, cfg.sensor_width);
+        let (oh, ow) = sim.out_hw(cfg.sensor_height, cfg.sensor_width);
+        let elems = backend.act_elems();
+        let ideal_op = OperatingPoint::from_cfg(&sim.cfg.mtj);
+
+        // Precompute the shared, cell-independent half of every trial
+        // once: analog planes, ideal-comparator bits (packed), and
+        // ideal-path labels (every cell scores the same trials — the
+        // paired design).
+        let trials = (0..cfg.trials)
+            .map(|t| -> Result<Trial> {
+                let seq = trial_seed(cfg.seed, t);
+                let frame = gen.textured(seq);
+                let (plane, astats) = sim.analog_plane(&frame);
+                let (ideal, _) = sim.binarize_at(
+                    &plane,
+                    oh,
+                    ow,
+                    seq,
+                    &ideal_op,
+                    CaptureMode::Ideal,
+                );
+                ensure!(
+                    ideal.len() == elems,
+                    "sweep frame maps to {} activations; backend expects {}",
+                    ideal.len(),
+                    elems
+                );
+                let logits = backend.run_backend_packed(ideal.words(), 1)?;
+                let label_ideal = argmax(&logits);
+                let ideal_ones = ideal.count_ones();
+                Ok(Trial {
+                    seq,
+                    plane,
+                    astats,
+                    ideal,
+                    ideal_ones,
+                    label_ideal,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Self {
+            sim,
+            backend,
+            trials,
+            geom,
+            seed: cfg.seed,
+            oh,
+            ow,
+            cells,
+        })
+    }
+
+    /// The grid-ordered cell expansion — index `i` here is the global
+    /// grid index every sink, checkpoint record, and campaign lease uses.
+    pub fn cells(&self) -> &[SweepCell] {
+        &self.cells
+    }
+
+    /// Score the cell range `[start, start + count)` across a worker
+    /// pool of `threads` threads (0 = all available cores; clamped to
+    /// the range size).  `on_cell` receives `(global grid index,
+    /// result)` for every cell as it completes — completion order is
+    /// scheduling-dependent, the returned vector is always in range
+    /// order.  `telemetry` is observation-only (see
+    /// [`run_sweep_observed`]).
+    pub fn eval_range(
+        &self,
+        start: usize,
+        count: usize,
+        threads: usize,
+        telemetry: Option<&SweepMetrics>,
+        mut on_cell: impl FnMut(usize, &CellResult),
+    ) -> Result<Vec<CellResult>> {
+        let end = start
+            .checked_add(count)
+            .filter(|&e| e <= self.cells.len())
+            .with_context(|| {
+                format!(
+                    "cell range {start}+{count} exceeds the {}-cell grid",
+                    self.cells.len()
+                )
+            })?;
+        ensure!(count > 0, "cell range is empty");
+        let range = &self.cells[start..end];
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        let threads = threads.clamp(1, range.len());
+
+        let ctx = CellCtx {
+            sim: &self.sim,
+            backend: &self.backend,
+            trials: &self.trials,
+            geom: self.geom,
+            seed: self.seed,
+            oh: self.oh,
+            ow: self.ow,
+        };
+
+        let (job_tx, job_rx) =
+            sync_channel::<(usize, SweepCell)>(threads * 2);
+        let job_rx = Mutex::new(job_rx);
+        let (res_tx, res_rx) = channel::<(usize, Result<CellResult>)>();
+        let mut slots: Vec<Option<Result<CellResult>>> =
+            (0..range.len()).map(|_| None).collect();
+
+        std::thread::scope(|s| {
+            // Move the job sender into the scope body so it is closed
+            // before the scope joins — a worker blocked on recv() would
+            // otherwise never exit.
+            let job_tx = job_tx;
+            for _ in 0..threads {
+                let res_tx = res_tx.clone();
+                let job_rx = &job_rx;
+                let ctx = &ctx;
+                s.spawn(move || {
+                    if let Some(t) = telemetry {
+                        t.worker_started();
+                    }
+                    loop {
+                        let job =
+                            job_rx.lock().expect("sweep job lock").recv();
+                        let Ok((idx, cell)) = job else { break };
+                        let out = eval_cell(ctx, &cell);
+                        if res_tx.send((idx, out)).is_err() {
+                            break;
+                        }
+                    }
+                    if let Some(t) = telemetry {
+                        t.worker_stopped();
+                    }
+                });
+            }
+            drop(res_tx);
+            for (idx, cell) in range.iter().enumerate() {
+                job_tx
+                    .send((start + idx, *cell))
+                    .expect("sweep workers exited before taking all cells");
+            }
+            drop(job_tx);
+            // Stream each completed cell to the report sink immediately —
+            // campaign progress is visible while later cells still run —
+            // then slot it for the deterministic range-order result.
+            for _ in 0..range.len() {
+                let (idx, out) =
+                    res_rx.recv().expect("sweep worker pool hung up early");
+                // Count before the sink runs so a progress line printed
+                // from `on_cell` already includes the cell it reports.
+                if let Some(t) = telemetry {
+                    t.cell_done();
+                }
+                if let Ok(ref cell_result) = out {
+                    on_cell(idx, cell_result);
+                }
+                slots[idx - start] = Some(out);
+            }
+        });
+
+        // Propagate the first failure in cell order (deterministic even
+        // if several cells failed on different workers).
+        let mut results = Vec::with_capacity(range.len());
+        for (off, slot) in slots.into_iter().enumerate() {
+            let idx = start + off;
+            let out = slot.unwrap_or_else(|| {
+                panic!("sweep cell {idx} produced no result")
+            });
+            results.push(out.with_context(|| format!("sweep cell {idx}"))?);
+        }
+        Ok(results)
+    }
+}
+
 /// [`run_sweep_with`] plus campaign progress telemetry.  `telemetry` is
 /// strictly observation-only — workers report liveness and the collector
 /// counts completed cells, but nothing flows back into cell evaluation,
@@ -203,157 +446,22 @@ pub fn run_sweep_with(
 pub fn run_sweep_observed(
     cfg: &SweepConfig,
     telemetry: Option<&SweepMetrics>,
-    mut on_cell: impl FnMut(usize, &CellResult),
+    on_cell: impl FnMut(usize, &CellResult),
 ) -> Result<SweepSummary> {
-    let grid = SweepGrid::parse(&cfg.grid).context("parsing sweep grid")?;
-    let cells = grid.cells().context("expanding sweep grid")?;
-    ensure!(!cells.is_empty(), "sweep grid expands to zero cells");
-    ensure!(cfg.trials > 0, "sweep needs at least one trial per cell");
-    ensure!(
-        cfg.sensor_height >= 8 && cfg.sensor_width >= 8,
-        "sweep frames must be at least 8×8 (got {}×{})",
-        cfg.sensor_height,
-        cfg.sensor_width
-    );
+    let world = SweepWorld::build(cfg)?;
+    let n_cells = world.cells().len();
     let threads = if cfg.threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         cfg.threads
     };
-    let threads = threads.clamp(1, cells.len());
-
-    // One shared sensor sim + backend: binarize_at takes the operating
-    // point explicitly, so per-cell HwConfig clones are unnecessary.
-    // The backend runs batch-1 per frame, so its internal batch pool is
-    // pinned to one worker — the sweep pool is the only parallelism.
-    let hw = HwConfig::default();
-    let weights = FirstLayerWeights::synthetic(
-        hw.network.first_channels,
-        hw.network.in_channels,
-        hw.network.kernel_size,
-        1,
-    );
-    let sim = PixelArraySim::new(hw.clone(), weights.clone());
-    let backend = NativeBackend::new(
-        hw,
-        weights,
-        cfg.sensor_height,
-        cfg.sensor_width,
-        1,
-    );
-    let gen = SceneGen::new(
-        sim.cfg.network.in_channels,
-        cfg.sensor_height,
-        cfg.sensor_width,
-    );
-    let geom =
-        Geometry::from_cfg(&sim.cfg, cfg.sensor_height, cfg.sensor_width);
-    let (oh, ow) = sim.out_hw(cfg.sensor_height, cfg.sensor_width);
-    let elems = backend.act_elems();
-    let ideal_op = OperatingPoint::from_cfg(&sim.cfg.mtj);
-
-    // Precompute the shared, cell-independent half of every trial once:
-    // analog planes, ideal-comparator bits (packed), and ideal-path
-    // labels (every cell scores the same trials — the paired design).
-    let trials = (0..cfg.trials)
-        .map(|t| -> Result<Trial> {
-            let seq = trial_seed(cfg.seed, t);
-            let frame = gen.textured(seq);
-            let (plane, astats) = sim.analog_plane(&frame);
-            let (ideal, _) =
-                sim.binarize_at(&plane, oh, ow, seq, &ideal_op, CaptureMode::Ideal);
-            ensure!(
-                ideal.len() == elems,
-                "sweep frame maps to {} activations; backend expects {}",
-                ideal.len(),
-                elems
-            );
-            let logits = backend.run_backend_packed(ideal.words(), 1)?;
-            let label_ideal = argmax(&logits);
-            let ideal_ones = ideal.count_ones();
-            Ok(Trial { seq, plane, astats, ideal, ideal_ones, label_ideal })
-        })
-        .collect::<Result<Vec<_>>>()?;
-
-    let ctx = CellCtx {
-        sim: &sim,
-        backend: &backend,
-        trials: &trials,
-        geom,
-        seed: cfg.seed,
-        oh,
-        ow,
-    };
+    let threads = threads.clamp(1, n_cells);
 
     if let Some(t) = telemetry {
-        t.begin(cells.len(), cfg.trials as usize);
+        t.begin(n_cells, cfg.trials as usize);
     }
     let t0 = Instant::now();
-    let (job_tx, job_rx) = sync_channel::<(usize, SweepCell)>(threads * 2);
-    let job_rx = Mutex::new(job_rx);
-    let (res_tx, res_rx) = channel::<(usize, Result<CellResult>)>();
-    let mut slots: Vec<Option<Result<CellResult>>> =
-        (0..cells.len()).map(|_| None).collect();
-
-    std::thread::scope(|s| {
-        // Move the job sender into the scope body so it is closed before
-        // the scope joins — a worker blocked on recv() would otherwise
-        // never exit.
-        let job_tx = job_tx;
-        for _ in 0..threads {
-            let res_tx = res_tx.clone();
-            let job_rx = &job_rx;
-            let ctx = &ctx;
-            s.spawn(move || {
-                if let Some(t) = telemetry {
-                    t.worker_started();
-                }
-                loop {
-                    let job = job_rx.lock().expect("sweep job lock").recv();
-                    let Ok((idx, cell)) = job else { break };
-                    let out = eval_cell(ctx, &cell);
-                    if res_tx.send((idx, out)).is_err() {
-                        break;
-                    }
-                }
-                if let Some(t) = telemetry {
-                    t.worker_stopped();
-                }
-            });
-        }
-        drop(res_tx);
-        for (idx, cell) in cells.iter().enumerate() {
-            job_tx
-                .send((idx, *cell))
-                .expect("sweep workers exited before taking all cells");
-        }
-        drop(job_tx);
-        // Stream each completed cell to the report sink immediately —
-        // campaign progress is visible while later cells still run —
-        // then slot it for the deterministic grid-order summary.
-        for _ in 0..cells.len() {
-            let (idx, out) =
-                res_rx.recv().expect("sweep worker pool hung up early");
-            // Count before the sink runs so a progress line printed from
-            // `on_cell` already includes the cell it reports.
-            if let Some(t) = telemetry {
-                t.cell_done();
-            }
-            if let Ok(ref cell_result) = out {
-                on_cell(idx, cell_result);
-            }
-            slots[idx] = Some(out);
-        }
-    });
-
-    // Propagate the first failure in cell order (deterministic even if
-    // several cells failed on different workers).
-    let mut results = Vec::with_capacity(cells.len());
-    for (idx, slot) in slots.into_iter().enumerate() {
-        let out = slot
-            .unwrap_or_else(|| panic!("sweep cell {idx} produced no result"));
-        results.push(out.with_context(|| format!("sweep cell {idx}"))?);
-    }
+    let results = world.eval_range(0, n_cells, threads, telemetry, on_cell)?;
 
     Ok(SweepSummary {
         grid: cfg.grid.clone(),

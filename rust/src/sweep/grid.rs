@@ -153,6 +153,21 @@ impl SweepGrid {
     /// Expand to cells in deterministic nested order, validating every
     /// axis value and cross-axis combination.
     pub fn cells(&self) -> Result<Vec<SweepCell>> {
+        // parse() already rejects empty value lists, but grids can be
+        // built directly — an empty axis would silently expand to zero
+        // cells, so fail with the axis named instead.
+        for (axis, empty) in [
+            ("v", self.voltages.is_empty()),
+            ("pulse", self.pulses_ns.is_empty()),
+            ("n", self.n_devices.is_empty()),
+            ("k", self.k_majority.is_empty()),
+            ("ap", self.stuck_ap.is_empty()),
+            ("p", self.stuck_p.is_empty()),
+            ("sigma", self.sigmas.is_empty()),
+            ("mode", self.modes.is_empty()),
+        ] {
+            ensure!(!empty, "grid axis '{axis}' has no values");
+        }
         for &v in &self.voltages {
             ensure!(
                 v > 0.0 && v <= 1.5,
@@ -266,6 +281,21 @@ mod tests {
         assert!(SweepGrid::parse("sigma=0.9").unwrap().cells().is_err());
         assert!(SweepGrid::parse("pulse=0").unwrap().cells().is_err());
         assert!(SweepGrid::parse("n=0").unwrap().cells().is_err());
+    }
+
+    #[test]
+    fn cells_reject_empty_axes_by_name() {
+        // Only direct construction can produce empty axes — parse()
+        // rejects empty value lists up front.
+        let mut g = SweepGrid::default();
+        g.voltages.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("axis 'v'"), "got: {err}");
+
+        let mut g = SweepGrid::default();
+        g.modes.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("axis 'mode'"), "got: {err}");
     }
 
     #[test]

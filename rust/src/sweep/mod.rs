@@ -33,6 +33,6 @@ pub mod grid;
 
 pub use engine::{
     run_sweep, run_sweep_observed, run_sweep_with, trial_seed, CellResult,
-    SweepSummary,
+    SweepSummary, SweepWorld,
 };
 pub use grid::{SweepCell, SweepGrid};

@@ -33,6 +33,10 @@ use anyhow::{Context, Result};
 use std::sync::Arc;
 
 use crate::backend::{self, InferenceBackend};
+use crate::campaign::{
+    run_coordinator, run_worker, CampaignOptions, WorkerSummary,
+    DEFAULT_LEASE_TTL,
+};
 use crate::config::{
     BackendKind, Cmd, GeometryPreset, KeyedEnum, Provenance, SparseCoding,
     SweepConfig, Workload,
@@ -43,7 +47,7 @@ use crate::coordinator::stream::{
 use crate::coordinator::{Pipeline, RunReport};
 use crate::metrics::http::{MetricsServer, Readiness};
 use crate::metrics::registry::{register_up, Registry};
-use crate::metrics::SweepMetrics;
+use crate::metrics::{CampaignMetrics, SweepMetrics};
 use crate::reports::ReportCtx;
 use crate::sensor::{scene::SceneGen, FirstLayerWeights, PixelArraySim};
 use crate::sweep::{
@@ -299,6 +303,60 @@ impl System {
         let ready: Readiness = Arc::new(|| Ok(()));
         let server = MetricsServer::start(&addr, reg, ready)?;
         Ok((sm, Some(server)))
+    }
+
+    /// Coordinator telemetry for the distributed-campaign path: a
+    /// [`CampaignMetrics`] the caller threads into
+    /// [`System::campaign_observed`], plus the exposition server when
+    /// `metrics_addr` is set.  Like sweeps, the coordinator has no stage
+    /// threads, so `/readyz` is ready for the campaign's lifetime.
+    pub fn campaign_telemetry(
+        &self,
+    ) -> Result<(Arc<CampaignMetrics>, Option<MetricsServer>)> {
+        let cm = Arc::new(CampaignMetrics::default());
+        let Some(addr) = self.spec.pipeline.metrics_addr.clone() else {
+            return Ok((cm, None));
+        };
+        let reg = Arc::new(Registry::new());
+        register_up(&reg)?;
+        cm.register_into(&reg)?;
+        let ready: Readiness = Arc::new(|| Ok(()));
+        let server = MetricsServer::start(&addr, reg, ready)?;
+        Ok((cm, Some(server)))
+    }
+
+    /// Run the distributed-campaign coordinator over the spec's sweep
+    /// grid (`campaign` subcommand): lease cells to remote workers,
+    /// checkpoint completions to `spec.campaign.checkpoint`, and return
+    /// the grid-ordered summary — bit-identical to [`System::sweep`] of
+    /// the same spec.  `on_listen` sees the bound address (port 0 picks
+    /// an ephemeral port); `on_cell` streams completions.
+    pub fn campaign_observed(
+        &self,
+        telemetry: Option<&CampaignMetrics>,
+        on_listen: impl FnOnce(std::net::SocketAddr),
+        on_cell: impl FnMut(usize, &CellResult),
+    ) -> Result<SweepSummary> {
+        let opts = CampaignOptions {
+            listen: self.spec.campaign.coordinate.clone(),
+            lease_cells: self.spec.campaign.lease_cells,
+            checkpoint: std::path::PathBuf::from(
+                &self.spec.campaign.checkpoint,
+            ),
+            lease_ttl: DEFAULT_LEASE_TTL,
+        };
+        run_coordinator(&self.spec.sweep, &opts, telemetry, on_listen, on_cell)
+    }
+
+    /// Join a campaign coordinator as a worker (`work` subcommand):
+    /// evaluate leased cell ranges with `spec.sweep.threads` local
+    /// threads until the coordinator reports the campaign done.
+    pub fn work(&self) -> Result<WorkerSummary> {
+        run_worker(
+            &self.spec.campaign.join,
+            self.spec.sweep.threads,
+            self.spec.campaign.lease_cells,
+        )
     }
 
     /// Run the spec's Monte-Carlo sweep campaign (deterministic for any

@@ -65,7 +65,36 @@ pub struct SystemSpec {
     pub push_batch_frames: usize,
     /// Concurrent interleaved sessions for `push` (`--sessions`).
     pub push_sessions: usize,
+    /// Distributed-campaign channel knobs (`campaign` / `work`).
+    pub campaign: CampaignSpec,
     prov: BTreeMap<&'static str, Provenance>,
+}
+
+/// The campaign channel's resolved knobs (docs/PROTOCOL.md "Campaign
+/// channel"): where the coordinator listens, where a worker joins, how
+/// many cells ride one lease, and where completions are journaled.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Address the coordinator listens on (`campaign --coordinate`).
+    pub coordinate: String,
+    /// Coordinator address a worker joins (`work --join`).
+    pub join: String,
+    /// Cells per lease (`--lease-cells`; a worker's value is a request
+    /// the coordinator caps at its own).
+    pub lease_cells: usize,
+    /// Checkpoint journal path (`campaign --checkpoint`).
+    pub checkpoint: String,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            coordinate: "127.0.0.1:0".to_string(),
+            join: String::new(),
+            lease_cells: 4,
+            checkpoint: "reports/campaign.journal".to_string(),
+        }
+    }
 }
 
 impl SystemSpec {
@@ -85,6 +114,7 @@ impl SystemSpec {
             wire_coding: WireCoding::F32,
             push_batch_frames: 1,
             push_sessions: 1,
+            campaign: CampaignSpec::default(),
             prov: BTreeMap::new(),
         }
     }
@@ -158,15 +188,26 @@ pub(crate) struct FieldDef {
 }
 
 const SERVE: &[Cmd] = &[Cmd::Serve, Cmd::Config];
-const SWEEP: &[Cmd] = &[Cmd::Sweep, Cmd::Config];
-const GEOM: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Push, Cmd::Config];
-const SCRAPE: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
+/// The campaign coordinator owns the same grid/trials/seed knobs as a
+/// local sweep (workers get them from `CAMPAIGN_WELCOME`, not the CLI).
+const SWEEP: &[Cmd] = &[Cmd::Sweep, Cmd::Campaign, Cmd::Config];
+/// The thread pool evaluates cells: a local sweep's workers, or a
+/// campaign worker's — never the coordinator, which only leases.
+const THREADS: &[Cmd] = &[Cmd::Sweep, Cmd::Work, Cmd::Config];
+const GEOM: &[Cmd] =
+    &[Cmd::Serve, Cmd::Sweep, Cmd::Push, Cmd::Campaign, Cmd::Config];
+const SCRAPE: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Campaign, Cmd::Config];
 const DIRS: &[Cmd] = &[Cmd::Serve, Cmd::Report, Cmd::Validate, Cmd::Info, Cmd::Config];
-const FILES: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Config];
-const OUT: &[Cmd] = &[Cmd::Report, Cmd::Sweep, Cmd::Config];
+const FILES: &[Cmd] = &[Cmd::Serve, Cmd::Sweep, Cmd::Campaign, Cmd::Config];
+const OUT: &[Cmd] = &[Cmd::Report, Cmd::Sweep, Cmd::Campaign, Cmd::Config];
 /// The wire client shares serve's synthetic-load shaping flags.
 const LOAD: &[Cmd] = &[Cmd::Serve, Cmd::Push, Cmd::Config];
 const PUSH: &[Cmd] = &[Cmd::Push, Cmd::Config];
+const CAMPAIGN: &[Cmd] = &[Cmd::Campaign, Cmd::Config];
+const WORK: &[Cmd] = &[Cmd::Work, Cmd::Config];
+/// Both campaign sides shape the lease size: the coordinator sets the
+/// cap, a worker requests a (smaller) preference.
+const LEASE: &[Cmd] = &[Cmd::Campaign, Cmd::Work, Cmd::Config];
 
 /// One row per field; `FieldDef` literals keep every declaration in one
 /// place (flag + json key + subcommands + parse + display).
@@ -335,7 +376,7 @@ fn build_registry() -> Vec<FieldDef> {
             name: "threads",
             hint: "N".to_string(),
             json: Some("threads"),
-            cmds: SWEEP,
+            cmds: THREADS,
             kind: Kind::USize(|s, v| s.sweep.threads = v),
             also_marks: &[],
             get: |s| s.sweep.threads.to_string(),
@@ -479,6 +520,50 @@ fn build_registry() -> Vec<FieldDef> {
             also_marks: &[],
             get: |s| s.push_sessions.to_string(),
         },
+        // The campaign channel (docs/PROTOCOL.md "Campaign channel"):
+        // `campaign` leases sweep cells to `work` processes and journals
+        // completions.  No JSON keys: the sweep half of a --config
+        // profile already describes the grid, and the channel endpoints
+        // are per-invocation, like `push --connect`.
+        FieldDef {
+            name: "coordinate",
+            hint: "ADDR".to_string(),
+            json: None,
+            cmds: CAMPAIGN,
+            kind: Kind::Str(|s, v| s.campaign.coordinate = v),
+            also_marks: &[],
+            get: |s| s.campaign.coordinate.clone(),
+        },
+        FieldDef {
+            name: "join",
+            hint: "ADDR".to_string(),
+            json: None,
+            cmds: WORK,
+            kind: Kind::Str(|s, v| s.campaign.join = v),
+            also_marks: &[],
+            get: |s| match s.campaign.join.as_str() {
+                "" => "-".to_string(),
+                a => a.to_string(),
+            },
+        },
+        FieldDef {
+            name: "lease-cells",
+            hint: "N".to_string(),
+            json: None,
+            cmds: LEASE,
+            kind: Kind::USize(|s, v| s.campaign.lease_cells = v),
+            also_marks: &[],
+            get: |s| s.campaign.lease_cells.to_string(),
+        },
+        FieldDef {
+            name: "checkpoint",
+            hint: "PATH".to_string(),
+            json: None,
+            cmds: CAMPAIGN,
+            kind: Kind::Str(|s, v| s.campaign.checkpoint = v),
+            also_marks: &[],
+            get: |s| s.campaign.checkpoint.clone(),
+        },
     ]
 }
 
@@ -580,7 +665,7 @@ pub fn resolve_spec(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<SystemSpec
     // -- file layer ------------------------------------------------------
     if let Some(path) = spec.config_path.clone() {
         let what = match cmd {
-            Cmd::Sweep => "loading sweep config",
+            Cmd::Sweep | Cmd::Campaign => "loading sweep config",
             _ => "loading pipeline config",
         };
         let v = Value::from_file(Path::new(&path))
@@ -663,6 +748,20 @@ pub fn resolve_spec(cmd: Cmd, args: &Args, env: &EnvSource) -> Result<SystemSpec
     // One rejection mechanism for unknown / misplaced / valueless flags:
     // anything the registry didn't consume for this subcommand.
     args.finish()?;
+
+    // `threads == 0` is the internal "auto-size" default; as an explicit
+    // request it is a contradiction, so reject it loudly instead of
+    // silently mapping it back to auto.
+    if spec.sweep.threads == 0 {
+        let src = match spec.provenance("threads") {
+            Provenance::Cli => Some("--threads"),
+            Provenance::Env => Some("PIXELMTJ_THREADS"),
+            _ => None,
+        };
+        if let Some(src) = src {
+            bail!("{src} must be at least 1 (omit it to auto-size the pool)");
+        }
+    }
 
     // -- serve cross-flag rules (explicit flags only: the file and env
     //    layers are ambient profiles, so their stream-only settings get
@@ -1038,6 +1137,79 @@ mod tests {
         let err = resolve("push --connect 1.2.3.4:5 --max-sessions 2")
             .unwrap_err();
         assert_eq!(format!("{err}"), "unknown option --max-sessions");
+    }
+
+    #[test]
+    fn campaign_fields_resolve_with_gating_and_provenance() {
+        // Coordinator side: the sweep-shaped knobs plus the channel's own.
+        let spec = resolve(
+            "campaign --coordinate 127.0.0.1:7171 --lease-cells 8 \
+             --checkpoint cp.journal --grid v=0.8 --trials 4",
+        )
+        .unwrap();
+        assert_eq!(spec.campaign.coordinate, "127.0.0.1:7171");
+        assert_eq!(spec.campaign.lease_cells, 8);
+        assert_eq!(spec.campaign.checkpoint, "cp.journal");
+        assert_eq!(spec.sweep.grid, "v=0.8");
+        assert_eq!(spec.sweep.trials, 4);
+        assert_eq!(spec.provenance("coordinate"), Provenance::Cli);
+        assert_eq!(spec.provenance("checkpoint"), Provenance::Cli);
+
+        // Defaults: ephemeral port, journal beside the sweep report.
+        let spec = resolve("campaign --grid v=0.8").unwrap();
+        assert_eq!(spec.campaign.coordinate, "127.0.0.1:0");
+        assert_eq!(spec.campaign.lease_cells, 4);
+        assert_eq!(spec.campaign.checkpoint, "reports/campaign.journal");
+
+        // Worker side: the join address and the local pool knobs only —
+        // grid/trials/seed arrive in CAMPAIGN_WELCOME, never on the CLI.
+        let spec =
+            resolve("work --join 127.0.0.1:7171 --threads 2 --lease-cells 2")
+                .unwrap();
+        assert_eq!(spec.campaign.join, "127.0.0.1:7171");
+        assert_eq!(spec.sweep.threads, 2);
+        assert_eq!(spec.campaign.lease_cells, 2);
+        assert_eq!(spec.provenance("join"), Provenance::Cli);
+        let err = resolve("work --grid v=0.8").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --grid");
+        let err = resolve("work --coordinate 1.2.3.4:5").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --coordinate");
+
+        // The channel flags stay off the other subcommands.
+        let err = resolve("campaign --join 1.2.3.4:5").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --join");
+        let err = resolve("sweep --coordinate 1.2.3.4:5").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --coordinate");
+        let err = resolve("sweep --lease-cells 4").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --lease-cells");
+
+        // The coordinator never evaluates cells, so it has no pool knob.
+        let err = resolve("campaign --threads 2").unwrap_err();
+        assert_eq!(format!("{err}"), "unknown option --threads");
+    }
+
+    #[test]
+    fn explicit_zero_threads_is_rejected_with_the_source_named() {
+        let err = resolve("sweep --threads 0").unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "--threads must be at least 1 (omit it to auto-size the pool)"
+        );
+        let err = resolve("work --join 127.0.0.1:1 --threads 0").unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "--threads must be at least 1 (omit it to auto-size the pool)"
+        );
+        let a = args("sweep");
+        let env = EnvSource::from_pairs([("PIXELMTJ_THREADS", "0")]);
+        let err = resolve_spec(Cmd::Sweep, &a, &env).unwrap_err();
+        assert_eq!(
+            format!("{err}"),
+            "PIXELMTJ_THREADS must be at least 1 \
+             (omit it to auto-size the pool)"
+        );
+        // The internal default 0 still means "auto" when nothing set it.
+        assert_eq!(resolve("sweep").unwrap().sweep.threads, 0);
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod server;
 
 pub use client::{WireClient, WireResult};
 pub use proto::{
-    Msg, MsgOutcome, StatusCode, WireError, MAGIC, VERSION, VERSION_V2,
+    LeaseState, Msg, MsgOutcome, StatusCode, WireError, CAMPAIGN_VERSION,
+    MAGIC, VERSION, VERSION_V2,
 };
 pub use server::{SessionCtx, WireMetrics, WireServer, MAX_SESSIONS};

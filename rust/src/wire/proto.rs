@@ -12,6 +12,13 @@
 //! never see it) adds the batched envelopes `FRAME_BATCH` and
 //! `RESULT_BATCH`, which amortize the 9-byte envelope and the
 //! per-message syscalls across `count` frames at high fps.
+//!
+//! The campaign channel (`0x10`–`0x14`, its own listener — see the
+//! *Campaign channel* section of docs/PROTOCOL.md) reuses the same
+//! envelope, status codes, and `GOODBYE`/`ERROR` vocabulary to
+//! distribute sweep cells to worker processes and stream per-cell
+//! results back.  Cell statistics travel as f64 **bit patterns**
+//! (`to_bits`/`from_bits`), so distributed reassembly stays bit-exact.
 
 use std::fmt;
 use std::io::{self, Read, Write};
@@ -31,6 +38,11 @@ pub const VERSION: u16 = 1;
 /// exchange `FRAME_BATCH`/`RESULT_BATCH` envelopes.
 pub const VERSION_V2: u16 = 2;
 
+/// Campaign-channel protocol version, negotiated in `CAMPAIGN_HELLO`.
+/// Versioned independently of the frame-ingest channel: the two
+/// listeners evolve separately.
+pub const CAMPAIGN_VERSION: u16 = 1;
+
 /// Envelope size: magic + type byte + payload length.
 pub const HEADER_LEN: usize = 9;
 
@@ -49,6 +61,11 @@ pub const MESSAGE_TYPES: &[(u8, &str)] = &[
     (0x06, "ERROR"),
     (0x07, "FRAME_BATCH"),
     (0x08, "RESULT_BATCH"),
+    (0x10, "CAMPAIGN_HELLO"),
+    (0x11, "CAMPAIGN_WELCOME"),
+    (0x12, "LEASE_REQUEST"),
+    (0x13, "LEASE_GRANT"),
+    (0x14, "CELL_RESULT"),
 ];
 
 /// `(coding byte, spec name)` for the FRAME body codings — pinned
@@ -147,6 +164,34 @@ impl fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
+/// The coordinator's answer to a `LEASE_REQUEST`, carried in the first
+/// byte of `LEASE_GRANT`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    /// A cell range was leased: `start`/`count`/`lease_id` are live.
+    Granted = 0,
+    /// No range is free right now (every remaining cell is leased out);
+    /// retry after `retry_ms`.
+    Wait = 1,
+    /// The campaign is complete — the worker should say `GOODBYE`.
+    Done = 2,
+}
+
+impl LeaseState {
+    pub fn byte(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_byte(b: u8) -> Option<Self> {
+        match b {
+            0 => Some(LeaseState::Granted),
+            1 => Some(LeaseState::Wait),
+            2 => Some(LeaseState::Done),
+            _ => None,
+        }
+    }
+}
+
 /// One protocol message, decoded.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -176,6 +221,52 @@ pub enum Msg {
     /// Server → client (v2 only): coalesced classifications, one
     /// `(seq, trace_id, label)` triple per frame.
     ResultBatch { results: Vec<(u32, u64, u16)> },
+    /// Worker → coordinator session opener on the campaign channel:
+    /// the campaign-protocol version plus a lease-size hint
+    /// (`lease_cells == 0` accepts the coordinator's default; a nonzero
+    /// hint is clamped to the coordinator's configured lease size).
+    CampaignHello { version: u16, lease_cells: u32 },
+    /// Coordinator → worker acceptance: everything a worker needs to
+    /// rebuild the exact campaign world — trials, seed, frame geometry,
+    /// the grid expression, and the geometry preset name (empty when
+    /// the campaign uses explicit dimensions).
+    CampaignWelcome {
+        trials: u32,
+        seed: u32,
+        height: u32,
+        width: u32,
+        grid: String,
+        geometry: String,
+    },
+    /// Worker → coordinator: ready for (more) work.
+    LeaseRequest,
+    /// Coordinator → worker: a leased cell range (`state == Granted`),
+    /// a backoff hint (`Wait` — retry after `retry_ms`), or the end of
+    /// the campaign (`Done`).  `start`/`count` index the grid-ordered
+    /// cell expansion both sides compute from the `CAMPAIGN_WELCOME`
+    /// facts.
+    LeaseGrant {
+        state: LeaseState,
+        lease_id: u64,
+        start: u64,
+        count: u32,
+        retry_ms: u32,
+    },
+    /// Worker → coordinator: one evaluated cell.  The six statistics are
+    /// shipped as f64 bit patterns, so the coordinator checkpoints and
+    /// reassembles exactly the values a single-process sweep computes.
+    CellResult {
+        lease_id: u64,
+        index: u64,
+        trials: u32,
+        elements_per_frame: u64,
+        ber: f64,
+        e10: f64,
+        e01: f64,
+        agreement: f64,
+        mean_sparsity: f64,
+        energy_pj_per_frame: f64,
+    },
 }
 
 fn coding_byte(c: WireCoding) -> u8 {
@@ -209,6 +300,11 @@ impl Msg {
             Msg::Error { .. } => 0x06,
             Msg::FrameBatch { .. } => 0x07,
             Msg::ResultBatch { .. } => 0x08,
+            Msg::CampaignHello { .. } => 0x10,
+            Msg::CampaignWelcome { .. } => 0x11,
+            Msg::LeaseRequest => 0x12,
+            Msg::LeaseGrant { .. } => 0x13,
+            Msg::CellResult { .. } => 0x14,
         }
     }
 
@@ -273,6 +369,71 @@ impl Msg {
                     p.extend_from_slice(&seq.to_le_bytes());
                     p.extend_from_slice(&trace_id.to_le_bytes());
                     p.extend_from_slice(&label.to_le_bytes());
+                }
+                p
+            }
+            Msg::CampaignHello { version, lease_cells } => {
+                let mut p = Vec::with_capacity(6);
+                p.extend_from_slice(&version.to_le_bytes());
+                p.extend_from_slice(&lease_cells.to_le_bytes());
+                p
+            }
+            Msg::CampaignWelcome {
+                trials,
+                seed,
+                height,
+                width,
+                grid,
+                geometry,
+            } => {
+                let mut p = Vec::with_capacity(
+                    18 + grid.len() + geometry.len(),
+                );
+                p.extend_from_slice(&trials.to_le_bytes());
+                p.extend_from_slice(&seed.to_le_bytes());
+                p.extend_from_slice(&height.to_le_bytes());
+                p.extend_from_slice(&width.to_le_bytes());
+                p.extend_from_slice(&(grid.len() as u16).to_le_bytes());
+                p.extend_from_slice(grid.as_bytes());
+                p.extend_from_slice(geometry.as_bytes());
+                p
+            }
+            Msg::LeaseRequest => Vec::new(),
+            Msg::LeaseGrant { state, lease_id, start, count, retry_ms } => {
+                let mut p = Vec::with_capacity(25);
+                p.push(state.byte());
+                p.extend_from_slice(&lease_id.to_le_bytes());
+                p.extend_from_slice(&start.to_le_bytes());
+                p.extend_from_slice(&count.to_le_bytes());
+                p.extend_from_slice(&retry_ms.to_le_bytes());
+                p
+            }
+            Msg::CellResult {
+                lease_id,
+                index,
+                trials,
+                elements_per_frame,
+                ber,
+                e10,
+                e01,
+                agreement,
+                mean_sparsity,
+                energy_pj_per_frame,
+            } => {
+                let mut p = Vec::with_capacity(76);
+                p.extend_from_slice(&lease_id.to_le_bytes());
+                p.extend_from_slice(&index.to_le_bytes());
+                p.extend_from_slice(&trials.to_le_bytes());
+                p.extend_from_slice(&elements_per_frame.to_le_bytes());
+                for v in [
+                    ber,
+                    e10,
+                    e01,
+                    agreement,
+                    mean_sparsity,
+                    energy_pj_per_frame,
+                ] {
+                    p.extend_from_slice(&v.to_bits().to_le_bytes());
                 }
                 p
             }
@@ -500,6 +661,104 @@ impl Msg {
                     })
                     .collect();
                 Ok(Msg::ResultBatch { results })
+            }
+            0x10 => {
+                fixed(6, "CAMPAIGN_HELLO")?;
+                Ok(Msg::CampaignHello {
+                    version: u16::from_le_bytes(p[0..2].try_into().unwrap()),
+                    lease_cells: u32::from_le_bytes(
+                        p[2..6].try_into().unwrap(),
+                    ),
+                })
+            }
+            0x11 => {
+                if p.len() < 18 {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "CAMPAIGN_WELCOME payload is only {} bytes",
+                            p.len()
+                        ),
+                    ));
+                }
+                let grid_len =
+                    u16::from_le_bytes(p[16..18].try_into().unwrap())
+                        as usize;
+                let grid_end = 18 + grid_len;
+                if p.len() < grid_end {
+                    return Err(WireError::new(
+                        StatusCode::BadMessage,
+                        format!(
+                            "CAMPAIGN_WELCOME grid wants {grid_len} bytes, \
+                             payload holds {}",
+                            p.len() - 18
+                        ),
+                    ));
+                }
+                let text = |bytes: &[u8], what: &str| {
+                    std::str::from_utf8(bytes).map(str::to_string).map_err(
+                        |_| {
+                            WireError::new(
+                                StatusCode::BadMessage,
+                                format!(
+                                    "CAMPAIGN_WELCOME {what} is not UTF-8"
+                                ),
+                            )
+                        },
+                    )
+                };
+                Ok(Msg::CampaignWelcome {
+                    trials: u32::from_le_bytes(p[0..4].try_into().unwrap()),
+                    seed: u32::from_le_bytes(p[4..8].try_into().unwrap()),
+                    height: u32::from_le_bytes(p[8..12].try_into().unwrap()),
+                    width: u32::from_le_bytes(p[12..16].try_into().unwrap()),
+                    grid: text(&p[18..grid_end], "grid")?,
+                    geometry: text(&p[grid_end..], "geometry")?,
+                })
+            }
+            0x12 => {
+                fixed(0, "LEASE_REQUEST")?;
+                Ok(Msg::LeaseRequest)
+            }
+            0x13 => {
+                fixed(25, "LEASE_GRANT")?;
+                let state = LeaseState::from_byte(p[0]).ok_or_else(|| {
+                    WireError::new(
+                        StatusCode::BadMessage,
+                        format!("unknown LEASE_GRANT state byte {}", p[0]),
+                    )
+                })?;
+                Ok(Msg::LeaseGrant {
+                    state,
+                    lease_id: u64::from_le_bytes(p[1..9].try_into().unwrap()),
+                    start: u64::from_le_bytes(p[9..17].try_into().unwrap()),
+                    count: u32::from_le_bytes(p[17..21].try_into().unwrap()),
+                    retry_ms: u32::from_le_bytes(
+                        p[21..25].try_into().unwrap(),
+                    ),
+                })
+            }
+            0x14 => {
+                fixed(76, "CELL_RESULT")?;
+                let f = |at: usize| {
+                    f64::from_bits(u64::from_le_bytes(
+                        p[at..at + 8].try_into().unwrap(),
+                    ))
+                };
+                Ok(Msg::CellResult {
+                    lease_id: u64::from_le_bytes(p[0..8].try_into().unwrap()),
+                    index: u64::from_le_bytes(p[8..16].try_into().unwrap()),
+                    trials: u32::from_le_bytes(p[16..20].try_into().unwrap()),
+                    elements_per_frame: u64::from_le_bytes(
+                        p[20..28].try_into().unwrap(),
+                    ),
+                    ber: f(28),
+                    e10: f(36),
+                    e01: f(44),
+                    agreement: f(52),
+                    mean_sparsity: f(60),
+                    energy_pj_per_frame: f(68),
+                })
             }
             other => Err(WireError::new(
                 StatusCode::BadMessage,
@@ -739,6 +998,38 @@ mod tests {
             Msg::ResultBatch {
                 results: vec![(12, 0xfeed_beef, 1), (13, 7, 0)],
             },
+            Msg::CampaignHello {
+                version: CAMPAIGN_VERSION,
+                lease_cells: 4,
+            },
+            Msg::CampaignWelcome {
+                trials: 6,
+                seed: 42,
+                height: 24,
+                width: 24,
+                grid: "v=0.7,0.8,0.9;pulse=0.7;n=8;k=5".to_string(),
+                geometry: String::new(),
+            },
+            Msg::LeaseRequest,
+            Msg::LeaseGrant {
+                state: LeaseState::Granted,
+                lease_id: 9,
+                start: 4,
+                count: 2,
+                retry_ms: 0,
+            },
+            Msg::CellResult {
+                lease_id: 9,
+                index: 5,
+                trials: 6,
+                elements_per_frame: 4608,
+                ber: 0.015625,
+                e10: 0.25,
+                e01: 0.0,
+                agreement: 0.96875,
+                mean_sparsity: 0.5,
+                energy_pj_per_frame: 12.75,
+            },
         ]
     }
 
@@ -873,6 +1164,111 @@ mod tests {
         }
         let err = Msg::decode_payload(0x08, &[0, 0]).unwrap_err();
         assert!(err.detail.contains("count is zero"), "{err}");
+    }
+
+    #[test]
+    fn hostile_campaign_payloads_get_typed_errors() {
+        // CAMPAIGN_HELLO is fixed-size.
+        let err = Msg::decode_payload(0x10, &[1, 0, 4]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // CAMPAIGN_WELCOME: shorter than the fixed prefix.
+        let err = Msg::decode_payload(0x11, &[0u8; 17]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // A grid length that runs past the payload.
+        let welcome = Msg::CampaignWelcome {
+            trials: 4,
+            seed: 7,
+            height: 16,
+            width: 16,
+            grid: "v=0.8".to_string(),
+            geometry: "imagenet".to_string(),
+        };
+        let payload = welcome.payload();
+        assert_eq!(Msg::decode_payload(0x11, &payload).unwrap(), welcome);
+        let mut p = payload.clone();
+        p[16..18].copy_from_slice(&u16::MAX.to_le_bytes());
+        let err = Msg::decode_payload(0x11, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("grid"), "{err}");
+
+        // Non-UTF-8 grid bytes.
+        let mut p = payload.clone();
+        p[18] = 0xff;
+        p[19] = 0xfe;
+        let err = Msg::decode_payload(0x11, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("UTF-8"), "{err}");
+
+        // LEASE_REQUEST carries no payload at all.
+        let err = Msg::decode_payload(0x12, &[0]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // LEASE_GRANT: unknown state byte, then a bad length.
+        let grant = Msg::LeaseGrant {
+            state: LeaseState::Wait,
+            lease_id: 0,
+            start: 0,
+            count: 0,
+            retry_ms: 50,
+        };
+        let payload = grant.payload();
+        assert_eq!(Msg::decode_payload(0x13, &payload).unwrap(), grant);
+        let mut p = payload.clone();
+        p[0] = 7;
+        let err = Msg::decode_payload(0x13, &p).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+        assert!(err.detail.contains("state byte"), "{err}");
+        let err =
+            Msg::decode_payload(0x13, &payload[..24]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+
+        // CELL_RESULT: truncated statistics.
+        let err = Msg::decode_payload(0x14, &[0u8; 75]).unwrap_err();
+        assert_eq!(err.code, StatusCode::BadMessage);
+    }
+
+    #[test]
+    fn cell_result_preserves_f64_bit_patterns() {
+        // Values chosen to be awkward in decimal: exactness must come
+        // from the bit-pattern transport, not pretty printing.
+        let msg = Msg::CellResult {
+            lease_id: 1,
+            index: 2,
+            trials: 3,
+            elements_per_frame: 4,
+            ber: 0.1 + 0.2,
+            e10: f64::MIN_POSITIVE,
+            e01: 1.0 / 3.0,
+            agreement: 0.9999999999999999,
+            mean_sparsity: f64::EPSILON,
+            energy_pj_per_frame: 1e300,
+        };
+        let (back, _) = decode(&msg.encode()).unwrap();
+        match (back, &msg) {
+            (
+                Msg::CellResult { ber, e10, e01, .. },
+                Msg::CellResult {
+                    ber: b0, e10: a0, e01: c0, ..
+                },
+            ) => {
+                assert_eq!(ber.to_bits(), b0.to_bits());
+                assert_eq!(e10.to_bits(), a0.to_bits());
+                assert_eq!(e01.to_bits(), c0.to_bits());
+            }
+            _ => panic!("CELL_RESULT did not round-trip"),
+        }
+    }
+
+    #[test]
+    fn lease_state_bytes_are_bijective() {
+        for state in
+            [LeaseState::Granted, LeaseState::Wait, LeaseState::Done]
+        {
+            assert_eq!(LeaseState::from_byte(state.byte()), Some(state));
+        }
+        assert_eq!(LeaseState::from_byte(3), None);
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Distributed campaign integration: coordinator + workers over
+//! loopback, interrupt/resume determinism, journal recovery.
+//!
+//! The contract under test (docs/ARCHITECTURE.md, "the distributed
+//! campaign plane"): a campaign across any number of worker processes,
+//! interrupted and resumed any number of times, produces a report
+//! **byte-identical** to a single-process `run_sweep` of the same grid
+//! and seed.  These tests run both halves in-process over loopback
+//! sockets; `scripts/campaign_smoke.sh` re-proves the same property
+//! across real processes with a SIGKILL mid-campaign.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use pixelmtj::campaign::{
+    journal_header, run_coordinator, run_worker, CampaignOptions,
+    CellRecord, Journal, WorkerSummary, DEFAULT_LEASE_TTL,
+};
+use pixelmtj::config::SweepConfig;
+use pixelmtj::device::rng::fmix32;
+use pixelmtj::metrics::CampaignMetrics;
+use pixelmtj::reports::sweep_report;
+use pixelmtj::sweep::{run_sweep, SweepSummary};
+use pixelmtj::wire::proto::{
+    self, LeaseState, Msg, MsgOutcome, CAMPAIGN_VERSION,
+};
+
+/// A small campaign (6 cells) that still exercises multi-lease
+/// scheduling at `lease_cells = 2`.
+fn quick_cfg() -> SweepConfig {
+    SweepConfig {
+        grid: "v=0.7,0.8,0.9;k=4,5".to_string(),
+        trials: 3,
+        threads: 2,
+        seed: 7,
+        sensor_height: 16,
+        sensor_width: 16,
+        ..SweepConfig::default()
+    }
+}
+
+/// Per-test scratch journal path (the parent dir is created by
+/// `Journal::open`, removed again by the caller).
+fn scratch_journal(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pixelmtj-campaign-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.join("campaign.journal")
+}
+
+fn campaign_opts(checkpoint: PathBuf) -> CampaignOptions {
+    CampaignOptions {
+        listen: "127.0.0.1:0".to_string(),
+        lease_cells: 2,
+        checkpoint,
+        lease_ttl: DEFAULT_LEASE_TTL,
+    }
+}
+
+/// The byte-level report payload — exactly what `sweep_report::save`
+/// writes to `reports/sweep.json`.
+fn report_bytes(s: &SweepSummary) -> String {
+    sweep_report::to_json(s).to_string_pretty()
+}
+
+/// Run a coordinator on a thread and `workers` in-process workers
+/// against it.  Returns the summary, the `(index)` stream the cell sink
+/// observed, and each worker's outcome.
+fn run_campaign(
+    cfg: SweepConfig,
+    opts: CampaignOptions,
+    metrics: Option<Arc<CampaignMetrics>>,
+    workers: usize,
+) -> (SweepSummary, Vec<usize>, Vec<anyhow::Result<WorkerSummary>>) {
+    let (tx, rx) = mpsc::channel();
+    let coordinator = thread::spawn(move || {
+        let mut seen = Vec::new();
+        let summary = run_coordinator(
+            &cfg,
+            &opts,
+            metrics.as_deref(),
+            |addr| {
+                let _ = tx.send(addr);
+            },
+            |idx, _cell| seen.push(idx),
+        )
+        .expect("coordinator failed");
+        (summary, seen)
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("coordinator never reported its listen address")
+        .to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, 1, 0))
+        })
+        .collect();
+    let outcomes: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let (summary, seen) = coordinator.join().unwrap();
+    (summary, seen, outcomes)
+}
+
+#[test]
+fn two_workers_reassemble_byte_identical_to_run_sweep() {
+    let reference = run_sweep(&quick_cfg()).unwrap();
+    let journal = scratch_journal("two-workers");
+
+    let (summary, seen, outcomes) = run_campaign(
+        quick_cfg(),
+        campaign_opts(journal.clone()),
+        None,
+        2,
+    );
+
+    assert_eq!(
+        report_bytes(&summary),
+        report_bytes(&reference),
+        "distributed campaign must serialize byte-identical to run_sweep"
+    );
+    // Every cell streamed exactly once, and the workers between them
+    // completed the whole grid (no reissues happen on a clean run).
+    let mut counts = vec![0u32; reference.cells.len()];
+    for idx in &seen {
+        counts[*idx] += 1;
+    }
+    assert!(counts.iter().all(|&n| n == 1), "cell deliveries {counts:?}");
+    let mut total = 0;
+    for outcome in outcomes {
+        total += outcome.expect("worker failed").cells_completed;
+    }
+    assert_eq!(total, reference.cells.len() as u64);
+
+    let _ = std::fs::remove_dir_all(journal.parent().unwrap());
+}
+
+#[test]
+fn resume_from_interrupted_journal_is_byte_identical() {
+    // The uninterrupted reference run: both the expected bytes and the
+    // per-cell statistics a killed coordinator would have journaled
+    // (cells are pure functions of config + index, so these records are
+    // exactly what a real partial campaign persists).
+    let cfg = quick_cfg();
+    let reference = run_sweep(&cfg).unwrap();
+    let n = reference.cells.len();
+
+    // "Kill" at a process-varying cell boundary: any K in 1..n must
+    // resume to the same bytes, so the test draws a different one per
+    // run without ever passing trivially (K >= 1 cells recovered,
+    // K <= n-1 cells still to lease).
+    let k = 1 + (fmix32(std::process::id()) as usize) % (n - 1);
+    let journal = scratch_journal("resume");
+    {
+        let header = journal_header(&cfg, n);
+        let mut j = Journal::open(&journal, &header).unwrap().journal;
+        for (idx, cell) in reference.cells.iter().take(k).enumerate() {
+            j.append(&CellRecord {
+                index: idx as u64,
+                trials: cell.trials,
+                elements_per_frame: cell.elements_per_frame,
+                ber: cell.ber,
+                e10: cell.e10,
+                e01: cell.e01,
+                agreement: cell.agreement,
+                mean_sparsity: cell.mean_sparsity,
+                energy_pj_per_frame: cell.energy_pj_per_frame,
+            })
+            .unwrap();
+        }
+    }
+    // The kill also tore a record mid-append: a plausible length prefix
+    // with garbage behind it.  Recovery must drop the tail, keep the K
+    // good records, and append cleanly after them.
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&journal)
+            .unwrap();
+        f.write_all(&[0x45, 0x00, 0x00, 0x00, 0xde, 0xad]).unwrap();
+    }
+
+    let metrics = Arc::new(CampaignMetrics::default());
+    let (summary, seen, outcomes) = run_campaign(
+        cfg,
+        campaign_opts(journal.clone()),
+        Some(metrics.clone()),
+        1,
+    );
+
+    assert_eq!(
+        report_bytes(&summary),
+        report_bytes(&reference),
+        "resume with {k} recovered cells must be byte-identical"
+    );
+    // Recovered cells stream first, in index order; the worker only
+    // computed the remainder.
+    assert_eq!(&seen[..k], (0..k).collect::<Vec<_>>().as_slice());
+    assert_eq!(seen.len(), n);
+    assert_eq!(
+        outcomes[0].as_ref().unwrap().cells_completed,
+        (n - k) as u64
+    );
+    assert_eq!(metrics.resumes.get(), 1, "resume must be counted");
+    assert_eq!(metrics.cells_checkpointed.get(), (n - k) as u64);
+
+    let _ = std::fs::remove_dir_all(journal.parent().unwrap());
+}
+
+#[test]
+fn fully_journaled_campaign_completes_without_binding_a_listener() {
+    let cfg = quick_cfg();
+    let reference = run_sweep(&cfg).unwrap();
+    let journal = scratch_journal("complete");
+    {
+        let header = journal_header(&cfg, reference.cells.len());
+        let mut j = Journal::open(&journal, &header).unwrap().journal;
+        for (idx, cell) in reference.cells.iter().enumerate() {
+            j.append(&CellRecord {
+                index: idx as u64,
+                trials: cell.trials,
+                elements_per_frame: cell.elements_per_frame,
+                ber: cell.ber,
+                e10: cell.e10,
+                e01: cell.e01,
+                agreement: cell.agreement,
+                mean_sparsity: cell.mean_sparsity,
+                energy_pj_per_frame: cell.energy_pj_per_frame,
+            })
+            .unwrap();
+        }
+    }
+
+    // Nothing remains to lease, so the coordinator must finish from the
+    // journal alone — no listener, no workers, no waiting.
+    let mut seen = Vec::new();
+    let summary = run_coordinator(
+        &cfg,
+        &campaign_opts(journal.clone()),
+        None,
+        |addr| panic!("bound a listener at {addr} with zero cells left"),
+        |idx, _cell| seen.push(idx),
+    )
+    .unwrap();
+
+    assert_eq!(report_bytes(&summary), report_bytes(&reference));
+    assert_eq!(seen, (0..reference.cells.len()).collect::<Vec<_>>());
+
+    let _ = std::fs::remove_dir_all(journal.parent().unwrap());
+}
+
+#[test]
+fn dropped_worker_lease_is_reissued_and_resolves_identically() {
+    let cfg = quick_cfg();
+    let reference = run_sweep(&cfg).unwrap();
+    let journal = scratch_journal("reissue");
+    let metrics = Arc::new(CampaignMetrics::default());
+
+    let (tx, rx) = mpsc::channel();
+    let coordinator = {
+        let cfg = cfg.clone();
+        let opts = campaign_opts(journal.clone());
+        let metrics = metrics.clone();
+        thread::spawn(move || {
+            run_coordinator(
+                &cfg,
+                &opts,
+                Some(&*metrics),
+                |addr| {
+                    let _ = tx.send(addr);
+                },
+                |_idx, _cell| {},
+            )
+            .expect("coordinator failed")
+        })
+    };
+    let addr = rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("coordinator never reported its listen address")
+        .to_string();
+
+    // A worker that takes a lease and dies without delivering: raw
+    // protocol client, dropped right after the grant.  Its cells must
+    // go back on the queue when the socket closes.
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        proto::write_msg(
+            &mut stream,
+            &Msg::CampaignHello {
+                version: CAMPAIGN_VERSION,
+                lease_cells: 2,
+            },
+        )
+        .unwrap();
+        match read_one(&mut stream) {
+            Msg::CampaignWelcome { trials, grid, .. } => {
+                assert_eq!(trials, cfg.trials);
+                assert_eq!(grid, cfg.grid);
+            }
+            other => panic!("expected CAMPAIGN_WELCOME, got {other:?}"),
+        }
+        proto::write_msg(&mut stream, &Msg::LeaseRequest).unwrap();
+        match read_one(&mut stream) {
+            Msg::LeaseGrant { state: LeaseState::Granted, count, .. } => {
+                assert!(count > 0, "first lease must grant cells");
+            }
+            other => panic!("expected a granted lease, got {other:?}"),
+        }
+        // Dropped here: the lease dies with the connection.
+    }
+
+    // A real worker then completes the whole grid, reissued cells
+    // included.
+    let worker = run_worker(&addr, 1, 0).expect("worker failed");
+    let summary = coordinator.join().unwrap();
+
+    assert_eq!(
+        report_bytes(&summary),
+        report_bytes(&reference),
+        "a died-and-reissued lease must not perturb the report"
+    );
+    assert_eq!(worker.cells_completed, reference.cells.len() as u64);
+    assert!(
+        metrics.leases_expired.get() >= 1,
+        "the dropped lease must be reclaimed"
+    );
+
+    let _ = std::fs::remove_dir_all(journal.parent().unwrap());
+}
+
+fn read_one(stream: &mut TcpStream) -> Msg {
+    match proto::read_msg(stream, &|| false) {
+        Ok(MsgOutcome::Msg(m)) => m,
+        Ok(MsgOutcome::Eof) => panic!("coordinator closed the connection"),
+        Ok(MsgOutcome::Stopped) => unreachable!("no stop signal installed"),
+        Err(e) => panic!("protocol error: {e}"),
+    }
+}

@@ -12,9 +12,10 @@
 //!    (0.7/0.8/0.9 V @ 700 ps, n=8, k=5) guarding against cross-version
 //!    drift.  If the golden is absent the test *blesses* it (writes the
 //!    current output) so a toolchain-equipped checkout materializes it;
-//!    commit the generated file.  To regenerate after an intentional
-//!    model change: delete `tests/data/sweep_golden.json` and re-run
-//!    `cargo test --test sweep`.
+//!    CI auto-commits the blessed file on the next push to `main` and
+//!    uploads it as the `sweep_golden` artifact.  To regenerate after an
+//!    intentional model change: delete `tests/data/sweep_golden.json`
+//!    and re-run `cargo test --test sweep`.
 
 use std::path::PathBuf;
 

@@ -22,7 +22,7 @@ use pixelmtj::config::{HwConfig, PipelineConfig, WireCoding};
 use pixelmtj::sensor::{scene::SceneGen, Frame};
 use pixelmtj::system::{System, WireService};
 use pixelmtj::wire::proto::{self, CODINGS, MESSAGE_TYPES};
-use pixelmtj::wire::{Msg, StatusCode, WireClient};
+use pixelmtj::wire::{LeaseState, Msg, StatusCode, WireClient};
 
 mod common;
 use common::native_pipeline;
@@ -134,8 +134,11 @@ fn protocol_doc_tables_match_the_wire_constants() {
     );
 }
 
-/// Hex dumps inside the `## Worked example` code fences: leading
-/// two-hex-digit tokens per line, stopping at the first prose token.
+/// Hex dumps inside a section's code fences: leading two-hex-digit
+/// tokens per line, stopping at the first prose token.  Only blocks
+/// that open with the envelope magic count as worked examples — the
+/// byte-layout tables share the same fence style, and their decimal
+/// offset columns (`12`, `16`, …) would otherwise parse as hex.
 fn hex_blocks(section: &str) -> Vec<Vec<u8>> {
     let mut blocks = Vec::new();
     let mut current: Option<Vec<u8>> = None;
@@ -156,6 +159,7 @@ fn hex_blocks(section: &str) -> Vec<Vec<u8>> {
             }
         }
     }
+    blocks.retain(|b| b.starts_with(&proto::MAGIC));
     blocks
 }
 
@@ -223,6 +227,51 @@ fn protocol_doc_v2_batch_examples_decode_byte_for_byte() {
 }
 
 #[test]
+fn protocol_doc_campaign_examples_decode_byte_for_byte() {
+    let sec = section(DOC, "## Campaign channel");
+    for msg in ["CAMPAIGN_HELLO", "CAMPAIGN_WELCOME", "LEASE_REQUEST",
+                "LEASE_GRANT", "CELL_RESULT"] {
+        assert!(
+            sec.contains(msg),
+            "the campaign section must document {msg}"
+        );
+    }
+    assert!(
+        sec.contains(&format!("this spec: {}", proto::CAMPAIGN_VERSION)),
+        "the campaign section must name campaign version {}",
+        proto::CAMPAIGN_VERSION
+    );
+
+    let blocks = hex_blocks(sec);
+    assert_eq!(blocks.len(), 2, "the campaign spec shows a hello and a grant");
+
+    let (hello, used) =
+        proto::decode(&blocks[0]).expect("CAMPAIGN_HELLO example");
+    assert_eq!(used, blocks[0].len(), "no trailing bytes in the example");
+    assert_eq!(
+        hello,
+        Msg::CampaignHello {
+            version: proto::CAMPAIGN_VERSION,
+            lease_cells: 4,
+        }
+    );
+
+    let (grant, used) =
+        proto::decode(&blocks[1]).expect("LEASE_GRANT example");
+    assert_eq!(used, blocks[1].len());
+    assert_eq!(
+        grant,
+        Msg::LeaseGrant {
+            state: LeaseState::Granted,
+            lease_id: 1,
+            start: 4,
+            count: 2,
+            retry_ms: 0,
+        }
+    );
+}
+
+#[test]
 fn every_documented_message_type_roundtrips() {
     let msgs = vec![
         Msg::Hello {
@@ -255,6 +304,38 @@ fn every_documented_message_type_roundtrips() {
         },
         Msg::ResultBatch {
             results: vec![(42, 7, 0), (43, 8, 5), (44, 9, 1)],
+        },
+        Msg::CampaignHello {
+            version: proto::CAMPAIGN_VERSION,
+            lease_cells: 4,
+        },
+        Msg::CampaignWelcome {
+            trials: 6,
+            seed: 42,
+            height: 24,
+            width: 24,
+            grid: "v=0.7,0.8,0.9;pulse=0.7;n=8;k=5".to_string(),
+            geometry: String::new(),
+        },
+        Msg::LeaseRequest,
+        Msg::LeaseGrant {
+            state: LeaseState::Wait,
+            lease_id: 0,
+            start: 0,
+            count: 0,
+            retry_ms: 200,
+        },
+        Msg::CellResult {
+            lease_id: 9,
+            index: 5,
+            trials: 6,
+            elements_per_frame: 4608,
+            ber: 0.015625,
+            e10: 0.25,
+            e01: 0.0,
+            agreement: 0.96875,
+            mean_sparsity: 0.5,
+            energy_pj_per_frame: 12.75,
         },
     ];
     // One sample per documented type byte — no type left untested.
